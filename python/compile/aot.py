@@ -1,0 +1,115 @@
+"""AOT compile path: lower the TinyLM prefill variants to HLO *text* and
+write the weight blob + metadata the Rust runtime consumes.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published `xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs (in --out-dir, default ../artifacts):
+  prefill_t{T}.hlo.txt   one module per chunk-length variant
+  weights.bin            all weights, f32 little-endian, artifact order
+  model_meta.json        config + weight specs + variant list
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, example_args, init_weights, make_prefill_fn, weight_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: ModelConfig, T: int) -> str:
+    fn = make_prefill_fn(cfg, T, use_pallas=True)
+    lowered = jax.jit(fn).lower(*example_args(cfg, T))
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: ModelConfig, path: str) -> list:
+    """Write weights.bin; returns the spec list with byte offsets."""
+    ws = init_weights(cfg)
+    specs = weight_specs(cfg)
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), w in zip(specs, ws):
+            arr = np.asarray(w, dtype="<f4")
+            assert arr.shape == tuple(shape)
+            f.write(arr.tobytes())
+            entries.append(
+                {"name": name, "shape": list(shape), "offset": offset, "len": int(arr.size)}
+            )
+            offset += arr.size * 4
+    return entries
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--chunks", default=None, help="comma-separated T values")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    chunks = (
+        tuple(int(x) for x in args.chunks.split(",")) if args.chunks else cfg.chunks
+    )
+
+    variants = []
+    for T in chunks:
+        text = lower_variant(cfg, T)
+        path = os.path.join(args.out_dir, f"prefill_t{T}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append({"chunk": T, "file": f"prefill_t{T}.hlo.txt"})
+        print(f"lowered prefill_t{T}: {len(text)} chars -> {path}")
+
+    weights = write_weights(cfg, os.path.join(args.out_dir, "weights.bin"))
+
+    meta = {
+        "model": "TinyLM",
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "block_k": cfg.block_k,
+            "seed": cfg.seed,
+        },
+        "variants": variants,
+        "weights": weights,
+        "io": {
+            "inputs": ["tokens[T] i32", "kv[L,2,S,H,D] f32", "cache_len[1] i32", "*weights f32"],
+            "outputs": ["logits[T,V] f32", "kv[L,2,S,H,D] f32"],
+            "tuple_return": True,
+        },
+    }
+    meta_path = os.path.join(args.out_dir, "model_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

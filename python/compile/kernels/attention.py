@@ -1,0 +1,155 @@
+"""Layer-1 Pallas kernel: block-wise chunked-prefill attention with a
+KV-cache offset (the prefill hot-spot of the serving stack).
+
+Design — TPU adaptation of the flash-attention threadblock scheme
+(DESIGN.md §Hardware-Adaptation):
+
+  * Grid = (heads, S // BLOCK_K). For each head, KV tiles of BLOCK_K rows
+    are streamed HBM->VMEM by the BlockSpec index maps (the TPU analogue of
+    CUDA shared-memory staging).
+  * The q(T,D) @ k(D,BLOCK_K) and p(T,BLOCK_K) @ v(BLOCK_K,D) contractions
+    are MXU-shaped matmuls.
+  * The online-softmax running state (row max `m`, denominator `l`, and the
+    unnormalized accumulator `acc`) lives in VMEM scratch and is carried
+    across the KV-tile grid dimension (the analogue of register
+    accumulators in the CUDA kernel).
+  * `cache_len` arrives as a tiny SMEM-resident scalar input, so the same
+    compiled kernel serves both fresh prefill (cache_len=0) and
+    cache-extension chunks (cache_len>0). Masking is position-based:
+    chunk row i (global position cache_len+i) may attend to global
+    column j iff j <= cache_len + i.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO. Real-TPU VMEM/MXU
+estimates are derived analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 128
+
+
+def _attn_kernel(cache_len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, block_k, scale):
+    """One (head, kv-tile) grid step of the online-softmax attention.
+
+    Refs (per BlockSpec):
+      cache_len_ref: [1]        int32, same for every grid step.
+      q_ref:         [T, 1, D]  the chunk's queries for this head.
+      k_ref/v_ref:   [BK, 1, D] this KV tile for this head.
+      o_ref:         [T, 1, D]  output for this head.
+      acc_ref/m_ref/l_ref: VMEM scratch carried across kv tiles.
+    """
+    kt = pl.program_id(1)
+    n_kt = pl.num_programs(1)
+
+    q = q_ref[:, 0, :]  # [T, D]
+    k = k_ref[:, 0, :]  # [BK, D]
+    v = v_ref[:, 0, :]  # [BK, D]
+    T = q.shape[0]
+
+    # Reset the carry at the first KV tile of each head.
+    @pl.when(kt == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = cache_len_ref[0]
+
+    # scores: [T, BK] on the MXU.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+
+    # Causal-with-offset mask in *global* coordinates.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (T, block_k), 0)  # chunk row i
+    cols = jax.lax.broadcasted_iota(jnp.int32, (T, block_k), 1) + kt * block_k
+    mask = cols <= (cache_len + rows)
+    s = jnp.where(mask, s, -1e30)
+
+    # Online softmax update.
+    m_prev = m_ref[...]  # [T, 1]
+    l_prev = l_ref[...]  # [T, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)  # [T, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Guard fully-masked tiles: exp(-1e30 - m) underflows to 0, fine.
+    p = jnp.exp(s - m_new)  # [T, BK]
+    correction = jnp.exp(m_prev - m_new)  # [T, 1]
+    l_new = l_prev * correction + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [T, D]
+    acc_ref[...] = acc_ref[...] * correction + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    # Final tile: normalize and write out.
+    @pl.when(kt == n_kt - 1)
+    def _():
+        # l is >= 1 whenever at least one column is unmasked (the diagonal
+        # always is), so the divide is safe.
+        o_ref[:, 0, :] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def attention(q, k, v, cache_len, *, block_k=DEFAULT_BLOCK_K):
+    """Block-wise chunked-prefill attention (Pallas, interpret mode).
+
+    Args:
+      q: [T, H, D] new-chunk queries.
+      k: [S, H, D] key buffer (rows < cache_len + T valid).
+      v: [S, H, D] value buffer.
+      cache_len: scalar or [1] int32 — previously-cached positions.
+      block_k: KV tile rows per grid step; S % block_k must be 0.
+
+    Returns:
+      [T, H, D] attention output, matching `ref.attention_ref`.
+    """
+    T, H, D = q.shape
+    S = k.shape[0]
+    if S % block_k != 0:
+        raise ValueError(f"S={S} not divisible by block_k={block_k}")
+    cache_len = jnp.asarray(cache_len, dtype=jnp.int32).reshape((1,))
+    scale = 1.0 / (D**0.5)
+
+    grid = (H, S // block_k)
+    kernel = functools.partial(_attn_kernel, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, kt: (0,)),            # cache_len
+            pl.BlockSpec((T, 1, D), lambda h, kt: (0, h, 0)),  # q: per-head
+            pl.BlockSpec((block_k, 1, D), lambda h, kt: (kt, h, 0)),  # k tile
+            pl.BlockSpec((block_k, 1, D), lambda h, kt: (kt, h, 0)),  # v tile
+        ],
+        out_specs=pl.BlockSpec((T, 1, D), lambda h, kt: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H, D), q.dtype),
+        scratch_shapes=[
+            # VMEM carries across the kv-tile grid dimension.
+            pltpu.VMEM((T, D), jnp.float32),   # acc
+            pltpu.VMEM((T, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((T, 1), jnp.float32),   # l (running denominator)
+        ],
+        interpret=True,
+    )(cache_len, q, k, v)
+
+
+def vmem_bytes(T, D, block_k, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (EXPERIMENTS.md §Perf):
+    q tile + k tile + v tile + out tile + scratch (acc, m, l)."""
+    q_t = T * D * dtype_bytes
+    kv_t = 2 * block_k * D * dtype_bytes
+    o_t = T * D * dtype_bytes
+    scratch = (T * D + 2 * T) * 4
+    return q_t + kv_t + o_t + scratch
+
+
+def mxu_flops(T, S, D, H):
+    """FLOPs of the two matmuls (scores + PV) across a full call."""
+    return 2 * H * (T * S * D) * 2

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernel and the
+Layer-2 model.
+
+Everything here is deliberately naive: materialize the full attention
+matrix, mask, softmax. The Pallas kernel (`attention.py`) must match these
+numerics to tight tolerance under pytest/hypothesis sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, cache_len):
+    """Reference chunked-prefill attention with a KV-cache offset.
+
+    Args:
+      q: [T, H, D] queries for the new chunk (chunk-local rows).
+      k: [S, H, D] full key buffer; rows [0, cache_len + T) are valid.
+      v: [S, H, D] full value buffer.
+      cache_len: scalar int — number of previously cached positions.
+        Row i of the chunk sits at global position cache_len + i and may
+        attend to global positions j <= cache_len + i (causal).
+
+    Returns:
+      [T, H, D] attention output.
+    """
+    T, H, D = q.shape
+    S = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, dtype=q.dtype))
+    # [H, T, S]
+    scores = jnp.einsum("thd,shd->hts", q, k) * scale
+    rows = jnp.arange(T)[:, None]  # chunk-local row
+    cols = jnp.arange(S)[None, :]  # global col
+    mask = cols <= (cache_len + rows)  # [T, S]
+    neg = jnp.asarray(-1e30, dtype=q.dtype)
+    scores = jnp.where(mask[None, :, :], scores, neg)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hts,shd->thd", probs, v)
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the model)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def mlp_ref(x, w1, w2):
+    """Gateless 2-layer MLP with GELU."""
+    return gelu_ref(x @ w1) @ w2

@@ -1,0 +1,187 @@
+"""Layer-2 JAX model: TinyLM — a GPT-style transformer with chunked prefill
+and KV-cache reuse, the compute graph the Rust coordinator serves.
+
+The forward pass calls the Layer-1 Pallas kernel
+(`kernels.attention.attention`) for every layer's attention, so the kernel
+lowers into the same HLO module that `aot.py` exports.
+
+Shapes are static per AOT variant (chunk length T is a compile-time
+constant; the KV buffer has a fixed max sequence S). The KV cache is both
+an input and an output so the Rust engine can thread it between chunks:
+
+    prefill_chunk: (tokens[T] i32, kv[L,2,S,H,D] f32, cache_len[1] i32,
+                    *weights) -> (logits[T,V] f32, kv'[L,2,S,H,D] f32)
+
+Weights are *runtime inputs* (not baked constants): `aot.py` writes them to
+`artifacts/weights.bin` and the Rust runtime feeds them per call. This
+keeps the HLO text small and mirrors real serving engines where weights
+live on-device.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention
+from .kernels.ref import attention_ref, gelu_ref, rmsnorm_ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 2048
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    max_seq: int = 512
+    block_k: int = 128  # Pallas KV tile
+    seed: int = 1234
+    # chunk variants to AOT-compile (T values); decode uses T=1
+    chunks: tuple = (1, 16, 64, 128)
+
+    @property
+    def qkv_dim(self):
+        return 3 * self.n_heads * self.head_dim
+
+
+# Per-layer weight names, in artifact order.
+LAYER_WEIGHTS = ("ln1", "wqkv", "wo", "ln2", "w1", "w2")
+
+
+def weight_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list — the contract with the Rust runtime."""
+    specs = [("embed", (cfg.vocab, cfg.d_model)), ("pos", (cfg.max_seq, cfg.d_model))]
+    for layer in range(cfg.n_layers):
+        d, h, hd, ff = cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff
+        specs += [
+            (f"l{layer}.ln1", (d,)),
+            (f"l{layer}.wqkv", (d, 3 * h * hd)),
+            (f"l{layer}.wo", (h * hd, d)),
+            (f"l{layer}.ln2", (d,)),
+            (f"l{layer}.w1", (d, ff)),
+            (f"l{layer}.w2", (ff, d)),
+        ]
+    specs.append(("ln_f", (cfg.d_model,)))
+    return specs
+
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic init (numpy PRNG; written to weights.bin by aot.py)."""
+    rng = np.random.default_rng(cfg.seed)
+    ws = []
+    for name, shape in weight_specs(cfg):
+        if name.endswith(("ln1", "ln2")) or name in ("ln_f",):
+            w = np.ones(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / np.sqrt(fan_in)
+            w = rng.normal(0.0, std, size=shape).astype(np.float32)
+        ws.append(jnp.asarray(w))
+    return ws
+
+
+def _unpack(cfg: ModelConfig, weights):
+    """Split the flat weight list into (embed, pos, layers, ln_f)."""
+    embed, pos = weights[0], weights[1]
+    layers = []
+    idx = 2
+    for _ in range(cfg.n_layers):
+        layers.append(dict(zip(LAYER_WEIGHTS, weights[idx : idx + 6])))
+        idx += 6
+    ln_f = weights[idx]
+    return embed, pos, layers, ln_f
+
+
+def prefill_chunk(cfg: ModelConfig, tokens, kv, cache_len, weights, *, use_pallas=True):
+    """Run one prefill chunk of T tokens against a KV cache.
+
+    Args:
+      tokens: [T] int32 token ids.
+      kv: [L, 2, S, H, D] float32 cache; rows < cache_len valid.
+      cache_len: [1] int32.
+      weights: flat list per `weight_specs`.
+      use_pallas: False switches attention to the jnp oracle (used by tests
+        to isolate kernel-vs-model errors; the AOT path always uses Pallas).
+
+    Returns:
+      (logits [T, vocab], kv' [L, 2, S, H, D])
+    """
+    T = tokens.shape[0]
+    H, D, S = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    embed, pos, layers, ln_f = _unpack(cfg, weights)
+    cache_len = jnp.asarray(cache_len, jnp.int32).reshape((1,))
+    cl = cache_len[0]
+
+    # Positions are global: cache_len + chunk-local index.
+    positions = cl + jnp.arange(T, dtype=jnp.int32)
+    # clamp so padded over-length chunks stay in-bounds (masked anyway)
+    positions = jnp.minimum(positions, S - 1)
+    x = embed[tokens] + pos[positions]  # [T, d]
+
+    new_kv = []
+    for layer_idx, lw in enumerate(layers):
+        h_in = rmsnorm_ref(x, lw["ln1"])
+        qkv = h_in @ lw["wqkv"]  # [T, 3*H*D]
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(T, H, D)
+        k_new = k_new.reshape(T, H, D)
+        v_new = v_new.reshape(T, H, D)
+
+        # Write the chunk's K/V into the cache at [cache_len, cache_len+T).
+        k_buf = jax.lax.dynamic_update_slice(kv[layer_idx, 0], k_new, (cl, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(kv[layer_idx, 1], v_new, (cl, 0, 0))
+        new_kv.append(jnp.stack([k_buf, v_buf]))
+
+        if use_pallas:
+            attn = attention(q, k_buf, v_buf, cache_len, block_k=cfg.block_k)
+        else:
+            attn = attention_ref(q, k_buf, v_buf, cl)
+        x = x + attn.reshape(T, H * D) @ lw["wo"]
+
+        h2 = rmsnorm_ref(x, lw["ln2"])
+        x = x + gelu_ref(h2 @ lw["w1"]) @ lw["w2"]
+
+    x = rmsnorm_ref(x, ln_f)
+    logits = x @ embed.T  # weight-tied output head
+    return logits, jnp.stack(new_kv)
+
+
+def make_prefill_fn(cfg: ModelConfig, T: int, *, use_pallas=True):
+    """Build the function to AOT-lower for chunk length T.
+
+    Signature: (tokens[T], kv, cache_len[1], *weights) -> (logits, kv').
+    """
+
+    def fn(tokens, kv, cache_len, *weights):
+        return prefill_chunk(cfg, tokens, kv, cache_len, list(weights), use_pallas=use_pallas)
+
+    return fn
+
+
+def example_args(cfg: ModelConfig, T: int):
+    """ShapeDtypeStructs for jax.jit(...).lower()."""
+    tok = jax.ShapeDtypeStruct((T,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+    cl = jax.ShapeDtypeStruct((1,), jnp.int32)
+    ws = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in weight_specs(cfg)]
+    return (tok, kv, cl, *ws)
+
+
+def empty_kv(cfg: ModelConfig):
+    return jnp.zeros(
+        (cfg.n_layers, 2, cfg.max_seq, cfg.n_heads, cfg.head_dim), jnp.float32
+    )
+
+
+def prefill_full(cfg: ModelConfig, tokens, weights, *, use_pallas=False):
+    """Monolithic prefill of a whole prompt (reference for chunked runs)."""
+    kv = empty_kv(cfg)
+    logits, kv = prefill_chunk(
+        cfg, tokens, kv, jnp.zeros((1,), jnp.int32), weights, use_pallas=use_pallas
+    )
+    return logits, kv

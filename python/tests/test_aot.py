@@ -1,0 +1,100 @@
+"""AOT path checks: lowering emits loadable HLO text; weights.bin layout
+matches weight_specs; metadata is consistent with the Rust runtime contract."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_variant, to_hlo_text, write_weights
+from compile.model import ModelConfig, weight_specs
+
+SMALL = ModelConfig(
+    vocab=64, d_model=32, n_layers=1, n_heads=2, head_dim=16, d_ff=64, max_seq=64, block_k=16
+)
+
+
+def test_lowered_text_is_hlo(tmp_path):
+    text = lower_variant(SMALL, T=4)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # no Mosaic custom-calls may appear (interpret=True guarantees this)
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_lowered_text_parameter_count():
+    text = lower_variant(SMALL, T=4)
+    n_weights = len(weight_specs(SMALL))
+    # tokens + kv + cache_len + weights
+    expected_params = 3 + n_weights
+    assert text.count("parameter(") >= expected_params
+
+
+def test_weights_bin_layout(tmp_path):
+    path = tmp_path / "weights.bin"
+    entries = write_weights(SMALL, str(path))
+    specs = weight_specs(SMALL)
+    assert len(entries) == len(specs)
+    total_floats = sum(int(np.prod(s)) for _, s in specs)
+    assert os.path.getsize(path) == total_floats * 4
+    # offsets are contiguous
+    off = 0
+    for e in entries:
+        assert e["offset"] == off
+        off += e["len"] * 4
+    # spot-check: ln weights are all-ones
+    with open(path, "rb") as f:
+        ln1 = next(e for e in entries if e["name"].endswith("ln1"))
+        f.seek(ln1["offset"])
+        vals = struct.unpack(f"<{ln1['len']}f", f.read(ln1["len"] * 4))
+        assert all(v == 1.0 for v in vals)
+
+
+def test_write_weights_deterministic(tmp_path):
+    p1, p2 = tmp_path / "a.bin", tmp_path / "b.bin"
+    write_weights(SMALL, str(p1))
+    write_weights(SMALL, str(p2))
+    assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_default_config_variants_sane():
+    cfg = ModelConfig()
+    assert all(t <= cfg.max_seq for t in cfg.chunks)
+    assert cfg.max_seq % cfg.block_k == 0
+    assert 1 in cfg.chunks, "decode variant (T=1) required by the engine"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/model_meta.json")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "model_meta.json")) as f:
+        meta = json.load(f)
+    cfg = meta["config"]
+    full = ModelConfig()
+    assert cfg["vocab"] == full.vocab
+    assert cfg["max_seq"] == full.max_seq
+    for v in meta["variants"]:
+        path = os.path.join(root, v["file"])
+        assert os.path.exists(path), v["file"]
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head
+    total = sum(w["len"] for w in meta["weights"]) * 4
+    assert os.path.getsize(os.path.join(root, "weights.bin")) == total

@@ -1,0 +1,161 @@
+"""L1 correctness: the Pallas attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, cache lengths, and KV tile sizes — the CORE
+correctness signal for the kernel that every AOT artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, mxu_flops, vmem_bytes
+from compile.kernels.ref import attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def make_qkv(T, H, D, S, seed=0):
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (T, H, D), jnp.float32)
+    k = jax.random.normal(k1, (S, H, D), jnp.float32)
+    v = jax.random.normal(k2, (S, H, D), jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit cases
+# ---------------------------------------------------------------------------
+
+
+def test_matches_ref_basic():
+    q, k, v = make_qkv(8, 2, 16, 64)
+    out = attention(q, k, v, 5, block_k=16)
+    ref = attention_ref(q, k, v, 5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_zero_cache_is_pure_causal():
+    q, k, v = make_qkv(16, 2, 16, 64)
+    out = attention(q, k, v, 0, block_k=16)
+    ref = attention_ref(q, k, v, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_first_row_zero_cache_attends_only_itself():
+    """Row 0 with empty cache sees exactly position 0 => out == v[0]."""
+    q, k, v = make_qkv(4, 2, 16, 32)
+    out = attention(q, k, v, 0, block_k=16)
+    np.testing.assert_allclose(np.asarray(out)[0], np.asarray(v)[0], **TOL)
+
+
+def test_full_cache_chunk_of_one():
+    """T=1 decode step against an almost-full cache."""
+    S = 64
+    q, k, v = make_qkv(1, 4, 8, S)
+    cl = S - 1
+    out = attention(q, k, v, cl, block_k=16)
+    ref = attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_garbage_beyond_mask_ignored():
+    """Poison unmasked-out rows of K/V with huge values; result unchanged."""
+    T, H, D, S, cl = 8, 2, 16, 64, 4
+    q, k, v = make_qkv(T, H, D, S)
+    valid = cl + T
+    k_poison = k.at[valid:].set(1e9)
+    v_poison = v.at[valid:].set(-1e9)
+    out_clean = attention(q, k, v, cl, block_k=16)
+    out_poison = attention(q, k_poison, v_poison, cl, block_k=16)
+    np.testing.assert_allclose(np.asarray(out_clean), np.asarray(out_poison), **TOL)
+
+
+def test_block_k_invariance():
+    """Different KV tile sizes must produce identical results."""
+    q, k, v = make_qkv(8, 2, 16, 128)
+    outs = [np.asarray(attention(q, k, v, 7, block_k=bk)) for bk in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, **TOL)
+
+
+def test_indivisible_block_k_raises():
+    q, k, v = make_qkv(4, 2, 8, 48)
+    with pytest.raises(ValueError, match="not divisible"):
+        attention(q, k, v, 0, block_k=32)
+
+
+def test_probs_are_convex_combination():
+    """Output rows lie within [min(v), max(v)] per dim (softmax convexity)."""
+    q, k, v = make_qkv(8, 2, 16, 64, seed=3)
+    out = np.asarray(attention(q, k, v, 10, block_k=16))
+    vmax = np.asarray(v).max()
+    vmin = np.asarray(v).min()
+    assert out.max() <= vmax + 1e-5
+    assert out.min() >= vmin - 1e-5
+
+
+def test_scale_invariance_of_uniform_values():
+    """If all V rows are identical, output equals that row regardless of Q."""
+    T, H, D, S = 4, 2, 8, 32
+    q, k, _ = make_qkv(T, H, D, S, seed=9)
+    v_const = jnp.broadcast_to(jnp.arange(D, dtype=jnp.float32), (S, H, D))
+    out = np.asarray(attention(q, k, v_const, 3, block_k=16))
+    expect = np.broadcast_to(np.arange(D, dtype=np.float32), (T, H, D))
+    np.testing.assert_allclose(out, expect, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    T=st.sampled_from([1, 2, 4, 8, 16]),
+    H=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([4, 8, 16]),
+    s_tiles=st.integers(min_value=1, max_value=4),
+    block_k=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+    data=st.data(),
+)
+def test_hypothesis_shapes_and_cache(T, H, D, s_tiles, block_k, seed, data):
+    S = s_tiles * block_k
+    if S < T:
+        S = ((T + block_k - 1) // block_k) * block_k
+    max_cl = S - T
+    cl = data.draw(st.integers(min_value=0, max_value=max_cl))
+    q, k, v = make_qkv(T, H, D, S, seed=seed)
+    out = attention(q, k, v, cl, block_k=block_k)
+    ref = attention_ref(q, k, v, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 1000))
+def test_hypothesis_extreme_magnitudes(scale, seed):
+    """Online softmax must stay stable across score magnitudes."""
+    q, k, v = make_qkv(8, 2, 16, 64, seed=seed)
+    q = q * scale
+    out = attention(q, k, v, 5, block_k=16)
+    ref = attention_ref(q, k, v, 5)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# perf-model sanity (EXPERIMENTS.md §Perf inputs)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_fits_tpu_budget():
+    """Default production tile (T=128, D=32, block_k=128) must fit in the
+    ~16 MiB VMEM of a TPU core with ample headroom."""
+    assert vmem_bytes(128, 32, 128) < 1 << 20  # < 1 MiB
+
+
+def test_mxu_flops_formula():
+    # 2 matmuls * 2*T*S*D each, per head
+    assert mxu_flops(T=2, S=4, D=8, H=3) == 2 * 3 * (2 * 4 * 8) * 2

@@ -1,0 +1,153 @@
+"""L2 correctness: TinyLM chunked prefill vs monolithic, Pallas vs oracle,
+cache-reuse semantics the Rust engine depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ModelConfig,
+    empty_kv,
+    init_weights,
+    make_prefill_fn,
+    prefill_chunk,
+    prefill_full,
+    weight_specs,
+)
+
+# Small config so the interpret-mode Pallas kernel stays fast.
+CFG = ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16, d_ff=64, max_seq=64, block_k=16
+)
+WS = init_weights(CFG)
+
+
+def toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, n), jnp.int32)
+
+
+def run_chunks(tokens, sizes):
+    """Prefill `tokens` in chunks of the given sizes; returns (last_logits, kv)."""
+    assert sum(sizes) == tokens.shape[0]
+    kv = empty_kv(CFG)
+    off = 0
+    logits = None
+    for t in sizes:
+        logits, kv = prefill_chunk(
+            CFG, tokens[off : off + t], kv, jnp.array([off], jnp.int32), WS
+        )
+        off += t
+    return logits, kv
+
+
+def test_chunked_equals_monolithic():
+    t = toks(24)
+    lg_full, kv_full = prefill_full(CFG, t, WS, use_pallas=True)
+    lg_last, kv = run_chunks(t, [16, 8])
+    np.testing.assert_allclose(
+        np.asarray(lg_last), np.asarray(lg_full[16:]), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(kv[:, :, :24]), np.asarray(kv_full[:, :, :24]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pallas_matches_oracle_model():
+    """Whole model with Pallas attention vs jnp-oracle attention."""
+    t = toks(16, seed=1)
+    kv = empty_kv(CFG)
+    cl = jnp.array([0], jnp.int32)
+    lg_p, kv_p = prefill_chunk(CFG, t, kv, cl, WS, use_pallas=True)
+    lg_r, kv_r = prefill_chunk(CFG, t, kv, cl, WS, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(kv_p), np.asarray(kv_r), rtol=1e-4, atol=1e-4)
+
+
+def test_prefix_reuse_changes_nothing():
+    """KV built from a shared prefix + different suffixes: the shared rows
+    must be identical (the property the radix cache exploits)."""
+    prefix = toks(16, seed=2)
+    sfx_a = toks(8, seed=3)
+    sfx_b = toks(8, seed=4)
+    _, kv_a = run_chunks(jnp.concatenate([prefix, sfx_a]), [16, 8])
+    _, kv_b = run_chunks(jnp.concatenate([prefix, sfx_b]), [16, 8])
+    np.testing.assert_allclose(
+        np.asarray(kv_a[:, :, :16]), np.asarray(kv_b[:, :, :16]), rtol=1e-6, atol=1e-6
+    )
+    # and the suffix rows must differ
+    assert np.abs(np.asarray(kv_a[:, :, 16:24]) - np.asarray(kv_b[:, :, 16:24])).max() > 1e-3
+
+
+def test_padding_is_harmless():
+    """Chunk padded past the real tokens: rows written by the pad are later
+    overwritten when the real continuation arrives (engine relies on this)."""
+    t = toks(20, seed=5)
+    # pad to 24 with zeros, run as one 24-chunk, then continue correctly
+    padded = jnp.concatenate([t[:16], jnp.zeros(8, jnp.int32)])
+    kv = empty_kv(CFG)
+    _, kv = prefill_chunk(CFG, padded[:16], kv, jnp.array([0], jnp.int32), WS)
+    # garbage write: pretend a pad chunk ran at offset 16
+    _, kv_garbage = prefill_chunk(CFG, jnp.zeros(8, jnp.int32), kv, jnp.array([16], jnp.int32), WS)
+    # now the real continuation overwrites those rows
+    lg, kv_fixed = prefill_chunk(CFG, t[16:20], kv_garbage, jnp.array([16], jnp.int32), WS)
+    lg_ref, kv_ref = run_chunks(t, [16, 4])
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(kv_fixed[:, :, :20]), np.asarray(kv_ref[:, :, :20]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_logits_shape_and_finite():
+    t = toks(8, seed=6)
+    lg, kv = prefill_chunk(CFG, t, empty_kv(CFG), jnp.array([0], jnp.int32), WS)
+    assert lg.shape == (8, CFG.vocab)
+    assert kv.shape == (CFG.n_layers, 2, CFG.max_seq, CFG.n_heads, CFG.head_dim)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_weight_specs_cover_all_params():
+    specs = weight_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "embed" and names[1] == "pos" and names[-1] == "ln_f"
+    assert len([n for n in names if n.startswith("l0.")]) == 6
+    assert len(set(names)) == len(names)
+    ws = init_weights(CFG)
+    assert len(ws) == len(specs)
+    for (name, shape), w in zip(specs, ws):
+        assert tuple(w.shape) == tuple(shape), name
+
+
+def test_determinism_across_inits():
+    a = init_weights(CFG)
+    b = init_weights(CFG)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    split=st.integers(min_value=1, max_value=23),
+    seed=st.integers(min_value=0, max_value=100),
+)
+def test_hypothesis_any_chunk_split(split, seed):
+    """Any two-way chunk split reproduces the monolithic logits."""
+    t = toks(24, seed=seed)
+    lg_full, _ = prefill_full(CFG, t, WS, use_pallas=False)
+    kv = empty_kv(CFG)
+    _, kv = prefill_chunk(CFG, t[:split], kv, jnp.array([0], jnp.int32), WS, use_pallas=False)
+    lg2, _ = prefill_chunk(
+        CFG, t[split:], kv, jnp.array([split], jnp.int32), WS, use_pallas=False
+    )
+    np.testing.assert_allclose(
+        np.asarray(lg2), np.asarray(lg_full[split:]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_make_prefill_fn_signature():
+    fn = make_prefill_fn(CFG, 8)
+    t = toks(8, seed=7)
+    lg, kv = fn(t, empty_kv(CFG), jnp.array([0], jnp.int32), *WS)
+    assert lg.shape == (8, CFG.vocab)

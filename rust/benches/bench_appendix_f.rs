@@ -1,0 +1,16 @@
+//! Bench target regenerating the paper's appendix_f (custom harness; see
+//! DESIGN.md §3 experiment index). Quick sizes by default; paper-scale
+//! with CTXPILOT_FULL=1.
+
+use contextpilot::experiments::{appendix_f, full_mode};
+use contextpilot::util::table::reset_result_file;
+
+fn main() {
+    let quick = !full_mode();
+    reset_result_file("appendix_f");
+    let t0 = std::time::Instant::now();
+    for table in appendix_f::run(quick) {
+        table.emit("appendix_f");
+    }
+    eprintln!("bench_appendix_f done in {:.2}s (quick={})", t0.elapsed().as_secs_f64(), quick);
+}

@@ -1,0 +1,16 @@
+//! Bench target regenerating the paper's fig13 (custom harness; see
+//! DESIGN.md §3 experiment index). Quick sizes by default; paper-scale
+//! with CTXPILOT_FULL=1.
+
+use contextpilot::experiments::{fig13, full_mode};
+use contextpilot::util::table::reset_result_file;
+
+fn main() {
+    let quick = !full_mode();
+    reset_result_file("fig13");
+    let t0 = std::time::Instant::now();
+    for table in fig13::run(quick) {
+        table.emit("fig13");
+    }
+    eprintln!("bench_fig13 done in {:.2}s (quick={})", t0.elapsed().as_secs_f64(), quick);
+}

@@ -1,0 +1,112 @@
+//! Hot-path micro-benchmarks (§Perf): the per-request coordinator
+//! operations — index search, alignment, scheduling, dedup, radix cache
+//! match/insert, prompt rendering. These are the numbers Table 8 rolls up
+//! and the targets of the optimization pass in EXPERIMENTS.md §Perf.
+
+use contextpilot::align::align_context;
+use contextpilot::cache::RadixCache;
+use contextpilot::corpus::{Corpus, CorpusConfig};
+use contextpilot::dedup::{dedup_context, DedupConfig};
+use contextpilot::engine::render::Renderer;
+use contextpilot::experiments::table3c::synth_contexts;
+use contextpilot::index::build::build_clustered;
+use contextpilot::index::DEFAULT_ALPHA;
+use contextpilot::schedule::schedule_by_paths;
+use contextpilot::tokenizer::Tokenizer;
+use contextpilot::types::*;
+use contextpilot::util::bench::{black_box, quick};
+use contextpilot::util::prng::Rng;
+
+fn main() {
+    let base = synth_contexts(2_000, 15, 0xBE);
+    let mut built = build_clustered(&base, DEFAULT_ALPHA);
+    let queries = synth_contexts(512, 15, 0xBF);
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 650,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    );
+
+    let mut qi = 0usize;
+    let r = quick("index_search (2k contexts, k=15)", || {
+        let (_, c) = &queries[qi % queries.len()];
+        black_box(built.index.search(c));
+        qi += 1;
+    });
+    println!("{}", r.report());
+
+    let mut ai = 0usize;
+    let r = quick("align_context (search+reorder+insert)", || {
+        let (_, c) = &queries[ai % queries.len()];
+        black_box(align_context(
+            &mut built.index,
+            c,
+            RequestId(2_000_000 + ai as u64),
+        ));
+        ai += 1;
+    });
+    println!("{}", r.report());
+
+    let dcfg = DedupConfig::default();
+    let mut di = 0usize;
+    let r = quick("dedup_context (block+CDC)", || {
+        let (_, c) = &queries[di % queries.len()];
+        black_box(dedup_context(
+            &mut built.index,
+            SessionId((di % 64) as u32),
+            c,
+            &corpus,
+            &dcfg,
+        ));
+        di += 1;
+    });
+    println!("{}", r.report());
+
+    let paths: Vec<Vec<usize>> = (0..256)
+        .map(|i| {
+            let mut rng = Rng::new(i);
+            (0..rng.below(5)).map(|_| rng.below(6)).collect()
+        })
+        .collect();
+    let r = quick("schedule_by_paths (256 reqs)", || {
+        black_box(schedule_by_paths(&paths));
+    });
+    println!("{}", r.report());
+
+    // radix cache ops on ~2k-token keys
+    let mut cache: RadixCache<()> = RadixCache::new(1 << 22);
+    let keys: Vec<Vec<u32>> = (0..128)
+        .map(|i| {
+            let mut rng = Rng::new(0xCAFE + i);
+            let shared: Vec<u32> = (0..1024).map(|j| 16 + (j % 1000)).collect();
+            let mut k = shared;
+            k.extend((0..1024).map(|_| 16 + rng.below(2000) as u32));
+            k
+        })
+        .collect();
+    for (i, k) in keys.iter().enumerate() {
+        cache.insert(k, RequestId(i as u64));
+    }
+    let mut ki = 0usize;
+    let r = quick("radix match_prefix (2k-token key)", || {
+        black_box(cache.match_prefix(&keys[ki % keys.len()]));
+        ki += 1;
+    });
+    println!("{}", r.report());
+
+    let mut renderer = Renderer::new(Tokenizer::default());
+    let req = Request {
+        id: RequestId(1),
+        session: SessionId(0),
+        turn: 0,
+        context: (0..15).map(BlockId).collect(),
+        query: QueryId(1),
+    };
+    let prompt = Prompt::baseline(&req);
+    let r = quick("render prompt (15 blocks)", || {
+        black_box(renderer.render(&prompt, &corpus));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,183 @@
+//! Context alignment (§5, Algorithm 2) and order annotations (§5.3).
+//!
+//! `align_context` queries the index for the best-matching node, reorders
+//! the incoming context so the matched shared prefix comes first (in the
+//! node's canonical order) followed by the remaining blocks in their
+//! original relevance order, inserts the aligned context as a new leaf,
+//! and returns the search path the scheduler (Alg. 5) groups by.
+
+use std::collections::HashSet;
+
+use crate::index::tree::{ContextIndex, SearchResult};
+use crate::types::{BlockId, Context, RequestId};
+
+#[derive(Clone, Debug)]
+pub struct Alignment {
+    /// The reordered context handed to the engine.
+    pub aligned: Context,
+    /// Search path of the inserted leaf (for Alg.-5 scheduling).
+    pub path: Vec<usize>,
+    /// Whether the order differs from the original retrieval ranking
+    /// (if so, an order annotation is required to preserve semantics).
+    pub reordered: bool,
+}
+
+/// Algorithm 2. `context` is the retrieval-ranked block list.
+pub fn align_context(index: &mut ContextIndex, context: &Context, req: RequestId) -> Alignment {
+    let found: SearchResult = index.search(context);
+    let aligned = align_to_prefix(&index.node(found.node).context, context);
+    let reordered = aligned != *context;
+    let (_, path) = index.insert_at(&found, aligned.clone(), req);
+    Alignment {
+        aligned,
+        path,
+        reordered,
+    }
+}
+
+/// Reorder `context` to start with the blocks of `prefix` (in prefix
+/// order, restricted to blocks actually present in `context` — a virtual
+/// node's context may contain blocks this request did not retrieve),
+/// followed by the remaining blocks in their original order.
+pub fn align_to_prefix(prefix: &Context, context: &Context) -> Context {
+    if prefix.is_empty() {
+        return context.clone();
+    }
+    let have: HashSet<BlockId> = context.iter().copied().collect();
+    let mut out: Context = prefix.iter().copied().filter(|b| have.contains(b)).collect();
+    let taken: HashSet<BlockId> = out.iter().copied().collect();
+    out.extend(context.iter().copied().filter(|b| !taken.contains(b)));
+    out
+}
+
+/// Order annotation (§5.3): the original relevance ranking, rendered by
+/// the engine as "Please read the context in the following priority
+/// order: [CB_a] > [CB_b] > ... and answer the question."
+/// Returns None when the aligned order equals the original (no annotation
+/// needed — zero token overhead).
+pub fn order_annotation(original: &Context, aligned: &Context) -> Option<Context> {
+    if original == aligned {
+        None
+    } else {
+        Some(original.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::build::build_clustered;
+
+    fn ctx(ids: &[u32]) -> Context {
+        ids.iter().map(|&i| BlockId(i)).collect()
+    }
+
+    #[test]
+    fn paper_example_c6_alignment() {
+        // Fig. 5: C6{2,1,4} matches C4{1,2} -> aligned {1,2,4}.
+        let inputs = vec![
+            (RequestId(1), ctx(&[2, 1, 3])),
+            (RequestId(2), ctx(&[2, 6, 1])),
+            (RequestId(3), ctx(&[4, 1, 0])),
+        ];
+        let mut r = build_clustered(&inputs, 0.001);
+        let a = align_context(&mut r.index, &ctx(&[2, 1, 4]), RequestId(6));
+        assert_eq!(a.aligned, ctx(&[1, 2, 4]));
+        assert!(a.reordered);
+        assert_eq!(a.path, vec![0, 0, 2]); // C4's third child
+        r.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn paper_example_c8_alignment() {
+        // Fig. 5: C8{1,2,9} also matches C4 -> aligned {1,2,9}, path [0,0,3]
+        // after C6 was inserted.
+        let inputs = vec![
+            (RequestId(1), ctx(&[2, 1, 3])),
+            (RequestId(2), ctx(&[2, 6, 1])),
+            (RequestId(3), ctx(&[4, 1, 0])),
+        ];
+        let mut r = build_clustered(&inputs, 0.001);
+        align_context(&mut r.index, &ctx(&[2, 1, 4]), RequestId(6));
+        let a8 = align_context(&mut r.index, &ctx(&[1, 2, 9]), RequestId(8));
+        assert_eq!(a8.aligned, ctx(&[1, 2, 9]));
+        assert!(!a8.reordered); // {1,2,9} already starts with the prefix
+        assert_eq!(a8.path, vec![0, 0, 3]);
+    }
+
+    #[test]
+    fn unmatched_context_unchanged() {
+        // Fig. 5: C7{5,7,8} matches nothing and stays as-is.
+        let inputs = vec![
+            (RequestId(1), ctx(&[2, 1, 3])),
+            (RequestId(2), ctx(&[2, 6, 1])),
+        ];
+        let mut r = build_clustered(&inputs, 0.001);
+        let a = align_context(&mut r.index, &ctx(&[5, 7, 8]), RequestId(7));
+        assert_eq!(a.aligned, ctx(&[5, 7, 8]));
+        assert!(!a.reordered);
+        assert_eq!(a.path.len(), 1); // standalone branch off the root
+    }
+
+    #[test]
+    fn alignment_is_permutation() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::quickcheck("align_to_prefix is a permutation", |rng: &mut Rng, size| {
+            let ctx_ids: Vec<BlockId> = prop::gen_distinct_ids(rng, size, 128)
+                .into_iter()
+                .map(|i| BlockId(i as u32))
+                .collect();
+            let prefix: Vec<BlockId> = prop::gen_distinct_ids(rng, size, 128)
+                .into_iter()
+                .map(|i| BlockId(i as u32))
+                .collect();
+            let out = align_to_prefix(&prefix, &ctx_ids);
+            let mut a = ctx_ids.clone();
+            let mut b = out.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            a == b
+        });
+    }
+
+    #[test]
+    fn aligned_shared_prefix_comes_first() {
+        let prefix = ctx(&[1, 2, 3]);
+        let c = ctx(&[9, 3, 1, 7]);
+        // shared with prefix: {1,3}; aligned = [1,3] ++ [9,7]
+        assert_eq!(align_to_prefix(&prefix, &c), ctx(&[1, 3, 9, 7]));
+    }
+
+    #[test]
+    fn prefix_blocks_missing_from_context_are_not_invented() {
+        let prefix = ctx(&[1, 2, 3]);
+        let c = ctx(&[3, 5]);
+        let out = align_to_prefix(&prefix, &c);
+        assert_eq!(out, ctx(&[3, 5]));
+    }
+
+    #[test]
+    fn order_annotation_only_when_reordered() {
+        assert!(order_annotation(&ctx(&[1, 2]), &ctx(&[1, 2])).is_none());
+        assert_eq!(
+            order_annotation(&ctx(&[2, 1]), &ctx(&[1, 2])),
+            Some(ctx(&[2, 1]))
+        );
+    }
+
+    #[test]
+    fn repeated_alignment_converges_to_shared_prefixes() {
+        // many same-cluster contexts: after alignment they share prefixes
+        let inputs: Vec<(RequestId, Context)> = vec![
+            (RequestId(1), ctx(&[3, 1, 2])),
+            (RequestId(2), ctx(&[1, 3, 5])),
+        ];
+        let mut r = build_clustered(&inputs, 0.001);
+        let a1 = align_context(&mut r.index, &ctx(&[2, 3, 1]), RequestId(10));
+        let a2 = align_context(&mut r.index, &ctx(&[3, 2, 1, 9]), RequestId(11));
+        // both start with the same shared blocks
+        assert_eq!(a1.aligned[0], a2.aligned[0]);
+        r.index.check_invariants().unwrap();
+    }
+}

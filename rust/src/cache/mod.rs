@@ -1,0 +1,5 @@
+//! Prefix-cache substrate: the KV reuse layer of the inference engine.
+
+pub mod radix;
+
+pub use radix::{PrefixMatch, RadixCache};

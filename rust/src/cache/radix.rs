@@ -1,0 +1,608 @@
+//! Token-level radix-tree prefix cache (the RadixCache of SGLang, §2.1).
+//!
+//! Each node stores a token span (edge label from its parent) plus an
+//! optional payload `V` — the simulated engine uses `()`, the real PJRT
+//! engine attaches KV-cache snapshots at chunk boundaries. Capacity is
+//! counted in resident tokens; eviction is LRU over unlocked leaves,
+//! exactly the policy the paper's scheduler (Alg. 5) is designed around.
+//!
+//! ContextPilot integration (paper §4.1): every insert is tagged with the
+//! engine `RequestId`; `evict` returns the request ids of removed nodes so
+//! the context index can prune the matching entries.
+
+use std::collections::HashMap;
+
+use crate::types::RequestId;
+
+pub type NodeId = usize;
+const ROOT: NodeId = 0;
+
+#[derive(Debug)]
+struct Node<V> {
+    /// Edge label: tokens on the path from the parent to this node.
+    tokens: Vec<u32>,
+    children: HashMap<u32, NodeId>,
+    parent: NodeId,
+    last_access: u64,
+    /// Pin count: in-flight requests using this prefix; pinned nodes are
+    /// not evictable.
+    locks: u32,
+    /// Request ids whose insert created/extended this node.
+    request_ids: Vec<RequestId>,
+    payload: Option<V>,
+    alive: bool,
+}
+
+#[derive(Debug)]
+pub struct RadixCache<V> {
+    nodes: Vec<Node<V>>,
+    free: Vec<NodeId>,
+    capacity: usize,
+    resident: usize,
+    clock: u64,
+    /// Cumulative counters for Fig. 12/13 style reporting.
+    pub stat_matched_tokens: u64,
+    pub stat_lookup_tokens: u64,
+    pub stat_inserted_tokens: u64,
+    pub stat_evicted_tokens: u64,
+}
+
+/// Result of a prefix match.
+#[derive(Clone, Debug)]
+pub struct PrefixMatch {
+    /// Number of leading tokens of the key found in the cache.
+    pub len: usize,
+    /// Node path from root (exclusive) to the deepest matched node.
+    pub path: Vec<NodeId>,
+}
+
+impl<V> RadixCache<V> {
+    pub fn new(capacity_tokens: usize) -> Self {
+        let root = Node {
+            tokens: Vec::new(),
+            children: HashMap::new(),
+            parent: ROOT,
+            last_access: 0,
+            locks: 0,
+            request_ids: Vec::new(),
+            payload: None,
+            alive: true,
+        };
+        Self {
+            nodes: vec![root],
+            free: Vec::new(),
+            capacity: capacity_tokens,
+            resident: 0,
+            clock: 0,
+            stat_matched_tokens: 0,
+            stat_lookup_tokens: 0,
+            stat_inserted_tokens: 0,
+            stat_evicted_tokens: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        self.resident
+    }
+
+    fn alloc(&mut self, node: Node<V>) -> NodeId {
+        if let Some(id) = self.free.pop() {
+            self.nodes[id] = node;
+            id
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest-prefix match without mutating structure (touches LRU).
+    pub fn match_prefix(&mut self, key: &[u32]) -> PrefixMatch {
+        let now = self.tick();
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        let mut path = Vec::new();
+        'outer: while matched < key.len() {
+            let next = match self.nodes[cur].children.get(&key[matched]) {
+                Some(&n) => n,
+                None => break,
+            };
+            let node_len = self.nodes[next].tokens.len();
+            let span = &self.nodes[next].tokens;
+            let avail = key.len() - matched;
+            let common = span
+                .iter()
+                .zip(&key[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common == node_len {
+                // full edge matched; descend
+                self.nodes[next].last_access = now;
+                path.push(next);
+                cur = next;
+                if common == avail {
+                    break 'outer;
+                }
+            } else {
+                // partial edge match: stop here (node not split on lookup)
+                self.nodes[next].last_access = now;
+                path.push(next);
+                break 'outer;
+            }
+        }
+        self.stat_lookup_tokens += key.len() as u64;
+        self.stat_matched_tokens += matched as u64;
+        PrefixMatch { len: matched, path }
+    }
+
+    /// How many leading tokens are cached, *without* counting it toward the
+    /// hit statistics (used by schedulers peeking at cache state).
+    pub fn peek_prefix_len(&self, key: &[u32]) -> usize {
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        while matched < key.len() {
+            let next = match self.nodes[cur].children.get(&key[matched]) {
+                Some(&n) => n,
+                None => break,
+            };
+            let span = &self.nodes[next].tokens;
+            let common = span
+                .iter()
+                .zip(&key[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < span.len() {
+                break;
+            }
+            cur = next;
+        }
+        matched
+    }
+
+    /// Split `node` so its edge label has exactly `keep` tokens; the tail
+    /// moves into a new child. Payload stays with the *tail* (it snapshots
+    /// state at the node's end position).
+    fn split(&mut self, node: NodeId, keep: usize) -> NodeId {
+        let tail: Vec<u32> = self.nodes[node].tokens.split_off(keep);
+        debug_assert!(!tail.is_empty());
+        let child_map = std::mem::take(&mut self.nodes[node].children);
+        let payload = self.nodes[node].payload.take();
+        let reqs = self.nodes[node].request_ids.clone();
+        let new_id = self.alloc(Node {
+            tokens: tail,
+            children: child_map,
+            parent: node,
+            last_access: self.nodes[node].last_access,
+            locks: self.nodes[node].locks,
+            request_ids: reqs,
+            payload,
+            alive: true,
+        });
+        // fix parents of moved children
+        let moved: Vec<NodeId> = self.nodes[new_id].children.values().copied().collect();
+        for m in moved {
+            self.nodes[m].parent = new_id;
+        }
+        let first = self.nodes[new_id].tokens[0];
+        self.nodes[node].children.insert(first, new_id);
+        new_id
+    }
+
+    /// Insert `key`, tagging touched/created nodes with `req`. Evicts LRU
+    /// leaves as needed to respect capacity. Returns the request ids whose
+    /// cache entries were evicted to make room (ContextPilot consumes these
+    /// to prune its context index) and the number of *new* tokens inserted.
+    pub fn insert(&mut self, key: &[u32], req: RequestId) -> (usize, Vec<RequestId>) {
+        let now = self.tick();
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        while matched < key.len() {
+            let next = self.nodes[cur].children.get(&key[matched]).copied();
+            match next {
+                Some(n) => {
+                    let span_len = self.nodes[n].tokens.len();
+                    let common = self.nodes[n]
+                        .tokens
+                        .iter()
+                        .zip(&key[matched..])
+                        .take_while(|(a, b)| a == b)
+                        .count();
+                    matched += common;
+                    self.nodes[n].last_access = now;
+                    if common < span_len {
+                        // diverges inside this edge: split, then either stop
+                        // (key exhausted) or fall through to append below.
+                        self.split(n, common);
+                    }
+                    if !self.nodes[n].request_ids.contains(&req) {
+                        self.nodes[n].request_ids.push(req);
+                    }
+                    cur = n;
+                    if matched == key.len() {
+                        return (0, Vec::new());
+                    }
+                    if common < span_len {
+                        break; // diverged: append remainder as child of n
+                    }
+                }
+                None => break,
+            }
+        }
+        // append remainder as a fresh leaf
+        let rest: Vec<u32> = key[matched..].to_vec();
+        let added = rest.len();
+        if added == 0 {
+            return (0, Vec::new());
+        }
+        let evicted = self.make_room(added);
+        let leaf = self.alloc(Node {
+            tokens: rest,
+            children: HashMap::new(),
+            parent: cur,
+            last_access: now,
+            locks: 0,
+            request_ids: vec![req],
+            payload: None,
+            alive: true,
+        });
+        let first = key[matched];
+        self.nodes[cur].children.insert(first, leaf);
+        self.resident += added;
+        self.stat_inserted_tokens += added as u64;
+        (added, evicted)
+    }
+
+    /// Evict LRU unlocked leaves until `need` tokens fit. Returns evicted
+    /// request ids (deduplicated).
+    fn make_room(&mut self, need: usize) -> Vec<RequestId> {
+        let mut evicted_reqs = Vec::new();
+        while self.resident + need > self.capacity {
+            // find LRU unlocked leaf
+            let mut victim: Option<(u64, NodeId)> = None;
+            for (id, n) in self.nodes.iter().enumerate() {
+                if id == ROOT || !n.alive || n.locks > 0 || !n.children.is_empty() {
+                    continue;
+                }
+                if victim.is_none() || n.last_access < victim.unwrap().0 {
+                    victim = Some((n.last_access, id));
+                }
+            }
+            let Some((_, v)) = victim else {
+                break; // nothing evictable
+            };
+            self.remove_leaf(v, &mut evicted_reqs);
+        }
+        evicted_reqs.sort_unstable();
+        evicted_reqs.dedup();
+        evicted_reqs
+    }
+
+    fn remove_leaf(&mut self, id: NodeId, evicted_reqs: &mut Vec<RequestId>) {
+        debug_assert!(self.nodes[id].children.is_empty());
+        let parent = self.nodes[id].parent;
+        let first = self.nodes[id].tokens[0];
+        self.nodes[parent].children.remove(&first);
+        self.resident -= self.nodes[id].tokens.len();
+        self.stat_evicted_tokens += self.nodes[id].tokens.len() as u64;
+        evicted_reqs.extend(self.nodes[id].request_ids.drain(..));
+        self.nodes[id].alive = false;
+        self.nodes[id].tokens.clear();
+        self.nodes[id].payload = None;
+        self.free.push(id);
+    }
+
+    /// Explicitly evict at least `n` tokens (for tests / capacity churn).
+    pub fn evict_tokens(&mut self, n: usize) -> Vec<RequestId> {
+        let target = self.resident.saturating_sub(n);
+        let mut evicted_reqs = Vec::new();
+        while self.resident > target {
+            let mut victim: Option<(u64, NodeId)> = None;
+            for (id, node) in self.nodes.iter().enumerate() {
+                if id == ROOT || !node.alive || node.locks > 0 || !node.children.is_empty() {
+                    continue;
+                }
+                if victim.is_none() || node.last_access < victim.unwrap().0 {
+                    victim = Some((node.last_access, id));
+                }
+            }
+            let Some((_, v)) = victim else { break };
+            self.remove_leaf(v, &mut evicted_reqs);
+        }
+        evicted_reqs.sort_unstable();
+        evicted_reqs.dedup();
+        evicted_reqs
+    }
+
+    /// Pin / unpin the deepest node of a matched path.
+    pub fn lock_path(&mut self, path: &[NodeId]) {
+        for &n in path {
+            self.nodes[n].locks += 1;
+        }
+    }
+
+    pub fn unlock_path(&mut self, path: &[NodeId]) {
+        for &n in path {
+            debug_assert!(self.nodes[n].locks > 0);
+            self.nodes[n].locks -= 1;
+        }
+    }
+
+    /// Attach a payload (e.g. a KV snapshot) to the deepest node matching
+    /// exactly `key` (inserting it first if necessary).
+    pub fn set_payload(&mut self, key: &[u32], req: RequestId, payload: V) -> Vec<RequestId> {
+        let (_, evicted) = self.insert(key, req);
+        // walk to the node ending exactly at key.len()
+        let m = self.match_prefix(key);
+        debug_assert_eq!(m.len, key.len());
+        if let Some(&last) = m.path.last() {
+            // ensure node boundary == key end: split if the edge overshoots
+            let mut consumed = 0usize;
+            for &n in &m.path {
+                consumed += self.nodes[n].tokens.len();
+            }
+            if consumed > key.len() {
+                let over = consumed - key.len();
+                let keep = self.nodes[last].tokens.len() - over;
+                self.split(last, keep);
+            }
+            self.nodes[last].payload = Some(payload);
+        }
+        evicted
+    }
+
+    /// Deepest payload along `key`: returns (prefix_len, &payload).
+    pub fn deepest_payload(&self, key: &[u32]) -> Option<(usize, &V)> {
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        let mut best: Option<(usize, NodeId)> = None;
+        while matched < key.len() {
+            let next = match self.nodes[cur].children.get(&key[matched]) {
+                Some(&n) => n,
+                None => break,
+            };
+            let span = &self.nodes[next].tokens;
+            let common = span
+                .iter()
+                .zip(&key[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            if common < span.len() {
+                break;
+            }
+            if self.nodes[next].payload.is_some() {
+                best = Some((matched, next));
+            }
+            cur = next;
+        }
+        best.map(|(len, id)| (len, self.nodes[id].payload.as_ref().unwrap()))
+    }
+
+    /// Total alive nodes (diagnostics).
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    /// Structural invariants without the capacity bound (lock-heavy fuzz
+    /// sequences can legitimately pin more tokens than capacity).
+    pub fn check_invariants_ignoring_capacity(&self) -> Result<(), String> {
+        self.check_impl(false)
+    }
+
+    /// Verify structural invariants (tests / failure injection).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.check_impl(true)
+    }
+
+    fn check_impl(&self, enforce_capacity: bool) -> Result<(), String> {
+        let mut resident = 0usize;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            if id != ROOT {
+                resident += n.tokens.len();
+                if n.tokens.is_empty() {
+                    return Err(format!("node {id} has empty edge"));
+                }
+                let p = n.parent;
+                if !self.nodes[p].alive {
+                    return Err(format!("node {id} has dead parent {p}"));
+                }
+                match self.nodes[p].children.get(&n.tokens[0]) {
+                    Some(&c) if c == id => {}
+                    _ => return Err(format!("node {id} not linked from parent")),
+                }
+            }
+            for (&first, &c) in &n.children {
+                if !self.nodes[c].alive {
+                    return Err(format!("node {id} has dead child {c}"));
+                }
+                if self.nodes[c].tokens[0] != first {
+                    return Err(format!("child key mismatch at {id}->{c}"));
+                }
+                if self.nodes[c].parent != id {
+                    return Err(format!("child {c} parent mismatch"));
+                }
+            }
+        }
+        if resident != self.resident {
+            return Err(format!(
+                "resident mismatch: counted {resident} != tracked {}",
+                self.resident
+            ));
+        }
+        if enforce_capacity && self.resident > self.capacity {
+            return Err("over capacity".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(cap: usize) -> RadixCache<()> {
+        RadixCache::new(cap)
+    }
+
+    #[test]
+    fn empty_cache_no_match() {
+        let mut c = cache(100);
+        let m = c.match_prefix(&[1, 2, 3]);
+        assert_eq!(m.len, 0);
+        assert!(m.path.is_empty());
+    }
+
+    #[test]
+    fn insert_then_full_match() {
+        let mut c = cache(100);
+        c.insert(&[1, 2, 3, 4], RequestId(1));
+        let m = c.match_prefix(&[1, 2, 3, 4]);
+        assert_eq!(m.len, 4);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_match_and_split() {
+        let mut c = cache(100);
+        c.insert(&[1, 2, 3, 4], RequestId(1));
+        c.insert(&[1, 2, 9, 9], RequestId(2));
+        assert_eq!(c.match_prefix(&[1, 2, 3, 4]).len, 4);
+        assert_eq!(c.match_prefix(&[1, 2, 9, 9]).len, 4);
+        assert_eq!(c.match_prefix(&[1, 2, 7]).len, 2);
+        assert_eq!(c.resident_tokens(), 6); // {1,2} shared + {3,4} + {9,9}
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn match_returns_true_prefix_len() {
+        let mut c = cache(100);
+        c.insert(&[5, 6, 7], RequestId(1));
+        let m = c.match_prefix(&[5, 6, 8, 9]);
+        assert_eq!(m.len, 2);
+    }
+
+    #[test]
+    fn reinsert_is_noop() {
+        let mut c = cache(100);
+        let (a1, _) = c.insert(&[1, 2, 3], RequestId(1));
+        let (a2, _) = c.insert(&[1, 2, 3], RequestId(2));
+        assert_eq!(a1, 3);
+        assert_eq!(a2, 0);
+        assert_eq!(c.resident_tokens(), 3);
+    }
+
+    #[test]
+    fn eviction_respects_capacity_and_reports_request_ids() {
+        let mut c = cache(6);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[4, 5, 6], RequestId(2));
+        assert_eq!(c.resident_tokens(), 6);
+        // inserting 3 more must evict the LRU leaf (request 1)
+        let (_, evicted) = c.insert(&[7, 8, 9], RequestId(3));
+        assert_eq!(evicted, vec![RequestId(1)]);
+        assert!(c.resident_tokens() <= 6);
+        assert_eq!(c.match_prefix(&[1, 2, 3]).len, 0);
+        assert_eq!(c.peek_prefix_len(&[7, 8, 9]), 3);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_order_follows_access() {
+        let mut c = cache(6);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[4, 5, 6], RequestId(2));
+        // touch the first entry so the second becomes LRU
+        c.match_prefix(&[1, 2, 3]);
+        let (_, evicted) = c.insert(&[7, 8, 9], RequestId(3));
+        assert_eq!(evicted, vec![RequestId(2)]);
+        assert_eq!(c.peek_prefix_len(&[1, 2, 3]), 3);
+    }
+
+    #[test]
+    fn locked_nodes_survive_eviction() {
+        let mut c = cache(6);
+        c.insert(&[1, 2, 3], RequestId(1));
+        let m = c.match_prefix(&[1, 2, 3]);
+        c.lock_path(&m.path);
+        c.insert(&[4, 5, 6], RequestId(2));
+        let (added, evicted) = c.insert(&[7, 8, 9], RequestId(3));
+        assert_eq!(added, 3);
+        // request 1 is pinned; request 2 must be the victim
+        assert_eq!(evicted, vec![RequestId(2)]);
+        c.unlock_path(&m.path);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_tokens_explicit() {
+        let mut c = cache(100);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[1, 2, 4], RequestId(2));
+        let before = c.resident_tokens();
+        let evicted = c.evict_tokens(1);
+        assert!(!evicted.is_empty());
+        assert!(c.resident_tokens() < before);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn payload_at_boundary() {
+        let mut c: RadixCache<String> = RadixCache::new(100);
+        c.set_payload(&[1, 2, 3, 4], RequestId(1), "kv@4".to_string());
+        c.set_payload(&[1, 2], RequestId(1), "kv@2".to_string());
+        let (len, p) = c.deepest_payload(&[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(p, "kv@4");
+        let (len2, p2) = c.deepest_payload(&[1, 2, 99]).unwrap();
+        assert_eq!(len2, 2);
+        assert_eq!(p2, "kv@2");
+        assert!(c.deepest_payload(&[9]).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn payload_splits_overshooting_edge() {
+        let mut c: RadixCache<&'static str> = RadixCache::new(100);
+        c.insert(&[1, 2, 3, 4, 5, 6], RequestId(1));
+        c.set_payload(&[1, 2, 3], RequestId(1), "mid");
+        let (len, p) = c.deepest_payload(&[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!((len, *p), (3, "mid"));
+        // full sequence still matches
+        assert_eq!(c.peek_prefix_len(&[1, 2, 3, 4, 5, 6]), 6);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut c = cache(100);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.match_prefix(&[1, 2, 3]);
+        c.match_prefix(&[1, 9]);
+        assert_eq!(c.stat_inserted_tokens, 3);
+        assert_eq!(c.stat_lookup_tokens, 5);
+        assert_eq!(c.stat_matched_tokens, 4);
+    }
+
+    #[test]
+    fn node_reuse_after_eviction() {
+        let mut c = cache(3);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[4, 5, 6], RequestId(2)); // evicts first
+        c.insert(&[7, 8, 9], RequestId(3)); // evicts second, reuses slot
+        assert!(c.node_count() <= 2); // root + one leaf
+        c.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,338 @@
+//! Context de-duplication (§6, Algorithm 3).
+//!
+//! Two levels:
+//!  * **Block-level**: a block that already appeared in this conversation's
+//!    prior turns is replaced by a *location annotation* ("Please refer to
+//!    [CB_x] in the previous conversation") — its KV is already cached in
+//!    the history prefix.
+//!  * **Content-level**: novel blocks are split into variable-length
+//!    sub-blocks by content-defined chunking (boundary after line ℓ when
+//!    `Hash(ℓ) mod M == 0`, following LBFS-style CDC); a sub-block whose
+//!    hash was already contributed by a *different* block is elided and
+//!    annotated with a reference to the first occurrence.
+//!
+//! CDC boundaries depend only on local content, so identical text produces
+//! identical sub-blocks at any offset — unlike fixed-size chunking where
+//! one insertion shifts every later boundary (§6).
+
+use crate::corpus::Corpus;
+use crate::index::tree::ContextIndex;
+use crate::types::{BlockId, Context, Segment, SessionId};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DedupConfig {
+    /// CDC modulus M: expected sub-block length in lines.
+    pub modulus: u64,
+    /// Enable content-level (sub-block) de-duplication.
+    pub content_level: bool,
+}
+
+impl Default for DedupConfig {
+    fn default() -> Self {
+        Self {
+            modulus: 2,
+            content_level: true,
+        }
+    }
+}
+
+#[inline]
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Content-defined chunking: split `lines` into sub-blocks, cutting after
+/// any line whose hash ≡ 0 (mod M). Returns (start, end) line ranges.
+pub fn cdc_boundaries(lines: &[String], modulus: u64) -> Vec<(usize, usize)> {
+    let m = modulus.max(1);
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    for (i, line) in lines.iter().enumerate() {
+        if fnv1a64(line.as_bytes()) % m == 0 {
+            out.push((start, i + 1));
+            start = i + 1;
+        }
+    }
+    if start < lines.len() {
+        out.push((start, lines.len()));
+    }
+    out
+}
+
+fn subblock_hash(lines: &[String]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for l in lines {
+        h ^= fnv1a64(l.as_bytes());
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Statistics of one de-duplication pass (drives Table 4's token savings).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DedupStats {
+    pub blocks_in: usize,
+    pub blocks_deduped: usize,
+    pub subblocks_deduped: usize,
+    pub lines_elided: usize,
+}
+
+/// Algorithm 3: de-duplicate `context` against the conversation record of
+/// `session`, returning the prompt segments for the context region and
+/// updating the record for future turns.
+pub fn dedup_context(
+    index: &mut ContextIndex,
+    session: SessionId,
+    context: &Context,
+    corpus: &Corpus,
+    cfg: &DedupConfig,
+) -> (Vec<Segment>, DedupStats) {
+    let mut segments = Vec::with_capacity(context.len());
+    let mut stats = DedupStats {
+        blocks_in: context.len(),
+        ..Default::default()
+    };
+    // Take the record out to sidestep aliasing; put back at the end.
+    let mut record = std::mem::take(index.conversation(session));
+    for &b in context {
+        if record.seen_blocks.contains(&b) {
+            // block-level duplicate: annotate, no prefill
+            segments.push(Segment::LocationRef(b));
+            stats.blocks_deduped += 1;
+            continue;
+        }
+        if !cfg.content_level {
+            segments.push(Segment::Block(b));
+            continue;
+        }
+        // content-level: CDC split + sub-block hash matching
+        let lines = &corpus.doc(b).lines;
+        let ranges = cdc_boundaries(lines, cfg.modulus);
+        let mut kept: Vec<u32> = Vec::with_capacity(lines.len());
+        let mut refs: Vec<BlockId> = Vec::new();
+        let mut elided_any = false;
+        for &(s, e) in &ranges {
+            let h = subblock_hash(&lines[s..e]);
+            match record.seen_subblocks.get(&h) {
+                Some(&owner) if owner != b => {
+                    // duplicate span from a different block: elide + annotate
+                    elided_any = true;
+                    stats.subblocks_deduped += 1;
+                    stats.lines_elided += e - s;
+                    if !refs.contains(&owner) {
+                        refs.push(owner);
+                    }
+                }
+                _ => {
+                    record.seen_subblocks.entry(h).or_insert(b);
+                    kept.extend((s as u32)..(e as u32));
+                }
+            }
+        }
+        if elided_any {
+            segments.push(Segment::PartialBlock { block: b, kept, refs });
+        } else {
+            segments.push(Segment::Block(b));
+        }
+    }
+    // register this turn's blocks for future comparisons
+    record.seen_blocks.extend(context.iter().copied());
+    *index.conversation(session) = record;
+    (segments, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{Corpus, CorpusConfig};
+    use crate::tokenizer::Tokenizer;
+
+    fn setup() -> (ContextIndex, Corpus) {
+        let tok = Tokenizer::default();
+        let cfg = CorpusConfig {
+            n_docs: 60,
+            fact_pool: 8,        // small pool => much cross-doc duplication
+            shared_line_prob: 0.4,
+            ..Default::default()
+        };
+        (ContextIndex::new(0.001), Corpus::generate(&cfg, &tok))
+    }
+
+    fn ctx(ids: &[u32]) -> Context {
+        ids.iter().map(|&i| BlockId(i)).collect()
+    }
+
+    #[test]
+    fn first_turn_keeps_all_blocks() {
+        let (mut ix, corpus) = setup();
+        let (segs, stats) = dedup_context(
+            &mut ix,
+            SessionId(0),
+            &ctx(&[1, 2, 3]),
+            &corpus,
+            &DedupConfig {
+                content_level: false,
+                ..Default::default()
+            },
+        );
+        assert_eq!(stats.blocks_deduped, 0);
+        assert!(segs.iter().all(|s| matches!(s, Segment::Block(_))));
+    }
+
+    #[test]
+    fn paper_example_second_turn() {
+        // §6: turn 1 retrieves {1,2,4}; turn 2 {1,5,2} -> {1,2} annotated,
+        // only {5} fully processed.
+        let (mut ix, corpus) = setup();
+        let cfg = DedupConfig {
+            content_level: false,
+            ..Default::default()
+        };
+        dedup_context(&mut ix, SessionId(6), &ctx(&[1, 2, 4]), &corpus, &cfg);
+        let (segs, stats) =
+            dedup_context(&mut ix, SessionId(6), &ctx(&[1, 5, 2]), &corpus, &cfg);
+        assert_eq!(stats.blocks_deduped, 2);
+        assert_eq!(segs[0], Segment::LocationRef(BlockId(1)));
+        assert_eq!(segs[1], Segment::Block(BlockId(5)));
+        assert_eq!(segs[2], Segment::LocationRef(BlockId(2)));
+    }
+
+    #[test]
+    fn sessions_do_not_leak() {
+        let (mut ix, corpus) = setup();
+        let cfg = DedupConfig::default();
+        dedup_context(&mut ix, SessionId(1), &ctx(&[1, 2]), &corpus, &cfg);
+        let (_, stats) = dedup_context(&mut ix, SessionId(2), &ctx(&[1, 2]), &corpus, &cfg);
+        assert_eq!(stats.blocks_deduped, 0, "records must be per-session");
+    }
+
+    #[test]
+    fn content_level_elides_shared_facts() {
+        let (mut ix, corpus) = setup();
+        let cfg = DedupConfig::default();
+        // find two docs sharing a fact line
+        let mut pair = None;
+        'outer: for a in 0..corpus.len() {
+            for b in (a + 1)..corpus.len() {
+                let la: std::collections::HashSet<_> =
+                    corpus.docs[a].lines.iter().collect();
+                if corpus.docs[b].lines.iter().any(|l| la.contains(l)) {
+                    pair = Some((a as u32, b as u32));
+                    break 'outer;
+                }
+            }
+        }
+        let (a, b) = pair.expect("corpus should contain shared lines");
+        let (_, stats) =
+            dedup_context(&mut ix, SessionId(3), &ctx(&[a, b]), &corpus, &cfg);
+        // NOTE: elision requires the shared lines to fall in matching CDC
+        // sub-blocks; with a dense fact pool this happens frequently but is
+        // not guaranteed for one specific pair. Run over many pairs:
+        let mut total = stats.subblocks_deduped;
+        for s in 10..30u32 {
+            let c: Context = (0..6).map(|i| BlockId((s * 2 + i) % 60)).collect();
+            let (_, st) = dedup_context(&mut ix, SessionId(100 + s), &c, &corpus, &cfg);
+            total += st.subblocks_deduped;
+        }
+        assert!(total > 0, "content-level dedup never fired");
+    }
+
+    #[test]
+    fn cdc_is_content_local() {
+        // identical text produces identical sub-blocks regardless of offset
+        let lines: Vec<String> = (0..12).map(|i| format!("shared line {i}")).collect();
+        let mut shifted = vec!["prefix junk".to_string()];
+        shifted.extend(lines.clone());
+        let b1 = cdc_boundaries(&lines, 4);
+        let b2 = cdc_boundaries(&shifted, 4);
+        // sub-block hashes of the shared suffix must coincide
+        let h1: Vec<u64> = b1.iter().map(|&(s, e)| subblock_hash(&lines[s..e])).collect();
+        let h2: Vec<u64> = b2
+            .iter()
+            .map(|&(s, e)| subblock_hash(&shifted[s..e]))
+            .collect();
+        let shared: Vec<_> = h1.iter().filter(|h| h2.contains(h)).collect();
+        // all but possibly the first chunk of each must match
+        assert!(
+            shared.len() + 1 >= h1.len(),
+            "CDC not offset-invariant: {} of {} chunks shared",
+            shared.len(),
+            h1.len()
+        );
+    }
+
+    #[test]
+    fn cdc_covers_all_lines_exactly_once() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::quickcheck("cdc partitions lines", |rng: &mut Rng, size| {
+            let lines: Vec<String> = (0..size).map(|_| prop::gen_text(rng, 4)).collect();
+            let ranges = cdc_boundaries(&lines, 3);
+            let mut covered = 0usize;
+            let mut prev_end = 0usize;
+            for &(s, e) in &ranges {
+                if s != prev_end || e <= s {
+                    return false;
+                }
+                covered += e - s;
+                prev_end = e;
+            }
+            covered == lines.len()
+        });
+    }
+
+    #[test]
+    fn dedup_never_invents_or_loses_blocks() {
+        let (mut ix, corpus) = setup();
+        let cfg = DedupConfig::default();
+        let c = ctx(&[5, 9, 13, 20]);
+        dedup_context(&mut ix, SessionId(4), &ctx(&[9, 20]), &corpus, &cfg);
+        let (segs, _) = dedup_context(&mut ix, SessionId(4), &c, &corpus, &cfg);
+        let mentioned: Vec<BlockId> = segs
+            .iter()
+            .map(|s| match s {
+                Segment::Block(b)
+                | Segment::LocationRef(b)
+                | Segment::PartialBlock { block: b, .. } => *b,
+                _ => panic!("unexpected segment"),
+            })
+            .collect();
+        assert_eq!(mentioned, c);
+    }
+
+    #[test]
+    fn token_count_never_grows() {
+        // deduped prompt region must not exceed the baseline block tokens
+        let (mut ix, corpus) = setup();
+        let tok = Tokenizer::default();
+        let cfg = DedupConfig::default();
+        let c = ctx(&[2, 4, 6, 8]);
+        dedup_context(&mut ix, SessionId(5), &ctx(&[4, 8]), &corpus, &cfg);
+        let (segs, _) = dedup_context(&mut ix, SessionId(5), &c, &corpus, &cfg);
+        let baseline: usize = c.iter().map(|&b| corpus.doc_tokens(b)).sum();
+        let annotation_overhead = 12; // words per location annotation
+        let mut deduped = 0usize;
+        for s in &segs {
+            match s {
+                Segment::Block(b) => deduped += corpus.doc_tokens(*b),
+                Segment::LocationRef(_) => deduped += annotation_overhead,
+                Segment::PartialBlock { block, kept, refs } => {
+                    for &l in kept {
+                        deduped += tok.count(&corpus.doc(*block).lines[l as usize]);
+                    }
+                    deduped += annotation_overhead * refs.len();
+                }
+                _ => {}
+            }
+        }
+        assert!(
+            deduped <= baseline + annotation_overhead,
+            "dedup grew the prompt: {deduped} > {baseline}"
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! Inference-engine layer: cost profiles, prompt rendering, the simulated
+//! serving engine (paper-scale sweeps), and the multi-worker router.
+//! The real PJRT-backed engine lives in [`crate::runtime`].
+
+pub mod costmodel;
+pub mod render;
+pub mod router;
+pub mod sim;
+
+pub use costmodel::{CostProfile, ModelSku};
+pub use render::Renderer;
+pub use router::{RoutePolicy, Router};
+pub use sim::{ReusePolicy, SimEngine};

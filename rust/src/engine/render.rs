@@ -1,0 +1,218 @@
+//! Prompt rendering: turn a [`Prompt`]'s segments into the token stream
+//! the engine prefills. Block token sequences are memoized per corpus so
+//! the serving hot path never re-tokenizes documents.
+
+use std::collections::HashMap;
+
+use crate::corpus::Corpus;
+use crate::tokenizer::Tokenizer;
+use crate::types::{BlockId, Prompt, QueryId, Segment};
+
+const SYSTEM_TEXT: &str =
+    "system: you are a helpful assistant answer using the retrieved context blocks";
+
+pub struct Renderer {
+    pub tokenizer: Tokenizer,
+    block_tokens: HashMap<BlockId, Vec<u32>>,
+    system_tokens: Vec<u32>,
+}
+
+impl Renderer {
+    pub fn new(tokenizer: Tokenizer) -> Self {
+        let system_tokens = tokenizer.encode(SYSTEM_TEXT);
+        Self {
+            tokenizer,
+            block_tokens: HashMap::new(),
+            system_tokens,
+        }
+    }
+
+    fn block(&mut self, b: BlockId, corpus: &Corpus) -> &[u32] {
+        let tok = &self.tokenizer;
+        self.block_tokens
+            .entry(b)
+            .or_insert_with(|| tok.encode(&corpus.doc(b).text()))
+    }
+
+    fn location_ref_text(b: BlockId) -> String {
+        format!("note please refer to {b} in the previous conversation")
+    }
+
+    fn order_annotation_text(ranking: &[BlockId]) -> String {
+        let order = ranking
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(" > ");
+        format!("please read the context in the following priority order {order} and answer the question")
+    }
+
+    fn question_text(q: QueryId) -> String {
+        format!("question q{} please answer concisely", q.0)
+    }
+
+    /// Render a prompt into tokens, appending to `out`.
+    pub fn render_into(&mut self, prompt: &Prompt, corpus: &Corpus, out: &mut Vec<u32>) {
+        for seg in &prompt.segments {
+            match seg {
+                Segment::System => out.extend_from_slice(&self.system_tokens),
+                Segment::Block(b) => {
+                    let toks = self.block(*b, corpus);
+                    out.extend_from_slice(toks);
+                }
+                Segment::LocationRef(b) => {
+                    self.tokenizer
+                        .encode_into(&Self::location_ref_text(*b), out);
+                }
+                Segment::PartialBlock { block, kept, refs } => {
+                    // kept lines verbatim + one reference per elided origin
+                    for &l in kept {
+                        let line = &corpus.doc(*block).lines[l as usize];
+                        self.tokenizer.encode_into(line, out);
+                    }
+                    for r in refs {
+                        self.tokenizer.encode_into(&Self::location_ref_text(*r), out);
+                    }
+                }
+                Segment::OrderAnnotation(ranking) => {
+                    self.tokenizer
+                        .encode_into(&Self::order_annotation_text(ranking), out);
+                }
+                Segment::Question(q) => {
+                    self.tokenizer.encode_into(&Self::question_text(*q), out);
+                }
+            }
+        }
+    }
+
+    pub fn render(&mut self, prompt: &Prompt, corpus: &Corpus) -> Vec<u32> {
+        let mut out = Vec::with_capacity(256);
+        self.render_into(prompt, corpus, &mut out);
+        out
+    }
+
+    /// Deterministic pseudo-answer tokens for a query (appended to the
+    /// conversation history after decode).
+    pub fn answer_tokens(&self, q: QueryId, n: usize) -> Vec<u32> {
+        (0..n)
+            .map(|i| {
+                let h = q.0.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+                16 + (h % (self.tokenizer.vocab as u64 - 16)) as u32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::types::{Request, RequestId, SessionId};
+
+    fn setup() -> (Renderer, Corpus) {
+        let tok = Tokenizer::default();
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 20,
+                ..Default::default()
+            },
+            &tok,
+        );
+        (Renderer::new(Tokenizer::default()), corpus)
+    }
+
+    fn req(ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(1),
+            session: SessionId(0),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(5),
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic_and_cached() {
+        let (mut r, corpus) = setup();
+        let p = Prompt::baseline(&req(&[1, 2, 3]));
+        let a = r.render(&p, &corpus);
+        let b = r.render(&p, &corpus);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn identical_block_prefix_yields_identical_token_prefix() {
+        let (mut r, corpus) = setup();
+        let p1 = Prompt::baseline(&req(&[1, 2, 3]));
+        let p2 = Prompt::baseline(&req(&[1, 2, 7]));
+        let t1 = r.render(&p1, &corpus);
+        let t2 = r.render(&p2, &corpus);
+        // shared prefix: system + block1 + block2
+        let shared = r.tokenizer.encode(
+            "system: you are a helpful assistant answer using the retrieved context blocks",
+        )
+        .len()
+            + corpus.doc_tokens(BlockId(1))
+            + corpus.doc_tokens(BlockId(2));
+        assert_eq!(t1[..shared], t2[..shared]);
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn location_ref_is_much_shorter_than_block() {
+        let (mut r, corpus) = setup();
+        let full = Prompt {
+            segments: vec![Segment::Block(BlockId(3))],
+        };
+        let loc = Prompt {
+            segments: vec![Segment::LocationRef(BlockId(3))],
+        };
+        let t_full = r.render(&full, &corpus).len();
+        let t_loc = r.render(&loc, &corpus).len();
+        assert!(t_loc * 4 < t_full, "loc {t_loc} vs full {t_full}");
+    }
+
+    #[test]
+    fn partial_block_renders_kept_lines_only() {
+        let (mut r, corpus) = setup();
+        let all_lines = corpus.doc(BlockId(2)).lines.len() as u32;
+        let partial = Prompt {
+            segments: vec![Segment::PartialBlock {
+                block: BlockId(2),
+                kept: (0..all_lines / 2).collect(),
+                refs: vec![BlockId(1)],
+            }],
+        };
+        let full = Prompt {
+            segments: vec![Segment::Block(BlockId(2))],
+        };
+        let t_partial = r.render(&partial, &corpus).len();
+        let t_full = r.render(&full, &corpus).len();
+        assert!(t_partial < t_full);
+    }
+
+    #[test]
+    fn order_annotation_token_overhead_is_small() {
+        let (mut r, corpus) = setup();
+        let base = Prompt::baseline(&req(&[1, 2, 3, 4, 5]));
+        let mut with_ann = base.clone();
+        with_ann.segments.insert(
+            with_ann.segments.len() - 1,
+            Segment::OrderAnnotation(req(&[1, 2, 3, 4, 5]).context),
+        );
+        let t0 = r.render(&base, &corpus).len();
+        let t1 = r.render(&with_ann, &corpus).len();
+        assert!(t1 > t0);
+        assert!((t1 - t0) < t0 / 5, "annotation overhead {} vs {}", t1 - t0, t0);
+    }
+
+    #[test]
+    fn answer_tokens_deterministic_in_vocab() {
+        let (r, _) = setup();
+        let a = r.answer_tokens(QueryId(3), 10);
+        assert_eq!(a, r.answer_tokens(QueryId(3), 10));
+        assert!(a.iter().all(|&t| t >= 16 && t < r.tokenizer.vocab));
+        assert_ne!(a, r.answer_tokens(QueryId(4), 10));
+    }
+}

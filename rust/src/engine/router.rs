@@ -1,0 +1,207 @@
+//! Multi-worker router (Table 6 / §7.2 agent-aware routing): distributes
+//! requests over N engine instances. Context-aware routing sends recurring
+//! context blocks to the worker already holding their KV — the mechanism
+//! behind ContextPilot's DeepSeek-R1 multi-node speedups.
+
+use std::collections::HashMap;
+
+use crate::corpus::Corpus;
+use crate::engine::costmodel::CostProfile;
+use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::quality::QualityModel;
+use crate::types::{BlockId, Prompt, Request, RequestId, ServedRequest};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Vanilla: spread load evenly, ignore cache affinity.
+    RoundRobin,
+    /// ContextPilot: route to the worker holding the most of this
+    /// request's blocks (ties -> least loaded).
+    ContextAware,
+}
+
+pub struct Router {
+    pub workers: Vec<SimEngine>,
+    pub policy: RoutePolicy,
+    /// block -> worker that last prefilled it
+    block_home: HashMap<BlockId, usize>,
+    served_per_worker: Vec<usize>,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(
+        n_workers: usize,
+        profile: CostProfile,
+        reuse: ReusePolicy,
+        capacity_tokens: usize,
+        policy: RoutePolicy,
+    ) -> Self {
+        assert!(n_workers > 0);
+        Self {
+            workers: (0..n_workers)
+                .map(|_| SimEngine::new(profile, reuse, capacity_tokens))
+                .collect(),
+            policy,
+            block_home: HashMap::new(),
+            served_per_worker: vec![0; n_workers],
+            rr_next: 0,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick a worker for this request.
+    pub fn route(&mut self, req: &Request) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let w = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.workers.len();
+                w
+            }
+            RoutePolicy::ContextAware => {
+                let mut votes = vec![0usize; self.workers.len()];
+                for b in &req.context {
+                    if let Some(&w) = self.block_home.get(b) {
+                        votes[w] += 1;
+                    }
+                }
+                let max = votes.iter().copied().max().unwrap_or(0);
+                if max == 0 {
+                    // no affinity: least-loaded
+                    (0..self.workers.len())
+                        .min_by_key(|&w| self.served_per_worker[w])
+                        .unwrap()
+                } else {
+                    (0..self.workers.len())
+                        .filter(|&w| votes[w] == max)
+                        .min_by_key(|&w| self.served_per_worker[w])
+                        .unwrap()
+                }
+            }
+        }
+    }
+
+    /// Route + serve. Returns (worker, record, evicted request ids).
+    pub fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (usize, ServedRequest, Vec<RequestId>) {
+        let w = self.route(req);
+        self.served_per_worker[w] += 1;
+        for b in &req.context {
+            self.block_home.insert(*b, w);
+        }
+        let (served, evicted) = self.workers[w].serve(req, prompt, corpus, quality, decode_tokens);
+        (w, served, evicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::engine::costmodel::ModelSku;
+    use crate::quality::ModelEra;
+    use crate::tokenizer::Tokenizer;
+    use crate::types::{QueryId, SessionId};
+
+    fn setup(policy: RoutePolicy) -> (Router, Corpus, QualityModel) {
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 40,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        );
+        (
+            Router::new(
+                4,
+                ModelSku::DeepSeekR1_16xH20.profile(),
+                ReusePolicy::RadixPrefix,
+                1 << 20,
+                policy,
+            ),
+            corpus,
+            QualityModel::new(ModelEra::Modern, true),
+        )
+    }
+
+    fn req(id: u64, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(id as u32),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (mut r, _, _) = setup(RoutePolicy::RoundRobin);
+        let ws: Vec<usize> = (0..8).map(|i| r.route(&req(i, &[1]))).collect();
+        assert_eq!(ws, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn context_aware_returns_to_block_home() {
+        let (mut r, corpus, qm) = setup(RoutePolicy::ContextAware);
+        let (w1, _, _) = r.serve(&req(1, &[5, 6, 7]), &Prompt::baseline(&req(1, &[5, 6, 7])), &corpus, &qm, 4);
+        // fill other workers with unrelated requests
+        for i in 2..5u64 {
+            let ids = [i as u32 * 8, i as u32 * 8 + 1];
+            r.serve(&req(i, &ids), &Prompt::baseline(&req(i, &ids)), &corpus, &qm, 4);
+        }
+        // a recurring context must return to w1
+        let (w2, s2, _) = r.serve(&req(9, &[5, 6, 7]), &Prompt::baseline(&req(9, &[5, 6, 7])), &corpus, &qm, 4);
+        assert_eq!(w1, w2, "recurring blocks not routed home");
+        assert!(s2.cached_tokens > 0, "affinity routing should hit the cache");
+    }
+
+    #[test]
+    fn context_aware_beats_round_robin_on_recurring_workload() {
+        let reqs: Vec<Request> = (0..40u64)
+            .map(|i| {
+                // 3 recurring block groups over 4 workers: round-robin
+                // cannot stay aligned with the recurrence pattern
+                let g = (i % 3) as u32;
+                req(i, &[g * 3 + 1, g * 3 + 2, g * 3 + 3])
+            })
+            .collect();
+        let mut hit = |policy| {
+            let (mut r, corpus, qm) = setup(policy);
+            let mut cached = 0usize;
+            let mut total = 0usize;
+            for rq in &reqs {
+                let (_, s, _) = r.serve(rq, &Prompt::baseline(rq), &corpus, &qm, 4);
+                cached += s.cached_tokens;
+                total += s.prompt_tokens;
+            }
+            cached as f64 / total as f64
+        };
+        let h_aware = hit(RoutePolicy::ContextAware);
+        let h_rr = hit(RoutePolicy::RoundRobin);
+        assert!(
+            h_aware > h_rr,
+            "context-aware {h_aware} <= round-robin {h_rr}"
+        );
+    }
+
+    #[test]
+    fn no_affinity_falls_back_to_least_loaded() {
+        let (mut r, _, _) = setup(RoutePolicy::ContextAware);
+        // three routes with disjoint fresh blocks spread across workers
+        let a = r.route(&req(1, &[1]));
+        r.served_per_worker[a] += 1;
+        let b = r.route(&req(2, &[2]));
+        r.served_per_worker[b] += 1;
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,358 @@
+//! Simulated inference engine: a faithful prefix-cache + latency model for
+//! paper-scale sweeps (the *real* PJRT engine lives in `runtime/`).
+//!
+//! The engine owns the radix prefix cache, per-session conversation
+//! history, and the reuse policy under test. The three baseline systems
+//! are mechanism-level re-implementations (DESIGN.md §5):
+//!
+//!  * `RadixPrefix` — token-level longest-prefix reuse (SGLang RadixCache;
+//!    also what ContextPilot-rewritten prompts run on);
+//!  * `DocPrefix` — document-granular exact prefix matching with a CPU
+//!    offload penalty per reused token (LMCache);
+//!  * `Approximate` — CacheBlend-style KV matching: block KV reused at any
+//!    position with a partial-recompute fraction, at an accuracy cost
+//!    (`kv_noise`).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cache::RadixCache;
+use crate::corpus::Corpus;
+use crate::engine::costmodel::CostProfile;
+use crate::engine::render::Renderer;
+use crate::quality::QualityModel;
+use crate::tokenizer::Tokenizer;
+use crate::types::{
+    BlockId, Prompt, Request, RequestId, Segment, ServedRequest, SessionId,
+};
+
+#[derive(Clone, Copy, Debug)]
+pub enum ReusePolicy {
+    RadixPrefix,
+    DocPrefix { offload_s_per_tok: f64 },
+    Approximate { recompute_frac: f64, kv_noise: f64 },
+}
+
+impl ReusePolicy {
+    pub fn kv_noise(&self) -> f64 {
+        match self {
+            ReusePolicy::Approximate { kv_noise, .. } => *kv_noise,
+            _ => 0.0,
+        }
+    }
+}
+
+pub struct SimEngine {
+    pub cache: RadixCache<()>,
+    pub renderer: Renderer,
+    pub profile: CostProfile,
+    pub policy: ReusePolicy,
+    /// Token history per conversation (prior prompts + answers).
+    history: HashMap<SessionId, Vec<u32>>,
+    history_blocks: HashMap<SessionId, HashSet<BlockId>>,
+    /// CacheBlend block store: block -> token length held.
+    blend_store: HashMap<BlockId, usize>,
+    blend_order: Vec<BlockId>,
+    blend_resident: usize,
+}
+
+impl SimEngine {
+    pub fn new(profile: CostProfile, policy: ReusePolicy, capacity_tokens: usize) -> Self {
+        Self {
+            cache: RadixCache::new(capacity_tokens),
+            renderer: Renderer::new(Tokenizer::default()),
+            profile,
+            policy,
+            history: HashMap::new(),
+            history_blocks: HashMap::new(),
+            blend_store: HashMap::new(),
+            blend_order: Vec::new(),
+            blend_resident: 0,
+        }
+    }
+
+    /// Peek how many leading tokens of this prompt would hit the cache
+    /// (LPM scheduling uses this without disturbing LRU state).
+    pub fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
+        let tokens = self.assemble(req.session, prompt, corpus);
+        self.cache.peek_prefix_len(&tokens)
+    }
+
+    fn assemble(&mut self, session: SessionId, prompt: &Prompt, corpus: &Corpus) -> Vec<u32> {
+        let mut tokens = self.history.get(&session).cloned().unwrap_or_default();
+        self.renderer.render_into(prompt, corpus, &mut tokens);
+        tokens
+    }
+
+    /// Token offsets of segment boundaries in the rendered prompt region
+    /// (used by document-granular matching).
+    fn segment_boundaries(
+        &mut self,
+        history_len: usize,
+        prompt: &Prompt,
+        corpus: &Corpus,
+    ) -> Vec<usize> {
+        let mut out = vec![history_len];
+        let mut acc = history_len;
+        for seg in &prompt.segments {
+            let mut buf = Vec::new();
+            let one = Prompt {
+                segments: vec![seg.clone()],
+            };
+            self.renderer.render_into(&one, corpus, &mut buf);
+            acc += buf.len();
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Serve one request: returns the metrics record and the engine
+    /// request-ids evicted to make room (feed these to `ContextPilot::on_evict`).
+    pub fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        let history_len = self.history.get(&req.session).map_or(0, |h| h.len());
+        let tokens = self.assemble(req.session, prompt, corpus);
+        let total = tokens.len();
+
+        let (cached_effective, evicted) = match self.policy {
+            ReusePolicy::RadixPrefix => {
+                let m = self.cache.match_prefix(&tokens);
+                let (_, ev) = self.cache.insert(&tokens, req.id);
+                (m.len, ev)
+            }
+            ReusePolicy::DocPrefix { .. } => {
+                let m = self.cache.match_prefix(&tokens);
+                // floor the match to a segment boundary: LMCache reuses
+                // whole-document KV entries only
+                let bounds = self.segment_boundaries(history_len, prompt, corpus);
+                let floored = bounds
+                    .iter()
+                    .copied()
+                    .filter(|&b| b <= m.len)
+                    .max()
+                    .unwrap_or(0);
+                let (_, ev) = self.cache.insert(&tokens, req.id);
+                (floored, ev)
+            }
+            ReusePolicy::Approximate { recompute_frac, .. } => {
+                // block KV reusable at any position; recompute_frac of the
+                // reused tokens is recomputed to blend caches
+                let mut reused = 0usize;
+                for seg in &prompt.segments {
+                    if let Segment::Block(b) = seg {
+                        if let Some(len) = self.blend_store.get(b) {
+                            reused += len;
+                        }
+                    }
+                }
+                // register new blocks (FIFO capacity)
+                for seg in &prompt.segments {
+                    if let Segment::Block(b) = seg {
+                        if !self.blend_store.contains_key(b) {
+                            let len = corpus.doc_tokens(*b);
+                            self.blend_store.insert(*b, len);
+                            self.blend_order.push(*b);
+                            self.blend_resident += len;
+                            while self.blend_resident > self.cache.capacity()
+                                && self.blend_order.len() > 1
+                            {
+                                let victim = self.blend_order.remove(0);
+                                if let Some(l) = self.blend_store.remove(&victim) {
+                                    self.blend_resident -= l;
+                                }
+                            }
+                        }
+                    }
+                }
+                let effective = (reused as f64 * (1.0 - recompute_frac)) as usize;
+                (effective.min(total), Vec::new())
+            }
+        };
+
+        let offload = match self.policy {
+            ReusePolicy::DocPrefix { offload_s_per_tok } => offload_s_per_tok,
+            _ => 0.0,
+        };
+        let ttft = self.profile.overhead_s
+            + (total - cached_effective) as f64 / self.profile.prefill_rate
+            + cached_effective as f64 * offload;
+        let wall = ttft + self.profile.decode_latency(decode_tokens);
+
+        // quality
+        let empty = HashSet::new();
+        let hist_blocks = self.history_blocks.get(&req.session).unwrap_or(&empty);
+        let q = quality.score(req, prompt, hist_blocks, self.policy.kv_noise());
+
+        // conversation history: prompt region + the generated answer
+        let hist = self.history.entry(req.session).or_default();
+        hist.extend_from_slice(&tokens[history_len.min(tokens.len())..]);
+        let answer = self.renderer.answer_tokens(req.query, decode_tokens.min(64));
+        hist.extend_from_slice(&answer);
+        let hb = self.history_blocks.entry(req.session).or_default();
+        for seg in &prompt.segments {
+            if let Segment::Block(b) | Segment::PartialBlock { block: b, .. } = seg {
+                hb.insert(*b);
+            }
+        }
+
+        (
+            ServedRequest {
+                request: req.clone(),
+                prompt: prompt.clone(),
+                prompt_tokens: total,
+                cached_tokens: cached_effective,
+                ttft,
+                wall,
+                quality: q,
+            },
+            evicted,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::engine::costmodel::ModelSku;
+    use crate::quality::ModelEra;
+    use crate::types::QueryId;
+
+    fn setup(policy: ReusePolicy, cap: usize) -> (SimEngine, Corpus, QualityModel) {
+        let tok = Tokenizer::default();
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 40,
+                ..Default::default()
+            },
+            &tok,
+        );
+        (
+            SimEngine::new(ModelSku::Qwen3_32B.profile(), policy, cap),
+            corpus,
+            QualityModel::new(ModelEra::Modern, false),
+        )
+    }
+
+    fn req(id: u64, session: u32, turn: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    #[test]
+    fn radix_reuses_shared_prefix_across_sessions() {
+        let (mut e, corpus, qm) = setup(ReusePolicy::RadixPrefix, 1 << 20);
+        let r1 = req(1, 1, 0, &[1, 2, 3]);
+        let r2 = req(2, 2, 0, &[1, 2, 9]);
+        let (s1, _) = e.serve(&r1, &Prompt::baseline(&r1), &corpus, &qm, 8);
+        let (s2, _) = e.serve(&r2, &Prompt::baseline(&r2), &corpus, &qm, 8);
+        assert_eq!(s1.cached_tokens, 0);
+        assert!(s2.cached_tokens > 0, "prefix should hit");
+        assert!(s2.ttft < s1.ttft);
+    }
+
+    #[test]
+    fn multi_turn_history_is_a_cached_prefix() {
+        let (mut e, corpus, qm) = setup(ReusePolicy::RadixPrefix, 1 << 20);
+        let r1 = req(1, 7, 0, &[1, 2]);
+        let r2 = req(2, 7, 1, &[3, 4]);
+        e.serve(&r1, &Prompt::baseline(&r1), &corpus, &qm, 8);
+        let (s2, _) = e.serve(&r2, &Prompt::baseline(&r2), &corpus, &qm, 8);
+        // the whole first turn (prompt + answer) is the second turn's prefix
+        assert!(s2.cached_tokens > 100, "history prefix not reused: {}", s2.cached_tokens);
+    }
+
+    #[test]
+    fn doc_prefix_floors_to_block_boundary() {
+        let (mut e, corpus, qm) = setup(
+            ReusePolicy::DocPrefix {
+                offload_s_per_tok: 0.0,
+            },
+            1 << 20,
+        );
+        let r1 = req(1, 1, 0, &[1, 2, 3]);
+        // shares block 1, then diverges *within* the context region
+        let r2 = req(2, 2, 0, &[1, 9, 3]);
+        e.serve(&r1, &Prompt::baseline(&r1), &corpus, &qm, 8);
+        let (s2, _) = e.serve(&r2, &Prompt::baseline(&r2), &corpus, &qm, 8);
+        // cached must equal system + block1 exactly (a boundary), not more
+        let mut renderer = Renderer::new(Tokenizer::default());
+        let sys_len = renderer
+            .render(
+                &Prompt {
+                    segments: vec![Segment::System],
+                },
+                &corpus,
+            )
+            .len();
+        let expect = sys_len + corpus.doc_tokens(BlockId(1));
+        assert_eq!(s2.cached_tokens, expect);
+    }
+
+    #[test]
+    fn approximate_reuses_blocks_anywhere_but_degrades_quality() {
+        let (mut e, corpus, qm) = setup(
+            ReusePolicy::Approximate {
+                recompute_frac: 0.15,
+                kv_noise: 0.17,
+            },
+            1 << 20,
+        );
+        let r1 = req(1, 1, 0, &[1, 2, 3]);
+        // same blocks in a *different order*: exact prefix would miss
+        let r2 = req(2, 2, 0, &[3, 1, 2]);
+        let (s1, _) = e.serve(&r1, &Prompt::baseline(&r1), &corpus, &qm, 8);
+        let (s2, _) = e.serve(&r2, &Prompt::baseline(&r2), &corpus, &qm, 8);
+        assert!(s2.cached_tokens > s1.cached_tokens);
+        assert!(s2.cached_tokens > 0);
+        // quality strictly below the exact-match engine's
+        let (mut exact, corpus2, qm2) = setup(ReusePolicy::RadixPrefix, 1 << 20);
+        let (s_exact, _) = exact.serve(&r2, &Prompt::baseline(&r2), &corpus2, &qm2, 8);
+        assert!(s2.quality < s_exact.quality - 0.08);
+    }
+
+    #[test]
+    fn eviction_feeds_request_ids_back() {
+        let (mut e, corpus, qm) = setup(ReusePolicy::RadixPrefix, 600);
+        let mut all_evicted = Vec::new();
+        for i in 0..8u64 {
+            let ids = [i as u32 * 4 + 1, i as u32 * 4 + 2, i as u32 * 4 + 3];
+            let r = req(i, i as u32, 0, &ids);
+            let (_, ev) = e.serve(&r, &Prompt::baseline(&r), &corpus, &qm, 4);
+            all_evicted.extend(ev);
+        }
+        assert!(!all_evicted.is_empty(), "tight cache must evict");
+        assert!(e.cache.resident_tokens() <= 600);
+    }
+
+    #[test]
+    fn ttft_scales_with_uncached_tokens() {
+        let (mut e, corpus, qm) = setup(ReusePolicy::RadixPrefix, 1 << 20);
+        let small = req(1, 1, 0, &[1]);
+        let big = req(2, 2, 0, &[2, 3, 4, 5, 6, 7]);
+        let (s_small, _) = e.serve(&small, &Prompt::baseline(&small), &corpus, &qm, 4);
+        let (s_big, _) = e.serve(&big, &Prompt::baseline(&big), &corpus, &qm, 4);
+        assert!(s_big.ttft > s_small.ttft);
+    }
+
+    #[test]
+    fn peek_does_not_disturb_stats() {
+        let (mut e, corpus, qm) = setup(ReusePolicy::RadixPrefix, 1 << 20);
+        let r1 = req(1, 1, 0, &[1, 2]);
+        e.serve(&r1, &Prompt::baseline(&r1), &corpus, &qm, 4);
+        let lookups_before = e.cache.stat_lookup_tokens;
+        let peeked = e.peek_cached(&req(2, 2, 0, &[1, 2]), &Prompt::baseline(&req(2, 2, 0, &[1, 2])), &corpus);
+        assert!(peeked > 0);
+        assert_eq!(e.cache.stat_lookup_tokens, lookups_before);
+    }
+}

@@ -1,0 +1,65 @@
+//! Figure 11 (App. C): document access distribution (CDF) across the
+//! three RAG datasets — the top 20% most-accessed documents cover 79.2% /
+//! 57.4% / 49.6% of retrieval events.
+
+use crate::util::table::Table;
+use crate::workload::access::AccessStats;
+use crate::workload::{multi_session, Dataset, DatasetProfile};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let sessions = if quick { 400 } else { 2_000 };
+    let mut t = Table::new(
+        "Fig. 11 — Document access distribution: top-20% coverage vs paper",
+        &["Dataset", "Top-20% coverage (sim)", "Paper"],
+    );
+    let mut cdf_t = Table::new(
+        "Fig. 11 — Access CDF points (doc fraction -> access fraction)",
+        &["Dataset", "10%", "20%", "40%", "60%", "80%", "100%"],
+    );
+    for dataset in [Dataset::MultihopRag, Dataset::NarrativeQa, Dataset::Qasper] {
+        let p = DatasetProfile::get(dataset);
+        let w = multi_session(dataset, sessions, p.k, 0xF11);
+        let s = AccessStats::from_workload(&w);
+        t.row(vec![
+            dataset.name().into(),
+            format!("{:.1}%", s.top_coverage(0.2) * 100.0),
+            format!("{:.1}%", p.top20_mass * 100.0),
+        ]);
+        let cdf = s.cdf(10);
+        let at = |frac: f64| {
+            cdf.iter()
+                .find(|(x, _)| *x >= frac - 1e-9)
+                .map(|(_, y)| format!("{:.1}%", y * 100.0))
+                .unwrap_or_default()
+        };
+        cdf_t.row(vec![
+            dataset.name().into(),
+            at(0.1),
+            at(0.2),
+            at(0.4),
+            at(0.6),
+            at(0.8),
+            at(1.0),
+        ]);
+    }
+    vec![t, cdf_t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_datasets_matches_paper() {
+        let sessions = 400;
+        let cov = |d: Dataset| {
+            let p = DatasetProfile::get(d);
+            let w = multi_session(d, sessions, p.k, 0xF11);
+            AccessStats::from_workload(&w).top_coverage(0.2)
+        };
+        let mh = cov(Dataset::MultihopRag);
+        let nq = cov(Dataset::NarrativeQa);
+        let qa = cov(Dataset::Qasper);
+        assert!(mh > nq && nq > qa, "{mh} {nq} {qa}");
+    }
+}

@@ -1,0 +1,59 @@
+//! Figure 8: prefill throughput under different top-k values
+//! (k in {3,5,10,15}) on NarrativeQA and MultihopRAG — ContextPilot's
+//! advantage grows with context length.
+
+use crate::engine::costmodel::ModelSku;
+use crate::experiments::runner::{corpus_for, run_system, RunConfig, SystemKind};
+use crate::util::table::Table;
+use crate::workload::{multi_session, Dataset};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let sessions = if quick { 100 } else { 400 };
+    let ks = [3usize, 5, 10, 15];
+    let mut tables = Vec::new();
+    for dataset in [Dataset::MultihopRag, Dataset::NarrativeQa] {
+        let corpus = corpus_for(dataset);
+        let mut t = Table::new(
+            &format!("Fig. 8 — Prefill throughput (tok/s) vs top-k, {}", dataset.name()),
+            &["System", "k=3", "k=5", "k=10", "k=15"],
+        );
+        for system in SystemKind::all_default() {
+            let mut cells = vec![system.name().to_string()];
+            for &k in &ks {
+                let w = multi_session(dataset, sessions, k, 0xF18 + k as u64);
+                let cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+                let m = run_system(&system, &w, &corpus, &cfg);
+                cells.push(format!("{:.0}", m.prefill_throughput()));
+            }
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::PilotConfig;
+
+    #[test]
+    fn pilot_wins_at_every_k() {
+        let dataset = Dataset::MultihopRag;
+        let corpus = corpus_for(dataset);
+        for k in [3usize, 15] {
+            let w = multi_session(dataset, 80, k, 0xF18 + k as u64);
+            let cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+            let tp_pilot = run_system(
+                &SystemKind::ContextPilot(PilotConfig::default()),
+                &w,
+                &corpus,
+                &cfg,
+            )
+            .prefill_throughput();
+            let tp_radix =
+                run_system(&SystemKind::RadixCache, &w, &corpus, &cfg).prefill_throughput();
+            assert!(tp_pilot > tp_radix, "k={k}: {tp_pilot} <= {tp_radix}");
+        }
+    }
+}

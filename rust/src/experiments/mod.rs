@@ -1,0 +1,32 @@
+//! Experiment reproductions — one module per paper table/figure, each
+//! exposing `run(quick) -> Vec<Table>`. The `bench_*` targets are thin
+//! wrappers; `quick=true` shrinks workload sizes for CI-speed runs while
+//! preserving every qualitative claim (full sizes via `cargo bench` with
+//! `CTXPILOT_FULL=1`).
+
+pub mod runner;
+
+pub mod appendix_f;
+pub mod appendix_g;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+pub mod table3a;
+pub mod table3b;
+pub mod table3c;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+
+pub use runner::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
+
+/// Bench entry helper: true when CTXPILOT_FULL=1 (paper-scale sizes).
+pub fn full_mode() -> bool {
+    std::env::var("CTXPILOT_FULL").is_ok_and(|v| v == "1")
+}

@@ -1,0 +1,261 @@
+//! Experiment driver: runs one (system, workload) pair through the
+//! simulated engine and collects metrics. Every bench table is produced
+//! through this harness so systems differ *only* in their mechanism.
+
+use crate::corpus::{Corpus, CorpusConfig};
+use crate::engine::costmodel::ModelSku;
+use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::metrics::RunMetrics;
+use crate::pilot::{ContextPilot, PilotConfig};
+use crate::quality::{ModelEra, QualityModel};
+use crate::tokenizer::Tokenizer;
+use crate::types::{Prompt, Request};
+use crate::workload::{Dataset, DatasetProfile, Workload};
+
+/// The four systems of §7.
+#[derive(Clone, Debug)]
+pub enum SystemKind {
+    LMCache,
+    CacheBlend,
+    RadixCache,
+    ContextPilot(PilotConfig),
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::LMCache => "LMCache",
+            SystemKind::CacheBlend => "CacheBlend",
+            SystemKind::RadixCache => "RadixCache",
+            SystemKind::ContextPilot(_) => "ContextPilot",
+        }
+    }
+
+    pub fn all_default() -> Vec<SystemKind> {
+        vec![
+            SystemKind::LMCache,
+            SystemKind::CacheBlend,
+            SystemKind::RadixCache,
+            SystemKind::ContextPilot(PilotConfig::default()),
+        ]
+    }
+
+    fn policy(&self) -> ReusePolicy {
+        match self {
+            // LMCache: document-granular exact matching + CPU-offload cost
+            SystemKind::LMCache => ReusePolicy::DocPrefix {
+                offload_s_per_tok: 6e-6,
+            },
+            // CacheBlend: approximate KV matching, 15% recompute, with the
+            // §2.3 accuracy degradation
+            SystemKind::CacheBlend => ReusePolicy::Approximate {
+                recompute_frac: 0.15,
+                kv_noise: 0.17,
+            },
+            SystemKind::RadixCache => ReusePolicy::RadixPrefix,
+            SystemKind::ContextPilot(_) => ReusePolicy::RadixPrefix,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub sku: ModelSku,
+    /// Prefix-cache capacity in tokens (the KV budget knob of Fig. 6/App. G).
+    pub capacity_tokens: usize,
+    pub decode_tokens: usize,
+    /// Offline mode: pre-build the context index over the whole workload.
+    pub offline: bool,
+    pub era: ModelEra,
+    pub multi_hop: bool,
+    /// Per-request decode override (OpenClaw traces).
+    pub decode_override: Option<Vec<usize>>,
+}
+
+impl RunConfig {
+    pub fn for_dataset(sku: ModelSku, dataset: Dataset) -> RunConfig {
+        RunConfig {
+            sku,
+            capacity_tokens: 60_000,
+            decode_tokens: 48,
+            offline: true,
+            era: ModelEra::Modern,
+            multi_hop: matches!(dataset, Dataset::MultihopRag),
+            decode_override: None,
+        }
+    }
+}
+
+/// Corpus matching a dataset profile.
+pub fn corpus_for(dataset: Dataset) -> Corpus {
+    let p = DatasetProfile::get(dataset);
+    Corpus::generate(
+        &CorpusConfig {
+            n_docs: p.n_docs,
+            lines_per_doc: p.doc_lines,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    )
+}
+
+/// Run a workload through a system; returns the metrics.
+pub fn run_system(
+    system: &SystemKind,
+    workload: &Workload,
+    corpus: &Corpus,
+    cfg: &RunConfig,
+) -> RunMetrics {
+    let quality = QualityModel::new(cfg.era, cfg.multi_hop);
+    let mut engine = SimEngine::new(cfg.sku.profile(), system.policy(), cfg.capacity_tokens);
+    let mut metrics = RunMetrics::new();
+
+    let mut pilot = match system {
+        SystemKind::ContextPilot(pc) => {
+            let mut p = ContextPilot::new(pc.clone());
+            if cfg.offline {
+                p.build_offline(&workload.requests);
+            }
+            Some(p)
+        }
+        _ => None,
+    };
+
+    let decode_of = |i: usize| -> usize {
+        cfg.decode_override
+            .as_ref()
+            .and_then(|v| v.get(i).copied())
+            .unwrap_or(cfg.decode_tokens)
+    };
+
+    // batches = consecutive runs of the same turn number (the arrival wave
+    // structure the generators emit)
+    let mut i = 0usize;
+    while i < workload.requests.len() {
+        let turn = workload.requests[i].turn;
+        let mut j = i;
+        while j < workload.requests.len() && workload.requests[j].turn == turn {
+            j += 1;
+        }
+        let batch = &workload.requests[i..j];
+        let batch_idx: Vec<usize> = (i..j).collect();
+
+        match &mut pilot {
+            Some(p) => {
+                // ContextPilot: rewrite + Alg.-5 schedule
+                let outputs = p.process_batch(batch, corpus);
+                for out in outputs {
+                    let gi = batch_idx
+                        [batch.iter().position(|r| r.id == out.request.id).unwrap()];
+                    let (served, evicted) =
+                        engine.serve(&out.request, &out.prompt, corpus, &quality, decode_of(gi));
+                    p.on_evict(&evicted);
+                    metrics.record(&served);
+                }
+            }
+            None => {
+                // baselines: LPM scheduling for RadixCache, arrival order
+                // for LMCache / CacheBlend
+                let order: Vec<usize> = match system {
+                    SystemKind::RadixCache => {
+                        let mut idx: Vec<usize> = (0..batch.len()).collect();
+                        let peeks: Vec<usize> = batch
+                            .iter()
+                            .map(|r| engine.peek_cached(r, &Prompt::baseline(r), corpus))
+                            .collect();
+                        idx.sort_by(|&a, &b| peeks[b].cmp(&peeks[a]));
+                        idx
+                    }
+                    _ => (0..batch.len()).collect(),
+                };
+                for k in order {
+                    let r: &Request = &batch[k];
+                    let (served, _evicted) =
+                        engine.serve(r, &Prompt::baseline(r), corpus, &quality, decode_of(batch_idx[k]));
+                    metrics.record(&served);
+                }
+            }
+        }
+        i = j;
+    }
+    metrics
+}
+
+/// Baseline-anchored F1 for a run: anchor = the RadixCache/LMCache prompt
+/// (exact prefix reuse, unmodified order).
+pub fn run_f1(
+    metrics: &RunMetrics,
+    workload: &Workload,
+    cfg: &RunConfig,
+    baseline_f1: f64,
+) -> f64 {
+    let qm = QualityModel::new(cfg.era, cfg.multi_hop);
+    let base_q: f64 = workload
+        .requests
+        .iter()
+        .map(|r| qm.score_baseline(r))
+        .sum::<f64>()
+        / workload.requests.len().max(1) as f64;
+    crate::quality::to_f1(metrics.mean_quality(), base_q, baseline_f1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::multi_session;
+
+    fn quick_run(system: SystemKind) -> RunMetrics {
+        let dataset = Dataset::MultihopRag;
+        let w = multi_session(dataset, 60, 10, 7);
+        let corpus = corpus_for(dataset);
+        let cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+        run_system(&system, &w, &corpus, &cfg)
+    }
+
+    #[test]
+    fn pilot_beats_radix_on_hit_ratio() {
+        let pilot = quick_run(SystemKind::ContextPilot(PilotConfig::default()));
+        let radix = quick_run(SystemKind::RadixCache);
+        assert!(
+            pilot.hit_ratio() > radix.hit_ratio(),
+            "pilot {} <= radix {}",
+            pilot.hit_ratio(),
+            radix.hit_ratio()
+        );
+    }
+
+    #[test]
+    fn pilot_throughput_exceeds_lmcache() {
+        let pilot = quick_run(SystemKind::ContextPilot(PilotConfig::default()));
+        let lm = quick_run(SystemKind::LMCache);
+        assert!(pilot.prefill_throughput() > lm.prefill_throughput());
+    }
+
+    #[test]
+    fn cacheblend_degrades_quality() {
+        let blend = quick_run(SystemKind::CacheBlend);
+        let radix = quick_run(SystemKind::RadixCache);
+        assert!(blend.mean_quality() < radix.mean_quality() - 0.05);
+    }
+
+    #[test]
+    fn pilot_quality_close_to_exact_baseline() {
+        let pilot = quick_run(SystemKind::ContextPilot(PilotConfig::default()));
+        let radix = quick_run(SystemKind::RadixCache);
+        assert!(
+            pilot.mean_quality() > radix.mean_quality() - 0.02,
+            "pilot {} vs radix {}",
+            pilot.mean_quality(),
+            radix.mean_quality()
+        );
+    }
+
+    #[test]
+    fn all_systems_complete_runs() {
+        for s in SystemKind::all_default() {
+            let m = quick_run(s.clone());
+            assert_eq!(m.len(), 60, "{}", s.name());
+            assert!(m.prefill_throughput() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Table 2: multi-session RAG — F1 (%) and prefill throughput for four
+//! systems across three models on three datasets (k=15, offline mode).
+
+use crate::engine::costmodel::ModelSku;
+use crate::experiments::runner::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
+use crate::util::table::{f1, Table};
+use crate::workload::{multi_session, Dataset};
+
+/// Paper baseline F1 anchors (the exact-reuse LMCache/RadixCache column).
+pub fn baseline_f1(dataset: Dataset, sku: ModelSku) -> f64 {
+    match (dataset, sku) {
+        (Dataset::MultihopRag, ModelSku::Qwen3_4B) => 35.2,
+        (Dataset::MultihopRag, ModelSku::Qwen3_32B) => 60.4,
+        (Dataset::MultihopRag, ModelSku::Llama33_70B) => 62.9,
+        (Dataset::NarrativeQa, ModelSku::Qwen3_4B) => 16.0,
+        (Dataset::NarrativeQa, ModelSku::Qwen3_32B) => 28.4,
+        (Dataset::NarrativeQa, ModelSku::Llama33_70B) => 37.8,
+        (Dataset::Qasper, ModelSku::Qwen3_4B) => 27.9,
+        (Dataset::Qasper, ModelSku::Qwen3_32B) => 36.0,
+        (Dataset::Qasper, ModelSku::Llama33_70B) => 33.8,
+        _ => 50.0,
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let sessions = if quick { 120 } else { 600 };
+    let k = 15;
+    let datasets = [Dataset::MultihopRag, Dataset::NarrativeQa, Dataset::Qasper];
+    let models = [ModelSku::Qwen3_4B, ModelSku::Qwen3_32B, ModelSku::Llama33_70B];
+    let mut t = Table::new(
+        "Table 2 — Multi-session RAG: F1 (%) and prefill throughput (tok/s)",
+        &["Dataset", "Model", "System", "F1", "Prefill TP", "Hit ratio"],
+    );
+    for dataset in datasets {
+        let corpus = corpus_for(dataset);
+        let w = multi_session(dataset, sessions, k, 0x7AB2);
+        for sku in models {
+            let cfg = RunConfig::for_dataset(sku, dataset);
+            for system in SystemKind::all_default() {
+                let m = run_system(&system, &w, &corpus, &cfg);
+                let f = run_f1(&m, &w, &cfg, baseline_f1(dataset, sku));
+                t.row(vec![
+                    dataset.name().into(),
+                    sku.name().into(),
+                    system.name().into(),
+                    f1(f),
+                    format!("{:.0}", m.prefill_throughput()),
+                    format!("{:.1}%", m.hit_ratio() * 100.0),
+                ]);
+            }
+        }
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_holds_on_multihop_32b() {
+        // who wins: ContextPilot throughput > Radix & LMCache; CacheBlend F1 tanks.
+        let dataset = Dataset::MultihopRag;
+        let corpus = corpus_for(dataset);
+        let w = multi_session(dataset, 80, 15, 1);
+        let cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+        let get = |s: &SystemKind| {
+            let m = run_system(s, &w, &corpus, &cfg);
+            let f = run_f1(&m, &w, &cfg, 60.4);
+            (f, m.prefill_throughput())
+        };
+        let (f_pilot, tp_pilot) =
+            get(&SystemKind::ContextPilot(crate::pilot::PilotConfig::default()));
+        let (f_radix, tp_radix) = get(&SystemKind::RadixCache);
+        let (f_blend, _) = get(&SystemKind::CacheBlend);
+        let (_, tp_lm) = get(&SystemKind::LMCache);
+        assert!(tp_pilot > tp_radix, "pilot TP {tp_pilot} <= radix {tp_radix}");
+        assert!(tp_pilot > tp_lm);
+        assert!(f_blend < f_radix - 4.0, "blend F1 {f_blend} vs radix {f_radix}");
+        assert!(f_pilot > f_radix - 1.0, "pilot F1 {f_pilot} vs radix {f_radix}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Table 3b: hybrid multi-session × multi-turn RAG — TTFT (s) vs
+//! concurrency (2–32 sessions) for Qwen3-4B.
+
+use crate::engine::costmodel::ModelSku;
+use crate::experiments::runner::{corpus_for, run_system, RunConfig, SystemKind};
+use crate::util::table::{f2, Table};
+use crate::workload::{hybrid, Dataset};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let turns = if quick { 4 } else { 8 };
+    let dataset = Dataset::MtRag;
+    let corpus = corpus_for(dataset);
+    let session_counts = [2usize, 4, 8, 16, 32];
+    let mut t = Table::new(
+        "Table 3b — Hybrid RAG: TTFT (s) vs concurrent sessions (Qwen3-4B)",
+        &["System", "2", "4", "8", "16", "32"],
+    );
+    for system in SystemKind::all_default() {
+        let mut cells = vec![system.name().to_string()];
+        for &s in &session_counts {
+            let w = hybrid(dataset, s, turns, 10, 0xB0B + s as u64);
+            let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_4B, dataset);
+            cfg.offline = false;
+            cfg.capacity_tokens = 40_000 + 4_000 * s; // scale KV budget w/ load
+            let mut m = run_system(&system, &w, &corpus, &cfg);
+            cells.push(f2(m.mean_ttft()));
+        }
+        t.row(cells);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pilot::PilotConfig;
+
+    #[test]
+    fn pilot_lowest_ttft_at_low_and_high_concurrency() {
+        let dataset = Dataset::MtRag;
+        let corpus = corpus_for(dataset);
+        for s in [2usize, 16] {
+            let w = hybrid(dataset, s, 4, 10, 0xB0B + s as u64);
+            let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_4B, dataset);
+            cfg.offline = false;
+            let mut pilot = run_system(
+                &SystemKind::ContextPilot(PilotConfig::default()),
+                &w,
+                &corpus,
+                &cfg,
+            );
+            let mut radix = run_system(&SystemKind::RadixCache, &w, &corpus, &cfg);
+            let mut lm = run_system(&SystemKind::LMCache, &w, &corpus, &cfg);
+            assert!(pilot.mean_ttft() <= radix.mean_ttft() + 1e-9, "s={s}");
+            assert!(pilot.mean_ttft() < lm.mean_ttft(), "s={s}");
+        }
+    }
+}

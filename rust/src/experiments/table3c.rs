@@ -1,0 +1,113 @@
+//! Table 3c: context-index construction latency (s) as a function of the
+//! number of contexts N_ctx and retrieval depth k.
+//!
+//! Up to 12k contexts we run the paper's O(N^2) hierarchical clustering on
+//! CPU threads (the paper's CPU number: 8 s at 2k). The 100k column uses
+//! GPU in the paper; we report the incremental (search+insert) build as
+//! the CPU-feasible equivalent and mark it with '*' (EXPERIMENTS.md).
+
+use crate::index::build::build_clustered;
+use crate::index::tree::ContextIndex;
+use crate::index::DEFAULT_ALPHA;
+use crate::types::{Context, RequestId};
+use crate::util::bench::time_once;
+use crate::util::prng::Rng;
+use crate::util::table::Table;
+use crate::workload::{DatasetProfile, Retriever};
+
+/// Synthesize N contexts of depth k with realistic overlap.
+pub fn synth_contexts(n: usize, k: usize, seed: u64) -> Vec<(RequestId, Context)> {
+    let retriever = Retriever::new(DatasetProfile::get(crate::workload::Dataset::MultihopRag));
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let topic = retriever.sample_topic(&mut rng);
+            (RequestId(i as u64), retriever.retrieve(topic, k, &mut rng))
+        })
+        .collect()
+}
+
+/// Incremental build: search + insert per context (the online path).
+pub fn build_incremental(inputs: &[(RequestId, Context)], alpha: f64) -> ContextIndex {
+    let mut ix = ContextIndex::new(alpha);
+    for (req, ctx) in inputs {
+        let found = ix.search(ctx);
+        ix.insert_at(&found, ctx.clone(), *req);
+    }
+    ix
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let sizes: Vec<usize> = if quick {
+        vec![128, 512, 2_000]
+    } else {
+        vec![128, 512, 4_000, 8_000, 12_000]
+    };
+    let ks = [3usize, 5, 10, 15, 20];
+    let mut t = Table::new(
+        "Table 3c — Context index construction latency (s) vs N_ctx and k (CPU, clustered)",
+        &{
+            let mut h = vec!["k"];
+            let labels: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+            let leaked: Vec<&str> = labels
+                .iter()
+                .map(|s| Box::leak(s.clone().into_boxed_str()) as &str)
+                .collect();
+            h.extend(leaked);
+            h.push("100k (incremental*)");
+            h
+        },
+    );
+    for &k in &ks {
+        let mut cells = vec![k.to_string()];
+        for &n in &sizes {
+            let inputs = synth_contexts(n, k, 0xC0 + n as u64);
+            let (_, secs) = time_once(|| build_clustered(&inputs, DEFAULT_ALPHA));
+            cells.push(format!("{secs:.2}"));
+        }
+        // 100k column: incremental
+        let n100 = if quick { 10_000 } else { 100_000 };
+        let inputs = synth_contexts(n100, k, 0x100);
+        let (_, secs) = time_once(|| build_incremental(&inputs, DEFAULT_ALPHA));
+        cells.push(format!("{secs:.2} ({n100})"));
+        t.row(cells);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_build_is_consistent() {
+        let inputs = synth_contexts(300, 10, 1);
+        let ix = build_incremental(&inputs, DEFAULT_ALPHA);
+        ix.check_invariants().unwrap();
+        assert!(ix.len_alive() > 300); // leaves + virtual nodes
+    }
+
+    #[test]
+    fn construction_scales_superlinearly_but_finishes() {
+        let small = synth_contexts(128, 5, 2);
+        let big = synth_contexts(512, 5, 3);
+        let (_, t_small) = time_once(|| build_clustered(&small, DEFAULT_ALPHA));
+        let (_, t_big) = time_once(|| build_clustered(&big, DEFAULT_ALPHA));
+        assert!(t_big >= t_small * 0.5, "noise guard");
+        assert!(t_big < 30.0, "512 contexts should build fast, took {t_big}");
+    }
+
+    #[test]
+    fn latency_mildly_sensitive_to_k() {
+        // Table 3c: construction latency moves sub-linearly with k (the
+        // distance evaluation is O(k^2) worst case but overlap-sparse).
+        let a = synth_contexts(384, 3, 4);
+        let b = synth_contexts(384, 20, 4);
+        let (_, ta) = time_once(|| build_clustered(&a, DEFAULT_ALPHA));
+        let (_, tb) = time_once(|| build_clustered(&b, DEFAULT_ALPHA));
+        assert!(
+            tb < ta * 45.0 + 1.0,
+            "k=20 build {tb} vs k=3 {ta} — distance eval regressed"
+        );
+    }
+}

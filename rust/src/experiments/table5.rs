@@ -1,0 +1,63 @@
+//! Table 5: edge devices — Llama-3.2-1B with llama.cpp (batch size 1) on
+//! an M3 MacBook Air and a Jetson AGX Orin, MultihopRAG. ContextPilot's
+//! context reduction translates directly to wall-clock savings on slow
+//! edge prefill.
+
+use crate::engine::costmodel::ModelSku;
+use crate::experiments::runner::{corpus_for, run_system, RunConfig, SystemKind};
+use crate::pilot::PilotConfig;
+use crate::util::table::{f2, Table};
+use crate::workload::{multi_session, Dataset};
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let sessions = if quick { 40 } else { 200 };
+    let dataset = Dataset::MultihopRag;
+    let corpus = corpus_for(dataset);
+    let w = multi_session(dataset, sessions, 8, 0xED6E);
+    let mut t = Table::new(
+        "Table 5 — Edge devices: avg prefill latency (s), MultihopRAG, bs=1",
+        &["Device", "Method", "Avg Latency (s)"],
+    );
+    for sku in [ModelSku::Edge1B_M3Air, ModelSku::Edge1B_Jetson] {
+        let mut cfg = RunConfig::for_dataset(sku, dataset);
+        cfg.capacity_tokens = 30_000; // small edge KV budget
+        let mut base = run_system(&SystemKind::RadixCache, &w, &corpus, &cfg);
+        let mut pilot = run_system(
+            &SystemKind::ContextPilot(PilotConfig::default()),
+            &w,
+            &corpus,
+            &cfg,
+        );
+        t.row(vec![sku.name().into(), "llama.cpp".into(), f2(base.mean_ttft())]);
+        t.row(vec![
+            sku.name().into(),
+            "+ ContextPilot".into(),
+            f2(pilot.mean_ttft()),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pilot_speedup_in_paper_range() {
+        // paper: 1.5-2.4x latency reduction on edge
+        let dataset = Dataset::MultihopRag;
+        let corpus = corpus_for(dataset);
+        let w = multi_session(dataset, 60, 8, 0xED6E);
+        let mut cfg = RunConfig::for_dataset(ModelSku::Edge1B_M3Air, dataset);
+        cfg.capacity_tokens = 30_000;
+        let mut base = run_system(&SystemKind::RadixCache, &w, &corpus, &cfg);
+        let mut pilot = run_system(
+            &SystemKind::ContextPilot(PilotConfig::default()),
+            &w,
+            &corpus,
+            &cfg,
+        );
+        let speedup = base.mean_ttft() / pilot.mean_ttft();
+        assert!(speedup > 1.1, "edge speedup {speedup}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Table 8 (App. D.3): measured per-request overhead of ContextPilot's
+//! components — search, alignment, de-duplication — over 2k requests at
+//! k=15. These are *real* measurements of this implementation, the one
+//! table where absolute numbers are directly comparable to the paper
+//! (~0.7 ms total on an A6000-class host CPU).
+
+use crate::align::align_context;
+use crate::corpus::{Corpus, CorpusConfig};
+use crate::dedup::{dedup_context, DedupConfig};
+use crate::experiments::table3c::synth_contexts;
+use crate::index::build::build_clustered;
+use crate::index::DEFAULT_ALPHA;
+use crate::tokenizer::Tokenizer;
+use crate::types::{RequestId, SessionId};
+use crate::util::table::Table;
+
+pub struct Overheads {
+    pub search_ms: f64,
+    pub align_ms: f64,
+    pub dedup_ms: f64,
+}
+
+pub fn measure(n_requests: usize, k: usize) -> Overheads {
+    let base = synth_contexts(2_000, k, 0x0E81);
+    let mut built = build_clustered(&base, DEFAULT_ALPHA);
+    let queries = synth_contexts(n_requests, k, 0x0E82);
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 650,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    );
+
+    // search
+    let t0 = std::time::Instant::now();
+    for (_, c) in &queries {
+        std::hint::black_box(built.index.search(c));
+    }
+    let search_ms = t0.elapsed().as_secs_f64() * 1e3 / n_requests as f64;
+
+    // alignment (search + reorder + insert)
+    let t1 = std::time::Instant::now();
+    for (i, (_, c)) in queries.iter().enumerate() {
+        std::hint::black_box(align_context(
+            &mut built.index,
+            c,
+            RequestId(1_000_000 + i as u64),
+        ));
+    }
+    let align_ms = t1.elapsed().as_secs_f64() * 1e3 / n_requests as f64;
+
+    // de-duplication (multi-turn: second turn against a seeded record)
+    let dcfg = DedupConfig::default();
+    for (i, (_, c)) in queries.iter().take(64).enumerate() {
+        // seed conversation records
+        dedup_context(&mut built.index, SessionId(i as u32), c, &corpus, &dcfg);
+    }
+    let t2 = std::time::Instant::now();
+    for (i, (_, c)) in queries.iter().enumerate() {
+        let session = SessionId((i % 64) as u32);
+        std::hint::black_box(dedup_context(&mut built.index, session, c, &corpus, &dcfg));
+    }
+    let dedup_ms = t2.elapsed().as_secs_f64() * 1e3 / n_requests as f64;
+
+    Overheads {
+        search_ms,
+        align_ms,
+        dedup_ms,
+    }
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let n = if quick { 500 } else { 2_000 };
+    let o = measure(n, 15);
+    let mut t = Table::new(
+        "Table 8 — Per-request overhead (ms), measured over real requests (k=15)",
+        &["Component", "Latency (ms)", "Paper (ms)"],
+    );
+    t.row(vec!["Search".into(), format!("{:.3}", o.search_ms), "0.068".into()]);
+    t.row(vec!["Alignment".into(), format!("{:.3}", o.align_ms), "0.047".into()]);
+    t.row(vec![
+        "De-duplication".into(),
+        format!("{:.3}", o.dedup_ms),
+        "0.600".into(),
+    ]);
+    t.row(vec![
+        "Total".into(),
+        format!("{:.3}", o.search_ms + o.align_ms + o.dedup_ms),
+        "~0.7".into(),
+    ]);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_negligible_vs_prefill() {
+        let o = measure(200, 15);
+        let total = o.search_ms + o.align_ms + o.dedup_ms;
+        // prefill of a 20k-token prompt on a 32B model is seconds; the
+        // proxy must stay under ~5 ms/request even in debug-ish CI runs
+        assert!(total < 5.0, "overhead {total} ms");
+        assert!(o.search_ms > 0.0 && o.align_ms > 0.0 && o.dedup_ms > 0.0);
+    }
+}

@@ -1,0 +1,427 @@
+//! Offline context-index construction via hierarchical clustering
+//! (Algorithm 4, §4.1).
+//!
+//! Phase 1 — pairwise Eq.-1 distances + agglomerative clustering. We use
+//! the nearest-neighbor-array formulation: O(N) memory, O(N^2) expected
+//! time, with the initial neighbor scan parallelized across cores (the
+//! paper parallelizes this phase on CPUs/GPUs; 2k contexts: 8 s CPU /
+//! 0.82 s GPU).
+//!
+//! Phase 2 — build the tree with duplicate-context detection: identical
+//! contexts share one leaf with a bumped frequency counter.
+//!
+//! Phase 3 — top-down prefix alignment: every node's context is reordered
+//! to `parent.context ⊕ (context \ parent.context)`, so each leaf's final
+//! ordering starts with the shared prefix its ancestors cache.
+
+use std::collections::HashMap;
+
+use crate::index::distance::{context_distance, sorted_intersection};
+use crate::index::tree::{ContextIndex, IndexNode, NodeId};
+use crate::types::{Context, RequestId};
+use crate::util::threadpool::{default_threads, par_map};
+
+/// Outcome of an offline build: the index plus each input's aligned
+/// context and search path (initialization contexts inherit their prefix
+/// from their parent chain, §5.1).
+#[derive(Debug)]
+pub struct BuildResult {
+    pub index: ContextIndex,
+    /// Per input (same order): (leaf node, aligned context, search path).
+    pub placed: Vec<(NodeId, Context, Vec<usize>)>,
+}
+
+struct Cluster {
+    context: Context,
+    node: NodeId,
+    alive: bool,
+}
+
+/// Distance between clusters; empty virtual contexts repel (they would
+/// otherwise merge eagerly since d(∅,∅)=0).
+fn cluster_distance(a: &Context, b: &Context, alpha: f64) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return 2.0;
+    }
+    context_distance(a, b, alpha)
+}
+
+/// Build the index over a batch of (request, context) pairs.
+pub fn build_clustered(inputs: &[(RequestId, Context)], alpha: f64) -> BuildResult {
+    build_clustered_with_threads(inputs, alpha, default_threads())
+}
+
+pub fn build_clustered_with_threads(
+    inputs: &[(RequestId, Context)],
+    alpha: f64,
+    threads: usize,
+) -> BuildResult {
+    let mut index = ContextIndex::new(alpha);
+    if inputs.is_empty() {
+        return BuildResult {
+            index,
+            placed: Vec::new(),
+        };
+    }
+
+    // ---- Phase 2a: leaves with duplicate detection -----------------------
+    let mut leaf_of_context: HashMap<Context, NodeId> = HashMap::new();
+    let mut clusters: Vec<Cluster> = Vec::new();
+    // inputs index -> cluster leaf node
+    let mut input_leaf: Vec<NodeId> = Vec::with_capacity(inputs.len());
+    for (req, ctx) in inputs {
+        if let Some(&leaf) = leaf_of_context.get(ctx) {
+            // duplicate context: redirect, bump frequency
+            index.node_mut(leaf).freq += 1;
+            index.register_request(*req, leaf);
+            input_leaf.push(leaf);
+            continue;
+        }
+        let leaf = index.alloc(IndexNode {
+            context: ctx.clone(),
+            children: Vec::new(),
+            parent: None, // linked during merging
+            freq: 1,
+            cluster_dist: 0.0,
+            requests: vec![*req],
+            alive: true,
+        });
+        index.register_request(*req, leaf);
+        leaf_of_context.insert(ctx.clone(), leaf);
+        clusters.push(Cluster {
+            context: ctx.clone(),
+            node: leaf,
+            alive: true,
+        });
+        input_leaf.push(leaf);
+    }
+
+    // ---- Phase 1: agglomerative clustering (NN arrays) -------------------
+    let n = clusters.len();
+    let mut nn: Vec<(f64, usize)> = if n > 1 {
+        let idx: Vec<usize> = (0..n).collect();
+        par_map(&idx, threads, |&i| {
+            let mut best = (f64::INFINITY, usize::MAX);
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let d = cluster_distance(&clusters[i].context, &clusters[j].context, alpha);
+                if d < best.0 {
+                    best = (d, j);
+                }
+            }
+            best
+        })
+    } else {
+        vec![(f64::INFINITY, usize::MAX)]
+    };
+
+    let mut active = n;
+    while active > 1 {
+        // closest pair via NN arrays
+        let mut best = (f64::INFINITY, usize::MAX);
+        for i in 0..clusters.len() {
+            if clusters[i].alive && nn[i].0 < best.0 {
+                best = (nn[i].0, i);
+            }
+        }
+        let i = best.1;
+        let j = nn[i].1;
+        debug_assert!(clusters[i].alive && clusters[j].alive);
+        let merged_ctx = sorted_intersection(&clusters[i].context, &clusters[j].context);
+        let virt = index.alloc(IndexNode {
+            context: merged_ctx.clone(),
+            children: vec![clusters[i].node, clusters[j].node],
+            parent: None,
+            freq: 0,
+            cluster_dist: best.0,
+            requests: Vec::new(),
+            alive: true,
+        });
+        index.node_mut(clusters[i].node).parent = Some(virt);
+        index.node_mut(clusters[j].node).parent = Some(virt);
+        // replace cluster i with merged, kill j
+        clusters[i] = Cluster {
+            context: merged_ctx,
+            node: virt,
+            alive: true,
+        };
+        clusters[j].alive = false;
+        nn[j] = (f64::INFINITY, usize::MAX);
+        active -= 1;
+        if active == 1 {
+            break;
+        }
+        // recompute NN for merged cluster and any cluster pointing at i/j
+        for t in 0..clusters.len() {
+            if !clusters[t].alive || t == i {
+                continue;
+            }
+            let d = cluster_distance(&clusters[i].context, &clusters[t].context, alpha);
+            if d < nn[t].0 {
+                nn[t] = (d, i);
+            } else if nn[t].1 == i || nn[t].1 == j {
+                // stale: rescan
+                let mut bb = (f64::INFINITY, usize::MAX);
+                for u in 0..clusters.len() {
+                    if u == t || !clusters[u].alive {
+                        continue;
+                    }
+                    let du = cluster_distance(&clusters[t].context, &clusters[u].context, alpha);
+                    if du < bb.0 {
+                        bb = (du, u);
+                    }
+                }
+                nn[t] = bb;
+            }
+        }
+        {
+            let mut bb = (f64::INFINITY, usize::MAX);
+            for u in 0..clusters.len() {
+                if u == i || !clusters[u].alive {
+                    continue;
+                }
+                let du = cluster_distance(&clusters[i].context, &clusters[u].context, alpha);
+                if du < bb.0 {
+                    bb = (du, u);
+                }
+            }
+            nn[i] = bb;
+        }
+    }
+
+    // link the final cluster under the synthetic root
+    let top = clusters.iter().find(|c| c.alive).map(|c| c.node);
+    if let Some(top) = top {
+        let root = index.root;
+        index.node_mut(top).parent = Some(root);
+        index.node_mut(root).children.push(top);
+    }
+
+    // ---- Phase 2b: remove empty internal nodes ---------------------------
+    remove_empty_internals(&mut index);
+
+    // ---- Phase 3: top-down prefix alignment ------------------------------
+    align_top_down(&mut index);
+
+    // collect placements for the inputs
+    let placed = input_leaf
+        .into_iter()
+        .map(|leaf| {
+            let aligned = index.node(leaf).context.clone();
+            let path = index.path_of(leaf);
+            (leaf, aligned, path)
+        })
+        .collect();
+
+    BuildResult { index, placed }
+}
+
+/// Remove internal nodes whose context is empty (no shared prefix),
+/// re-linking their children to the grandparent (Alg. 4 phase 2). The
+/// synthetic root (also empty) is kept.
+fn remove_empty_internals(index: &mut ContextIndex) {
+    // iterate until fixpoint (removals can cascade)
+    loop {
+        let victim = (0..index.capacity())
+            .find(|&id| {
+                id != index.root
+                    && index.is_alive(id)
+                    && !index.node(id).is_leaf()
+                    && index.node(id).context.is_empty()
+            });
+        let Some(v) = victim else { break };
+        let parent = index.node(v).parent.expect("internal node has parent");
+        let children = index.node(v).children.clone();
+        let pos = index
+            .node(parent)
+            .children
+            .iter()
+            .position(|&c| c == v)
+            .expect("linked");
+        // splice children into parent's child list at v's position
+        let mut new_children = index.node(parent).children.clone();
+        new_children.remove(pos);
+        for (off, c) in children.iter().enumerate() {
+            new_children.insert(pos + off, *c);
+            index.node_mut(*c).parent = Some(parent);
+        }
+        index.node_mut(parent).children = new_children;
+        index.release(v);
+    }
+}
+
+/// Phase 3: reorder every node's context to start with its parent's
+/// (already aligned) context: `v.docs = parent.docs ⊕ (v.docs \ parent.docs)`.
+fn align_top_down(index: &mut ContextIndex) {
+    let root = index.root;
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(root);
+    while let Some(v) = queue.pop_front() {
+        let parent_ctx: Option<Context> = index.node(v).parent.map(|p| index.node(p).context.clone());
+        if let Some(pc) = parent_ctx {
+            if !pc.is_empty() {
+                let own = index.node(v).context.clone();
+                let in_parent: std::collections::HashSet<_> = pc.iter().copied().collect();
+                let mut aligned: Context = pc
+                    .iter()
+                    .copied()
+                    .filter(|b| own.contains(b))
+                    .collect();
+                aligned.extend(own.iter().copied().filter(|b| !in_parent.contains(b)));
+                index.node_mut(v).context = aligned;
+            }
+        }
+        for &c in &index.node(v).children {
+            queue.push_back(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::BlockId;
+
+    fn ctx(ids: &[u32]) -> Context {
+        ids.iter().map(|&i| BlockId(i)).collect()
+    }
+
+    fn fig4_inputs() -> Vec<(RequestId, Context)> {
+        vec![
+            (RequestId(1), ctx(&[2, 1, 3])),
+            (RequestId(2), ctx(&[2, 6, 1])),
+            (RequestId(3), ctx(&[4, 1, 0])),
+        ]
+    }
+
+    #[test]
+    fn paper_fig4_construction() {
+        // C1{2,1,3} and C2{2,6,1} merge first (share {1,2}); C3 joins at
+        // the root level with shared {1}.
+        let r = build_clustered(&fig4_inputs(), 0.001);
+        r.index.check_invariants().unwrap();
+        // C1's aligned context must start with the sorted shared prefix {1,2}
+        let (_, aligned_c1, _) = &r.placed[0];
+        assert_eq!(&aligned_c1[..2], &ctx(&[1, 2])[..]);
+        assert_eq!(aligned_c1[2], BlockId(3));
+        let (_, aligned_c2, _) = &r.placed[1];
+        assert_eq!(&aligned_c2[..2], &ctx(&[1, 2])[..]);
+        assert_eq!(aligned_c2[2], BlockId(6));
+        // C3 aligned starts with {1}
+        let (_, aligned_c3, _) = &r.placed[2];
+        assert_eq!(aligned_c3[0], BlockId(1));
+    }
+
+    #[test]
+    fn fig4_tree_shape() {
+        let mut r = build_clustered(&fig4_inputs(), 0.001);
+        // C4 (virtual) has context {1,2}; root-level virtual C5 has {1}
+        let s = r.index.search(&ctx(&[2, 1, 4]));
+        let n = r.index.node(s.node);
+        assert_eq!(n.context, ctx(&[1, 2]), "search should land on C4");
+        assert_eq!(s.path, vec![0, 0]);
+    }
+
+    #[test]
+    fn duplicate_contexts_share_leaf() {
+        let inputs = vec![
+            (RequestId(1), ctx(&[1, 2, 3])),
+            (RequestId(2), ctx(&[1, 2, 3])),
+            (RequestId(3), ctx(&[9, 8, 7])),
+        ];
+        let r = build_clustered(&inputs, 0.001);
+        assert_eq!(r.placed[0].0, r.placed[1].0, "dup contexts share a leaf");
+        assert_eq!(r.index.node(r.placed[0].0).freq, 2);
+        r.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disjoint_groups_get_empty_merges_removed() {
+        let inputs = vec![
+            (RequestId(1), ctx(&[1, 2])),
+            (RequestId(2), ctx(&[1, 3])),
+            (RequestId(3), ctx(&[10, 11])),
+            (RequestId(4), ctx(&[10, 12])),
+        ];
+        let r = build_clustered(&inputs, 0.001);
+        r.index.check_invariants().unwrap();
+        // no alive internal node (other than root) may have empty context
+        for id in 0..r.index.capacity() {
+            if r.index.is_alive(id) && id != r.index.root {
+                let n = r.index.node(id);
+                if !n.is_leaf() {
+                    assert!(!n.context.is_empty(), "empty internal node {id} survived");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_input() {
+        let r = build_clustered(&[(RequestId(1), ctx(&[5, 6]))], 0.001);
+        assert_eq!(r.placed.len(), 1);
+        assert_eq!(r.placed[0].1, ctx(&[5, 6]));
+        r.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = build_clustered(&[], 0.001);
+        assert_eq!(r.placed.len(), 0);
+        assert_eq!(r.index.len_alive(), 1);
+    }
+
+    #[test]
+    fn all_paths_round_trip() {
+        let inputs: Vec<(RequestId, Context)> = (0..40u64)
+            .map(|i| {
+                let mut rng = crate::util::prng::Rng::new(i);
+                let ids = rng.sample_indices(30, 5);
+                (
+                    RequestId(i),
+                    ids.into_iter().map(|x| BlockId(x as u32)).collect(),
+                )
+            })
+            .collect();
+        let r = build_clustered(&inputs, 0.001);
+        r.index.check_invariants().unwrap();
+        for (leaf, _, path) in &r.placed {
+            assert_eq!(r.index.traverse(path), Some(*leaf));
+        }
+    }
+
+    #[test]
+    fn aligned_context_is_permutation_of_input() {
+        let inputs = fig4_inputs();
+        let r = build_clustered(&inputs, 0.001);
+        for ((_, original), (_, aligned, _)) in inputs.iter().zip(&r.placed) {
+            let mut a = original.clone();
+            let mut b = aligned.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "alignment must be a permutation");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let inputs: Vec<(RequestId, Context)> = (0..30u64)
+            .map(|i| {
+                let mut rng = crate::util::prng::Rng::new(i * 7);
+                let ids = rng.sample_indices(20, 4);
+                (
+                    RequestId(i),
+                    ids.into_iter().map(|x| BlockId(x as u32)).collect(),
+                )
+            })
+            .collect();
+        let a = build_clustered_with_threads(&inputs, 0.001, 1);
+        let b = build_clustered_with_threads(&inputs, 0.001, 4);
+        for ((_, ca, pa), (_, cb, pb)) in a.placed.iter().zip(&b.placed) {
+            assert_eq!(ca, cb);
+            assert_eq!(pa, pb);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's context index (§4): Eq.-1 distance, tree structure,
+//! Algorithm-1 search, O(h) eviction sync, and Algorithm-4 offline
+//! construction via hierarchical clustering.
+
+pub mod build;
+pub mod distance;
+pub mod tree;
+
+pub use build::{build_clustered, BuildResult};
+pub use distance::{context_distance, sorted_intersection, DEFAULT_ALPHA};
+pub use tree::{ContextIndex, ConvRecord, IndexNode, NodeId, SearchResult};

@@ -1,0 +1,607 @@
+//! The context index (§4): a tree over contexts mirroring the engine's
+//! prefix-cache state.
+//!
+//! * The root is a synthetic empty context; top-level subtrees hang off it
+//!   (unmatched contexts form standalone branches, §5.1).
+//! * Internal ("virtual") nodes hold the sorted intersection of their
+//!   subtree — the shared prefix reusable from the KV cache.
+//! * Leaves hold aligned full contexts and carry the engine `RequestId`
+//!   that owns the cached prefix, enabling O(h) eviction sync (§4.1).
+//!
+//! Four node attributes follow the paper: (1) the context (block ids),
+//! (2) the search path from the root — recomputed on demand here so sibling
+//! removals cannot leave stale paths, (3) an access-frequency counter, and
+//! (4) the clustering distance at which the node was created.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::index::distance::{context_distance, overlap_count, sorted_intersection};
+use crate::types::{BlockId, Context, RequestId, SessionId};
+
+pub type NodeId = usize;
+
+#[derive(Clone, Debug)]
+pub struct IndexNode {
+    /// Leaves: the (aligned) full context. Virtual nodes: the sorted
+    /// intersection of the subtree (shared prefix).
+    pub context: Context,
+    pub children: Vec<NodeId>,
+    pub parent: Option<NodeId>,
+    /// Access frequency (cache-eviction signal).
+    pub freq: u64,
+    /// Clustering distance at which this node was created (0 for leaves).
+    pub cluster_dist: f64,
+    /// Engine requests owning this cached context (leaves only; several
+    /// when duplicate contexts share one leaf).
+    pub requests: Vec<RequestId>,
+    pub alive: bool,
+}
+
+impl IndexNode {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+}
+
+/// Per-conversation record for multi-turn de-duplication (§6): blocks and
+/// content sub-block hashes seen in prior turns.
+#[derive(Clone, Debug, Default)]
+pub struct ConvRecord {
+    pub seen_blocks: HashSet<BlockId>,
+    /// sub-block content hash -> block that first contributed it
+    pub seen_subblocks: HashMap<u64, BlockId>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ContextIndex {
+    nodes: Vec<IndexNode>,
+    free: Vec<NodeId>,
+    pub root: NodeId,
+    req_to_leaf: HashMap<RequestId, NodeId>,
+    pub alpha: f64,
+    conversations: HashMap<SessionId, ConvRecord>,
+}
+
+/// Result of a context search (Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchResult {
+    /// Child-position indices from the root to the best match.
+    pub path: Vec<usize>,
+    pub node: NodeId,
+}
+
+impl ContextIndex {
+    pub fn new(alpha: f64) -> Self {
+        let root = IndexNode {
+            context: Vec::new(),
+            children: Vec::new(),
+            parent: None,
+            freq: 0,
+            cluster_dist: f64::INFINITY,
+            requests: Vec::new(),
+            alive: true,
+        };
+        Self {
+            nodes: vec![root],
+            free: Vec::new(),
+            root: 0,
+            req_to_leaf: HashMap::new(),
+            alpha,
+            conversations: HashMap::new(),
+        }
+    }
+
+    pub fn node(&self, id: NodeId) -> &IndexNode {
+        &self.nodes[id]
+    }
+
+    pub(crate) fn node_mut(&mut self, id: NodeId) -> &mut IndexNode {
+        &mut self.nodes[id]
+    }
+
+    pub fn len_alive(&self) -> usize {
+        self.nodes.iter().filter(|n| n.alive).count()
+    }
+
+    /// Arena size (alive + dead slots) — for id iteration.
+    pub fn capacity(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_alive(&self, id: NodeId) -> bool {
+        self.nodes[id].alive
+    }
+
+    /// Mark a node dead and recycle its slot (build-phase restructuring).
+    pub(crate) fn release(&mut self, id: NodeId) {
+        debug_assert!(id != self.root);
+        self.nodes[id].alive = false;
+        self.nodes[id].children.clear();
+        self.nodes[id].context.clear();
+        for r in std::mem::take(&mut self.nodes[id].requests) {
+            self.req_to_leaf.remove(&r);
+        }
+        self.free.push(id);
+    }
+
+    pub fn leaf_of_request(&self, req: RequestId) -> Option<NodeId> {
+        self.req_to_leaf.get(&req).copied()
+    }
+
+    pub(crate) fn alloc(&mut self, node: IndexNode) -> NodeId {
+        if let Some(id) = self.free.pop() {
+            self.nodes[id] = node;
+            id
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    pub(crate) fn register_request(&mut self, req: RequestId, leaf: NodeId) {
+        if !self.nodes[leaf].requests.contains(&req) {
+            self.nodes[leaf].requests.push(req);
+        }
+        self.req_to_leaf.insert(req, leaf);
+    }
+
+    // ---------------------------------------------------------------------
+    // Algorithm 1: context search
+    // ---------------------------------------------------------------------
+
+    /// Greedy descent: at each level pick the overlapping child with the
+    /// minimum Eq.-1 distance; stop at a leaf, when no child overlaps, or
+    /// when the best children are equidistant *leaves* (the longest shared
+    /// prefix is the current node, §4.2). Distance ties prefer virtual
+    /// (internal) nodes — they represent shared prefixes with further
+    /// reuse potential below them.
+    pub fn search(&mut self, context: &Context) -> SearchResult {
+        let mut cur = self.root;
+        let mut path = Vec::new();
+        loop {
+            self.nodes[cur].freq += 1;
+            let children = &self.nodes[cur].children;
+            if children.is_empty() {
+                return SearchResult { path, node: cur };
+            }
+            // score overlapping children: (distance, prefer-internal)
+            let mut best: Option<(f64, bool, usize, NodeId)> = None;
+            let mut tied_at_best = 0usize;
+            for (pos, &c) in children.iter().enumerate() {
+                let child = &self.nodes[c];
+                if overlap_count(&child.context, context) == 0 {
+                    continue;
+                }
+                let d = context_distance(&child.context, context, self.alpha);
+                let internal = !child.is_leaf();
+                match &mut best {
+                    None => {
+                        best = Some((d, internal, pos, c));
+                        tied_at_best = 1;
+                    }
+                    Some((bd, bint, bpos, bc)) => {
+                        if d < *bd - 1e-12 {
+                            (*bd, *bint, *bpos, *bc) = (d, internal, pos, c);
+                            tied_at_best = 1;
+                        } else if (d - *bd).abs() <= 1e-12 {
+                            tied_at_best += 1;
+                            // tie-break: internal beats leaf
+                            if internal && !*bint {
+                                (*bd, *bint, *bpos, *bc) = (d, internal, pos, c);
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((_, is_internal, pos, next)) = best else {
+                // no overlapping child: cur is the best match
+                return SearchResult { path, node: cur };
+            };
+            if tied_at_best > 1 && !is_internal {
+                // equidistant leaves: cur already is the longest shared prefix
+                return SearchResult { path, node: cur };
+            }
+            path.push(pos);
+            if self.nodes[next].is_leaf() {
+                self.nodes[next].freq += 1;
+                return SearchResult { path, node: next };
+            }
+            cur = next;
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // insertion (§4.2)
+    // ---------------------------------------------------------------------
+
+    /// Insert an (aligned) context under the node found by `search`.
+    /// Internal match: append as child, O(1). Leaf match: create a new
+    /// virtual node with the shared prefix, O(|C|). Returns the new leaf
+    /// and its search path.
+    ///
+    /// The split node's context is the longest common *block prefix* of
+    /// the existing leaf and the (already aligned) incoming context — the
+    /// part the engine's radix cache will actually share. (The offline
+    /// clustering build uses sorted intersections followed by top-down
+    /// re-alignment, which yields the same prefix property.)
+    pub fn insert_at(
+        &mut self,
+        found: &SearchResult,
+        context: Context,
+        req: RequestId,
+    ) -> (NodeId, Vec<usize>) {
+        let target = found.node;
+        if self.nodes[target].is_leaf() && target != self.root {
+            // split: new virtual parent with the shared block prefix
+            let inter: Context = self.nodes[target]
+                .context
+                .iter()
+                .zip(context.iter())
+                .take_while(|(a, b)| a == b)
+                .map(|(a, _)| *a)
+                .collect();
+            let inter = if inter.is_empty() {
+                sorted_intersection(&self.nodes[target].context, &context)
+            } else {
+                inter
+            };
+            let parent = self.nodes[target].parent.expect("non-root leaf has parent");
+            let pos_in_parent = self.nodes[parent]
+                .children
+                .iter()
+                .position(|&c| c == target)
+                .expect("leaf linked in parent");
+            let virt = self.alloc(IndexNode {
+                context: inter,
+                children: vec![target],
+                parent: Some(parent),
+                freq: self.nodes[target].freq,
+                cluster_dist: 0.0,
+                requests: Vec::new(),
+                alive: true,
+            });
+            self.nodes[parent].children[pos_in_parent] = virt;
+            self.nodes[target].parent = Some(virt);
+            let leaf = self.alloc(IndexNode {
+                context,
+                children: Vec::new(),
+                parent: Some(virt),
+                freq: 1,
+                cluster_dist: 0.0,
+                requests: vec![req],
+                alive: true,
+            });
+            self.nodes[virt].children.push(leaf);
+            self.req_to_leaf.insert(req, leaf);
+            let mut path = found.path.clone();
+            path.push(1); // new leaf is the second child of the split node
+            (leaf, path)
+        } else {
+            // internal (or root): append as a new child
+            let leaf = self.alloc(IndexNode {
+                context,
+                children: Vec::new(),
+                parent: Some(target),
+                freq: 1,
+                cluster_dist: 0.0,
+                requests: vec![req],
+                alive: true,
+            });
+            self.nodes[target].children.push(leaf);
+            self.req_to_leaf.insert(req, leaf);
+            let mut path = found.path.clone();
+            path.push(self.nodes[target].children.len() - 1);
+            (leaf, path)
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // eviction sync (§4.1) — O(h) per evicted request id
+    // ---------------------------------------------------------------------
+
+    /// Engine eviction callback: remove the leaves owned by these request
+    /// ids and recursively prune empty parents.
+    pub fn on_evict(&mut self, reqs: &[RequestId]) {
+        for &r in reqs {
+            if let Some(leaf) = self.req_to_leaf.remove(&r) {
+                if self.nodes[leaf].alive {
+                    self.nodes[leaf].requests.retain(|&x| x != r);
+                    if self.nodes[leaf].requests.is_empty() {
+                        self.remove_node(leaf);
+                    }
+                }
+            }
+        }
+    }
+
+    fn remove_node(&mut self, id: NodeId) {
+        debug_assert!(self.nodes[id].children.is_empty());
+        let parent = self.nodes[id].parent;
+        self.nodes[id].alive = false;
+        self.nodes[id].context.clear();
+        for r in std::mem::take(&mut self.nodes[id].requests) {
+            self.req_to_leaf.remove(&r);
+        }
+        self.free.push(id);
+        if let Some(p) = parent {
+            self.nodes[p].children.retain(|&c| c != id);
+            if self.nodes[p].children.is_empty() && p != self.root {
+                self.remove_node(p);
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------------
+    // traversal (§4.2)
+    // ---------------------------------------------------------------------
+
+    /// Follow a search path from the root; O(h).
+    pub fn traverse(&self, path: &[usize]) -> Option<NodeId> {
+        let mut cur = self.root;
+        for &p in path {
+            cur = *self.nodes[cur].children.get(p)?;
+        }
+        Some(cur)
+    }
+
+    /// Recompute the search path of a node by walking up; O(h·branching).
+    pub fn path_of(&self, mut id: NodeId) -> Vec<usize> {
+        let mut rev = Vec::new();
+        while let Some(p) = self.nodes[id].parent {
+            let pos = self.nodes[p]
+                .children
+                .iter()
+                .position(|&c| c == id)
+                .expect("node linked in parent");
+            rev.push(pos);
+            id = p;
+        }
+        rev.reverse();
+        rev
+    }
+
+    // ---------------------------------------------------------------------
+    // conversation records (for §6 de-duplication)
+    // ---------------------------------------------------------------------
+
+    pub fn conversation(&mut self, session: SessionId) -> &mut ConvRecord {
+        self.conversations.entry(session).or_default()
+    }
+
+    pub fn conversation_ref(&self, session: SessionId) -> Option<&ConvRecord> {
+        self.conversations.get(&session)
+    }
+
+    // ---------------------------------------------------------------------
+    // invariants (tests / failure injection)
+    // ---------------------------------------------------------------------
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (id, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            for &c in &n.children {
+                if !self.nodes[c].alive {
+                    return Err(format!("node {id} has dead child {c}"));
+                }
+                if self.nodes[c].parent != Some(id) {
+                    return Err(format!("child {c} parent mismatch (expect {id})"));
+                }
+            }
+            if id != self.root {
+                if n.parent.is_none() {
+                    return Err(format!("non-root node {id} has no parent"));
+                }
+                if !n.is_leaf() && n.children.len() < 1 {
+                    return Err(format!("internal node {id} with no children"));
+                }
+                // Note: no containment/overlap invariant is enforced
+                // between virtual nodes and their children. The offline
+                // clustering build produces subset-nested contexts, but
+                // online inserts append children in O(1) without
+                // restructuring (§4.2), so descendant splits can drift
+                // from an ancestor's context. The index is a reuse
+                // heuristic; correctness rests on the radix cache.
+            }
+            // path round-trip
+            if n.is_leaf() && id != self.root {
+                let p = self.path_of(id);
+                if self.traverse(&p) != Some(id) {
+                    return Err(format!("path round-trip failed for leaf {id}"));
+                }
+            }
+        }
+        for (&r, &leaf) in &self.req_to_leaf {
+            if !self.nodes[leaf].alive {
+                return Err(format!("request {r:?} maps to dead leaf {leaf}"));
+            }
+            if !self.nodes[leaf].requests.contains(&r) {
+                return Err(format!("request {r:?} leaf backlink mismatch"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(ids: &[u32]) -> Context {
+        ids.iter().map(|&i| BlockId(i)).collect()
+    }
+
+    /// Build the paper's Figure-4 tree by hand:
+    /// root -> C5{1} -> [C3{4,1,0}-aligned{1,4,0}, C4{1,2} -> [C1, C2]]
+    fn fig4_index() -> (ContextIndex, NodeId, NodeId) {
+        let mut ix = ContextIndex::new(0.001);
+        let c5 = ix.alloc(IndexNode {
+            context: ctx(&[1]),
+            children: vec![],
+            parent: Some(ix.root),
+            freq: 0,
+            cluster_dist: 0.9,
+            requests: Vec::new(),
+            alive: true,
+        });
+        ix.nodes[0].children.push(c5);
+        let c4 = ix.alloc(IndexNode {
+            context: ctx(&[1, 2]),
+            children: vec![],
+            parent: Some(c5),
+            freq: 0,
+            cluster_dist: 0.4,
+            requests: Vec::new(),
+            alive: true,
+        });
+        let c3 = ix.alloc(IndexNode {
+            context: ctx(&[1, 4, 0]),
+            children: vec![],
+            parent: Some(c5),
+            freq: 0,
+            cluster_dist: 0.0,
+            requests: vec![RequestId(3)],
+            alive: true,
+        });
+        ix.nodes[c5].children.push(c4);
+        ix.nodes[c5].children.push(c3);
+        let c1 = ix.alloc(IndexNode {
+            context: ctx(&[1, 2, 3]),
+            children: vec![],
+            parent: Some(c4),
+            freq: 0,
+            cluster_dist: 0.0,
+            requests: vec![RequestId(1)],
+            alive: true,
+        });
+        let c2 = ix.alloc(IndexNode {
+            context: ctx(&[1, 2, 6]),
+            children: vec![],
+            parent: Some(c4),
+            freq: 0,
+            cluster_dist: 0.0,
+            requests: vec![RequestId(2)],
+            alive: true,
+        });
+        ix.nodes[c4].children.push(c1);
+        ix.nodes[c4].children.push(c2);
+        ix.req_to_leaf.insert(RequestId(1), c1);
+        ix.req_to_leaf.insert(RequestId(2), c2);
+        ix.req_to_leaf.insert(RequestId(3), c3);
+        ix.check_invariants().unwrap();
+        (ix, c5, c4)
+    }
+
+    #[test]
+    fn paper_search_example_c6() {
+        // §4.2: C6{2,1,4} descends to C5 (path [0]), picks C4 over C3
+        // (shares {1,2} vs {1}), then stops: C1 and C2 are equidistant.
+        let (mut ix, _c5, c4) = fig4_index();
+        let r = ix.search(&ctx(&[2, 1, 4]));
+        assert_eq!(r.node, c4);
+        assert_eq!(r.path, vec![0, 0]);
+    }
+
+    #[test]
+    fn paper_insert_example_c6() {
+        let (mut ix, _, c4) = fig4_index();
+        let found = ix.search(&ctx(&[2, 1, 4]));
+        let (leaf, path) = ix.insert_at(&found, ctx(&[1, 2, 4]), RequestId(6));
+        // inserted as C4's third child -> final path [0,0,2]
+        assert_eq!(path, vec![0, 0, 2]);
+        assert_eq!(ix.traverse(&path), Some(leaf));
+        assert_eq!(ix.node(c4).children.len(), 3);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn search_empty_index_returns_root() {
+        let mut ix = ContextIndex::new(0.001);
+        let r = ix.search(&ctx(&[1, 2]));
+        assert_eq!(r.node, ix.root);
+        assert!(r.path.is_empty());
+    }
+
+    #[test]
+    fn unmatched_context_becomes_standalone_branch() {
+        let (mut ix, _, _) = fig4_index();
+        let found = ix.search(&ctx(&[7, 8, 9]));
+        assert_eq!(found.node, ix.root);
+        let (_, path) = ix.insert_at(&found, ctx(&[7, 8, 9]), RequestId(7));
+        assert_eq!(path.len(), 1);
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leaf_match_splits_with_intersection() {
+        let mut ix = ContextIndex::new(0.001);
+        let found = ix.search(&ctx(&[1, 2, 3]));
+        ix.insert_at(&found, ctx(&[1, 2, 3]), RequestId(1));
+        // a very similar context matches the leaf and splits it
+        let found2 = ix.search(&ctx(&[1, 2, 9]));
+        assert!(ix.node(found2.node).is_leaf());
+        let (leaf2, path2) = ix.insert_at(&found2, ctx(&[1, 2, 9]), RequestId(2));
+        let virt = ix.node(leaf2).parent.unwrap();
+        assert_eq!(ix.node(virt).context, ctx(&[1, 2]));
+        assert_eq!(ix.node(virt).children.len(), 2);
+        assert_eq!(path2.last(), Some(&1));
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_prunes_empty_parents() {
+        let mut ix = ContextIndex::new(0.001);
+        let f1 = ix.search(&ctx(&[1, 2, 3]));
+        ix.insert_at(&f1, ctx(&[1, 2, 3]), RequestId(1));
+        let f2 = ix.search(&ctx(&[1, 2, 9]));
+        ix.insert_at(&f2, ctx(&[1, 2, 9]), RequestId(2));
+        let alive_before = ix.len_alive();
+        ix.on_evict(&[RequestId(1), RequestId(2)]);
+        // both leaves and the virtual parent are gone; only root remains
+        assert_eq!(ix.len_alive(), 1);
+        assert!(alive_before > 1);
+        assert!(ix.leaf_of_request(RequestId(1)).is_none());
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_of_unknown_request_is_noop() {
+        let (mut ix, _, _) = fig4_index();
+        let n = ix.len_alive();
+        ix.on_evict(&[RequestId(999)]);
+        assert_eq!(ix.len_alive(), n);
+    }
+
+    #[test]
+    fn path_of_round_trips_after_mutation() {
+        let (mut ix, _, _) = fig4_index();
+        let f = ix.search(&ctx(&[1, 2, 4]));
+        let (leaf, _) = ix.insert_at(&f, ctx(&[1, 2, 4]), RequestId(6));
+        ix.on_evict(&[RequestId(1)]); // removes a sibling
+        let p = ix.path_of(leaf);
+        assert_eq!(ix.traverse(&p), Some(leaf));
+        ix.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn conversation_records_isolated_per_session() {
+        let mut ix = ContextIndex::new(0.001);
+        ix.conversation(SessionId(1)).seen_blocks.insert(BlockId(5));
+        assert!(ix
+            .conversation_ref(SessionId(1))
+            .unwrap()
+            .seen_blocks
+            .contains(&BlockId(5)));
+        assert!(ix.conversation_ref(SessionId(2)).is_none());
+    }
+
+    #[test]
+    fn freq_counts_accumulate_on_search() {
+        let (mut ix, c5, _) = fig4_index();
+        let f0 = ix.node(c5).freq;
+        ix.search(&ctx(&[1, 4, 0]));
+        ix.search(&ctx(&[1, 2, 3]));
+        assert!(ix.node(c5).freq > f0);
+    }
+}

@@ -1,0 +1,35 @@
+//! # ContextPilot
+//!
+//! Reproduction of *"ContextPilot: Fast Long-Context Inference via Context
+//! Reuse"* (MLSys 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordination contribution: a
+//!   context index ([`index`]), context alignment ([`align`]), request
+//!   scheduling ([`schedule`]), de-duplication ([`dedup`]) and annotations,
+//!   fronting an in-repo inference engine ([`engine`]) with a radix prefix
+//!   cache ([`cache`]).
+//! - **Layer 2** — a JAX transformer (`python/compile/model.py`) AOT-lowered
+//!   to HLO text, executed from Rust via PJRT ([`runtime`]).
+//! - **Layer 1** — a Pallas block-wise prefill-attention kernel
+//!   (`python/compile/kernels/attention.py`).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod align;
+pub mod cache;
+pub mod corpus;
+pub mod dedup;
+pub mod engine;
+pub mod experiments;
+pub mod index;
+pub mod pilot;
+pub mod quality;
+pub mod runtime;
+pub mod schedule;
+pub mod metrics;
+pub mod tokenizer;
+pub mod types;
+pub mod util;
+pub mod workload;
+
+pub use util::prng::Rng;

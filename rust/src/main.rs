@@ -1,0 +1,153 @@
+//! `ctxpilot` — CLI for the ContextPilot reproduction.
+//!
+//! Subcommands:
+//!   serve        run a workload through a system and print metrics
+//!   bench <id>   regenerate one paper table/figure (table1..table8,
+//!                fig7, fig8, fig11, fig12, fig13, appendix_f, appendix_g)
+//!   index        build a context index over synthetic contexts and time it
+//!   demo         the quickstart walkthrough (see examples/quickstart.rs)
+
+use contextpilot::engine::ModelSku;
+use contextpilot::experiments as exp;
+use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
+use contextpilot::pilot::PilotConfig;
+use contextpilot::util::cli::Args;
+use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset};
+
+fn parse_dataset(s: &str) -> Dataset {
+    match s.to_ascii_lowercase().as_str() {
+        "multihoprag" | "multihop" => Dataset::MultihopRag,
+        "narrativeqa" => Dataset::NarrativeQa,
+        "qasper" => Dataset::Qasper,
+        "mtrag" | "mt-rag" => Dataset::MtRag,
+        "locomo" => Dataset::LoCoMo,
+        other => {
+            eprintln!("unknown dataset '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_system(s: &str) -> SystemKind {
+    match s.to_ascii_lowercase().as_str() {
+        "lmcache" => SystemKind::LMCache,
+        "cacheblend" => SystemKind::CacheBlend,
+        "radixcache" | "radix" => SystemKind::RadixCache,
+        "contextpilot" | "pilot" => SystemKind::ContextPilot(PilotConfig::default()),
+        other => {
+            eprintln!("unknown system '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let dataset = parse_dataset(args.get_or("dataset", "multihoprag"));
+    let system = parse_system(args.get_or("system", "contextpilot"));
+    let sessions = args.get_usize("sessions", 200);
+    let turns = args.get_usize("turns", 1);
+    let k = args.get_usize("k", 15);
+    let seed = args.get_u64("seed", 0x5EED);
+    let workload = match args.get_or("workload", "multi-session") {
+        "multi-session" => multi_session(dataset, sessions, k, seed),
+        "multi-turn" => multi_turn(dataset, turns.max(2), k, seed),
+        "hybrid" => hybrid(dataset, sessions, turns.max(2), k, seed),
+        "mem0" => mem0(sessions, turns.max(2), k, seed),
+        other => {
+            eprintln!("unknown workload '{other}'");
+            std::process::exit(2);
+        }
+    };
+    let corpus = corpus_for(dataset);
+    let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+    cfg.offline = turns <= 1;
+    cfg.capacity_tokens = args.get_usize("capacity", cfg.capacity_tokens);
+    let mut m = run_system(&system, &workload, &corpus, &cfg);
+    println!("system           : {}", system.name());
+    println!("dataset          : {}", dataset.name());
+    println!("requests         : {}", m.len());
+    println!("prefill tok/s    : {:.0}", m.prefill_throughput());
+    println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
+    println!("mean TTFT        : {:.4}s", m.mean_ttft());
+    println!("p99 TTFT         : {:.4}s", m.p99_ttft());
+    println!("quality (proxy)  : {:.3}", m.mean_quality());
+    println!("anchored F1      : {:.1}", run_f1(&m, &workload, &cfg, 60.4));
+}
+
+fn cmd_bench(args: &Args) {
+    let quick = !args.flag("full");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let all: Vec<(&str, fn(bool) -> Vec<contextpilot::util::table::Table>)> = vec![
+        ("table1", exp::table1::run),
+        ("table2", exp::table2::run),
+        ("table3a", exp::table3a::run),
+        ("table3b", exp::table3b::run),
+        ("table3c", exp::table3c::run),
+        ("table4", exp::table4::run),
+        ("table5", exp::table5::run),
+        ("table6", exp::table6::run),
+        ("table7", exp::table7::run),
+        ("table8", exp::table8::run),
+        ("fig7", exp::fig7::run),
+        ("fig8", exp::fig8::run),
+        ("fig11", exp::fig11::run),
+        ("fig12", exp::fig12::run),
+        ("fig13", exp::fig13::run),
+        ("appendix_f", exp::appendix_f::run),
+        ("appendix_g", exp::appendix_g::run),
+    ];
+    let mut ran = false;
+    for (id, f) in all {
+        if which == "all" || which == id {
+            for t in f(quick) {
+                t.emit(id);
+            }
+            ran = true;
+        }
+    }
+    if !ran {
+        eprintln!("unknown bench id '{which}'");
+        std::process::exit(2);
+    }
+}
+
+fn cmd_index(args: &Args) {
+    let n = args.get_usize("n", 2000);
+    let k = args.get_usize("k", 15);
+    let inputs = exp::table3c::synth_contexts(n, k, args.get_u64("seed", 0xC0));
+    let t0 = std::time::Instant::now();
+    let built = contextpilot::index::build::build_clustered(&inputs, 0.001);
+    println!(
+        "clustered build: {n} contexts (k={k}) in {:.2}s, {} nodes",
+        t0.elapsed().as_secs_f64(),
+        built.index.len_alive()
+    );
+    let t1 = std::time::Instant::now();
+    let ix = exp::table3c::build_incremental(&inputs, 0.001);
+    println!(
+        "incremental build: {n} contexts in {:.2}s, {} nodes",
+        t1.elapsed().as_secs_f64(),
+        ix.len_alive()
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("index") => cmd_index(&args),
+        Some(cmd) => {
+            eprintln!("unknown subcommand '{cmd}' — try: serve | bench <id> | index");
+            std::process::exit(2);
+        }
+        None => {
+            println!("ctxpilot — ContextPilot: fast long-context inference via context reuse");
+            println!("usage: ctxpilot <serve|bench|index> [--options]");
+            println!("  serve  --system pilot|radix|lmcache|cacheblend --dataset multihoprag");
+            println!("         --workload multi-session|multi-turn|hybrid|mem0 --sessions N --k K");
+            println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|all> [--full]");
+            println!("  index  --n 2000 --k 15");
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Serving metrics: TTFT, prefill throughput, cache hit ratios, and the
+//! per-experiment aggregates every bench table reports.
+
+use crate::types::ServedRequest;
+use crate::util::histogram::Summary;
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub ttft: Summary,
+    pub wall: Summary,
+    pub quality: Summary,
+    pub prompt_tokens: Summary,
+    pub total_prompt_tokens: u64,
+    pub total_cached_tokens: u64,
+    pub total_prefill_seconds: f64,
+    /// (progress fraction of requests, cumulative hit ratio) samples for
+    /// the Fig. 12 time series.
+    pub hit_series: Vec<(f64, f64)>,
+    /// cumulative cached tokens over progress (Fig. 13).
+    pub cached_series: Vec<(f64, u64)>,
+    n: usize,
+    series_every: usize,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self {
+            series_every: 16,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_series_stride(stride: usize) -> Self {
+        Self {
+            series_every: stride.max(1),
+            ..Default::default()
+        }
+    }
+
+    pub fn record(&mut self, s: &ServedRequest) {
+        self.ttft.record(s.ttft);
+        self.wall.record(s.wall);
+        self.quality.record(s.quality);
+        self.prompt_tokens.record(s.prompt_tokens as f64);
+        self.total_prompt_tokens += s.prompt_tokens as u64;
+        self.total_cached_tokens += s.cached_tokens as u64;
+        self.total_prefill_seconds += s.ttft;
+        self.n += 1;
+        if self.n % self.series_every == 0 {
+            self.hit_series.push((self.n as f64, self.hit_ratio()));
+            self.cached_series.push((self.n as f64, self.total_cached_tokens));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Aggregate KV-cache hit ratio (cached / total prompt tokens).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.total_prompt_tokens == 0 {
+            0.0
+        } else {
+            self.total_cached_tokens as f64 / self.total_prompt_tokens as f64
+        }
+    }
+
+    /// Prefill throughput in tokens/second: total prompt tokens over the
+    /// summed prefill time (the paper's Table 2 metric).
+    pub fn prefill_throughput(&self) -> f64 {
+        if self.total_prefill_seconds <= 0.0 {
+            0.0
+        } else {
+            self.total_prompt_tokens as f64 / self.total_prefill_seconds
+        }
+    }
+
+    pub fn mean_quality(&self) -> f64 {
+        self.quality.mean()
+    }
+
+    pub fn mean_ttft(&mut self) -> f64 {
+        self.ttft.mean()
+    }
+
+    pub fn p99_ttft(&mut self) -> f64 {
+        self.ttft.p99()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::*;
+
+    fn served(prompt_tokens: usize, cached: usize, ttft: f64, q: f64) -> ServedRequest {
+        let req = Request {
+            id: RequestId(0),
+            session: SessionId(0),
+            turn: 0,
+            context: vec![],
+            query: QueryId(0),
+        };
+        ServedRequest {
+            prompt: Prompt::baseline(&req),
+            request: req,
+            prompt_tokens,
+            cached_tokens: cached,
+            ttft,
+            wall: ttft + 0.1,
+            quality: q,
+        }
+    }
+
+    #[test]
+    fn hit_ratio_aggregates() {
+        let mut m = RunMetrics::new();
+        m.record(&served(100, 50, 0.1, 0.8));
+        m.record(&served(100, 0, 0.2, 0.6));
+        assert!((m.hit_ratio() - 0.25).abs() < 1e-9);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn throughput_is_tokens_over_time() {
+        let mut m = RunMetrics::new();
+        m.record(&served(1000, 0, 0.5, 1.0));
+        m.record(&served(1000, 0, 0.5, 1.0));
+        assert!((m.prefill_throughput() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn series_sampled_on_stride() {
+        let mut m = RunMetrics::with_series_stride(2);
+        for _ in 0..10 {
+            m.record(&served(10, 5, 0.1, 0.5));
+        }
+        assert_eq!(m.hit_series.len(), 5);
+        assert_eq!(m.cached_series.last().unwrap().1, 50);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = RunMetrics::new();
+        assert_eq!(m.hit_ratio(), 0.0);
+        assert_eq!(m.prefill_throughput(), 0.0);
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,339 @@
+//! The ContextPilot proxy (Fig. 3 / Fig. 14): takes user requests with
+//! retrieval-ranked context blocks, rewrites them for maximum KV-cache
+//! reuse (alignment §5 + de-duplication §6 + annotations), schedules the
+//! batch (Alg. 5), and keeps its context index synchronized with the
+//! engine's prefix cache via request-id eviction callbacks (§4.1).
+//!
+//! Two operating modes, matching the paper's evaluation setup:
+//!  * **offline** (multi-session): [`ContextPilot::build_offline`] cluster-
+//!    builds the index over the whole batch before serving; initialization
+//!    contexts inherit their aligned prefix from their parent nodes.
+//!  * **online** (multi-turn / Mem0): the index starts cold and every
+//!    request is searched + inserted incrementally.
+
+use std::collections::HashMap;
+
+use crate::align::{align_context, order_annotation, Alignment};
+use crate::corpus::Corpus;
+use crate::dedup::{dedup_context, DedupConfig, DedupStats};
+use crate::index::build::build_clustered;
+use crate::index::tree::ContextIndex;
+use crate::index::DEFAULT_ALPHA;
+use crate::schedule::schedule_by_paths;
+use crate::types::{Context, Prompt, Request, RequestId, Segment};
+
+#[derive(Clone, Debug)]
+pub struct PilotConfig {
+    /// Eq.-1 positional weight (paper default 0.001).
+    pub alpha: f64,
+    /// Context alignment (§5.1).
+    pub align: bool,
+    /// Order annotations (§5.3).
+    pub annotate: bool,
+    /// De-duplication (§6); None disables.
+    pub dedup: Option<DedupConfig>,
+    /// Alg.-5 batch scheduling (§5.2).
+    pub schedule: bool,
+}
+
+impl Default for PilotConfig {
+    fn default() -> Self {
+        Self {
+            alpha: DEFAULT_ALPHA,
+            align: true,
+            annotate: true,
+            dedup: Some(DedupConfig::default()),
+            schedule: true,
+        }
+    }
+}
+
+impl PilotConfig {
+    /// Ablation helper (Table 7 / Fig. 7 variants).
+    pub fn with(align: bool, annotate: bool, dedup: bool, schedule: bool) -> Self {
+        Self {
+            alpha: DEFAULT_ALPHA,
+            align,
+            annotate,
+            dedup: dedup.then(DedupConfig::default),
+            schedule,
+        }
+    }
+}
+
+/// One processed request: the rewritten prompt plus the metadata the
+/// engine/scheduler/metrics need.
+#[derive(Clone, Debug)]
+pub struct PilotOutput {
+    pub request: Request,
+    pub prompt: Prompt,
+    /// Index search path (drives Alg.-5 grouping).
+    pub path: Vec<usize>,
+    pub aligned: Context,
+    pub dedup_stats: DedupStats,
+}
+
+pub struct ContextPilot {
+    pub cfg: PilotConfig,
+    pub index: ContextIndex,
+    /// Offline-build placements: request -> (aligned context, path).
+    placements: HashMap<RequestId, (Context, Vec<usize>)>,
+}
+
+impl ContextPilot {
+    pub fn new(cfg: PilotConfig) -> Self {
+        let alpha = cfg.alpha;
+        Self {
+            cfg,
+            index: ContextIndex::new(alpha),
+            placements: HashMap::new(),
+        }
+    }
+
+    /// Offline mode: pre-build the context index over the whole batch via
+    /// hierarchical clustering (Alg. 4). Subsequent `process` calls for
+    /// these requests reuse their recorded aligned placement.
+    pub fn build_offline(&mut self, requests: &[Request]) {
+        let inputs: Vec<(RequestId, Context)> = requests
+            .iter()
+            .map(|r| (r.id, r.context.clone()))
+            .collect();
+        let built = build_clustered(&inputs, self.cfg.alpha);
+        self.index = built.index;
+        self.placements = requests
+            .iter()
+            .zip(built.placed)
+            .map(|(r, (_, aligned, path))| (r.id, (aligned, path)))
+            .collect();
+    }
+
+    /// Engine eviction callback (§4.1).
+    pub fn on_evict(&mut self, reqs: &[RequestId]) {
+        self.index.on_evict(reqs);
+        for r in reqs {
+            self.placements.remove(r);
+        }
+    }
+
+    /// Process one request: align → de-duplicate → annotate.
+    pub fn process(&mut self, req: &Request, corpus: &Corpus) -> PilotOutput {
+        // ---- 1. alignment (§5) ------------------------------------------
+        let (aligned, path) = if let Some((aligned, path)) = self.placements.get(&req.id) {
+            (aligned.clone(), path.clone())
+        } else if self.cfg.align {
+            let Alignment { aligned, path, .. } =
+                align_context(&mut self.index, &req.context, req.id);
+            (aligned, path)
+        } else {
+            // no alignment: still search (so scheduling has paths and the
+            // index tracks the cache), but keep the original order.
+            let found = self.index.search(&req.context);
+            let (_, path) = self
+                .index
+                .insert_at(&found, req.context.clone(), req.id);
+            (req.context.clone(), path)
+        };
+
+        // ---- 2. de-duplication (§6) --------------------------------------
+        let (mut segments, dedup_stats) = match &self.cfg.dedup {
+            Some(dcfg) => {
+                let dcfg = *dcfg;
+                dedup_context(&mut self.index, req.session, &aligned, corpus, &dcfg)
+            }
+            None => (
+                aligned.iter().map(|&b| Segment::Block(b)).collect(),
+                DedupStats {
+                    blocks_in: aligned.len(),
+                    ..Default::default()
+                },
+            ),
+        };
+
+        // ---- 3. order annotation (§5.3) ----------------------------------
+        let mut all = Vec::with_capacity(segments.len() + 3);
+        all.push(Segment::System);
+        all.append(&mut segments);
+        if self.cfg.annotate {
+            if let Some(ranking) = order_annotation(&req.context, &aligned) {
+                all.push(Segment::OrderAnnotation(ranking));
+            }
+        }
+        all.push(Segment::Question(req.query));
+
+        PilotOutput {
+            request: req.clone(),
+            prompt: Prompt { segments: all },
+            path,
+            aligned,
+            dedup_stats,
+        }
+    }
+
+    /// Process a batch and schedule it (Alg. 5): returns outputs in
+    /// execution order.
+    pub fn process_batch(&mut self, reqs: &[Request], corpus: &Corpus) -> Vec<PilotOutput> {
+        let outputs: Vec<PilotOutput> =
+            reqs.iter().map(|r| self.process(r, corpus)).collect();
+        if !self.cfg.schedule {
+            return outputs;
+        }
+        let paths: Vec<Vec<usize>> = outputs.iter().map(|o| o.path.clone()).collect();
+        let order = schedule_by_paths(&paths);
+        let mut slots: Vec<Option<PilotOutput>> = outputs.into_iter().map(Some).collect();
+        order
+            .into_iter()
+            .map(|i| slots[i].take().expect("schedule emitted duplicate index"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{Corpus, CorpusConfig};
+    use crate::tokenizer::Tokenizer;
+    use crate::types::{BlockId, QueryId, SessionId};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(
+            &CorpusConfig {
+                n_docs: 64,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        )
+    }
+
+    fn req(id: u64, session: u32, turn: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    #[test]
+    fn offline_batch_reproduces_paper_flow() {
+        // Fig. 5/6 composite: init C1..C3, then C6, C7, C8.
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let init = vec![
+            req(1, 1, 0, &[2, 1, 3]),
+            req(2, 2, 0, &[2, 6, 1]),
+            req(3, 3, 0, &[4, 1, 0]),
+        ];
+        pilot.build_offline(&init);
+        let batch = vec![
+            req(6, 6, 0, &[2, 1, 4]),
+            req(7, 7, 0, &[5, 7, 8]),
+            req(8, 8, 0, &[1, 2, 9]),
+        ];
+        let out = pilot.process_batch(&batch, &corpus);
+        // C6 and C8 share the {1,2} prefix and must run consecutively
+        let pos6 = out.iter().position(|o| o.request.id == RequestId(6)).unwrap();
+        let pos8 = out.iter().position(|o| o.request.id == RequestId(8)).unwrap();
+        assert_eq!(pos6.abs_diff(pos8), 1, "C6/C8 not adjacent: {pos6} vs {pos8}");
+        // C6 aligned to {1,2,4}
+        let o6 = &out[pos6];
+        let want: Context = [1u32, 2, 4].iter().map(|&i| BlockId(i)).collect();
+        assert_eq!(o6.aligned, want);
+        // reordered => order annotation present
+        assert!(o6.prompt.has_order_annotation());
+        pilot.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn online_multi_turn_dedups_history() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let t0 = pilot.process(&req(1, 5, 0, &[1, 2, 4]), &corpus);
+        assert_eq!(t0.dedup_stats.blocks_deduped, 0);
+        let t1 = pilot.process(&req(2, 5, 1, &[1, 5, 2]), &corpus);
+        assert_eq!(t1.dedup_stats.blocks_deduped, 2);
+        let loc_refs = t1
+            .prompt
+            .segments
+            .iter()
+            .filter(|s| matches!(s, Segment::LocationRef(_)))
+            .count();
+        assert_eq!(loc_refs, 2);
+    }
+
+    #[test]
+    fn annotation_absent_when_order_preserved() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let out = pilot.process(&req(1, 1, 0, &[3, 4, 5]), &corpus);
+        assert!(!out.prompt.has_order_annotation());
+    }
+
+    #[test]
+    fn ablation_config_disables_components() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::with(false, false, false, false));
+        let a = pilot.process(&req(1, 1, 0, &[2, 1, 3]), &corpus);
+        assert_eq!(a.aligned, a.request.context, "align disabled");
+        let b = pilot.process(&req(2, 1, 1, &[2, 1, 3]), &corpus);
+        assert_eq!(b.dedup_stats.blocks_deduped, 0, "dedup disabled");
+        assert!(!b.prompt.has_order_annotation(), "annotate disabled");
+    }
+
+    #[test]
+    fn eviction_callback_prunes_index_and_placements() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let batch = vec![req(1, 1, 0, &[1, 2, 3]), req(2, 2, 0, &[1, 2, 9])];
+        pilot.build_offline(&batch);
+        pilot.process_batch(&batch, &corpus);
+        pilot.on_evict(&[RequestId(1)]);
+        assert!(pilot.index.leaf_of_request(RequestId(1)).is_none());
+        assert!(pilot.index.leaf_of_request(RequestId(2)).is_some());
+        pilot.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn batch_is_permutation_of_input() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let batch: Vec<Request> = (0..20)
+            .map(|i| {
+                let mut rng = crate::util::prng::Rng::new(i);
+                let ids: Vec<u32> = rng
+                    .sample_indices(40, 5)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                req(i, i as u32, 0, &ids)
+            })
+            .collect();
+        let out = pilot.process_batch(&batch, &corpus);
+        assert_eq!(out.len(), batch.len());
+        let mut ids: Vec<u64> = out.iter().map(|o| o.request.id.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn aligned_is_always_permutation_of_context() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        for i in 0..50u64 {
+            let mut rng = crate::util::prng::Rng::new(i ^ 0xABC);
+            let ids: Vec<u32> = rng
+                .sample_indices(40, 1 + (i as usize % 8))
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            let r = req(i, (i % 7) as u32, (i / 7) as u32, &ids);
+            let out = pilot.process(&r, &corpus);
+            let mut a = out.aligned.clone();
+            let mut b = r.context.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "request {i}");
+        }
+        pilot.index.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! Real PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + weights.bin + model_meta.json) and
+//! serves TinyLM prefill from Rust — Python is never on the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. One compiled
+//! executable per chunk-length variant; the engine picks the largest
+//! variant that fits the remaining tokens and pads the tail chunk
+//! (pad-safety is proven by `python/tests/test_model.py::test_padding_is_harmless`).
+
+pub mod model;
+pub mod real_engine;
+
+pub use model::{ModelMeta, TinyLmRuntime};
+pub use real_engine::RealEngine;

@@ -1,0 +1,291 @@
+//! TinyLM runtime: artifact loading, weight literals, chunked prefill with
+//! KV-cache threading.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `model_meta.json` — the contract with the AOT compile path.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    /// chunk length -> HLO file name
+    pub variants: BTreeMap<usize, String>,
+    /// (name, shape) in weights.bin order
+    pub weights: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    pub fn load(dir: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(dir.join("model_meta.json"))
+            .with_context(|| format!("reading model_meta.json in {dir:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("model_meta.json: {e}"))?;
+        let cfg = v.get("config");
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("missing config.{k}"))
+        };
+        let mut variants = BTreeMap::new();
+        for item in v.get("variants").as_arr().unwrap_or(&[]) {
+            let chunk = item
+                .get("chunk")
+                .as_usize()
+                .ok_or_else(|| anyhow!("variant missing chunk"))?;
+            let file = item
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("variant missing file"))?;
+            variants.insert(chunk, file.to_string());
+        }
+        if variants.is_empty() {
+            bail!("no variants in model_meta.json");
+        }
+        let mut weights = Vec::new();
+        for w in v.get("weights").as_arr().unwrap_or(&[]) {
+            let name = w.get("name").as_str().unwrap_or_default().to_string();
+            let shape: Vec<usize> = w
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            weights.push((name, shape));
+        }
+        Ok(ModelMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            variants,
+            weights,
+        })
+    }
+
+    pub fn kv_elements(&self) -> usize {
+        self.n_layers * 2 * self.max_seq * self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dims(&self) -> [i64; 5] {
+        [
+            self.n_layers as i64,
+            2,
+            self.max_seq as i64,
+            self.n_heads as i64,
+            self.head_dim as i64,
+        ]
+    }
+}
+
+/// KV-cache state threaded between prefill chunks.
+pub struct KvState {
+    pub literal: xla::Literal,
+    /// Number of valid cached positions.
+    pub len: usize,
+}
+
+pub struct TinyLmRuntime {
+    pub meta: ModelMeta,
+    client: xla::PjRtClient,
+    execs: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::Literal>,
+}
+
+impl TinyLmRuntime {
+    /// Load and compile every variant in `dir` (default `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<TinyLmRuntime> {
+        let dir = dir.as_ref();
+        let meta = ModelMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = BTreeMap::new();
+        for (&chunk, file) in &meta.variants {
+            let path: PathBuf = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            execs.insert(chunk, client.compile(&comp)?);
+        }
+        // weights.bin: flat f32 LE in artifact order
+        let blob = std::fs::read(dir.join("weights.bin"))?;
+        let mut weights = Vec::with_capacity(meta.weights.len());
+        let mut off = 0usize;
+        for (name, shape) in &meta.weights {
+            let n: usize = shape.iter().product();
+            let bytes = blob
+                .get(off..off + n * 4)
+                .ok_or_else(|| anyhow!("weights.bin truncated at {name}"))?;
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            weights.push(xla::Literal::vec1(&vals).reshape(&dims)?);
+            off += n * 4;
+        }
+        if off != blob.len() {
+            bail!("weights.bin has {} trailing bytes", blob.len() - off);
+        }
+        Ok(TinyLmRuntime {
+            meta,
+            client,
+            execs,
+            weights,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn empty_kv(&self) -> Result<KvState> {
+        let zeros = vec![0f32; self.meta.kv_elements()];
+        Ok(KvState {
+            literal: xla::Literal::vec1(&zeros).reshape(&self.meta.kv_dims())?,
+            len: 0,
+        })
+    }
+
+    /// Largest variant <= n, else the smallest variant (tail gets padded).
+    fn pick_variant(&self, n: usize) -> usize {
+        self.execs
+            .keys()
+            .rev()
+            .find(|&&c| c <= n)
+            .or_else(|| self.execs.keys().next())
+            .copied()
+            .expect("at least one variant")
+    }
+
+    /// Run one compiled chunk. `tokens` must have exactly `chunk` entries.
+    fn run_chunk(
+        &self,
+        chunk: usize,
+        tokens: &[i32],
+        kv: &xla::Literal,
+        cache_len: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        debug_assert_eq!(tokens.len(), chunk);
+        let exe = &self.execs[&chunk];
+        let tok = xla::Literal::vec1(tokens);
+        let cl = xla::Literal::vec1(&[cache_len as i32]);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weights.len());
+        args.push(&tok);
+        args.push(kv);
+        args.push(&cl);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (logits, new_kv) = result.to_tuple2()?;
+        Ok((logits, new_kv))
+    }
+
+    /// Prefill `tokens` starting from `kv` (consumed), returning the new KV
+    /// state and the logits of the **last real token**.
+    ///
+    /// Chunks greedily with the compiled variants; the tail chunk is padded
+    /// with zeros (garbage KV rows beyond the real tokens stay outside
+    /// `kv.len` and are overwritten by any continuation).
+    pub fn prefill(&self, tokens: &[u32], kv: KvState) -> Result<(Vec<f32>, KvState)> {
+        if tokens.is_empty() {
+            bail!("prefill of zero tokens");
+        }
+        if kv.len + tokens.len() > self.meta.max_seq {
+            bail!(
+                "sequence overflow: {} cached + {} new > max_seq {}",
+                kv.len,
+                tokens.len(),
+                self.meta.max_seq
+            );
+        }
+        let mut cur_kv = kv.literal;
+        let mut cache_len = kv.len;
+        let mut off = 0usize;
+        let mut last_logits: Option<(xla::Literal, usize, usize)> = None; // (logits, chunk, real)
+        while off < tokens.len() {
+            let remaining = tokens.len() - off;
+            let chunk = self.pick_variant(remaining);
+            let real = remaining.min(chunk);
+            let mut buf: Vec<i32> = Vec::with_capacity(chunk);
+            buf.extend(tokens[off..off + real].iter().map(|&t| t as i32));
+            buf.resize(chunk, 0); // pad
+            let (logits, new_kv) = self.run_chunk(chunk, &buf, &cur_kv, cache_len)?;
+            cur_kv = new_kv;
+            cache_len += real;
+            off += real;
+            last_logits = Some((logits, chunk, real));
+        }
+        let (logits, chunk, real) = last_logits.unwrap();
+        // logits: [chunk, vocab]; take row real-1
+        let flat = logits.to_vec::<f32>()?;
+        let v = self.meta.vocab;
+        debug_assert_eq!(flat.len(), chunk * v);
+        let row = flat[(real - 1) * v..real * v].to_vec();
+        Ok((
+            row,
+            KvState {
+                literal: cur_kv,
+                len: cache_len,
+            },
+        ))
+    }
+
+    /// Greedy decode of `n` tokens starting from `kv` and the logits of
+    /// the previous position.
+    pub fn decode(
+        &self,
+        mut logits: Vec<f32>,
+        mut kv: KvState,
+        n: usize,
+    ) -> Result<(Vec<u32>, KvState)> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if kv.len >= self.meta.max_seq {
+                break;
+            }
+            let next = argmax(&logits);
+            out.push(next);
+            let (lg, new_kv) = self.prefill(&[next], kv)?;
+            logits = lg;
+            kv = new_kv;
+        }
+        Ok((out, kv))
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+
+    // Runtime tests that need built artifacts live in
+    // rust/tests/runtime_real_model.rs (integration).
+}

@@ -1,0 +1,166 @@
+//! Real serving engine: TinyLM via PJRT with an actual KV-reusing radix
+//! prefix cache. This is the end-to-end validation path (examples/
+//! e2e_serving.rs): ContextPilot's prompt rewriting must translate into
+//! *measured* wall-clock prefill savings on real model execution.
+//!
+//! KV snapshots (full KV literals + length) are attached to radix-cache
+//! nodes at prompt boundaries; a new request resumes prefill from the
+//! deepest snapshot whose token prefix matches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cache::RadixCache;
+use crate::corpus::Corpus;
+use crate::engine::render::Renderer;
+use crate::runtime::model::{KvState, TinyLmRuntime};
+use crate::tokenizer::Tokenizer;
+use crate::types::{Prompt, Request, RequestId, ServedRequest};
+
+/// KV snapshot stored in the cache: state after prefilling a token prefix.
+pub struct KvSnapshot {
+    pub literal: xla::Literal,
+    pub len: usize,
+}
+
+pub struct RealEngine {
+    pub runtime: TinyLmRuntime,
+    pub cache: RadixCache<Arc<KvSnapshot>>,
+    pub renderer: Renderer,
+    /// Tokens actually prefilled (uncached) across all requests.
+    pub stat_prefilled_tokens: u64,
+    pub stat_reused_tokens: u64,
+}
+
+impl RealEngine {
+    pub fn new(runtime: TinyLmRuntime, capacity_tokens: usize) -> Self {
+        Self {
+            runtime,
+            cache: RadixCache::new(capacity_tokens),
+            renderer: Renderer::new(Tokenizer::new(2048)),
+            stat_prefilled_tokens: 0,
+            stat_reused_tokens: 0,
+        }
+    }
+
+    /// Token offsets of snapshot boundaries: after the system segment and
+    /// after each context block — the positions future requests can share.
+    /// The annotation/question tail is prefilled as one run with no
+    /// snapshot (it is request-specific, so caching it buys nothing and
+    /// each snapshot costs a full KV-literal clone).
+    fn boundaries(&mut self, prompt: &Prompt, corpus: &Corpus) -> Vec<usize> {
+        use crate::types::Segment;
+        let mut out = Vec::with_capacity(prompt.segments.len());
+        let mut acc = 0usize;
+        for seg in &prompt.segments {
+            let mut buf = Vec::new();
+            let one = Prompt {
+                segments: vec![seg.clone()],
+            };
+            self.renderer.render_into(&one, corpus, &mut buf);
+            acc += buf.len();
+            if matches!(
+                seg,
+                Segment::System
+                    | Segment::Block(_)
+                    | Segment::PartialBlock { .. }
+                    | Segment::LocationRef(_)
+            ) {
+                out.push(acc);
+            }
+        }
+        // final boundary = full prompt (needed so cached_len==total is
+        // detectable for identical prompts)
+        if out.last() != Some(&acc) {
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Serve a prompt: resume from the deepest cached KV snapshot, prefill
+    /// the remainder segment-by-segment (snapshotting KV at each segment
+    /// boundary so later requests can reuse any shared *block prefix*, not
+    /// just identical prompts), decode greedily, and return the record plus
+    /// evicted request ids.
+    pub fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        decode_tokens: usize,
+    ) -> Result<(ServedRequest, Vec<RequestId>, Vec<u32>)> {
+        let tokens = self.renderer.render(prompt, corpus);
+        let boundaries = self.boundaries(prompt, corpus);
+        let total = tokens.len();
+        debug_assert_eq!(boundaries.last().copied(), Some(total));
+        let t0 = std::time::Instant::now();
+
+        // deepest reusable KV snapshot (snapshots live at boundaries)
+        let (cached_len, kv) = match self.cache.deepest_payload(&tokens) {
+            Some((len, snap)) => (
+                len,
+                KvState {
+                    literal: snap.literal.clone(),
+                    len: snap.len,
+                },
+            ),
+            None => (0, self.runtime.empty_kv()?),
+        };
+        debug_assert_eq!(cached_len, kv.len);
+
+        let mut evicted: Vec<RequestId> = Vec::new();
+        let mut kv_cur = kv;
+        let mut logits: Option<Vec<f32>> = None;
+        if cached_len < total {
+            // prefill segment-wise from the resume point, snapshotting at
+            // every boundary
+            let mut pos = cached_len;
+            for &b in boundaries.iter().filter(|&&b| b > cached_len) {
+                let (lg, kv_next) = self.runtime.prefill(&tokens[pos..b], kv_cur)?;
+                kv_cur = kv_next;
+                logits = Some(lg);
+                let snap = Arc::new(KvSnapshot {
+                    literal: kv_cur.literal.clone(),
+                    len: kv_cur.len,
+                });
+                evicted.extend(self.cache.set_payload(&tokens[..b], req.id, snap));
+                pos = b;
+            }
+        } else {
+            // full prompt cached: re-run the last token to recover logits
+            let resume = KvState {
+                literal: kv_cur.literal,
+                len: kv_cur.len - 1,
+            };
+            let (lg, kv_next) = self.runtime.prefill(&tokens[total - 1..], resume)?;
+            kv_cur = kv_next;
+            logits = Some(lg);
+        }
+        let ttft = t0.elapsed().as_secs_f64();
+        self.stat_prefilled_tokens += (total - cached_len) as u64;
+        self.stat_reused_tokens += cached_len as u64;
+
+        // decode
+        let (answer, _kv_final) =
+            self.runtime
+                .decode(logits.expect("at least one chunk ran"), kv_cur, decode_tokens)?;
+        let wall = t0.elapsed().as_secs_f64();
+        evicted.sort_unstable();
+        evicted.dedup();
+
+        Ok((
+            ServedRequest {
+                request: req.clone(),
+                prompt: prompt.clone(),
+                prompt_tokens: total,
+                cached_tokens: cached_len,
+                ttft,
+                wall,
+                quality: 0.0, // real engine measures latency, not the proxy
+            },
+            evicted,
+            answer,
+        ))
+    }
+}

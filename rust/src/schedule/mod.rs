@@ -1,0 +1,147 @@
+//! Request scheduling with aligned contexts (§5.2, Algorithm 5).
+//!
+//! After alignment, requests are reordered so prefix-sharing contexts run
+//! consecutively — otherwise a tight KV budget evicts a shared prefix
+//! before its siblings arrive (Fig. 6). Three phases:
+//!
+//!   1. group by the first element of the search path  — O(N)
+//!   2. sort within each group by path length, longest first — O(N log N)
+//!   3. order groups by size (desc) and flatten
+//!
+//! Unlike RAGCache / SGLang-LPM global prefix selection (which rescans an
+//! M-node radix tree per decision), this reuses the search paths computed
+//! during alignment — complexity independent of M.
+
+use std::collections::HashMap;
+
+/// Schedule items by their alignment search paths. Returns the execution
+/// order as indices into the input slice.
+pub fn schedule_by_paths(paths: &[Vec<usize>]) -> Vec<usize> {
+    // Phase 1: group by first path element (None for empty paths).
+    let mut groups: HashMap<Option<usize>, Vec<usize>> = HashMap::new();
+    let mut group_order: Vec<Option<usize>> = Vec::new();
+    for (i, p) in paths.iter().enumerate() {
+        let key = p.first().copied();
+        let entry = groups.entry(key).or_insert_with(|| {
+            group_order.push(key);
+            Vec::new()
+        });
+        entry.push(i);
+    }
+    // Phase 2: in-group sort by path length, longest first (stable so
+    // arrival order breaks ties deterministically).
+    for g in groups.values_mut() {
+        g.sort_by(|&a, &b| paths[b].len().cmp(&paths[a].len()));
+    }
+    // Phase 3: groups by size descending (stable on first-seen order).
+    group_order.sort_by(|a, b| groups[b].len().cmp(&groups[a].len()));
+    let mut out = Vec::with_capacity(paths.len());
+    for key in group_order {
+        out.extend(groups.remove(&key).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig6_example() {
+        // Ordered contexts C6 [0,0,2], C3 [0,1], C7 [1], C8 [0,0,3]
+        // -> group 0: {C6, C3, C8} sorted by len desc => C6, C8, C3
+        // -> group 1: {C7}
+        // final: C6, C8, C3, C7
+        let paths = vec![vec![0, 0, 2], vec![0, 1], vec![1], vec![0, 0, 3]];
+        let order = schedule_by_paths(&paths);
+        assert_eq!(order, vec![0, 3, 1, 2]);
+    }
+
+    #[test]
+    fn output_is_permutation() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::quickcheck("schedule is a permutation", |rng: &mut Rng, size| {
+            let n = size.min(40);
+            let paths: Vec<Vec<usize>> = (0..n)
+                .map(|_| {
+                    let len = rng.below(5);
+                    (0..len).map(|_| rng.below(4)).collect()
+                })
+                .collect();
+            let order = schedule_by_paths(&paths);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            sorted == (0..n).collect::<Vec<_>>()
+        });
+    }
+
+    #[test]
+    fn within_group_longest_first() {
+        use crate::util::prng::Rng;
+        use crate::util::prop;
+        prop::quickcheck("in-group path lengths non-increasing", |rng: &mut Rng, size| {
+            let n = size.min(40).max(1);
+            let paths: Vec<Vec<usize>> = (0..n)
+                .map(|_| {
+                    let len = rng.below(5);
+                    (0..len).map(|_| rng.below(3)).collect()
+                })
+                .collect();
+            let order = schedule_by_paths(&paths);
+            // check monotone lengths within each contiguous same-group run
+            for w in order.windows(2) {
+                let (a, b) = (&paths[w[0]], &paths[w[1]]);
+                if a.first() == b.first() && a.len() < b.len() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn groups_are_contiguous() {
+        let paths = vec![
+            vec![0, 1],
+            vec![1, 2],
+            vec![0, 2, 3],
+            vec![1],
+            vec![0],
+            vec![2],
+        ];
+        let order = schedule_by_paths(&paths);
+        let keys: Vec<Option<usize>> = order.iter().map(|&i| paths[i].first().copied()).collect();
+        // each group key appears in one contiguous run
+        let mut seen = std::collections::HashSet::new();
+        let mut prev = None;
+        for k in keys {
+            if Some(k) != prev {
+                assert!(seen.insert(k), "group {k:?} split");
+                prev = Some(k);
+            }
+        }
+    }
+
+    #[test]
+    fn larger_groups_run_first() {
+        let paths = vec![vec![1], vec![0, 1], vec![0, 2], vec![0]];
+        let order = schedule_by_paths(&paths);
+        // group 0 (3 members) precedes group 1 (1 member)
+        assert_eq!(paths[order[0]].first(), Some(&0));
+        assert_eq!(paths[*order.last().unwrap()].first(), Some(&1));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(schedule_by_paths(&[]).is_empty());
+        assert_eq!(schedule_by_paths(&[vec![7, 7]]), vec![0]);
+    }
+
+    #[test]
+    fn stable_for_ties() {
+        let paths = vec![vec![0, 1], vec![0, 2], vec![0, 3]];
+        // equal lengths, same group: arrival order preserved
+        assert_eq!(schedule_by_paths(&paths), vec![0, 1, 2]);
+    }
+}

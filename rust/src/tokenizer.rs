@@ -1,0 +1,116 @@
+//! Deterministic tokenizer substrate.
+//!
+//! The serving engines the paper integrates with (SGLang/vLLM) cache KV at
+//! *token* granularity, so the radix prefix cache needs real token
+//! sequences. We use a whitespace word tokenizer with FNV-hashed ids into a
+//! fixed vocab — deterministic across runs, collision behaviour is
+//! irrelevant (we never detokenize), and identical text always produces
+//! identical token ids, which is the property prefix caching requires.
+
+pub const DEFAULT_VOCAB: u32 = 2048;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    pub vocab: u32,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self {
+            vocab: DEFAULT_VOCAB,
+        }
+    }
+}
+
+#[inline]
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u32) -> Self {
+        assert!(vocab > 0);
+        Self { vocab }
+    }
+
+    /// Tokenize one word. Reserved ids [0, 16) are avoided so the engine
+    /// can use them as sentinels (e.g. padding = 0).
+    #[inline]
+    pub fn word_id(&self, word: &str) -> u32 {
+        let reserved = 16u32.min(self.vocab / 4);
+        reserved + (fnv1a(word.as_bytes()) % (self.vocab - reserved) as u64) as u32
+    }
+
+    /// Tokenize text: split on whitespace, one token per word.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.word_id(w)).collect()
+    }
+
+    /// Append-encode into an existing buffer (hot-path variant; avoids the
+    /// intermediate Vec in the engine's prompt assembly).
+    pub fn encode_into(&self, text: &str, out: &mut Vec<u32>) {
+        for w in text.split_whitespace() {
+            out.push(self.word_id(w));
+        }
+    }
+
+    /// Number of tokens `encode` would produce, without allocating.
+    pub fn count(&self, text: &str) -> usize {
+        text.split_whitespace().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let t = Tokenizer::default();
+        assert_eq!(t.encode("hello world"), t.encode("hello world"));
+    }
+
+    #[test]
+    fn same_word_same_id_anywhere() {
+        let t = Tokenizer::default();
+        let a = t.encode("kennedy died in 1963");
+        let b = t.encode("in 1963 kennedy died");
+        // multiset equal, order differs
+        let mut a2 = a.clone();
+        let mut b2 = b.clone();
+        a2.sort_unstable();
+        b2.sort_unstable();
+        assert_eq!(a2, b2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ids_in_vocab_and_above_reserved() {
+        let t = Tokenizer::new(100);
+        for w in ["a", "bb", "ccc", "dddd", "テスト"] {
+            let id = t.word_id(w);
+            assert!(id >= 16.min(25) && id < 100, "{w} -> {id}");
+        }
+    }
+
+    #[test]
+    fn whitespace_handling() {
+        let t = Tokenizer::default();
+        assert_eq!(t.encode("  a   b  "), t.encode("a b"));
+        assert!(t.encode("").is_empty());
+        assert_eq!(t.count("one two  three"), 3);
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let t = Tokenizer::default();
+        let mut buf = vec![999];
+        t.encode_into("x y z", &mut buf);
+        assert_eq!(buf[1..].to_vec(), t.encode("x y z"));
+    }
+}

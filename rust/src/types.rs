@@ -1,0 +1,171 @@
+//! Core domain types shared across the coordinator, engine and workloads.
+//!
+//! Terminology follows the paper (§2.1): a **context block** (CB) is any
+//! discrete unit of external context — a retrieved document, a chunk, or a
+//! memory entry. A **context** is the ordered list of block IDs attached to
+//! one request, ranked by retrieval relevance (index 0 = most relevant).
+
+use std::fmt;
+
+/// Identifier of a context block (document / chunk / memory entry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BlockId(pub u32);
+
+impl fmt::Display for BlockId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CB_{}", self.0)
+    }
+}
+
+/// Ordered list of context blocks for one request (relevance ranking).
+pub type Context = Vec<BlockId>;
+
+/// Engine-level request identifier; the prefix cache tracks these so the
+/// context index can stay synchronized on eviction (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u32);
+
+/// One inference request as produced by the workload generators and
+/// consumed (possibly rewritten) by ContextPilot.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub session: SessionId,
+    /// 0-based turn within the session (multi-turn workloads).
+    pub turn: u32,
+    /// Retrieval result, ordered by relevance.
+    pub context: Context,
+    /// Which synthetic query this is (drives the quality model).
+    pub query: QueryId,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QueryId(pub u64);
+
+/// The prompt layout ContextPilot hands to the engine: the (possibly
+/// re-ordered, de-duplicated, annotated) sequence of prompt segments.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Segment {
+    System,
+    /// A full context block, by id.
+    Block(BlockId),
+    /// Block-level location annotation: "refer to [CB_x] in the previous
+    /// conversation" (paper §6).
+    LocationRef(BlockId),
+    /// A partial block: kept sub-block lines after content-level dedup.
+    /// `kept` are line indices retained; elided spans are annotated with
+    /// references to the blocks that first contained them (`refs`).
+    PartialBlock {
+        block: BlockId,
+        kept: Vec<u32>,
+        refs: Vec<BlockId>,
+    },
+    /// Order annotation listing the original relevance ranking (§5.3).
+    OrderAnnotation(Vec<BlockId>),
+    /// The user's question / instruction.
+    Question(QueryId),
+}
+
+/// A fully-assembled prompt: what the engine tokenizes and prefills.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Prompt {
+    pub segments: Vec<Segment>,
+}
+
+impl Prompt {
+    /// Baseline prompt: system + blocks in retrieval order + question.
+    pub fn baseline(req: &Request) -> Prompt {
+        let mut segments = vec![Segment::System];
+        segments.extend(req.context.iter().map(|&b| Segment::Block(b)));
+        segments.push(Segment::Question(req.query));
+        Prompt { segments }
+    }
+
+    /// Block ids that appear as full blocks, in prompt order.
+    pub fn full_blocks(&self) -> Vec<BlockId> {
+        self.segments
+            .iter()
+            .filter_map(|s| match s {
+                Segment::Block(b) => Some(*b),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn has_order_annotation(&self) -> bool {
+        self.segments
+            .iter()
+            .any(|s| matches!(s, Segment::OrderAnnotation(_)))
+    }
+}
+
+/// Outcome of serving one request (metrics inputs).
+#[derive(Clone, Debug)]
+pub struct ServedRequest {
+    pub request: Request,
+    pub prompt: Prompt,
+    pub prompt_tokens: usize,
+    pub cached_tokens: usize,
+    /// Seconds until first output token (prefill latency + queueing).
+    pub ttft: f64,
+    /// Wall time including decode.
+    pub wall: f64,
+    /// Quality-model score in [0, 1] (the F1 proxy).
+    pub quality: f64,
+}
+
+impl ServedRequest {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            0.0
+        } else {
+            self.cached_tokens as f64 / self.prompt_tokens as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> Request {
+        Request {
+            id: RequestId(1),
+            session: SessionId(0),
+            turn: 0,
+            context: vec![BlockId(2), BlockId(1), BlockId(4)],
+            query: QueryId(7),
+        }
+    }
+
+    #[test]
+    fn baseline_prompt_layout() {
+        let p = Prompt::baseline(&req());
+        assert_eq!(p.segments[0], Segment::System);
+        assert_eq!(p.full_blocks(), vec![BlockId(2), BlockId(1), BlockId(4)]);
+        assert_eq!(*p.segments.last().unwrap(), Segment::Question(QueryId(7)));
+        assert!(!p.has_order_annotation());
+    }
+
+    #[test]
+    fn block_id_display() {
+        assert_eq!(BlockId(42).to_string(), "CB_42");
+    }
+
+    #[test]
+    fn hit_ratio_guards_zero() {
+        let s = ServedRequest {
+            request: req(),
+            prompt: Prompt::baseline(&req()),
+            prompt_tokens: 0,
+            cached_tokens: 0,
+            ttft: 0.0,
+            wall: 0.0,
+            quality: 0.0,
+        };
+        assert_eq!(s.hit_ratio(), 0.0);
+    }
+}

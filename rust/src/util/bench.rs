@@ -1,0 +1,117 @@
+//! Micro-benchmark harness substrate (criterion is not in the offline
+//! image). Provides warmup + timed iterations with basic statistics, used
+//! by the `bench_*` targets and the §Perf hot-path measurements.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10.3} us/iter  (p50 {:>8.3}, p99 {:>8.3}, min {:>8.3}, n={})",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.min_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed iterations, then timed iterations
+/// until `budget` elapses (at least `min_iters`). Each iteration is timed
+/// individually so percentiles are meaningful.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, budget: Duration, min_iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || (samples.len() as u64) < min_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() > 5_000_000 {
+            break; // hard cap
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let pick = |q: f64| samples[((q * (n - 1) as f64).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean_ns: mean,
+        p50_ns: pick(0.50),
+        p99_ns: pick(0.99),
+        min_ns: samples[0],
+    }
+}
+
+/// Convenience wrapper with repo-default settings (quick but stable).
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, Duration::from_millis(300), 10, f)
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single closure run, returning (result, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop", 1, Duration::from_millis(20), 10, || {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.min_ns <= r.p50_ns);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = quick("fmt", || {
+            black_box(());
+        });
+        assert!(r.report().contains("fmt"));
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny CLI argument parser substrate (no `clap` in the offline image).
+//!
+//! Supports the shapes the `ctxpilot` binary and bench harnesses need:
+//! a positional subcommand followed by `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .is_some_and(|n| !n.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["serve", "--workers", "4", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.get_usize("workers", 1), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["bench", "--k=15", "--alpha=0.001"]);
+        assert_eq!(a.get_usize("k", 0), 15);
+        assert!((a.get_f64("alpha", 0.0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse(&["--dry-run", "--seed", "42"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_u64("seed", 0), 42);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("mode", "real"), "real");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+
+    #[test]
+    fn multiple_positionals() {
+        let a = parse(&["run", "table2", "--fast"]);
+        assert_eq!(a.positional, vec!["run", "table2"]);
+    }
+}

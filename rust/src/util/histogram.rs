@@ -1,0 +1,230 @@
+//! Latency statistics substrate: streaming summary + exact percentiles.
+//!
+//! The experiment harness reports Avg and P99 latencies (Table 4) and
+//! percentile TTFT (Table 3b); sample counts are small enough (≤ a few
+//! hundred thousand) that exact sorted-sample percentiles are fine.
+
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile with linear interpolation, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q), "percentile {q} out of range");
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = q / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+/// Fixed-bucket counter histogram for hit-ratio/time-series plots.
+#[derive(Clone, Debug)]
+pub struct Buckets {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Buckets {
+    /// `edges` are the upper bounds of each bucket; a final overflow bucket
+    /// is appended automatically.
+    pub fn new(edges: Vec<f64>) -> Self {
+        let n = edges.len();
+        Self {
+            edges,
+            counts: vec![0; n + 1],
+        }
+    }
+
+    pub fn linear(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(n > 0 && hi > lo);
+        let step = (hi - lo) / n as f64;
+        Self::new((1..=n).map(|i| lo + step * i as f64).collect())
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self
+            .edges
+            .iter()
+            .position(|&e| x <= e)
+            .unwrap_or(self.edges.len());
+        self.counts[idx] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_sum() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.record(x);
+        }
+        assert_eq!(s.sum(), 10.0);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut s = Summary::new();
+        for x in 1..=100 {
+            s.record(x as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Summary::new();
+        s.record(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let mut s = Summary::new();
+        for _ in 0..10 {
+            s.record(3.0);
+        }
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn record_after_percentile_resorts() {
+        let mut s = Summary::new();
+        s.record(10.0);
+        s.record(1.0);
+        let _ = s.p50();
+        s.record(0.5);
+        assert_eq!(s.percentile(0.0), 0.5);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Summary::new();
+        a.record(1.0);
+        let mut b = Summary::new();
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.mean(), 2.0);
+    }
+
+    #[test]
+    fn buckets_overflow() {
+        let mut b = Buckets::linear(0.0, 10.0, 5);
+        b.record(1.0);
+        b.record(9.9);
+        b.record(100.0); // overflow
+        assert_eq!(b.total(), 3);
+        assert_eq!(*b.counts().last().unwrap(), 1);
+    }
+}

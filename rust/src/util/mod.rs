@@ -1,0 +1,13 @@
+//! Shared substrates built in-repo because the offline image carries no
+//! tokio/clap/serde/criterion/proptest/rand: deterministic PRNG, JSON,
+//! CLI parsing, histograms, a bench harness, a scoped thread pool, and a
+//! mini property-test framework.
+
+pub mod bench;
+pub mod cli;
+pub mod histogram;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod table;
+pub mod threadpool;

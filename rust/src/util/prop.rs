@@ -1,0 +1,202 @@
+//! Mini property-testing substrate (proptest is not in the offline image).
+//!
+//! `check` runs a predicate over many seeded-random cases; on failure it
+//! reports the case seed so the exact input can be replayed (`Rng::new(seed)`
+//! regenerates it). A light "shrinking" pass retries with smaller size
+//! hints to report the smallest failing size.
+
+use crate::util::prng::Rng;
+
+pub struct Config {
+    pub cases: u64,
+    pub base_seed: u64,
+    /// Size hint passed to the generator (collections scale with it).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            base_seed: 0xC0FFEE,
+            max_size: 64,
+        }
+    }
+}
+
+/// Outcome of a single property case.
+pub enum CaseResult {
+    Pass,
+    /// Discard (precondition not met) — does not count toward `cases`.
+    Discard,
+    Fail(String),
+}
+
+impl From<bool> for CaseResult {
+    fn from(ok: bool) -> Self {
+        if ok {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail("property returned false".to_string())
+        }
+    }
+}
+
+impl From<Result<(), String>> for CaseResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => CaseResult::Pass,
+            Err(e) => CaseResult::Fail(e),
+        }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` non-discarded cases.
+/// Panics with a replayable seed + smallest failing size on failure.
+pub fn check<R: Into<CaseResult>, F: FnMut(&mut Rng, usize) -> R>(
+    name: &str,
+    cfg: Config,
+    mut prop: F,
+) {
+    let mut ran = 0u64;
+    let mut attempts = 0u64;
+    while ran < cfg.cases {
+        attempts += 1;
+        if attempts > cfg.cases * 20 {
+            panic!("property '{name}': too many discards ({attempts} attempts)");
+        }
+        let seed = cfg.base_seed.wrapping_add(attempts.wrapping_mul(0x9E3779B97F4A7C15));
+        // size grows with the case index so early failures are small
+        let size = 1 + (ran as usize * cfg.max_size) / (cfg.cases as usize).max(1);
+        let mut rng = Rng::new(seed);
+        match prop(&mut rng, size).into() {
+            CaseResult::Pass => ran += 1,
+            CaseResult::Discard => {}
+            CaseResult::Fail(msg) => {
+                // shrink: retry the same seed with smaller sizes to find the
+                // smallest size that still fails
+                let mut smallest = size;
+                let mut smallest_msg = msg;
+                let mut s = size / 2;
+                while s >= 1 {
+                    let mut rng2 = Rng::new(seed);
+                    if let CaseResult::Fail(m) = prop(&mut rng2, s).into() {
+                        smallest = s;
+                        smallest_msg = m;
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    } else {
+                        break;
+                    }
+                }
+                panic!(
+                    "property '{name}' failed (seed={seed:#x}, size={smallest}): {smallest_msg}"
+                );
+            }
+        }
+    }
+}
+
+/// `check` with default config.
+pub fn quickcheck<R: Into<CaseResult>, F: FnMut(&mut Rng, usize) -> R>(name: &str, prop: F) {
+    check(name, Config::default(), prop);
+}
+
+// ---- common generators -----------------------------------------------------
+
+/// Random vec of usize ids drawn from [0, universe).
+pub fn gen_ids(rng: &mut Rng, size: usize, universe: usize) -> Vec<usize> {
+    let len = rng.range(0, size.max(1) + 1);
+    (0..len).map(|_| rng.below(universe.max(1))).collect()
+}
+
+/// Random vec of *distinct* ids (like a retrieval result).
+pub fn gen_distinct_ids(rng: &mut Rng, size: usize, universe: usize) -> Vec<usize> {
+    let universe = universe.max(1);
+    let len = rng.range(0, size.max(1).min(universe) + 1);
+    rng.sample_indices(universe, len)
+}
+
+/// Random lowercase word.
+pub fn gen_word(rng: &mut Rng, max_len: usize) -> String {
+    let len = rng.range(1, max_len.max(2));
+    (0..len)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+/// Random text of `words` words.
+pub fn gen_text(rng: &mut Rng, words: usize) -> String {
+    (0..words)
+        .map(|_| gen_word(rng, 8))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        quickcheck("always true", |_rng, _size| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        quickcheck("always false", |_rng, _size| false);
+    }
+
+    #[test]
+    fn discards_do_not_count() {
+        let mut passes = 0;
+        check(
+            "discard half",
+            Config {
+                cases: 50,
+                ..Default::default()
+            },
+            |rng, _size| {
+                if rng.chance(0.5) {
+                    CaseResult::Discard
+                } else {
+                    passes += 1;
+                    CaseResult::Pass
+                }
+            },
+        );
+        assert_eq!(passes, 50);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let ids = gen_ids(&mut rng, 10, 50);
+            assert!(ids.len() <= 10);
+            assert!(ids.iter().all(|&i| i < 50));
+            let distinct = gen_distinct_ids(&mut rng, 10, 50);
+            let set: std::collections::HashSet<_> = distinct.iter().collect();
+            assert_eq!(set.len(), distinct.len());
+            let w = gen_word(&mut rng, 8);
+            assert!(!w.is_empty() && w.len() < 8);
+        }
+    }
+
+    #[test]
+    fn shrinking_reports_small_size() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            quickcheck("fails at any size", |_rng, size| size == 0)
+        }));
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size=1"), "{msg}");
+    }
+}

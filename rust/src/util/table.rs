@@ -1,0 +1,150 @@
+//! Markdown/ASCII table printer for experiment output.
+//!
+//! Every bench target prints the paper's rows through this, and also writes
+//! them to `target/bench_results/<id>.md` so EXPERIMENTS.md can reference
+//! stable artifacts.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render as a GitHub-flavored markdown table with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let _ = writeln!(out);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(line, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and persist under `target/bench_results/<id>.md`.
+    pub fn emit(&self, id: &str) {
+        let rendered = self.render();
+        println!("{rendered}");
+        let dir = Path::new("target/bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{id}.md"));
+            // append: one bench may emit several tables
+            use std::io::Write as _;
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+            {
+                let _ = f.write_all(rendered.as_bytes());
+                let _ = f.write_all(b"\n");
+            }
+        }
+    }
+}
+
+/// Truncate/overwrite a bench result file at the start of a bench run.
+pub fn reset_result_file(id: &str) {
+    let dir = Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{id}.md")), "");
+}
+
+/// Formatting helpers used across experiment tables.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn speedup(ours: f64, base: f64) -> String {
+    if base <= 0.0 {
+        "-".to_string()
+    } else {
+        format!("{:.2}x", ours / base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("### demo"));
+        assert!(r.contains("| long-name | 2.5   |"));
+        assert!(r.contains("| a         | 1     |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f1(3.14159), "3.1");
+        assert_eq!(f2(3.14159), "3.14");
+        assert_eq!(pct(0.345), "34.5%");
+        assert_eq!(speedup(2.0, 1.0), "2.00x");
+        assert_eq!(speedup(1.0, 0.0), "-");
+    }
+}

@@ -1,0 +1,105 @@
+//! Scoped parallel-map substrate (no rayon/tokio in the offline image).
+//!
+//! The context-index build parallelizes its O(N^2) distance matrix across
+//! cores (the paper builds it on CPUs/GPUs, §4.1); the multi-worker router
+//! (Table 6) runs one engine per thread. `std::thread::scope` gives us
+//! borrow-safe fork-join without a persistent pool.
+
+/// Parallel map over `items`, preserving order. Splits into at most
+/// `threads` contiguous chunks. Falls back to serial for tiny inputs.
+pub fn par_map<T: Sync, R: Send, F: Fn(&T) -> R + Sync>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<R> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() < 32 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let out_chunks: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out_chunks.into_iter().enumerate() {
+            let start = ci * chunk;
+            let f = &f;
+            let items = &items[start..(start + out_chunk.len())];
+            s.spawn(move || {
+                for (slot, item) in out_chunk.iter_mut().zip(items) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Parallel for over index ranges: calls `f(lo, hi)` per shard.
+pub fn par_shards<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1);
+    if threads <= 1 || n < 32 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        for t in 0..threads {
+            let lo = t * chunk;
+            if lo >= n {
+                break;
+            }
+            let hi = (lo + chunk).min(n);
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Default parallelism: available cores (minus one to keep the box
+/// responsive), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for threads in [1, 2, 4, 7] {
+            let par = par_map(&items, threads, |x| x * x);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_tiny() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |x| *x).is_empty());
+        assert_eq!(par_map(&[5u32], 4, |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn par_shards_covers_everything() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_shards(n, 4, |lo, hi| {
+            for slot in &hits[lo..hi] {
+                slot.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Document-access statistics (Fig. 11): given a workload, compute the
+//! cumulative access distribution and the top-20% coverage the paper uses
+//! to motivate context reuse.
+
+use std::collections::HashMap;
+
+use crate::types::BlockId;
+use crate::workload::generators::Workload;
+
+#[derive(Clone, Debug)]
+pub struct AccessStats {
+    /// accesses per block, sorted descending
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl AccessStats {
+    pub fn from_workload(w: &Workload) -> AccessStats {
+        let mut map: HashMap<BlockId, u64> = HashMap::new();
+        for r in &w.requests {
+            for &b in &r.context {
+                *map.entry(b).or_default() += 1;
+            }
+        }
+        let mut counts: Vec<u64> = map.into_values().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total = counts.iter().sum();
+        AccessStats { counts, total }
+    }
+
+    /// Fraction of accesses covered by the top `frac` of *accessed* docs.
+    pub fn top_coverage(&self, frac: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let cut = ((self.counts.len() as f64 * frac).ceil() as usize)
+            .clamp(1, self.counts.len());
+        self.counts[..cut].iter().sum::<u64>() as f64 / self.total as f64
+    }
+
+    /// CDF points (x = doc fraction, y = access fraction), `points` samples.
+    pub fn cdf(&self, points: usize) -> Vec<(f64, f64)> {
+        let n = self.counts.len().max(1);
+        let mut out = Vec::with_capacity(points);
+        let mut acc = 0u64;
+        let mut next_idx = 0usize;
+        for p in 1..=points {
+            let target = (n * p).div_ceil(points);
+            while next_idx < target.min(n) {
+                acc += self.counts[next_idx];
+                next_idx += 1;
+            }
+            out.push((
+                next_idx as f64 / n as f64,
+                if self.total == 0 {
+                    0.0
+                } else {
+                    acc as f64 / self.total as f64
+                },
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generators::multi_session;
+    use crate::workload::profiles::Dataset;
+
+    #[test]
+    fn coverage_matches_paper_shape() {
+        // MultihopRAG should be the most head-heavy of the three.
+        let mh = AccessStats::from_workload(&multi_session(Dataset::MultihopRag, 400, 15, 1));
+        let qa = AccessStats::from_workload(&multi_session(Dataset::Qasper, 400, 15, 1));
+        let c_mh = mh.top_coverage(0.2);
+        let c_qa = qa.top_coverage(0.2);
+        assert!(c_mh > c_qa, "MultihopRAG {c_mh} <= QASPER {c_qa}");
+        assert!(c_mh > 0.45, "MultihopRAG top-20% coverage too low: {c_mh}");
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let s = AccessStats::from_workload(&multi_session(Dataset::NarrativeQa, 200, 15, 2));
+        let cdf = s.cdf(10);
+        assert_eq!(cdf.len(), 10);
+        let mut prev = 0.0;
+        for &(x, y) in &cdf {
+            assert!((0.0..=1.0 + 1e-9).contains(&x));
+            assert!(y >= prev - 1e-12);
+            prev = y;
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_workload_safe() {
+        let w = Workload {
+            dataset: Dataset::MultihopRag,
+            requests: vec![],
+        };
+        let s = AccessStats::from_workload(&w);
+        assert_eq!(s.top_coverage(0.2), 0.0);
+    }
+}

@@ -1,0 +1,459 @@
+//! Workload generators for every evaluation scenario in the paper:
+//! multi-session RAG (§7.1), multi-turn RAG (MT-RAG), hybrid
+//! session×turn, agentic memory (Mem0/LoCoMo), Chain-of-Agents, and the
+//! OpenClaw agent traces (Table 4).
+
+use crate::types::{BlockId, QueryId, Request, RequestId, SessionId};
+use crate::util::prng::Rng;
+use crate::workload::profiles::{Dataset, DatasetProfile};
+use crate::workload::retrieval::Retriever;
+
+/// A generated workload: an ordered request arrival sequence.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub dataset: Dataset,
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+fn qid(session: u32, turn: u32) -> QueryId {
+    QueryId(((session as u64) << 32) | turn as u64)
+}
+
+/// Multi-session RAG (§7.1): `sessions` independent single-turn queries,
+/// arriving as one batch (ContextPilot runs in *offline* mode).
+pub fn multi_session(dataset: Dataset, sessions: usize, k: usize, seed: u64) -> Workload {
+    let profile = DatasetProfile::get(dataset);
+    let retriever = Retriever::new(profile);
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        let topic = retriever.sample_topic(&mut rng);
+        let context = retriever.retrieve(topic, k, &mut rng);
+        requests.push(Request {
+            id: RequestId(s as u64),
+            session: SessionId(s as u32),
+            turn: 0,
+            context,
+            query: qid(s as u32, 0),
+        });
+    }
+    Workload { dataset, requests }
+}
+
+/// Multi-turn RAG (MT-RAG, §7.1): one session of `turns` turns; topics
+/// drift within a cluster and retrievals overlap earlier turns
+/// (ContextPilot runs in *online* mode with cold start).
+pub fn multi_turn(dataset: Dataset, turns: usize, k: usize, seed: u64) -> Workload {
+    let profile = DatasetProfile::get(dataset);
+    let retriever = Retriever::new(profile);
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(turns);
+    let mut topic = retriever.sample_topic(&mut rng);
+    let mut history: Vec<BlockId> = Vec::new();
+    for t in 0..turns {
+        if t > 0 {
+            // topic dynamics: half the turns jump to a fresh topic (new
+            // question), the rest drift within the cluster — keeps the
+            // *total* cross-turn overlap near the dataset's measured rate
+            // (§3.1: 40% on MT-RAG) instead of compounding per turn.
+            if rng.chance(0.5) {
+                topic = retriever.sample_topic(&mut rng);
+            } else {
+                topic = retriever.drift_topic(topic, &mut rng);
+            }
+        }
+        let context = retriever.retrieve_turn(topic, k, &history, &mut rng);
+        for &b in &context {
+            if !history.contains(&b) {
+                history.push(b);
+            }
+        }
+        requests.push(Request {
+            id: RequestId(t as u64),
+            session: SessionId(0),
+            turn: t as u32,
+            context,
+            query: qid(0, t as u32),
+        });
+    }
+    Workload { dataset, requests }
+}
+
+/// Hybrid multi-session × multi-turn (Table 3b): `sessions` concurrent
+/// conversations of `turns` turns, arrival interleaved round-robin (the
+/// production-conversation pattern).
+pub fn hybrid(dataset: Dataset, sessions: usize, turns: usize, k: usize, seed: u64) -> Workload {
+    let profile = DatasetProfile::get(dataset);
+    let retriever = Retriever::new(profile);
+    let mut master = Rng::new(seed);
+    struct SessionState {
+        rng: Rng,
+        topic: usize,
+        history: Vec<BlockId>,
+    }
+    let mut states: Vec<SessionState> = (0..sessions)
+        .map(|s| {
+            let mut rng = master.fork(s as u64);
+            let topic = retriever.sample_topic(&mut rng);
+            SessionState {
+                rng,
+                topic,
+                history: Vec::new(),
+            }
+        })
+        .collect();
+    let mut requests = Vec::with_capacity(sessions * turns);
+    let mut next_id = 0u64;
+    for t in 0..turns {
+        for (s, st) in states.iter_mut().enumerate() {
+            if t > 0 && st.rng.chance(0.6) {
+                st.topic = retriever.drift_topic(st.topic, &mut st.rng);
+            }
+            let context = retriever.retrieve_turn(st.topic, k, &st.history, &mut st.rng);
+            for &b in &context {
+                if !st.history.contains(&b) {
+                    st.history.push(b);
+                }
+            }
+            requests.push(Request {
+                id: RequestId(next_id),
+                session: SessionId(s as u32),
+                turn: t as u32,
+                context,
+                query: qid(s as u32, t as u32),
+            });
+            next_id += 1;
+        }
+    }
+    Workload { dataset, requests }
+}
+
+/// Agentic memory (Mem0 on LoCoMo, §7.2): per-user memory stores queried
+/// with high temporal locality — each request retrieves top-k memories of
+/// which most were retrieved before (memories accrete over turns).
+pub fn mem0(users: usize, turns_per_user: usize, k: usize, seed: u64) -> Workload {
+    let profile = DatasetProfile::get(Dataset::LoCoMo);
+    let mut master = Rng::new(seed);
+    let mut requests = Vec::new();
+    let mut next_id = 0u64;
+    let mems_per_user = profile.n_docs / users.max(1);
+    for u in 0..users {
+        let mut rng = master.fork(u as u64);
+        let base = u * mems_per_user;
+        // memories accumulate: at turn t the user has `avail` memories
+        for t in 0..turns_per_user {
+            let avail = ((t + 2) * mems_per_user / (turns_per_user + 1)).clamp(1, mems_per_user);
+            let kk = k.min(avail);
+            // retrieval is recency+relevance biased: newer memories first,
+            // overlapping heavily with the previous turn's retrieval
+            let mut ids = rng.sample_indices(avail, kk);
+            // bias toward recent: sort descending, then perturb
+            ids.sort_unstable_by(|a, b| b.cmp(a));
+            for i in 1..ids.len() {
+                if rng.chance(0.3) {
+                    ids.swap(i - 1, i);
+                }
+            }
+            let context = ids
+                .into_iter()
+                .map(|m| BlockId((base + m) as u32))
+                .collect();
+            requests.push(Request {
+                id: RequestId(next_id),
+                session: SessionId(u as u32),
+                turn: t as u32,
+                context,
+                query: qid(u as u32, t as u32),
+            });
+            next_id += 1;
+        }
+    }
+    Workload {
+        dataset: Dataset::LoCoMo,
+        requests,
+    }
+}
+
+/// Chain-of-Agents (§7.2): `agents` workers each process document segments
+/// + a shared instruction header; across `rounds`, recurring documents
+/// should be routed to the worker that saw them (agent-aware routing).
+/// Session id encodes the worker agent.
+pub fn chain_of_agents(
+    dataset: Dataset,
+    agents: usize,
+    rounds: usize,
+    k: usize,
+    seed: u64,
+) -> Workload {
+    let profile = DatasetProfile::get(dataset);
+    let retriever = Retriever::new(profile);
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::new();
+    let mut next_id = 0u64;
+    for round in 0..rounds {
+        // the manager retrieves a large set and shards it over workers
+        let topic = retriever.sample_topic(&mut rng);
+        let pool = retriever.retrieve(topic, k * agents.min(4), &mut rng);
+        for a in 0..agents {
+            let mut context: Vec<BlockId> = pool
+                .iter()
+                .skip(a % pool.len().max(1))
+                .step_by(agents.max(1))
+                .copied()
+                .take(k)
+                .collect();
+            if context.is_empty() {
+                context.push(pool[a % pool.len()]);
+            }
+            requests.push(Request {
+                id: RequestId(next_id),
+                session: SessionId(a as u32),
+                turn: round as u32,
+                context,
+                query: qid(a as u32, round as u32),
+            });
+            next_id += 1;
+        }
+    }
+    Workload { dataset, requests }
+}
+
+/// OpenClaw agent trace (Table 4): document-analysis tasks repeatedly read
+/// from a small document set over many turns (prefill-heavy); coding tasks
+/// have longer decode. Returns (workload, decode_tokens per request).
+pub fn openclaw(tasks: usize, turns_per_task: usize, seed: u64, coding: bool) -> (Workload, Vec<usize>) {
+    let profile = DatasetProfile::get(Dataset::ClawTasks);
+    let mut master = Rng::new(seed);
+    let mut requests = Vec::new();
+    let mut decode_tokens = Vec::new();
+    let mut next_id = 0u64;
+    for task in 0..tasks {
+        let mut rng = master.fork(task as u64);
+        // each task works over a subset of the 22 documents
+        let ws_size = rng.range(3, profile.n_docs.min(9));
+        let working_set: Vec<BlockId> = rng
+            .sample_indices(profile.n_docs, ws_size)
+            .into_iter()
+            .map(|d| BlockId(d as u32))
+            .collect();
+        let mut history: Vec<BlockId> = Vec::new();
+        for t in 0..turns_per_task {
+            // agent re-reads mostly the same files, occasionally opens new
+            let mut context: Vec<BlockId> = Vec::new();
+            for &b in &working_set {
+                if t == 0 || rng.chance(0.8) {
+                    context.push(b);
+                }
+            }
+            if context.is_empty() {
+                context.push(working_set[0]);
+            }
+            if rng.chance(0.2) {
+                let extra = BlockId(rng.below(profile.n_docs) as u32);
+                if !context.contains(&extra) {
+                    context.push(extra);
+                }
+            }
+            for &b in &context {
+                if !history.contains(&b) {
+                    history.push(b);
+                }
+            }
+            requests.push(Request {
+                id: RequestId(next_id),
+                session: SessionId(task as u32),
+                turn: t as u32,
+                context,
+                query: qid(task as u32, t as u32),
+            });
+            // doc analysis: ~short answers; coding: long generations
+            decode_tokens.push(if coding {
+                rng.range(400, 1600)
+            } else {
+                rng.range(32, 160)
+            });
+            next_id += 1;
+        }
+    }
+    (
+        Workload {
+            dataset: Dataset::ClawTasks,
+            requests,
+        },
+        decode_tokens,
+    )
+}
+
+/// A zero-overlap adversarial workload (Appendix F): every request
+/// retrieves disjoint blocks — the worst case for context reuse, isolating
+/// pure ContextPilot overhead.
+pub fn zero_overlap(n_requests: usize, k: usize, universe: usize, seed: u64) -> Workload {
+    assert!(n_requests * k <= universe, "universe too small for zero overlap");
+    let mut rng = Rng::new(seed);
+    let mut perm: Vec<usize> = (0..universe).collect();
+    rng.shuffle(&mut perm);
+    let requests = (0..n_requests)
+        .map(|i| {
+            let context = perm[i * k..(i + 1) * k]
+                .iter()
+                .map(|&d| BlockId(d as u32))
+                .collect();
+            Request {
+                id: RequestId(i as u64),
+                session: SessionId(i as u32),
+                turn: 0,
+                context,
+                query: qid(i as u32, 0),
+            }
+        })
+        .collect();
+    Workload {
+        dataset: Dataset::MultihopRag,
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn multi_session_shapes() {
+        let w = multi_session(Dataset::MultihopRag, 32, 15, 1);
+        assert_eq!(w.len(), 32);
+        for r in &w.requests {
+            assert_eq!(r.context.len(), 15);
+            assert_eq!(r.turn, 0);
+        }
+    }
+
+    #[test]
+    fn multi_session_has_cross_session_overlap() {
+        let w = multi_session(Dataset::MultihopRag, 64, 15, 2);
+        let mut counts: std::collections::HashMap<BlockId, usize> = Default::default();
+        for r in &w.requests {
+            for &b in &r.context {
+                *counts.entry(b).or_default() += 1;
+            }
+        }
+        let repeated = counts.values().filter(|&&c| c > 1).count();
+        assert!(repeated > 20, "too little overlap: {repeated} repeated blocks");
+    }
+
+    #[test]
+    fn multi_turn_overlaps_history() {
+        let w = multi_turn(Dataset::MtRag, 12, 10, 3);
+        assert_eq!(w.len(), 12);
+        let mut seen: HashSet<BlockId> = HashSet::new();
+        let mut overlap_turns = 0;
+        for r in &w.requests {
+            if r.context.iter().any(|b| seen.contains(b)) {
+                overlap_turns += 1;
+            }
+            seen.extend(r.context.iter().copied());
+        }
+        assert!(overlap_turns >= 6, "only {overlap_turns} turns overlap history");
+    }
+
+    #[test]
+    fn contexts_have_distinct_blocks() {
+        for w in [
+            multi_session(Dataset::Qasper, 20, 15, 4),
+            multi_turn(Dataset::MtRag, 10, 10, 5),
+            hybrid(Dataset::MtRag, 4, 5, 10, 6),
+            mem0(4, 8, 10, 7),
+        ] {
+            for r in &w.requests {
+                let set: HashSet<_> = r.context.iter().collect();
+                assert_eq!(set.len(), r.context.len(), "dup block in {:?}", r.id);
+                assert!(!r.context.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_interleaves_sessions() {
+        let w = hybrid(Dataset::MtRag, 4, 3, 10, 8);
+        assert_eq!(w.len(), 12);
+        // first 4 requests are turn 0 of sessions 0..4
+        for (i, r) in w.requests.iter().take(4).enumerate() {
+            assert_eq!(r.session, SessionId(i as u32));
+            assert_eq!(r.turn, 0);
+        }
+        assert_eq!(w.requests[4].turn, 1);
+    }
+
+    #[test]
+    fn mem0_requests_scoped_to_user() {
+        let w = mem0(4, 6, 10, 9);
+        let profile = DatasetProfile::get(Dataset::LoCoMo);
+        let per_user = profile.n_docs / 4;
+        for r in &w.requests {
+            let u = r.session.0 as usize;
+            for b in &r.context {
+                let d = b.0 as usize;
+                assert!(d >= u * per_user && d < (u + 1) * per_user);
+            }
+        }
+    }
+
+    #[test]
+    fn coa_shards_pool_over_agents() {
+        let w = chain_of_agents(Dataset::MultihopRag, 5, 3, 4, 10);
+        assert_eq!(w.len(), 15);
+        let sessions: HashSet<_> = w.requests.iter().map(|r| r.session).collect();
+        assert_eq!(sessions.len(), 5);
+    }
+
+    #[test]
+    fn openclaw_reuses_working_set() {
+        let (w, decode) = openclaw(5, 20, 11, false);
+        assert_eq!(w.len(), 100);
+        assert_eq!(decode.len(), 100);
+        // within a task, consecutive turns share most blocks
+        let task0: Vec<_> = w.requests.iter().filter(|r| r.session == SessionId(0)).collect();
+        let a: HashSet<_> = task0[1].context.iter().collect();
+        let b: HashSet<_> = task0[2].context.iter().collect();
+        assert!(!a.is_disjoint(&b));
+    }
+
+    #[test]
+    fn openclaw_coding_decodes_longer() {
+        let (_, d_doc) = openclaw(5, 10, 12, false);
+        let (_, d_code) = openclaw(5, 10, 12, true);
+        let m_doc: f64 = d_doc.iter().sum::<usize>() as f64 / d_doc.len() as f64;
+        let m_code: f64 = d_code.iter().sum::<usize>() as f64 / d_code.len() as f64;
+        assert!(m_code > 3.0 * m_doc);
+    }
+
+    #[test]
+    fn zero_overlap_is_disjoint() {
+        let w = zero_overlap(20, 5, 200, 13);
+        let mut seen = HashSet::new();
+        for r in &w.requests {
+            for b in &r.context {
+                assert!(seen.insert(*b), "block {b} repeated");
+            }
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = multi_session(Dataset::NarrativeQa, 16, 15, 42);
+        let b = multi_session(Dataset::NarrativeQa, 16, 15, 42);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.context, y.context);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload layer: dataset profiles calibrated to the paper's access
+//! statistics, a retrieval simulator with cross-session / cross-turn
+//! overlap, and generators for every evaluation scenario.
+
+pub mod access;
+pub mod generators;
+pub mod profiles;
+pub mod retrieval;
+
+pub use generators::{
+    chain_of_agents, hybrid, mem0, multi_session, multi_turn, openclaw, zero_overlap, Workload,
+};
+pub use profiles::{Dataset, DatasetProfile};
+pub use retrieval::Retriever;

@@ -1,0 +1,137 @@
+//! Dataset profiles: synthetic stand-ins for the paper's evaluation
+//! datasets, calibrated to the access statistics the paper reports
+//! (DESIGN.md §5 Substitutions).
+//!
+//! Fig. 11: the top 20% most-accessed documents cover 79.2% (MultihopRAG),
+//! 57.4% (NarrativeQA) and 49.6% (QASPER) of retrieval events. We solve the
+//! Zipf exponent so the popularity mass matches those numbers; document
+//! counts follow the real datasets' corpus sizes (scaled where noted).
+
+use crate::util::prng::Zipf;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    MultihopRag,
+    NarrativeQa,
+    Qasper,
+    MtRag,
+    LoCoMo,
+    ClawTasks,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::MultihopRag => "MultihopRAG",
+            Dataset::NarrativeQa => "NarrativeQA",
+            Dataset::Qasper => "QASPER",
+            Dataset::MtRag => "MT-RAG",
+            Dataset::LoCoMo => "LoCoMo",
+            Dataset::ClawTasks => "claw-tasks",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub dataset: Dataset,
+    pub n_docs: usize,
+    /// Zipf exponent over document popularity (solved from `top20_mass`).
+    pub zipf_s: f64,
+    /// Paper-reported fraction of accesses covered by the top 20% docs.
+    pub top20_mass: f64,
+    /// Default retrieval depth (top-k) in the paper's experiments.
+    pub k: usize,
+    /// Cross-turn retrieval overlap for multi-turn workloads (§3.1: 40%
+    /// for MT-RAG).
+    pub turn_overlap: f64,
+    /// Topic clusters: queries about the same topic retrieve from the same
+    /// cluster of documents with perturbed ranking (Fig. 2a).
+    pub cluster_size: usize,
+    /// Lines per synthetic document (drives tokens/block; paper chunks are
+    /// 1024 tokens — we scale 1 line ≈ 13 tokens).
+    pub doc_lines: usize,
+}
+
+/// Solve the Zipf exponent s so that `Zipf(n, s).top_mass(0.2) == target`.
+pub fn solve_zipf_exponent(n: usize, target: f64) -> f64 {
+    let (mut lo, mut hi) = (0.01f64, 4.0f64);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        let mass = Zipf::new(n, mid).top_mass(0.2);
+        if mass < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+impl DatasetProfile {
+    pub fn get(dataset: Dataset) -> DatasetProfile {
+        // Corpus sizes follow the real datasets (MultihopRAG: 609 news
+        // articles; NarrativeQA: 1,572 stories; QASPER: 1,585 papers),
+        // scaled to keep experiment runtimes tractable on CPU.
+        let (n_docs, top20, k, overlap, cluster, lines) = match dataset {
+            Dataset::MultihopRag => (609, 0.792, 15, 0.30, 24, 10),
+            Dataset::NarrativeQa => (1572, 0.574, 15, 0.30, 24, 14),
+            Dataset::Qasper => (1585, 0.496, 15, 0.30, 24, 12),
+            Dataset::MtRag => (800, 0.55, 10, 0.40, 20, 12),
+            Dataset::LoCoMo => (400, 0.60, 20, 0.50, 30, 4),
+            Dataset::ClawTasks => (22, 0.60, 8, 0.70, 22, 40),
+        };
+        DatasetProfile {
+            dataset,
+            n_docs,
+            zipf_s: solve_zipf_exponent(n_docs, top20),
+            top20_mass: top20,
+            k,
+            turn_overlap: overlap,
+            cluster_size: cluster,
+            doc_lines: lines,
+        }
+    }
+
+    pub fn zipf(&self) -> Zipf {
+        Zipf::new(self.n_docs, self.zipf_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_solver_hits_target() {
+        for (n, target) in [(609, 0.792), (1572, 0.574), (1585, 0.496)] {
+            let s = solve_zipf_exponent(n, target);
+            let mass = Zipf::new(n, s).top_mass(0.2);
+            assert!((mass - target).abs() < 0.005, "n={n}: {mass} vs {target}");
+        }
+    }
+
+    #[test]
+    fn profiles_load() {
+        for d in [
+            Dataset::MultihopRag,
+            Dataset::NarrativeQa,
+            Dataset::Qasper,
+            Dataset::MtRag,
+            Dataset::LoCoMo,
+            Dataset::ClawTasks,
+        ] {
+            let p = DatasetProfile::get(d);
+            assert!(p.n_docs > 0 && p.k > 0);
+            assert!(p.zipf_s > 0.0);
+            assert!(!d.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn multihop_is_most_skewed() {
+        let mh = DatasetProfile::get(Dataset::MultihopRag);
+        let qa = DatasetProfile::get(Dataset::Qasper);
+        assert!(mh.zipf_s > qa.zipf_s);
+    }
+}

@@ -1,0 +1,234 @@
+//! Retrieval simulator: maps queries to ranked context-block lists with the
+//! overlap structure real retrievers produce (Fig. 2a/2b).
+//!
+//! Model: each query targets a *topic* (a document drawn from the dataset's
+//! Zipf popularity). Candidates are the documents in a window around the
+//! topic; each is scored `popularity(d) * exp(-dist(d,topic)/tau) * noise`
+//! and the top-k become the context. Two queries on the same topic
+//! therefore retrieve nearly the same set in slightly different orders —
+//! exactly the cross-session overlap ContextPilot aligns (Fig. 2a). The
+//! aggregate document-access distribution tracks the profile's Zipf
+//! (smoothed by the window), reproducing the Fig. 11 CDFs.
+
+use crate::types::{BlockId, Context};
+use crate::util::prng::{Rng, Zipf};
+use crate::workload::profiles::DatasetProfile;
+
+pub struct Retriever {
+    pub profile: DatasetProfile,
+    zipf: Zipf,
+    /// popularity score per doc (descending by construction)
+    popularity: Vec<f64>,
+    /// ranking noise magnitude (perturbs per-query order)
+    pub noise: f64,
+}
+
+impl Retriever {
+    pub fn new(profile: DatasetProfile) -> Self {
+        let n = profile.n_docs;
+        let s = profile.zipf_s;
+        let popularity: Vec<f64> = (0..n).map(|r| 1.0 / ((r + 1) as f64).powf(s)).collect();
+        Self {
+            zipf: profile.zipf(),
+            profile,
+            popularity,
+            noise: 0.25,
+        }
+    }
+
+    /// Draw a topic doc for a fresh query.
+    pub fn sample_topic(&self, rng: &mut Rng) -> usize {
+        self.zipf.sample(rng)
+    }
+
+    /// A related topic (for multi-turn drift): same cluster, different doc.
+    pub fn drift_topic(&self, topic: usize, rng: &mut Rng) -> usize {
+        let cs = self.profile.cluster_size.max(1);
+        let cluster = topic / cs;
+        let base = cluster * cs;
+        let span = cs.min(self.profile.n_docs - base);
+        base + rng.below(span)
+    }
+
+    fn window(&self, k: usize) -> usize {
+        self.profile.cluster_size.max(2 * k).min(self.profile.n_docs)
+    }
+
+    /// Retrieve top-k ranked docs for `topic`.
+    pub fn retrieve(&self, topic: usize, k: usize, rng: &mut Rng) -> Context {
+        let n = self.profile.n_docs;
+        let k = k.min(n);
+        let w = self.window(k);
+        let tau = (w as f64 / 4.0).max(1.0);
+        // circular window centred on the topic
+        let start = (topic + n - w / 2) % n;
+        let mut scored: Vec<(f64, usize)> = (0..w)
+            .map(|i| {
+                let d = (start + i) % n;
+                let dist = if i >= w / 2 { i - w / 2 } else { w / 2 - i } as f64;
+                let score = self.popularity[d]
+                    * (-dist / tau).exp()
+                    * (1.0 + self.noise * rng.normal()).max(0.01);
+                (score, d)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored
+            .into_iter()
+            .take(k)
+            .map(|(_, d)| BlockId(d as u32))
+            .collect()
+    }
+
+    /// Multi-turn retrieval (Fig. 2b): composes the turn's context from the
+    /// conversation's history at the dataset's `turn_overlap` rate, with
+    /// the remainder retrieved fresh around `topic` (excluding history).
+    /// §3.1: on MT-RAG ~40% of retrieved docs in any turn overlap earlier
+    /// turns of the same session.
+    pub fn retrieve_turn(
+        &self,
+        topic: usize,
+        k: usize,
+        history: &[BlockId],
+        rng: &mut Rng,
+    ) -> Context {
+        if history.is_empty() {
+            return self.retrieve(topic, k, rng);
+        }
+        let hist_set: std::collections::HashSet<BlockId> = history.iter().copied().collect();
+        let fresh_pool: Vec<BlockId> = self
+            .retrieve(topic, (2 * k).min(self.profile.n_docs), rng)
+            .into_iter()
+            .filter(|b| !hist_set.contains(b))
+            .collect();
+        let mut fresh_iter = fresh_pool.into_iter();
+        let mut used: std::collections::HashSet<BlockId> = Default::default();
+        let mut out: Context = Vec::with_capacity(k);
+        for _slot in 0..k {
+            let from_hist = rng.chance(self.profile.turn_overlap);
+            let pick = if from_hist {
+                // re-retrieve a block from history
+                let mut p = *rng.choice(history);
+                let mut tries = 0;
+                while used.contains(&p) && tries < 8 {
+                    p = *rng.choice(history);
+                    tries += 1;
+                }
+                if used.contains(&p) {
+                    fresh_iter.next()
+                } else {
+                    Some(p)
+                }
+            } else {
+                fresh_iter.next()
+            };
+            if let Some(b) = pick {
+                if used.insert(b) {
+                    out.push(b);
+                }
+            }
+        }
+        // top up with arbitrary unseen docs if we ran dry
+        let mut d = topic;
+        while out.len() < k && used.len() < self.profile.n_docs {
+            d = (d + 1 + rng.below(7)) % self.profile.n_docs;
+            let b = BlockId(d as u32);
+            if used.insert(b) {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::profiles::{Dataset, DatasetProfile};
+
+    fn retriever() -> Retriever {
+        Retriever::new(DatasetProfile::get(Dataset::MultihopRag))
+    }
+
+    #[test]
+    fn retrieve_returns_k_distinct() {
+        let r = retriever();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let t = r.sample_topic(&mut rng);
+            let ctx = r.retrieve(t, 15, &mut rng);
+            assert_eq!(ctx.len(), 15);
+            let set: std::collections::HashSet<_> = ctx.iter().collect();
+            assert_eq!(set.len(), 15);
+        }
+    }
+
+    #[test]
+    fn same_topic_queries_overlap_heavily() {
+        let r = retriever();
+        let mut rng = Rng::new(2);
+        let t = 3; // popular topic
+        let a: std::collections::HashSet<_> = r.retrieve(t, 15, &mut rng).into_iter().collect();
+        let b: std::collections::HashSet<_> = r.retrieve(t, 15, &mut rng).into_iter().collect();
+        let shared = a.intersection(&b).count();
+        assert!(shared >= 10, "same-topic overlap too low: {shared}");
+    }
+
+    #[test]
+    fn distant_topics_overlap_less() {
+        let r = retriever();
+        let mut rng = Rng::new(3);
+        let a: std::collections::HashSet<_> =
+            r.retrieve(100, 15, &mut rng).into_iter().collect();
+        let far: std::collections::HashSet<_> =
+            r.retrieve(400, 15, &mut rng).into_iter().collect();
+        let near: std::collections::HashSet<_> =
+            r.retrieve(100, 15, &mut rng).into_iter().collect();
+        assert!(a.intersection(&near).count() > a.intersection(&far).count());
+    }
+
+    #[test]
+    fn turn_retrieval_overlaps_history_at_profile_rate() {
+        let r = Retriever::new(DatasetProfile::get(Dataset::MtRag));
+        let mut rng = Rng::new(4);
+        let mut total = 0usize;
+        let mut overlapped = 0usize;
+        for _ in 0..300 {
+            let t = r.sample_topic(&mut rng);
+            let first = r.retrieve(t, 10, &mut rng);
+            // jump far away so fresh retrieval is disjoint from history
+            let t2 = (t + 300) % r.profile.n_docs;
+            let second = r.retrieve_turn(t2, 10, &first, &mut rng);
+            let hist: std::collections::HashSet<_> = first.iter().collect();
+            total += second.len();
+            overlapped += second.iter().filter(|b| hist.contains(b)).count();
+        }
+        let rate = overlapped as f64 / total as f64;
+        // MT-RAG target 0.40
+        assert!((0.30..0.50).contains(&rate), "overlap rate {rate}");
+    }
+
+    #[test]
+    fn drift_stays_in_cluster() {
+        let r = retriever();
+        let mut rng = Rng::new(5);
+        let cs = r.profile.cluster_size;
+        for _ in 0..100 {
+            let t = r.sample_topic(&mut rng);
+            let d = r.drift_topic(t, &mut rng);
+            assert_eq!(t / cs, d / cs);
+        }
+    }
+
+    #[test]
+    fn access_distribution_tracks_zipf_ordering() {
+        // MultihopRAG (most skewed) must show higher top-20% coverage than
+        // QASPER (least skewed) at the access level.
+        use crate::workload::access::AccessStats;
+        use crate::workload::generators::multi_session;
+        let mh = AccessStats::from_workload(&multi_session(Dataset::MultihopRag, 400, 15, 1));
+        let qa = AccessStats::from_workload(&multi_session(Dataset::Qasper, 400, 15, 1));
+        let (c_mh, c_qa) = (mh.top_coverage(0.2), qa.top_coverage(0.2));
+        assert!(c_mh > c_qa, "MultihopRAG {c_mh} <= QASPER {c_qa}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration: radix-cache invariants under randomized operation
+//! sequences (failure-injection style).
+
+use contextpilot::cache::RadixCache;
+use contextpilot::types::RequestId;
+use contextpilot::util::prng::Rng;
+use contextpilot::util::prop::{check, Config};
+
+#[test]
+fn random_op_sequences_preserve_invariants() {
+    check(
+        "radix cache fuzz",
+        Config {
+            cases: 64,
+            base_seed: 0x0DD5,
+            max_size: 200,
+        },
+        |rng: &mut Rng, size| {
+            let cap = rng.range(8, 512);
+            let mut cache: RadixCache<u32> = RadixCache::new(cap);
+            let mut locked_paths = Vec::new();
+            for op in 0..size {
+                match rng.below(6) {
+                    0 | 1 => {
+                        let len = rng.range(1, 24);
+                        let key: Vec<u32> = (0..len).map(|_| rng.below(16) as u32).collect();
+                        cache.insert(&key, RequestId(op as u64));
+                    }
+                    2 => {
+                        let len = rng.range(1, 24);
+                        let key: Vec<u32> = (0..len).map(|_| rng.below(16) as u32).collect();
+                        let m = cache.match_prefix(&key);
+                        if m.len > 0 && rng.chance(0.3) && locked_paths.len() < 4 {
+                            cache.lock_path(&m.path);
+                            locked_paths.push(m.path);
+                        }
+                    }
+                    3 => {
+                        cache.evict_tokens(rng.range(1, 64));
+                    }
+                    4 => {
+                        if let Some(p) = locked_paths.pop() {
+                            cache.unlock_path(&p);
+                        }
+                    }
+                    _ => {
+                        let len = rng.range(1, 16);
+                        let key: Vec<u32> = (0..len).map(|_| rng.below(16) as u32).collect();
+                        cache.set_payload(&key, RequestId(9_000 + op as u64), op as u32);
+                    }
+                }
+                if let Err(e) = cache.check_invariants_ignoring_capacity() {
+                    return Err(format!("after op {op}: {e}"));
+                }
+            }
+            for p in locked_paths.drain(..) {
+                cache.unlock_path(&p);
+            }
+            cache.evict_tokens(usize::MAX / 2);
+            cache
+                .check_invariants_ignoring_capacity()
+                .map_err(|e| format!("final: {e}"))
+        },
+    );
+}
+
+#[test]
+fn match_result_is_true_prefix() {
+    check(
+        "match is prefix",
+        Config {
+            cases: 128,
+            base_seed: 0xF1E,
+            max_size: 64,
+        },
+        |rng: &mut Rng, size| {
+            let mut cache: RadixCache<()> = RadixCache::new(1 << 16);
+            let mut inserted: Vec<Vec<u32>> = Vec::new();
+            for i in 0..size.max(2) {
+                let len = rng.range(1, 32);
+                let key: Vec<u32> = (0..len).map(|_| rng.below(8) as u32).collect();
+                cache.insert(&key, RequestId(i as u64));
+                inserted.push(key);
+            }
+            // probe with mutated keys
+            for _ in 0..8 {
+                let mut probe = rng.choice(&inserted).clone();
+                if !probe.is_empty() && rng.chance(0.7) {
+                    let idx = rng.below(probe.len());
+                    probe[idx] = rng.below(8) as u32;
+                }
+                let m = cache.match_prefix(&probe);
+                if m.len > probe.len() {
+                    return Err("matched beyond key".to_string());
+                }
+                // the matched prefix must literally exist among inserted keys
+                let pre = &probe[..m.len];
+                if m.len > 0
+                    && !inserted
+                        .iter()
+                        .any(|k| k.len() >= m.len && &k[..m.len] == pre)
+                {
+                    return Err(format!("matched prefix {pre:?} never inserted"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

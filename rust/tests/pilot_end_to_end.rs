@@ -1,0 +1,89 @@
+//! Integration: the full coordinator pipeline (workload -> pilot ->
+//! engine -> metrics) across every workload generator and system.
+
+use contextpilot::engine::ModelSku;
+use contextpilot::experiments::{corpus_for, run_system, RunConfig, SystemKind};
+use contextpilot::pilot::{ContextPilot, PilotConfig};
+use contextpilot::workload::*;
+
+#[test]
+fn every_workload_serves_through_every_system() {
+    let cases: Vec<(Dataset, Workload, bool)> = vec![
+        (Dataset::MultihopRag, multi_session(Dataset::MultihopRag, 40, 10, 1), true),
+        (Dataset::MtRag, multi_turn(Dataset::MtRag, 10, 8, 2), false),
+        (Dataset::MtRag, hybrid(Dataset::MtRag, 4, 4, 8, 3), false),
+        (Dataset::LoCoMo, mem0(3, 6, 10, 4), false),
+        (
+            Dataset::MultihopRag,
+            chain_of_agents(Dataset::MultihopRag, 5, 3, 4, 5),
+            false,
+        ),
+    ];
+    for (dataset, w, offline) in cases {
+        for system in SystemKind::all_default() {
+            let corpus = corpus_for(dataset);
+            let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_4B, dataset);
+            cfg.offline = offline;
+            let m = run_system(&system, &w, &corpus, &cfg);
+            assert_eq!(m.len(), w.len(), "{} on {:?}", system.name(), dataset);
+            assert!(m.mean_quality() > 0.3, "{} quality collapsed", system.name());
+            assert!(m.prefill_throughput() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn pilot_index_stays_consistent_under_churn() {
+    // tight cache -> constant eviction -> on_evict pruning must never
+    // corrupt the index
+    let dataset = Dataset::MultihopRag;
+    let corpus = corpus_for(dataset);
+    let w = multi_session(dataset, 120, 10, 9);
+    let mut pilot = ContextPilot::new(PilotConfig::default());
+    pilot.build_offline(&w.requests);
+    let mut engine = contextpilot::engine::SimEngine::new(
+        ModelSku::Qwen3_4B.profile(),
+        contextpilot::engine::ReusePolicy::RadixPrefix,
+        6_000, // very tight KV budget
+    );
+    let quality = contextpilot::quality::QualityModel::new(
+        contextpilot::quality::ModelEra::Modern,
+        true,
+    );
+    let outputs = pilot.process_batch(&w.requests, &corpus);
+    let mut total_evicted = 0usize;
+    for out in outputs {
+        let (_, evicted) = engine.serve(&out.request, &out.prompt, &corpus, &quality, 8);
+        total_evicted += evicted.len();
+        pilot.on_evict(&evicted);
+        pilot.index.check_invariants().unwrap();
+    }
+    assert!(total_evicted > 0, "tight budget must churn");
+}
+
+#[test]
+fn offline_and_online_modes_agree_on_aligned_permutations() {
+    let dataset = Dataset::Qasper;
+    let corpus = corpus_for(dataset);
+    let w = multi_session(dataset, 30, 8, 11);
+    // offline
+    let mut off = ContextPilot::new(PilotConfig::default());
+    off.build_offline(&w.requests);
+    let off_out = off.process_batch(&w.requests, &corpus);
+    // online
+    let mut on = ContextPilot::new(PilotConfig::default());
+    let on_out = on.process_batch(&w.requests, &corpus);
+    // outputs are scheduled (reordered): match by request id
+    for a in &off_out {
+        let b = on_out
+            .iter()
+            .find(|o| o.request.id == a.request.id)
+            .expect("request present in both modes");
+        let mut pa = a.aligned.clone();
+        let mut pb = b.aligned.clone();
+        pa.sort_unstable();
+        pb.sort_unstable();
+        // both modes are permutations of the same retrieval
+        assert_eq!(pa, pb);
+    }
+}

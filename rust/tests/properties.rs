@@ -1,0 +1,219 @@
+//! Cross-module property tests on the DESIGN.md §6 invariants:
+//! alignment/scheduling permutations, index round-trips, dedup safety.
+
+use contextpilot::align::align_to_prefix;
+use contextpilot::corpus::{Corpus, CorpusConfig};
+use contextpilot::dedup::{dedup_context, DedupConfig};
+use contextpilot::index::build::build_clustered;
+use contextpilot::index::tree::ContextIndex;
+use contextpilot::pilot::{ContextPilot, PilotConfig};
+use contextpilot::schedule::schedule_by_paths;
+use contextpilot::tokenizer::Tokenizer;
+use contextpilot::types::*;
+use contextpilot::util::prng::Rng;
+use contextpilot::util::prop::{check, gen_distinct_ids, Config};
+
+fn blocks(ids: Vec<usize>) -> Context {
+    ids.into_iter().map(|i| BlockId(i as u32)).collect()
+}
+
+#[test]
+fn clustered_build_properties() {
+    check(
+        "clustered build: paths round-trip, alignment is a permutation",
+        Config {
+            cases: 48,
+            base_seed: 0xB11D,
+            max_size: 60,
+        },
+        |rng: &mut Rng, size| {
+            let n = size.max(2).min(60);
+            let inputs: Vec<(RequestId, Context)> = (0..n)
+                .map(|i| {
+                    let k = rng.range(1, 10);
+                    (
+                        RequestId(i as u64),
+                        blocks(rng.sample_indices(40, k.min(40))),
+                    )
+                })
+                .collect();
+            let r = build_clustered(&inputs, 0.001);
+            r.index.check_invariants()?;
+            for ((_, orig), (leaf, aligned, path)) in inputs.iter().zip(&r.placed) {
+                let mut a = orig.clone();
+                let mut b = aligned.clone();
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err("aligned not a permutation".to_string());
+                }
+                if r.index.traverse(path) != Some(*leaf) {
+                    return Err("path round-trip failed".to_string());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn incremental_search_insert_evict_properties() {
+    check(
+        "incremental index: search/insert/evict keep invariants",
+        Config {
+            cases: 48,
+            base_seed: 0x1D8,
+            max_size: 80,
+        },
+        |rng: &mut Rng, size| {
+            let mut ix = ContextIndex::new(0.001);
+            let mut live: Vec<RequestId> = Vec::new();
+            for i in 0..size {
+                if !live.is_empty() && rng.chance(0.25) {
+                    let v = live.swap_remove(rng.below(live.len()));
+                    ix.on_evict(&[v]);
+                } else {
+                    let c = blocks(gen_distinct_ids(rng, 8, 30));
+                    if c.is_empty() {
+                        continue;
+                    }
+                    let req = RequestId(i as u64);
+                    let found = ix.search(&c);
+                    ix.insert_at(&found, c, req);
+                    live.push(req);
+                }
+                ix.check_invariants()?;
+            }
+            // evict everything: only the root survives
+            ix.on_evict(&live);
+            if ix.len_alive() != 1 {
+                return Err(format!("{} nodes after full eviction", ix.len_alive()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schedule_properties_on_pilot_paths() {
+    check(
+        "scheduling real pilot paths is a contiguous-group permutation",
+        Config {
+            cases: 32,
+            base_seed: 0x5C4E,
+            max_size: 40,
+        },
+        |rng: &mut Rng, size| {
+            let corpus = Corpus::generate(
+                &CorpusConfig {
+                    n_docs: 50,
+                    ..Default::default()
+                },
+                &Tokenizer::default(),
+            );
+            let mut pilot = ContextPilot::new(PilotConfig::default());
+            let reqs: Vec<Request> = (0..size.max(1))
+                .map(|i| Request {
+                    id: RequestId(i as u64),
+                    session: SessionId(i as u32),
+                    turn: 0,
+                    context: {
+                        let k = rng.range(1, 8);
+                        blocks(rng.sample_indices(50, k))
+                    },
+                    query: QueryId(i as u64),
+                })
+                .collect();
+            let outs = pilot.process_batch(&reqs, &corpus);
+            let paths: Vec<Vec<usize>> = outs.iter().map(|o| o.path.clone()).collect();
+            let order = schedule_by_paths(&paths);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..paths.len()).collect::<Vec<_>>() {
+                return Err("not a permutation".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dedup_properties() {
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 60,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    );
+    check(
+        "dedup: no invention, refs only to seen blocks, order preserved",
+        Config {
+            cases: 64,
+            base_seed: 0xDED,
+            max_size: 12,
+        },
+        |rng: &mut Rng, size| {
+            let mut ix = ContextIndex::new(0.001);
+            let session = SessionId(rng.below(1000) as u32);
+            let cfg = DedupConfig::default();
+            let mut seen: std::collections::HashSet<BlockId> = Default::default();
+            for turn in 0..3 {
+                let c = blocks(gen_distinct_ids(rng, size.max(1), 60));
+                let (segs, _) = dedup_context(&mut ix, session, &c, &corpus, &cfg);
+                let mentioned: Vec<BlockId> = segs
+                    .iter()
+                    .filter_map(|s| match s {
+                        Segment::Block(b)
+                        | Segment::LocationRef(b)
+                        | Segment::PartialBlock { block: b, .. } => Some(*b),
+                        _ => None,
+                    })
+                    .collect();
+                if mentioned != c {
+                    return Err(format!("turn {turn}: block order/coverage changed"));
+                }
+                for s in &segs {
+                    if let Segment::LocationRef(b) = s {
+                        if !seen.contains(b) {
+                            return Err(format!("turn {turn}: dangling ref {b}"));
+                        }
+                    }
+                }
+                seen.extend(c.iter().copied());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn align_to_prefix_properties() {
+    check(
+        "align_to_prefix: permutation + shared blocks lead in prefix order",
+        Config {
+            cases: 256,
+            base_seed: 0xA11,
+            max_size: 24,
+        },
+        |rng: &mut Rng, size| {
+            let c = blocks(gen_distinct_ids(rng, size.max(1), 48));
+            let p = blocks(gen_distinct_ids(rng, size.max(1), 48));
+            let out = align_to_prefix(&p, &c);
+            let mut a = c.clone();
+            let mut b = out.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err("not a permutation".into());
+            }
+            // shared blocks appear first, in prefix order
+            let shared: Vec<BlockId> =
+                p.iter().copied().filter(|x| c.contains(x)).collect();
+            if out[..shared.len()] != shared[..] {
+                return Err("shared prefix not leading".into());
+            }
+            Ok(())
+        },
+    );
+}

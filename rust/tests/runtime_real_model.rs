@@ -1,0 +1,117 @@
+//! Integration: the real PJRT runtime against built artifacts.
+//! Requires `make artifacts` (skipped otherwise).
+
+use contextpilot::corpus::{Corpus, CorpusConfig};
+use contextpilot::runtime::{RealEngine, TinyLmRuntime};
+use contextpilot::tokenizer::Tokenizer;
+use contextpilot::types::*;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("model_meta.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn load_and_prefill() {
+    let dir = require_artifacts!();
+    let rt = TinyLmRuntime::load(&dir).expect("load artifacts");
+    assert_eq!(rt.platform(), "cpu");
+    let tokens: Vec<u32> = (16..48u32).collect();
+    let (logits, kv) = rt.prefill(&tokens, rt.empty_kv().unwrap()).unwrap();
+    assert_eq!(logits.len(), rt.meta.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    assert_eq!(kv.len, tokens.len());
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic() {
+    let dir = require_artifacts!();
+    let rt = TinyLmRuntime::load(&dir).expect("load artifacts");
+    let tokens: Vec<u32> = (0..100).map(|i| 16 + (i * 37) % 1900).collect();
+    // monolithic
+    let (lg_full, kv_full) = rt.prefill(&tokens, rt.empty_kv().unwrap()).unwrap();
+    // split: 64 then 36
+    let (_, kv1) = rt.prefill(&tokens[..64], rt.empty_kv().unwrap()).unwrap();
+    let (lg2, kv2) = rt.prefill(&tokens[64..], kv1).unwrap();
+    assert_eq!(kv2.len, kv_full.len);
+    let max_diff = lg_full
+        .iter()
+        .zip(&lg2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "chunked != monolithic: {max_diff}");
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let dir = require_artifacts!();
+    let rt = TinyLmRuntime::load(&dir).expect("load artifacts");
+    let prompt: Vec<u32> = (16..32u32).collect();
+    let run = || {
+        let (lg, kv) = rt.prefill(&prompt, rt.empty_kv().unwrap()).unwrap();
+        rt.decode(lg, kv, 8).unwrap().0
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    assert_eq!(a.len(), 8);
+    assert!(a.iter().all(|&t| (t as usize) < rt.meta.vocab));
+}
+
+#[test]
+fn real_engine_kv_reuse_speeds_up_and_matches() {
+    let dir = require_artifacts!();
+    let rt = TinyLmRuntime::load(&dir).expect("load artifacts");
+    let mut engine = RealEngine::new(rt, 1 << 20);
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 12,
+            lines_per_doc: 3,
+            words_per_line: 6,
+            ..Default::default()
+        },
+        &Tokenizer::new(2048),
+    );
+    let mk = |id: u64, ids: &[u32]| Request {
+        id: RequestId(id),
+        session: SessionId(id as u32),
+        turn: 0,
+        context: ids.iter().map(|&i| BlockId(i)).collect(),
+        query: QueryId(id),
+    };
+    let r1 = mk(1, &[1, 2, 3]);
+    let r2 = mk(2, &[1, 2, 4]); // shares the {1,2} prefix
+    let (s1, _, ans1) = engine
+        .serve(&r1, &Prompt::baseline(&r1), &corpus, 4)
+        .unwrap();
+    let (s2, _, _) = engine
+        .serve(&r2, &Prompt::baseline(&r2), &corpus, 4)
+        .unwrap();
+    assert_eq!(s1.cached_tokens, 0);
+    assert!(
+        s2.cached_tokens > 0,
+        "second request should reuse the real KV prefix"
+    );
+    assert_eq!(ans1.len(), 4);
+
+    // identical prompt re-served: full cache hit, same answer
+    let r3 = mk(3, &[1, 2, 3]);
+    let (s3, _, ans3) = engine
+        .serve(&r3, &Prompt::baseline(&mk(1, &[1, 2, 3])), &corpus, 4)
+        .unwrap();
+    assert_eq!(s3.cached_tokens, s3.prompt_tokens);
+    assert_eq!(ans1, ans3, "KV reuse changed the model output");
+    assert!(s3.ttft < s1.ttft, "full hit not faster: {} vs {}", s3.ttft, s1.ttft);
+}
