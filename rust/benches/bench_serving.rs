@@ -1,0 +1,111 @@
+//! Serving-layer throughput bench: one seeded hybrid workload through the
+//! sharded ServingEngine at 1/2/4/8 workers. Shard state is session-local,
+//! so every row serves identical hit/miss results (asserted) — the only
+//! thing the worker count changes is wall-clock. Quick sizes by default;
+//! paper-scale with CTXPILOT_FULL=1.
+
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::{corpus_for, full_mode};
+use contextpilot::pilot::PilotConfig;
+use contextpilot::serve::{ServeConfig, ServingEngine};
+use contextpilot::util::table::{reset_result_file, Table};
+use contextpilot::workload::{hybrid, Dataset};
+
+fn main() {
+    let quick = !full_mode();
+    reset_result_file("serving");
+    let sessions = if quick { 192 } else { 768 };
+    let turns = if quick { 3 } else { 6 };
+    let n_shards = 8;
+    let w = hybrid(Dataset::MtRag, sessions, turns, 10, 0x5E27E);
+    let corpus = corpus_for(Dataset::MtRag);
+    let t_start = std::time::Instant::now();
+
+    let mut t = Table::new(
+        &format!(
+            "Serving throughput — {} requests ({} sessions x {} turns, MT-RAG) over {} shards",
+            w.len(),
+            sessions,
+            turns,
+            n_shards
+        ),
+        &["Workers", "Wall (s)", "Req/s", "Speedup vs 1w", "Hit ratio", "p50 TTFT", "p99 TTFT"],
+    );
+    let mut rps_1w = 0.0f64;
+    let mut hits_1w: Option<u64> = None;
+    let mut shard_table: Option<Table> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
+        cfg.n_shards = n_shards;
+        cfg.n_workers = workers;
+        cfg.capacity_tokens = 60_000;
+        cfg.decode_tokens = 16;
+        cfg.pilot = Some(PilotConfig::default());
+        let engine = ServingEngine::new(cfg);
+        let t0 = std::time::Instant::now();
+        let served = engine.serve_batch(&w.requests, &corpus);
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = served.len() as f64 / wall.max(1e-9);
+        if workers == 1 {
+            rps_1w = rps;
+        }
+        let (mut m, per) = engine.metrics();
+        // determinism pin: worker count must not change cache behaviour
+        let cached_total = m.total_cached_tokens;
+        match hits_1w {
+            None => hits_1w = Some(cached_total),
+            Some(h) => assert_eq!(
+                h, cached_total,
+                "worker count changed cache hits: {h} vs {cached_total}"
+            ),
+        }
+        t.row(vec![
+            format!("{workers}"),
+            format!("{wall:.3}"),
+            format!("{rps:.0}"),
+            format!("{:.2}x", rps / rps_1w.max(1e-9)),
+            format!("{:.1}%", m.hit_ratio() * 100.0),
+            format!("{:.4}s", m.ttft.p50()),
+            format!("{:.4}s", m.ttft.p99()),
+        ]);
+        if workers == 4 {
+            let mut st = Table::new(
+                "Per-shard stats (4 workers)",
+                &[
+                    "Shard",
+                    "Served",
+                    "Hit ratio",
+                    "p50 TTFT",
+                    "p99 TTFT",
+                    "Max queue",
+                    "Index nodes",
+                    "Sessions",
+                    "Resident tok",
+                ],
+            );
+            for s in per {
+                st.row(vec![
+                    format!("{}", s.shard),
+                    format!("{}", s.served),
+                    format!("{:.1}%", s.hit_ratio * 100.0),
+                    format!("{:.4}s", s.p50_ttft),
+                    format!("{:.4}s", s.p99_ttft),
+                    format!("{}", s.max_queue_depth),
+                    format!("{}", s.index_nodes),
+                    format!("{}", s.sessions),
+                    format!("{}", s.resident_tokens),
+                ]);
+            }
+            shard_table = Some(st);
+        }
+    }
+    t.emit("serving");
+    if let Some(st) = shard_table {
+        st.emit("serving");
+    }
+    eprintln!(
+        "bench_serving done in {:.2}s (quick={})",
+        t_start.elapsed().as_secs_f64(),
+        quick
+    );
+}

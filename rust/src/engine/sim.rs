@@ -70,11 +70,32 @@ impl SimEngine {
         }
     }
 
+    /// Number of conversation sessions tracked by this engine — serving
+    /// layer telemetry ([`crate::metrics::ShardStats`]).
+    pub fn session_count(&self) -> usize {
+        self.history.len()
+    }
+
     /// Peek how many leading tokens of this prompt would hit the cache
     /// (LPM scheduling uses this without disturbing LRU state).
     pub fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
         let tokens = self.assemble(req.session, prompt, corpus);
         self.cache.peek_prefix_len(&tokens)
+    }
+
+    /// SGLang-style longest-prefix-match queue ordering: indices of
+    /// `batch` sorted by currently-cached baseline-prompt prefix length,
+    /// descending (stable sort, so arrival order breaks ties). Shared by
+    /// the sequential runner and the sharded serving layer so their
+    /// baseline scheduling stays identical.
+    pub fn lpm_order(&mut self, batch: &[Request], corpus: &Corpus) -> Vec<usize> {
+        let peeks: Vec<usize> = batch
+            .iter()
+            .map(|r| self.peek_cached(r, &Prompt::baseline(r), corpus))
+            .collect();
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        order.sort_by(|&a, &b| peeks[b].cmp(&peeks[a]));
+        order
     }
 
     fn assemble(&mut self, session: SessionId, prompt: &Prompt, corpus: &Corpus) -> Vec<u32> {

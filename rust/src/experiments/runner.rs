@@ -40,7 +40,9 @@ impl SystemKind {
         ]
     }
 
-    fn policy(&self) -> ReusePolicy {
+    /// The engine reuse mechanism this system runs on (also consumed by
+    /// the sharded serving path in `main.rs` / [`crate::serve`]).
+    pub fn reuse_policy(&self) -> ReusePolicy {
         match self {
             // LMCache: document-granular exact matching + CPU-offload cost
             SystemKind::LMCache => ReusePolicy::DocPrefix {
@@ -86,6 +88,25 @@ impl RunConfig {
     }
 }
 
+/// Split a request sequence into its arrival waves — maximal consecutive
+/// runs of the same turn number (the structure the generators emit).
+/// Returns `(start, end)` index ranges. Shared by the sequential runner
+/// and the sharded CLI path so both batch identically.
+pub fn turn_waves(requests: &[Request]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < requests.len() {
+        let turn = requests[i].turn;
+        let mut j = i;
+        while j < requests.len() && requests[j].turn == turn {
+            j += 1;
+        }
+        out.push((i, j));
+        i = j;
+    }
+    out
+}
+
 /// Corpus matching a dataset profile.
 pub fn corpus_for(dataset: Dataset) -> Corpus {
     let p = DatasetProfile::get(dataset);
@@ -107,7 +128,7 @@ pub fn run_system(
     cfg: &RunConfig,
 ) -> RunMetrics {
     let quality = QualityModel::new(cfg.era, cfg.multi_hop);
-    let mut engine = SimEngine::new(cfg.sku.profile(), system.policy(), cfg.capacity_tokens);
+    let mut engine = SimEngine::new(cfg.sku.profile(), system.reuse_policy(), cfg.capacity_tokens);
     let mut metrics = RunMetrics::new();
 
     let mut pilot = match system {
@@ -128,15 +149,8 @@ pub fn run_system(
             .unwrap_or(cfg.decode_tokens)
     };
 
-    // batches = consecutive runs of the same turn number (the arrival wave
-    // structure the generators emit)
-    let mut i = 0usize;
-    while i < workload.requests.len() {
-        let turn = workload.requests[i].turn;
-        let mut j = i;
-        while j < workload.requests.len() && workload.requests[j].turn == turn {
-            j += 1;
-        }
+    // batches = arrival waves (consecutive same-turn runs)
+    for (i, j) in turn_waves(&workload.requests) {
         let batch = &workload.requests[i..j];
         let batch_idx: Vec<usize> = (i..j).collect();
 
@@ -157,26 +171,18 @@ pub fn run_system(
                 // baselines: LPM scheduling for RadixCache, arrival order
                 // for LMCache / CacheBlend
                 let order: Vec<usize> = match system {
-                    SystemKind::RadixCache => {
-                        let mut idx: Vec<usize> = (0..batch.len()).collect();
-                        let peeks: Vec<usize> = batch
-                            .iter()
-                            .map(|r| engine.peek_cached(r, &Prompt::baseline(r), corpus))
-                            .collect();
-                        idx.sort_by(|&a, &b| peeks[b].cmp(&peeks[a]));
-                        idx
-                    }
+                    SystemKind::RadixCache => engine.lpm_order(batch, corpus),
                     _ => (0..batch.len()).collect(),
                 };
                 for k in order {
                     let r: &Request = &batch[k];
+                    let decode = decode_of(batch_idx[k]);
                     let (served, _evicted) =
-                        engine.serve(r, &Prompt::baseline(r), corpus, &quality, decode_of(batch_idx[k]));
+                        engine.serve(r, &Prompt::baseline(r), corpus, &quality, decode);
                     metrics.record(&served);
                 }
             }
         }
-        i = j;
     }
     metrics
 }

@@ -7,13 +7,19 @@
 //!   context index ([`index`]), context alignment ([`align`]), request
 //!   scheduling ([`schedule`]), de-duplication ([`dedup`]) and annotations,
 //!   fronting an in-repo inference engine ([`engine`]) with a radix prefix
-//!   cache ([`cache`]).
+//!   cache ([`cache`]). The concurrent sharded serving layer ([`serve`])
+//!   runs that whole pipeline for many sessions in parallel: sessions are
+//!   pinned to lock-striped shards (each owning a context index, a prefix
+//!   cache and an engine) and a worker pool drives shard queues, with
+//!   per-shard hit-rate/latency/queue metrics ([`metrics`]).
 //! - **Layer 2** — a JAX transformer (`python/compile/model.py`) AOT-lowered
-//!   to HLO text, executed from Rust via PJRT ([`runtime`]).
+//!   to HLO text, executed from Rust via PJRT ([`runtime`]; gated on the
+//!   `pjrt` cargo feature, which needs the external `xla`/`anyhow` crates).
 //! - **Layer 1** — a Pallas block-wise prefill-attention kernel
 //!   (`python/compile/kernels/attention.py`).
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `rust/README.md` for build/test/bench instructions.
 
 pub mod align;
 pub mod cache;
@@ -26,6 +32,7 @@ pub mod pilot;
 pub mod quality;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod metrics;
 pub mod tokenizer;
 pub mod types;

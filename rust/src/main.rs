@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   serve        run a workload through a system and print metrics
+//!                (--shards N --workers N switches to the concurrent
+//!                sharded ServingEngine and prints per-shard stats)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
 //!                fig7, fig8, fig11, fig12, fig13, appendix_f, appendix_g)
 //!   index        build a context index over synthetic contexts and time it
@@ -11,6 +13,7 @@ use contextpilot::engine::ModelSku;
 use contextpilot::experiments as exp;
 use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
 use contextpilot::pilot::PilotConfig;
+use contextpilot::serve::{ServeConfig, ServingEngine};
 use contextpilot::util::cli::Args;
 use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset};
 
@@ -62,6 +65,74 @@ fn cmd_serve(args: &Args) {
     let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
     cfg.offline = turns <= 1;
     cfg.capacity_tokens = args.get_usize("capacity", cfg.capacity_tokens);
+
+    let shards = args.get_usize("shards", 1);
+    let workers = args.get_usize("workers", 1);
+    if shards > 1 || workers > 1 {
+        // concurrent sharded serving path
+        let mut scfg = ServeConfig::new(ModelSku::Qwen3_32B);
+        scfg.n_shards = shards.max(1);
+        scfg.n_workers = workers.max(1);
+        // --capacity is the TOTAL KV budget in both modes: divide it across
+        // shards so sharded and unsharded runs are capacity-comparable
+        let per_shard_cap = (cfg.capacity_tokens / shards.max(1)).max(1);
+        scfg.capacity_tokens = per_shard_cap;
+        scfg.policy = system.reuse_policy();
+        scfg.pilot = match &system {
+            SystemKind::ContextPilot(pc) => Some(pc.clone()),
+            _ => None,
+        };
+        scfg.era = cfg.era;
+        scfg.multi_hop = cfg.multi_hop;
+        scfg.decode_tokens = cfg.decode_tokens;
+        let engine = ServingEngine::new(scfg);
+        if cfg.offline {
+            engine.build_offline(&workload.requests);
+        }
+        // one batch per arrival wave, matching the sequential runner's
+        // batching so sharded and unsharded output stay comparable
+        let reqs = &workload.requests;
+        let t0 = std::time::Instant::now();
+        let mut served_total = 0usize;
+        for (i, j) in exp::turn_waves(reqs) {
+            served_total += engine.serve_batch(&reqs[i..j], &corpus).len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (mut m, per_shard) = engine.metrics();
+        println!("system           : {} (sharded)", system.name());
+        println!("dataset          : {}", dataset.name());
+        println!("shards x workers : {} x {}", shards.max(1), workers.max(1));
+        println!(
+            "KV budget        : {} tokens total ({per_shard_cap} per shard)",
+            cfg.capacity_tokens
+        );
+        println!("requests         : {served_total}");
+        println!(
+            "batch wall       : {:.3}s ({:.0} req/s)",
+            wall,
+            served_total as f64 / wall.max(1e-9)
+        );
+        println!("prefill tok/s    : {:.0}", m.prefill_throughput());
+        println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
+        println!("mean TTFT        : {:.4}s", m.mean_ttft());
+        println!("p99 TTFT         : {:.4}s", m.p99_ttft());
+        for s in per_shard {
+            println!(
+                "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, queue<={}, {} index nodes, {} sessions, {} resident tok",
+                s.shard,
+                s.served,
+                s.hit_ratio * 100.0,
+                s.p50_ttft,
+                s.p99_ttft,
+                s.max_queue_depth,
+                s.index_nodes,
+                s.sessions,
+                s.resident_tokens
+            );
+        }
+        return;
+    }
+
     let mut m = run_system(&system, &workload, &corpus, &cfg);
     println!("system           : {}", system.name());
     println!("dataset          : {}", dataset.name());
@@ -146,6 +217,7 @@ fn main() {
             println!("usage: ctxpilot <serve|bench|index> [--options]");
             println!("  serve  --system pilot|radix|lmcache|cacheblend --dataset multihoprag");
             println!("         --workload multi-session|multi-turn|hybrid|mem0 --sessions N --k K");
+            println!("         --shards N --workers N   (concurrent sharded serving layer)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

@@ -1,5 +1,6 @@
-//! Serving metrics: TTFT, prefill throughput, cache hit ratios, and the
-//! per-experiment aggregates every bench table reports.
+//! Serving metrics: TTFT, prefill throughput, cache hit ratios, the
+//! per-experiment aggregates every bench table reports, and the per-shard
+//! snapshots the concurrent serving layer ([`crate::serve`]) emits.
 
 use crate::types::ServedRequest;
 use crate::util::histogram::Summary;
@@ -90,6 +91,47 @@ impl RunMetrics {
     pub fn p99_ttft(&mut self) -> f64 {
         self.ttft.p99()
     }
+
+    /// Fold another run's samples into this one (shard aggregation).
+    ///
+    /// Summaries and token totals combine exactly; the progress series are
+    /// concatenated as-is, so after a merge their x-coordinates remain
+    /// relative to the *source* run — callers that need a global series
+    /// should read it per shard before merging.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.ttft.merge(&other.ttft);
+        self.wall.merge(&other.wall);
+        self.quality.merge(&other.quality);
+        self.prompt_tokens.merge(&other.prompt_tokens);
+        self.total_prompt_tokens += other.total_prompt_tokens;
+        self.total_cached_tokens += other.total_cached_tokens;
+        self.total_prefill_seconds += other.total_prefill_seconds;
+        self.hit_series.extend(other.hit_series.iter().copied());
+        self.cached_series.extend(other.cached_series.iter().copied());
+        self.n += other.n;
+    }
+}
+
+/// One serving shard's telemetry snapshot ([`crate::serve`]): request
+/// volume, cache effectiveness, latency percentiles and structure sizes.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests served by this shard so far.
+    pub served: usize,
+    /// Largest per-batch queue this shard has absorbed.
+    pub max_queue_depth: usize,
+    /// Cached / total prompt tokens for this shard's requests.
+    pub hit_ratio: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// Alive nodes in the shard's context index (0 when serving baseline
+    /// prompts without a pilot).
+    pub index_nodes: usize,
+    /// Tokens resident in the shard's radix prefix cache.
+    pub resident_tokens: usize,
+    /// Conversation sessions pinned to this shard so far.
+    pub sessions: usize,
 }
 
 #[cfg(test)]
@@ -149,5 +191,33 @@ mod tests {
         assert_eq!(m.hit_ratio(), 0.0);
         assert_eq!(m.prefill_throughput(), 0.0);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn merge_combines_totals_and_samples() {
+        let mut a = RunMetrics::new();
+        a.record(&served(100, 50, 0.1, 0.8));
+        let mut b = RunMetrics::new();
+        b.record(&served(300, 50, 0.3, 0.6));
+        b.record(&served(100, 0, 0.2, 0.4));
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.total_prompt_tokens, 500);
+        assert_eq!(a.total_cached_tokens, 100);
+        assert!((a.hit_ratio() - 0.2).abs() < 1e-9);
+        assert!((a.mean_ttft() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_into_empty_equals_source() {
+        let mut src = RunMetrics::new();
+        for i in 0..5usize {
+            src.record(&served(10 * (i + 1), i, 0.01 * i as f64, 0.5));
+        }
+        let mut dst = RunMetrics::new();
+        dst.merge(&src);
+        assert_eq!(dst.len(), src.len());
+        assert_eq!(dst.total_prompt_tokens, src.total_prompt_tokens);
+        assert!((dst.hit_ratio() - src.hit_ratio()).abs() < 1e-12);
     }
 }

@@ -10,6 +10,11 @@
 //!    contexts inherit their aligned prefix from their parent nodes.
 //!  * **online** (multi-turn / Mem0): the index starts cold and every
 //!    request is searched + inserted incrementally.
+//!
+//! At serving scale one `ContextPilot` instance runs per shard inside
+//! [`crate::serve::ServingEngine`]; sessions are pinned to shards, so the
+//! conversation records and the eviction callbacks stay consistent
+//! without any cross-instance coordination.
 
 use std::collections::HashMap;
 
@@ -105,6 +110,12 @@ impl ContextPilot {
             .zip(built.placed)
             .map(|(r, (_, aligned, path))| (r.id, (aligned, path)))
             .collect();
+    }
+
+    /// Alive nodes in the context index — serving-layer telemetry
+    /// ([`crate::metrics::ShardStats`]).
+    pub fn index_size(&self) -> usize {
+        self.index.len_alive()
     }
 
     /// Engine eviction callback (§4.1).

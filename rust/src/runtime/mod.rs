@@ -7,9 +7,23 @@
 //! executable per chunk-length variant; the engine picks the largest
 //! variant that fits the remaining tokens and pads the tail chunk
 //! (pad-safety is proven by `python/tests/test_model.py::test_padding_is_harmless`).
+//!
+//! The whole module is gated on the `pjrt` cargo feature: it needs the
+//! external `xla` and `anyhow` crates, which the offline build image does
+//! not carry (and which therefore cannot be declared in Cargo.toml, even
+//! as optional dependencies — the image has no registry to resolve them).
+//! Without the feature the crate (and the simulated serving stack,
+//! including [`crate::serve`]) builds dependency-free. To restore the real
+//! engine and the `runtime_real_model` integration tests on a networked
+//! host: add `anyhow` and `xla` to `[dependencies]` in Cargo.toml, then
+//! build with `--features pjrt`.
 
+#[cfg(feature = "pjrt")]
 pub mod model;
+#[cfg(feature = "pjrt")]
 pub mod real_engine;
 
+#[cfg(feature = "pjrt")]
 pub use model::{ModelMeta, TinyLmRuntime};
+#[cfg(feature = "pjrt")]
 pub use real_engine::RealEngine;

@@ -1,0 +1,348 @@
+//! The [`ServingEngine`]: a lock-striped shard array plus a worker pool.
+//! Callers hand it whole batches ([`ServingEngine::serve_batch`]) or
+//! stream single requests from many threads ([`ServingEngine::serve_one`]);
+//! either way each session's requests land on its pinned shard in arrival
+//! order, which is what makes results independent of the worker count.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::corpus::Corpus;
+use crate::metrics::{RunMetrics, ShardStats};
+use crate::serve::shard::{shard_of, Shard};
+use crate::serve::ServeConfig;
+use crate::types::{Request, RequestId, ServedRequest, SessionId};
+use crate::util::threadpool::par_map_tasks;
+
+pub struct ServingEngine {
+    cfg: ServeConfig,
+    /// Lock striping: one mutex per shard; concurrent callers contend only
+    /// when they hit the same shard.
+    shards: Vec<Mutex<Shard>>,
+    /// Engine request id → owning shard, so external eviction notifications
+    /// (§4.1) can be routed without broadcasting to every shard.
+    req_shard: Mutex<HashMap<RequestId, usize>>,
+}
+
+impl ServingEngine {
+    pub fn new(mut cfg: ServeConfig) -> ServingEngine {
+        cfg.n_shards = cfg.n_shards.max(1);
+        cfg.n_workers = cfg.n_workers.max(1);
+        let shards = (0..cfg.n_shards)
+            .map(|i| Mutex::new(Shard::new(i, &cfg)))
+            .collect();
+        ServingEngine {
+            shards,
+            cfg,
+            req_shard: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.cfg.n_workers
+    }
+
+    /// The shard a session is pinned to.
+    pub fn shard_of_session(&self, session: SessionId) -> usize {
+        shard_of(session, self.shards.len())
+    }
+
+    /// Arrival indices per shard, preserving arrival order within a shard.
+    fn partition(&self, reqs: &[Request]) -> Vec<Vec<usize>> {
+        let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, r) in reqs.iter().enumerate() {
+            queues[shard_of(r.session, self.shards.len())].push(i);
+        }
+        queues
+    }
+
+    /// Offline mode (§5.1): cluster-build each shard's context index over
+    /// its own slice of the batch (Alg. 4), shards built in parallel.
+    /// No-op for shards without a pilot or without requests.
+    pub fn build_offline(&self, reqs: &[Request]) {
+        let queues = self.partition(reqs);
+        par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
+            if queues[s].is_empty() {
+                return;
+            }
+            let mine: Vec<Request> = queues[s].iter().map(|&i| reqs[i].clone()).collect();
+            let mut shard = self.shards[s].lock().expect("shard poisoned");
+            if let Some(p) = &mut shard.pilot {
+                p.build_offline(&mine);
+            }
+        });
+    }
+
+    /// Serve a batch: requests are partitioned into per-shard queues and
+    /// the worker pool drives the queues concurrently, each through the
+    /// full pilot pipeline in arrival order. Returns records in the
+    /// original arrival order.
+    ///
+    /// Request ids must be unique within the engine's lifetime (the
+    /// workload generators guarantee this); they key both the §4.1
+    /// eviction plumbing and the order restoration here. Results are
+    /// independent of `n_workers` because every stateful structure is
+    /// shard-local.
+    ///
+    /// Batching granularity is the caller's: Alg.-5 may reorder freely
+    /// *within* a batch, so submit one batch per arrival wave (e.g. per
+    /// turn, as the experiment runner does) when turn ordering should be
+    /// reflected in engine history; a whole multi-turn workload in one
+    /// batch is still deterministic, just scheduled as one wave.
+    pub fn serve_batch(&self, reqs: &[Request], corpus: &Corpus) -> Vec<ServedRequest> {
+        let queues = self.partition(reqs);
+        let per_shard: Vec<Vec<(usize, ServedRequest)>> =
+            par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
+                let idxs = &queues[s];
+                if idxs.is_empty() {
+                    return Vec::new();
+                }
+                // the clone exists because ContextPilot::process_batch
+                // takes a contiguous &[Request]; it is one small Vec per
+                // request vs. the thousands of tokens rendered per serve,
+                // so borrowing is not worth rippling the pilot API.
+                let batch: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
+                let mut shard = self.shards[s].lock().expect("shard poisoned");
+                let (served, evicted) = shard.serve_queue(&batch, corpus);
+                // ownership-map upkeep while still holding the shard lock:
+                // a concurrent serve on this shard cannot interleave its
+                // eviction removals with these inserts (shard → map nesting
+                // is safe: no path holds the map lock while taking a shard)
+                {
+                    let mut map = self.req_shard.lock().expect("request map poisoned");
+                    for sr in &served {
+                        map.insert(sr.request.id, s);
+                    }
+                    for r in &evicted {
+                        map.remove(r);
+                    }
+                }
+                drop(shard);
+                let arrival: HashMap<RequestId, usize> =
+                    idxs.iter().map(|&i| (reqs[i].id, i)).collect();
+                served
+                    .into_iter()
+                    .map(|sr| (arrival[&sr.request.id], sr))
+                    .collect()
+            });
+
+        // arrival-order output
+        let mut slots: Vec<Option<ServedRequest>> = Vec::with_capacity(reqs.len());
+        slots.resize_with(reqs.len(), || None);
+        for tagged in per_shard {
+            for (i, sr) in tagged {
+                slots[i] = Some(sr);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|x| x.expect("every request served exactly once"))
+            .collect()
+    }
+
+    /// Serve a single request against its owning shard (the streaming
+    /// path). Safe to call concurrently from many threads; per-shard
+    /// results stay deterministic as long as each session's requests are
+    /// submitted in order (sessions are pinned, so independent sessions
+    /// may race freely).
+    pub fn serve_one(&self, req: &Request, corpus: &Corpus) -> ServedRequest {
+        let s = shard_of(req.session, self.shards.len());
+        let mut shard = self.shards[s].lock().expect("shard poisoned");
+        let (served, evicted) = shard.serve_one(req, corpus);
+        // map upkeep under the shard lock — see serve_batch for why
+        {
+            let mut map = self.req_shard.lock().expect("request map poisoned");
+            map.insert(req.id, s);
+            for r in &evicted {
+                map.remove(r);
+            }
+        }
+        drop(shard);
+        served
+    }
+
+    /// External eviction callback (§4.1): route each request id to the
+    /// shard that owns it and prune that shard's context index. Unknown
+    /// ids (already evicted engine-side) are ignored.
+    pub fn on_evict(&self, reqs: &[RequestId]) {
+        let mut by_shard: HashMap<usize, Vec<RequestId>> = HashMap::new();
+        {
+            let mut map = self.req_shard.lock().expect("request map poisoned");
+            for r in reqs {
+                if let Some(s) = map.remove(r) {
+                    by_shard.entry(s).or_default().push(*r);
+                }
+            }
+        }
+        for (s, ids) in by_shard {
+            let mut shard = self.shards[s].lock().expect("shard poisoned");
+            if let Some(p) = &mut shard.pilot {
+                p.on_evict(&ids);
+            }
+        }
+    }
+
+    /// Aggregate run metrics plus a per-shard telemetry snapshot.
+    pub fn metrics(&self) -> (RunMetrics, Vec<ShardStats>) {
+        let mut agg = RunMetrics::new();
+        let mut per = Vec::with_capacity(self.shards.len());
+        for m in &self.shards {
+            let mut shard = m.lock().expect("shard poisoned");
+            agg.merge(&shard.metrics);
+            per.push(shard.stats());
+        }
+        (agg, per)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::engine::costmodel::ModelSku;
+    use crate::tokenizer::Tokenizer;
+    use crate::types::{BlockId, QueryId};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(
+            &CorpusConfig {
+                n_docs: 60,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        )
+    }
+
+    fn req(id: u64, session: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    fn small_cfg(shards: usize, workers: usize) -> ServeConfig {
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.n_shards = shards;
+        cfg.n_workers = workers;
+        cfg.decode_tokens = 8;
+        cfg
+    }
+
+    #[test]
+    fn batch_output_is_in_arrival_order() {
+        let corpus = corpus();
+        let engine = ServingEngine::new(small_cfg(4, 4));
+        let reqs: Vec<Request> = (0..24)
+            .map(|i| req(i, i as u32 % 7, &[(i % 9) as u32 + 1, (i % 5) as u32 + 10]))
+            .collect();
+        let served = engine.serve_batch(&reqs, &corpus);
+        assert_eq!(served.len(), reqs.len());
+        for (i, s) in served.iter().enumerate() {
+            assert_eq!(s.request.id, reqs[i].id);
+        }
+    }
+
+    #[test]
+    fn sessions_are_pinned_to_one_shard() {
+        let corpus = corpus();
+        let engine = ServingEngine::new(small_cfg(4, 2));
+        let reqs: Vec<Request> = (0..16).map(|i| req(i, 5, &[1, 2, 3])).collect();
+        engine.serve_batch(&reqs, &corpus);
+        let (_, per) = engine.metrics();
+        let active: Vec<_> = per.iter().filter(|s| s.served > 0).collect();
+        assert_eq!(active.len(), 1, "one session must live on one shard");
+        assert_eq!(active[0].served, 16);
+        assert_eq!(active[0].shard, engine.shard_of_session(SessionId(5)));
+    }
+
+    #[test]
+    fn offline_build_then_serve_matches_sequential_pilot() {
+        use crate::engine::sim::{ReusePolicy, SimEngine};
+        use crate::pilot::{ContextPilot, PilotConfig};
+        use crate::quality::{ModelEra, QualityModel};
+
+        let corpus = corpus();
+        let reqs: Vec<Request> = (0..12)
+            .map(|i| req(i, i as u32, &[(i % 4) as u32 + 1, (i % 4) as u32 + 2, 9]))
+            .collect();
+        // sharded, offline
+        let engine = ServingEngine::new(small_cfg(3, 3));
+        engine.build_offline(&reqs);
+        let served = engine.serve_batch(&reqs, &corpus);
+        // ground truth per shard
+        for shard in 0..3 {
+            let mine: Vec<Request> = reqs
+                .iter()
+                .filter(|r| shard_of(r.session, 3) == shard)
+                .cloned()
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            let mut pilot = ContextPilot::new(PilotConfig::default());
+            pilot.build_offline(&mine);
+            let mut eng = SimEngine::new(
+                ModelSku::Qwen3_4B.profile(),
+                ReusePolicy::RadixPrefix,
+                60_000,
+            );
+            let qm = QualityModel::new(ModelEra::Modern, false);
+            for o in pilot.process_batch(&mine, &corpus) {
+                let (truth, evicted) = eng.serve(&o.request, &o.prompt, &corpus, &qm, 8);
+                pilot.on_evict(&evicted);
+                let got = served
+                    .iter()
+                    .find(|s| s.request.id == truth.request.id)
+                    .unwrap();
+                assert_eq!(got.cached_tokens, truth.cached_tokens);
+                assert_eq!(got.prompt_tokens, truth.prompt_tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn external_eviction_prunes_owning_shard_only() {
+        let corpus = corpus();
+        let engine = ServingEngine::new(small_cfg(4, 2));
+        let reqs: Vec<Request> = (0..20)
+            .map(|i| req(i, i as u32, &[1, 2, (i % 6) as u32 + 3]))
+            .collect();
+        engine.serve_batch(&reqs, &corpus);
+        let ids: Vec<RequestId> = reqs.iter().map(|r| r.id).collect();
+        engine.on_evict(&ids);
+        let (_, per) = engine.metrics();
+        for s in per {
+            assert!(
+                s.index_nodes <= 1,
+                "shard {} index not pruned: {} nodes",
+                s.shard,
+                s.index_nodes
+            );
+        }
+        // idempotent: evicting again is a no-op
+        engine.on_evict(&ids);
+    }
+
+    #[test]
+    fn metrics_aggregate_equals_per_shard_sum() {
+        let corpus = corpus();
+        let engine = ServingEngine::new(small_cfg(5, 4));
+        let reqs: Vec<Request> = (0..40)
+            .map(|i| req(i, i as u32 % 11, &[(i % 7) as u32 + 1, (i % 3) as u32 + 8]))
+            .collect();
+        let served = engine.serve_batch(&reqs, &corpus);
+        let (agg, per) = engine.metrics();
+        assert_eq!(agg.len(), served.len());
+        assert_eq!(per.iter().map(|s| s.served).sum::<usize>(), served.len());
+        let cached: usize = served.iter().map(|s| s.cached_tokens).sum();
+        let total: usize = served.iter().map(|s| s.prompt_tokens).sum();
+        assert!((agg.hit_ratio() - cached as f64 / total as f64).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Concurrent sharded serving layer — the production-scale front of the
+//! reproduction (ROADMAP north star; paper §4/Fig. 3 at serving scale).
+//!
+//! The single-threaded pipeline ([`crate::pilot`] → [`crate::engine::sim`])
+//! serves one request at a time. This module scales it out while keeping
+//! every result bit-identical to the sequential pipeline:
+//!
+//! * **Sharding** — sessions are pinned to shards by a deterministic hash
+//!   ([`shard_of`]). Each [`Shard`] owns a full pipeline instance: a
+//!   [`crate::pilot::ContextPilot`] (context index, conversation records)
+//!   and a [`crate::engine::sim::SimEngine`] (radix prefix cache, history).
+//!   Pinning keeps multi-turn history, §6 dedup records and §4.1 eviction
+//!   callbacks shard-local, so no cross-shard coordination is ever needed
+//!   on the hot path.
+//! * **Lock striping** — the [`ServingEngine`] holds one mutex per shard;
+//!   concurrent callers contend only when they hit the same shard.
+//! * **Worker pool** — [`ServingEngine::serve_batch`] partitions a batch
+//!   into per-shard queues and drives them with
+//!   [`crate::util::threadpool::par_map_tasks`] workers. Each queue runs
+//!   the full pipeline (Alg.-1 search/insert, §5 alignment, §6 dedup,
+//!   §5.3 annotation, Alg.-5 scheduling, engine serve, §4.1 eviction sync)
+//!   in arrival order.
+//! * **Determinism** — shard state is session-local and queues preserve
+//!   arrival order, so hit/miss results are independent of `n_workers`
+//!   and equal to a single-shard ground-truth run of the same queue
+//!   (pinned by `rust/tests/serve_stress.rs`).
+//!
+//! Per-shard hit rate, queue depth and latency percentiles surface through
+//! [`crate::metrics::ShardStats`]; `benches/bench_serving.rs` reports
+//! whole-batch throughput across worker counts.
+
+mod engine;
+mod shard;
+
+pub use engine::ServingEngine;
+pub use shard::{shard_of, Shard};
+
+use crate::engine::costmodel::{CostProfile, ModelSku};
+use crate::engine::sim::ReusePolicy;
+use crate::pilot::PilotConfig;
+use crate::quality::ModelEra;
+
+/// Knobs of the sharded serving layer.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Independent shards; each owns a context index, a radix prefix cache
+    /// and an engine. Sessions are pinned to shards.
+    pub n_shards: usize,
+    /// Worker threads driving shard queues in parallel.
+    pub n_workers: usize,
+    /// KV budget per shard, in tokens.
+    pub capacity_tokens: usize,
+    /// Engine latency model.
+    pub profile: CostProfile,
+    /// Engine reuse mechanism under test.
+    pub policy: ReusePolicy,
+    /// ContextPilot proxy configuration; `None` serves baseline prompts
+    /// (engine-only, LPM-ordered within each shard queue).
+    pub pilot: Option<PilotConfig>,
+    pub era: ModelEra,
+    pub multi_hop: bool,
+    pub decode_tokens: usize,
+}
+
+impl ServeConfig {
+    /// Defaults mirroring [`crate::experiments::RunConfig`]: radix reuse,
+    /// ContextPilot on, modern era.
+    pub fn new(sku: ModelSku) -> ServeConfig {
+        ServeConfig {
+            n_shards: 4,
+            n_workers: crate::util::threadpool::default_threads(),
+            capacity_tokens: 60_000,
+            profile: sku.profile(),
+            policy: ReusePolicy::RadixPrefix,
+            pilot: Some(PilotConfig::default()),
+            era: ModelEra::Modern,
+            multi_hop: false,
+            decode_tokens: 32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        assert!(cfg.n_shards >= 1);
+        assert!(cfg.n_workers >= 1);
+        assert!(cfg.pilot.is_some());
+        assert!(cfg.capacity_tokens > 0);
+    }
+
+    #[test]
+    fn engine_and_config_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ServeConfig>();
+        assert_send_sync::<ServingEngine>();
+    }
+}

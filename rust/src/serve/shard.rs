@@ -1,0 +1,258 @@
+//! One serving shard: a ContextPilot proxy + simulated engine pair owning
+//! the sessions hashed to it. All mutable state is private to the shard,
+//! so interleavings of *other* shards cannot change this shard's results —
+//! the determinism contract `rust/tests/serve_stress.rs` pins down.
+
+use crate::corpus::Corpus;
+use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::metrics::{RunMetrics, ShardStats};
+use crate::pilot::ContextPilot;
+use crate::quality::QualityModel;
+use crate::serve::ServeConfig;
+use crate::types::{Prompt, Request, RequestId, ServedRequest, SessionId};
+use crate::util::prng::SplitMix64;
+
+/// Deterministic session → shard assignment (SplitMix64 of the session
+/// id). Sessions are pinned so conversation history, dedup records and the
+/// per-shard context index stay consistent without cross-shard locks; the
+/// hash spreads the sequential session ids the generators emit.
+pub fn shard_of(session: SessionId, n_shards: usize) -> usize {
+    (SplitMix64::new(session.0 as u64).next_u64() % n_shards.max(1) as u64) as usize
+}
+
+pub struct Shard {
+    pub(crate) id: usize,
+    /// `None` = baseline mode: engine-only, LPM-ordered queues.
+    pub(crate) pilot: Option<ContextPilot>,
+    pub(crate) engine: SimEngine,
+    pub(crate) quality: QualityModel,
+    pub(crate) decode_tokens: usize,
+    pub(crate) metrics: RunMetrics,
+    pub(crate) max_queue_depth: usize,
+}
+
+impl Shard {
+    pub(crate) fn new(id: usize, cfg: &ServeConfig) -> Shard {
+        Shard {
+            id,
+            pilot: cfg.pilot.clone().map(ContextPilot::new),
+            engine: SimEngine::new(cfg.profile, cfg.policy, cfg.capacity_tokens),
+            quality: QualityModel::new(cfg.era, cfg.multi_hop),
+            decode_tokens: cfg.decode_tokens,
+            metrics: RunMetrics::new(),
+            max_queue_depth: 0,
+        }
+    }
+
+    /// Drive one queue of requests (arrival order) through the full
+    /// pipeline. Returns the served records (execution order — Alg.-5 may
+    /// reorder within the queue) and every engine request id evicted while
+    /// serving; the evictions have already been fed back into this shard's
+    /// context index (§4.1).
+    pub(crate) fn serve_queue(
+        &mut self,
+        batch: &[Request],
+        corpus: &Corpus,
+    ) -> (Vec<ServedRequest>, Vec<RequestId>) {
+        self.max_queue_depth = self.max_queue_depth.max(batch.len());
+        let mut out = Vec::with_capacity(batch.len());
+        let mut all_evicted = Vec::new();
+        match &mut self.pilot {
+            Some(pilot) => {
+                for o in pilot.process_batch(batch, corpus) {
+                    let (served, evicted) = self.engine.serve(
+                        &o.request,
+                        &o.prompt,
+                        corpus,
+                        &self.quality,
+                        self.decode_tokens,
+                    );
+                    pilot.on_evict(&evicted);
+                    all_evicted.extend(evicted);
+                    self.metrics.record(&served);
+                    out.push(served);
+                }
+            }
+            None => {
+                // baseline: radix-cache serving uses longest-prefix-match
+                // ordering within the queue (what SGLang's scheduler does);
+                // the other baseline mechanisms serve in arrival order —
+                // mirroring the sequential experiment runner so sharded and
+                // unsharded results stay comparable per system.
+                let order: Vec<usize> =
+                    if matches!(self.engine.policy, ReusePolicy::RadixPrefix) {
+                        self.engine.lpm_order(batch, corpus)
+                    } else {
+                        (0..batch.len()).collect()
+                    };
+                for i in order {
+                    let r = &batch[i];
+                    let (served, evicted) = self.engine.serve(
+                        r,
+                        &Prompt::baseline(r),
+                        corpus,
+                        &self.quality,
+                        self.decode_tokens,
+                    );
+                    all_evicted.extend(evicted);
+                    self.metrics.record(&served);
+                    out.push(served);
+                }
+            }
+        }
+        (out, all_evicted)
+    }
+
+    /// Serve a single request (the streaming path). Identical pipeline to a
+    /// one-element queue: Alg.-5 scheduling of a singleton is the identity.
+    pub(crate) fn serve_one(
+        &mut self,
+        req: &Request,
+        corpus: &Corpus,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        self.max_queue_depth = self.max_queue_depth.max(1);
+        let (served, evicted) = match &mut self.pilot {
+            Some(pilot) => {
+                let o = pilot.process(req, corpus);
+                let (served, evicted) = self.engine.serve(
+                    &o.request,
+                    &o.prompt,
+                    corpus,
+                    &self.quality,
+                    self.decode_tokens,
+                );
+                pilot.on_evict(&evicted);
+                (served, evicted)
+            }
+            None => self.engine.serve(
+                req,
+                &Prompt::baseline(req),
+                corpus,
+                &self.quality,
+                self.decode_tokens,
+            ),
+        };
+        self.metrics.record(&served);
+        (served, evicted)
+    }
+
+    /// Telemetry snapshot (sorts the latency samples for percentiles).
+    pub(crate) fn stats(&mut self) -> ShardStats {
+        ShardStats {
+            shard: self.id,
+            served: self.metrics.len(),
+            max_queue_depth: self.max_queue_depth,
+            hit_ratio: self.metrics.hit_ratio(),
+            p50_ttft: self.metrics.ttft.p50(),
+            p99_ttft: self.metrics.ttft.p99(),
+            index_nodes: self.pilot.as_ref().map_or(0, |p| p.index_size()),
+            resident_tokens: self.engine.cache.resident_tokens(),
+            sessions: self.engine.session_count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::costmodel::ModelSku;
+    use crate::types::{BlockId, QueryId};
+
+    fn req(id: u64, session: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    fn corpus() -> Corpus {
+        use crate::corpus::CorpusConfig;
+        use crate::tokenizer::Tokenizer;
+        Corpus::generate(
+            &CorpusConfig {
+                n_docs: 40,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        )
+    }
+
+    #[test]
+    fn shard_of_is_deterministic_and_in_range() {
+        for n in [1usize, 2, 5, 8, 64] {
+            for s in 0..200u32 {
+                let a = shard_of(SessionId(s), n);
+                let b = shard_of(SessionId(s), n);
+                assert_eq!(a, b);
+                assert!(a < n);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_spreads_sequential_sessions() {
+        let n = 8;
+        let mut counts = vec![0usize; n];
+        for s in 0..800u32 {
+            counts[shard_of(SessionId(s), n)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((50..200).contains(&c), "shard {i} got {c} of 800");
+        }
+    }
+
+    #[test]
+    fn queue_and_singleton_paths_agree() {
+        let corpus = corpus();
+        let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        let batch = vec![req(1, 1, &[1, 2, 3]), req(2, 2, &[1, 2, 9])];
+        let mut as_queue = Shard::new(0, &cfg);
+        let (q, _) = as_queue.serve_queue(&batch, &corpus);
+        let mut one_by_one = Shard::new(0, &cfg);
+        // serve in the same execution order the queue chose
+        for served in &q {
+            let (s, _) = one_by_one.serve_one(&served.request, &corpus);
+            assert_eq!(s.cached_tokens, served.cached_tokens);
+            assert_eq!(s.prompt_tokens, served.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn baseline_shard_orders_by_longest_prefix() {
+        let corpus = corpus();
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.pilot = None;
+        let mut shard = Shard::new(0, &cfg);
+        // warm the cache with {1,2,3}
+        shard.serve_queue(&[req(1, 1, &[1, 2, 3])], &corpus);
+        // a queue where the second request shares the cached prefix: LPM
+        // must serve it first
+        let (out, _) = shard.serve_queue(&[req(2, 2, &[7, 8]), req(3, 3, &[1, 2, 5])], &corpus);
+        assert_eq!(out[0].request.id, RequestId(3));
+        assert!(out[0].cached_tokens > 0);
+    }
+
+    #[test]
+    fn stats_reflect_served_traffic() {
+        let corpus = corpus();
+        let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        let mut shard = Shard::new(3, &cfg);
+        let batch = vec![
+            req(1, 1, &[1, 2, 3]),
+            req(2, 2, &[1, 2, 9]),
+            req(3, 3, &[4, 5]),
+        ];
+        shard.serve_queue(&batch, &corpus);
+        let st = shard.stats();
+        assert_eq!(st.shard, 3);
+        assert_eq!(st.served, 3);
+        assert_eq!(st.max_queue_depth, 3);
+        assert_eq!(st.sessions, 3);
+        assert!(st.index_nodes > 1, "pilot index should hold leaves");
+        assert!(st.resident_tokens > 0);
+        assert!(st.p99_ttft >= st.p50_ttft);
+    }
+}

@@ -135,6 +135,50 @@ pub fn gen_text(rng: &mut Rng, words: usize) -> String {
         .join(" ")
 }
 
+/// Random retrieval-shaped context: up to `size` distinct `BlockId`s drawn
+/// from `[0, universe)` (may be empty, like `gen_distinct_ids`).
+pub fn gen_context(rng: &mut Rng, size: usize, universe: usize) -> Vec<crate::types::BlockId> {
+    gen_distinct_ids(rng, size, universe)
+        .into_iter()
+        .map(|i| crate::types::BlockId(i as u32))
+        .collect()
+}
+
+/// Random request batch spread over `sessions` sessions with per-session
+/// turn counters and non-empty contexts of up to `k` blocks — the shape
+/// the serving layer ([`crate::serve`]) consumes. Request ids are the
+/// batch indices, hence unique.
+pub fn gen_requests(
+    rng: &mut Rng,
+    n: usize,
+    sessions: usize,
+    k: usize,
+    universe: usize,
+) -> Vec<crate::types::Request> {
+    use crate::types::{BlockId, QueryId, Request, RequestId, SessionId};
+    let sessions = sessions.max(1);
+    let universe = universe.max(1);
+    let mut turn = vec![0u32; sessions];
+    (0..n)
+        .map(|i| {
+            let s = rng.below(sessions);
+            let t = turn[s];
+            turn[s] += 1;
+            let mut context = gen_context(rng, k.max(1), universe);
+            if context.is_empty() {
+                context.push(BlockId(rng.below(universe) as u32));
+            }
+            Request {
+                id: RequestId(i as u64),
+                session: SessionId(s as u32),
+                turn: t,
+                context,
+                query: QueryId(i as u64),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +232,30 @@ mod tests {
             assert_eq!(set.len(), distinct.len());
             let w = gen_word(&mut rng, 8);
             assert!(!w.is_empty() && w.len() < 8);
+        }
+    }
+
+    #[test]
+    fn request_generator_respects_shape() {
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let reqs = gen_requests(&mut rng, 20, 5, 6, 40);
+            assert_eq!(reqs.len(), 20);
+            let mut ids = std::collections::HashSet::new();
+            let mut turns: std::collections::HashMap<u32, u32> = Default::default();
+            for r in &reqs {
+                assert!(ids.insert(r.id), "duplicate request id");
+                assert!(!r.context.is_empty());
+                assert!(r.context.len() <= 6);
+                assert!(r.context.iter().all(|b| b.0 < 40));
+                let distinct: std::collections::HashSet<_> = r.context.iter().collect();
+                assert_eq!(distinct.len(), r.context.len(), "dup blocks in context");
+                assert!(r.session.0 < 5);
+                // turns count up per session in arrival order
+                let t = turns.entry(r.session.0).or_default();
+                assert_eq!(r.turn, *t);
+                *t += 1;
+            }
         }
     }
 

@@ -56,6 +56,52 @@ pub fn par_shards<F: Fn(usize, usize) + Sync>(n: usize, threads: usize, f: F) {
     });
 }
 
+/// Worker-pool map over task indices `0..n`: `threads` workers repeatedly
+/// claim the next unclaimed index from a shared counter, so a slow task
+/// never idles the other workers (dynamic load balancing, vs `par_map`'s
+/// static chunking). Results come back in task order.
+///
+/// Unlike [`par_map`] there is no serial fallback for small inputs: the
+/// serving layer hands this a handful of *heavy* shard queues, exactly the
+/// shape the `items.len() < 32` heuristic would wrongly serialize.
+pub fn par_map_tasks<R: Send, F: Fn(usize) -> R + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Vec<R> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let done = &done;
+            let f = &f;
+            s.spawn(move || {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                if !local.is_empty() {
+                    done.lock().expect("worker poisoned").extend(local);
+                }
+            });
+        }
+    });
+    let mut out = done.into_inner().expect("worker poisoned");
+    out.sort_unstable_by_key(|&(i, _)| i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
 /// Default parallelism: available cores (minus one to keep the box
 /// responsive), at least 1.
 pub fn default_threads() -> usize {
@@ -101,5 +147,30 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn par_map_tasks_matches_serial_and_preserves_order() {
+        for n in [0usize, 1, 3, 7, 100] {
+            let serial: Vec<usize> = (0..n).map(|i| i * i).collect();
+            for threads in [1, 2, 4, 9] {
+                let par = par_map_tasks(n, threads, |i| i * i);
+                assert_eq!(par, serial, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_tasks_parallelizes_small_inputs() {
+        // 4 tasks, 4 threads: every task must run exactly once even though
+        // the input is far below par_map's serial-fallback threshold.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let hits: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        let out = par_map_tasks(4, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 }

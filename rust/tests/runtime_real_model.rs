@@ -1,5 +1,9 @@
 //! Integration: the real PJRT runtime against built artifacts.
-//! Requires `make artifacts` (skipped otherwise).
+//! Requires `make artifacts` (skipped otherwise) and the `pjrt` cargo
+//! feature (the whole file compiles out without it — the offline image
+//! carries neither the `xla` nor the `anyhow` crate).
+
+#![cfg(feature = "pjrt")]
 
 use contextpilot::corpus::{Corpus, CorpusConfig};
 use contextpilot::runtime::{RealEngine, TinyLmRuntime};

@@ -1,0 +1,286 @@
+//! Integration: the concurrent sharded serving layer (`serve`).
+//!
+//! Determinism contract under test: shard state is session-local and
+//! per-shard queues preserve arrival order, so (1) hit/miss results are
+//! identical for any worker count, (2) they equal a hand-rolled
+//! single-shard pipeline fed the same queue, and (3) concurrent streaming
+//! callers see the same results as a sequential run. Plus the §5/§6
+//! safety properties under concurrency: alignment preserves the block
+//! multiset, and de-duplication is idempotent.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use contextpilot::dedup::{dedup_context, DedupConfig};
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::engine::sim::{ReusePolicy, SimEngine};
+use contextpilot::experiments::corpus_for;
+use contextpilot::index::tree::ContextIndex;
+use contextpilot::pilot::{ContextPilot, PilotConfig};
+use contextpilot::quality::{ModelEra, QualityModel};
+use contextpilot::serve::{shard_of, ServeConfig, ServingEngine};
+use contextpilot::types::{Request, RequestId, Segment, ServedRequest, SessionId};
+use contextpilot::util::prng::Rng;
+use contextpilot::util::prop::{check, gen_context, gen_requests, CaseResult, Config};
+use contextpilot::workload::{hybrid, Dataset};
+
+fn serve_cfg(shards: usize, workers: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+    cfg.n_shards = shards;
+    cfg.n_workers = workers;
+    cfg.capacity_tokens = 40_000;
+    cfg.decode_tokens = 8;
+    cfg
+}
+
+/// (request id, prompt tokens, cached tokens) — the hit/miss fingerprint.
+fn fingerprint(served: &[ServedRequest]) -> Vec<(u64, usize, usize)> {
+    served
+        .iter()
+        .map(|s| (s.request.id.0, s.prompt_tokens, s.cached_tokens))
+        .collect()
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let w = hybrid(Dataset::MtRag, 24, 3, 8, 0x57E55);
+    let corpus = corpus_for(Dataset::MtRag);
+    let run = |workers: usize| {
+        let engine = ServingEngine::new(serve_cfg(6, workers));
+        fingerprint(&engine.serve_batch(&w.requests, &corpus))
+    };
+    let base = run(1);
+    assert_eq!(base.len(), w.requests.len());
+    assert!(
+        base.iter().any(|&(_, _, cached)| cached > 0),
+        "workload should produce cache hits"
+    );
+    for workers in [2usize, 4, 8] {
+        assert_eq!(run(workers), base, "workers={workers} changed hit/miss results");
+    }
+}
+
+#[test]
+fn sharded_cache_matches_single_shard_ground_truth() {
+    // 4 worker threads vs a hand-rolled unsharded pipeline per shard: the
+    // sharded cache must never return a prefix length the single-shard
+    // ground truth does not.
+    let n_shards = 4;
+    let w = hybrid(Dataset::MtRag, 20, 3, 8, 0x6D7);
+    let corpus = corpus_for(Dataset::MtRag);
+    let engine = ServingEngine::new(serve_cfg(n_shards, 4));
+    let served = engine.serve_batch(&w.requests, &corpus);
+    let mut compared = 0usize;
+    for shard in 0..n_shards {
+        let mine: Vec<Request> = w
+            .requests
+            .iter()
+            .filter(|r| shard_of(r.session, n_shards) == shard)
+            .cloned()
+            .collect();
+        if mine.is_empty() {
+            continue;
+        }
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let mut eng = SimEngine::new(
+            ModelSku::Qwen3_4B.profile(),
+            ReusePolicy::RadixPrefix,
+            40_000,
+        );
+        let qm = QualityModel::new(ModelEra::Modern, false);
+        for o in pilot.process_batch(&mine, &corpus) {
+            let (truth, evicted) = eng.serve(&o.request, &o.prompt, &corpus, &qm, 8);
+            pilot.on_evict(&evicted);
+            let got = served
+                .iter()
+                .find(|s| s.request.id == truth.request.id)
+                .expect("request served");
+            assert_eq!(
+                got.cached_tokens, truth.cached_tokens,
+                "cached prefix mismatch for {:?}",
+                truth.request.id
+            );
+            assert_eq!(got.prompt_tokens, truth.prompt_tokens);
+            compared += 1;
+        }
+    }
+    assert_eq!(compared, w.requests.len());
+}
+
+#[test]
+fn concurrent_streaming_matches_sequential() {
+    // one OS thread per shard streams its own queue via serve_one; the
+    // interleaving across shards is arbitrary, the results must not be.
+    let n_shards = 4;
+    let w = hybrid(Dataset::MtRag, 16, 3, 8, 0xC0C);
+    let corpus = corpus_for(Dataset::MtRag);
+
+    let seq_engine = ServingEngine::new(serve_cfg(n_shards, 1));
+    let truth: Vec<ServedRequest> = w
+        .requests
+        .iter()
+        .map(|r| seq_engine.serve_one(r, &corpus))
+        .collect();
+    let truth_by_id: HashMap<u64, (usize, usize)> = truth
+        .iter()
+        .map(|s| (s.request.id.0, (s.prompt_tokens, s.cached_tokens)))
+        .collect();
+
+    let engine = ServingEngine::new(serve_cfg(n_shards, 1));
+    let results: Vec<Mutex<Vec<ServedRequest>>> =
+        (0..n_shards).map(|_| Mutex::new(Vec::new())).collect();
+    std::thread::scope(|scope| {
+        for shard in 0..n_shards {
+            let engine = &engine;
+            let corpus = &corpus;
+            let w = &w;
+            let slot = &results[shard];
+            scope.spawn(move || {
+                for r in w
+                    .requests
+                    .iter()
+                    .filter(|r| shard_of(r.session, n_shards) == shard)
+                {
+                    slot.lock().unwrap().push(engine.serve_one(r, corpus));
+                }
+            });
+        }
+    });
+
+    let mut compared = 0usize;
+    for slot in &results {
+        for s in slot.lock().unwrap().iter() {
+            assert_eq!(
+                truth_by_id[&s.request.id.0],
+                (s.prompt_tokens, s.cached_tokens),
+                "request {:?} diverged under concurrency",
+                s.request.id
+            );
+            compared += 1;
+        }
+    }
+    assert_eq!(compared, w.requests.len());
+}
+
+#[test]
+fn shard_metrics_aggregate_consistently() {
+    let w = hybrid(Dataset::MtRag, 24, 2, 8, 0x3E7);
+    let corpus = corpus_for(Dataset::MtRag);
+    let engine = ServingEngine::new(serve_cfg(5, 4));
+    let served = engine.serve_batch(&w.requests, &corpus);
+    let (agg, per) = engine.metrics();
+    assert_eq!(agg.len(), served.len());
+    assert_eq!(per.iter().map(|s| s.served).sum::<usize>(), served.len());
+    for s in per.iter().filter(|s| s.served > 0) {
+        assert!(s.p99_ttft >= s.p50_ttft, "shard {}", s.shard);
+        assert!(s.max_queue_depth >= 1);
+        assert!((0.0..=1.0).contains(&s.hit_ratio), "shard {}", s.shard);
+        assert!(s.sessions >= 1);
+    }
+    let cached: usize = served.iter().map(|s| s.cached_tokens).sum();
+    let total: usize = served.iter().map(|s| s.prompt_tokens).sum();
+    assert!((agg.hit_ratio() - cached as f64 / total as f64).abs() < 1e-9);
+}
+
+#[test]
+fn alignment_preserves_block_multiset_under_concurrent_access() {
+    // 4 workers, alignment on, dedup off: every served prompt's full
+    // blocks must be a permutation of the request's retrieval (so the
+    // rendered token multiset of the context region is preserved).
+    let corpus = corpus_for(Dataset::MtRag);
+    check(
+        "sharded alignment is a permutation",
+        Config {
+            cases: 12,
+            base_seed: 0xA716,
+            max_size: 48,
+        },
+        |rng: &mut Rng, size| {
+            let reqs = gen_requests(rng, size.max(4), 12, 6, corpus.len());
+            let mut cfg = serve_cfg(4, 4);
+            cfg.pilot = Some(PilotConfig {
+                dedup: None,
+                ..PilotConfig::default()
+            });
+            let engine = ServingEngine::new(cfg);
+            let served = engine.serve_batch(&reqs, &corpus);
+            for s in &served {
+                let mut got = s.prompt.full_blocks();
+                let mut want = s.request.context.clone();
+                got.sort_unstable();
+                want.sort_unstable();
+                if got != want {
+                    return Err(format!(
+                        "request {:?}: prompt blocks {:?} != retrieval {:?}",
+                        s.request.id, got, want
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dedup_is_idempotent() {
+    // Once a context has been deduplicated against a session record,
+    // re-deduplicating the identical context is a fixed point: every block
+    // resolves to a location annotation and repeated passes agree exactly.
+    let corpus = corpus_for(Dataset::MtRag);
+    check(
+        "dedup is idempotent",
+        Config {
+            cases: 64,
+            base_seed: 0x1DE0,
+            max_size: 10,
+        },
+        |rng: &mut Rng, size| {
+            let context = gen_context(rng, size.max(1), corpus.len());
+            if context.is_empty() {
+                return CaseResult::Discard;
+            }
+            let mut ix = ContextIndex::new(0.001);
+            let session = SessionId(rng.below(1000) as u32);
+            let cfg = DedupConfig::default();
+            let _first = dedup_context(&mut ix, session, &context, &corpus, &cfg);
+            let (segs2, stats2) = dedup_context(&mut ix, session, &context, &corpus, &cfg);
+            let (segs3, stats3) = dedup_context(&mut ix, session, &context, &corpus, &cfg);
+            if segs2 != segs3 || stats2 != stats3 {
+                return CaseResult::Fail("second and third pass diverged".to_string());
+            }
+            if !segs2.iter().all(|s| matches!(s, Segment::LocationRef(_))) {
+                return CaseResult::Fail("seen blocks not fully annotated".to_string());
+            }
+            if stats2.blocks_deduped != context.len() {
+                return CaseResult::Fail(format!(
+                    "expected {} deduped blocks, got {}",
+                    context.len(),
+                    stats2.blocks_deduped
+                ));
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn external_eviction_keeps_indices_consistent() {
+    // serve, then evict every engine request id through the ServingEngine:
+    // every shard's context index must prune down to its root.
+    let w = hybrid(Dataset::MtRag, 18, 2, 8, 0xE71C);
+    let corpus = corpus_for(Dataset::MtRag);
+    let engine = ServingEngine::new(serve_cfg(4, 4));
+    let served = engine.serve_batch(&w.requests, &corpus);
+    assert_eq!(served.len(), w.requests.len());
+    let ids: Vec<RequestId> = w.requests.iter().map(|r| r.id).collect();
+    engine.on_evict(&ids);
+    let (_, per) = engine.metrics();
+    for s in per {
+        assert!(
+            s.index_nodes <= 1,
+            "shard {} index kept {} nodes after full eviction",
+            s.shard,
+            s.index_nodes
+        );
+    }
+}
