@@ -11,6 +11,7 @@ use contextpilot::engine::render::Renderer;
 use contextpilot::experiments::table3c::synth_contexts;
 use contextpilot::index::build::build_clustered;
 use contextpilot::index::DEFAULT_ALPHA;
+use contextpilot::pilot::{ContextPilot, PilotConfig};
 use contextpilot::schedule::schedule_by_paths;
 use contextpilot::tokenizer::Tokenizer;
 use contextpilot::types::*;
@@ -93,6 +94,30 @@ fn main() {
     let r = quick("radix match_prefix (2k-token key)", || {
         black_box(cache.match_prefix(&keys[ki % keys.len()]));
         ki += 1;
+    });
+    println!("{}", r.report());
+
+    // full proxy batch path, clone-free (rewrite_batch borrows requests
+    // and schedules over borrowed search paths — the hot path the serving
+    // shards drive)
+    let mut pilot = ContextPilot::new(PilotConfig::default());
+    let mut bi = 0usize;
+    let r = quick("pilot rewrite_batch (32 reqs, k=15)", || {
+        let batch: Vec<Request> = (0..32)
+            .map(|j| {
+                let n = bi * 32 + j;
+                let (_, c) = &queries[n % queries.len()];
+                Request {
+                    id: RequestId(3_000_000 + n as u64),
+                    session: SessionId((j % 8) as u32),
+                    turn: (bi % 4) as u32,
+                    context: c.clone(),
+                    query: QueryId(n as u64),
+                }
+            })
+            .collect();
+        black_box(pilot.rewrite_batch(&batch, &corpus));
+        bi += 1;
     });
     println!("{}", r.report());
 

@@ -1,111 +1,246 @@
 //! Serving-layer throughput bench: one seeded hybrid workload through the
-//! sharded ServingEngine at 1/2/4/8 workers. Shard state is session-local,
-//! so every row serves identical hit/miss results (asserted) — the only
-//! thing the worker count changes is wall-clock. Quick sizes by default;
-//! paper-scale with CTXPILOT_FULL=1.
+//! sharded ServingEngine at 1/2/4/8 workers, with chunked-prefill
+//! admission off and on. Shard state is session-local, so every row serves
+//! identical hit/miss results (asserted — neither worker count nor
+//! chunking may change cache semantics); what moves is wall-clock and the
+//! queue-aware TTFT of short requests. Quick sizes by default; paper-scale
+//! with CTXPILOT_FULL=1. Machine-readable results land in
+//! `BENCH_serving.json` so future PRs have a perf trajectory to compare
+//! against.
 
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{corpus_for, full_mode};
 use contextpilot::pilot::PilotConfig;
 use contextpilot::serve::{ServeConfig, ServingEngine};
+use contextpilot::types::ServedRequest;
+use contextpilot::util::histogram::Summary;
+use contextpilot::util::json::Json;
+use contextpilot::util::prop::hit_miss_fingerprint;
 use contextpilot::util::table::{reset_result_file, Table};
 use contextpilot::workload::{hybrid, Dataset};
+
+const N_SHARDS: usize = 8;
+
+struct Row {
+    workers: usize,
+    prefill_chunk: Option<usize>,
+    wall_s: f64,
+    req_per_s: f64,
+    hit_ratio: f64,
+    p50_ttft: f64,
+    p99_ttft: f64,
+    p99_queued: f64,
+    p99_queued_short: f64,
+    cached_tokens: u64,
+    prefill_chunks: u64,
+}
+
+/// p99 over the queue-aware TTFT of the "short request" class chunking
+/// protects: requests whose uncached prefill fits a single chunk (they are
+/// never split, so round-robin admission can only move them earlier).
+/// Uses [`Summary`] so this column shares the percentile definition of
+/// every other latency figure in the table.
+fn p99_queued_short(served: &[ServedRequest], short_uncached_max: usize) -> f64 {
+    let mut s = Summary::new();
+    for r in served
+        .iter()
+        .filter(|r| r.prompt_tokens - r.cached_tokens <= short_uncached_max)
+    {
+        s.record(r.queued_ttft);
+    }
+    s.p99()
+}
+
+/// One sweep cell; `p99_queued_short` is left at 0 for the caller to fill
+/// in once the chunk budget (and hence the short-request class) is known.
+fn run_once(
+    w: &contextpilot::workload::Workload,
+    corpus: &contextpilot::corpus::Corpus,
+    workers: usize,
+    prefill_chunk: Option<usize>,
+) -> (Row, Vec<ServedRequest>) {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
+    cfg.n_shards = N_SHARDS;
+    cfg.n_workers = workers;
+    cfg.capacity_tokens = 60_000;
+    cfg.decode_tokens = 16;
+    cfg.pilot = Some(PilotConfig::default());
+    cfg.prefill_chunk = prefill_chunk;
+    let engine = ServingEngine::new(cfg);
+    let t0 = std::time::Instant::now();
+    let served = engine.serve_batch(&w.requests, corpus);
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut m, _) = engine.metrics();
+    let row = Row {
+        workers,
+        prefill_chunk,
+        wall_s: wall,
+        req_per_s: served.len() as f64 / wall.max(1e-9),
+        hit_ratio: m.hit_ratio(),
+        p50_ttft: m.ttft.p50(),
+        p99_ttft: m.ttft.p99(),
+        p99_queued: m.p99_queued_ttft(),
+        p99_queued_short: 0.0,
+        cached_tokens: m.total_cached_tokens,
+        prefill_chunks: m.total_prefill_chunks,
+    };
+    (row, served)
+}
 
 fn main() {
     let quick = !full_mode();
     reset_result_file("serving");
     let sessions = if quick { 192 } else { 768 };
     let turns = if quick { 3 } else { 6 };
-    let n_shards = 8;
     let w = hybrid(Dataset::MtRag, sessions, turns, 10, 0x5E27E);
     let corpus = corpus_for(Dataset::MtRag);
     let t_start = std::time::Instant::now();
 
+    // the first sweep cell (1 worker, unchunked) doubles as the probe: its
+    // prompt-length distribution fixes the chunk budget (below the longest
+    // prompt, so chunking actually triggers). "Short" requests are those
+    // whose uncached prefill fits one chunk — hit/miss results are
+    // invariant across rows (asserted below), so the class is identical in
+    // every run.
+    let probe_cell = run_once(&w, &corpus, 1, None);
+    let longest = probe_cell
+        .1
+        .iter()
+        .map(|s| s.prompt_tokens)
+        .max()
+        .expect("non-empty workload");
+    let chunk = (longest / 4).max(256);
+    assert!(chunk < longest, "chunk budget must sit below the longest prompt");
+    let n_short = probe_cell
+        .1
+        .iter()
+        .filter(|s| s.prompt_tokens - s.cached_tokens <= chunk)
+        .count();
+    let mut probe_cell = Some(probe_cell);
+
     let mut t = Table::new(
         &format!(
-            "Serving throughput — {} requests ({} sessions x {} turns, MT-RAG) over {} shards",
+            "Serving throughput — {} requests ({} sessions x {} turns, MT-RAG) over {} shards; chunk budget {} tok, {} single-chunk (short) requests",
             w.len(),
             sessions,
             turns,
-            n_shards
+            N_SHARDS,
+            chunk,
+            n_short
         ),
-        &["Workers", "Wall (s)", "Req/s", "Speedup vs 1w", "Hit ratio", "p50 TTFT", "p99 TTFT"],
+        &[
+            "Workers",
+            "Chunked",
+            "Wall (s)",
+            "Req/s",
+            "Speedup vs 1w",
+            "Hit ratio",
+            "p50 TTFT",
+            "p99 TTFT",
+            "p99 queued",
+            "p99 queued (short)",
+        ],
     );
-    let mut rps_1w = 0.0f64;
-    let mut hits_1w: Option<u64> = None;
-    let mut shard_table: Option<Table> = None;
-    for workers in [1usize, 2, 4, 8] {
-        let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
-        cfg.n_shards = n_shards;
-        cfg.n_workers = workers;
-        cfg.capacity_tokens = 60_000;
-        cfg.decode_tokens = 16;
-        cfg.pilot = Some(PilotConfig::default());
-        let engine = ServingEngine::new(cfg);
-        let t0 = std::time::Instant::now();
-        let served = engine.serve_batch(&w.requests, &corpus);
-        let wall = t0.elapsed().as_secs_f64();
-        let rps = served.len() as f64 / wall.max(1e-9);
-        if workers == 1 {
-            rps_1w = rps;
-        }
-        let (mut m, per) = engine.metrics();
-        // determinism pin: worker count must not change cache behaviour
-        let cached_total = m.total_cached_tokens;
-        match hits_1w {
-            None => hits_1w = Some(cached_total),
-            Some(h) => assert_eq!(
-                h, cached_total,
-                "worker count changed cache hits: {h} vs {cached_total}"
-            ),
-        }
-        t.row(vec![
-            format!("{workers}"),
-            format!("{wall:.3}"),
-            format!("{rps:.0}"),
-            format!("{:.2}x", rps / rps_1w.max(1e-9)),
-            format!("{:.1}%", m.hit_ratio() * 100.0),
-            format!("{:.4}s", m.ttft.p50()),
-            format!("{:.4}s", m.ttft.p99()),
-        ]);
-        if workers == 4 {
-            let mut st = Table::new(
-                "Per-shard stats (4 workers)",
-                &[
-                    "Shard",
-                    "Served",
-                    "Hit ratio",
-                    "p50 TTFT",
-                    "p99 TTFT",
-                    "Max queue",
-                    "Index nodes",
-                    "Sessions",
-                    "Resident tok",
-                ],
-            );
-            for s in per {
-                st.row(vec![
-                    format!("{}", s.shard),
-                    format!("{}", s.served),
-                    format!("{:.1}%", s.hit_ratio * 100.0),
-                    format!("{:.4}s", s.p50_ttft),
-                    format!("{:.4}s", s.p99_ttft),
-                    format!("{}", s.max_queue_depth),
-                    format!("{}", s.index_nodes),
-                    format!("{}", s.sessions),
-                    format!("{}", s.resident_tokens),
-                ]);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut baseline_fingerprint: Option<Vec<(u64, usize, usize)>> = None;
+    let mut rps_1w = vec![0.0f64; 2];
+    for (ci, prefill_chunk) in [None, Some(chunk)].into_iter().enumerate() {
+        for workers in [1usize, 2, 4, 8] {
+            // the (1 worker, unchunked) cell was already run as the probe
+            let (mut row, served) = match (workers, prefill_chunk) {
+                (1, None) => probe_cell.take().expect("probe consumed once"),
+                _ => run_once(&w, &corpus, workers, prefill_chunk),
+            };
+            row.p99_queued_short = p99_queued_short(&served, chunk);
+            // determinism pin: neither worker count nor chunking may change
+            // hit/miss results
+            let fp = hit_miss_fingerprint(&served);
+            match &baseline_fingerprint {
+                None => baseline_fingerprint = Some(fp),
+                Some(base) => assert_eq!(
+                    *base, fp,
+                    "workers={workers} chunk={prefill_chunk:?} changed hit/miss results"
+                ),
             }
-            shard_table = Some(st);
+            if workers == 1 {
+                rps_1w[ci] = row.req_per_s;
+            }
+            t.row(vec![
+                format!("{}", row.workers),
+                match row.prefill_chunk {
+                    Some(c) => format!("{c}"),
+                    None => "off".to_string(),
+                },
+                format!("{:.3}", row.wall_s),
+                format!("{:.0}", row.req_per_s),
+                format!("{:.2}x", row.req_per_s / rps_1w[ci].max(1e-9)),
+                format!("{:.1}%", row.hit_ratio * 100.0),
+                format!("{:.4}s", row.p50_ttft),
+                format!("{:.4}s", row.p99_ttft),
+                format!("{:.4}s", row.p99_queued),
+                format!("{:.4}s", row.p99_queued_short),
+            ]);
+            rows.push(row);
         }
     }
     t.emit("serving");
-    if let Some(st) = shard_table {
-        st.emit("serving");
-    }
+
+    // chunked prefill must not hurt short requests' queue-aware tail —
+    // with long prompts ahead of them it strictly helps (see the
+    // engine_trait integration test for the strict single-queue pin)
+    let unchunked_short = rows[0].p99_queued_short;
+    let chunked_short = rows[4].p99_queued_short;
+    assert!(
+        chunked_short <= unchunked_short + 1e-9,
+        "chunked p99 short {chunked_short} vs unchunked {unchunked_short}"
+    );
+    assert_eq!(
+        rows[0].cached_tokens, rows[4].cached_tokens,
+        "chunking changed cache totals"
+    );
     eprintln!(
-        "bench_serving done in {:.2}s (quick={})",
-        t_start.elapsed().as_secs_f64(),
-        quick
+        "p99 queued TTFT (short requests): {unchunked_short:.4}s unchunked -> {chunked_short:.4}s chunked"
+    );
+
+    // machine-readable trajectory for future PRs
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("workers", Json::num(r.workers as f64)),
+                (
+                    "prefill_chunk",
+                    r.prefill_chunk.map_or(Json::Null, |c| Json::num(c as f64)),
+                ),
+                ("wall_s", Json::num(r.wall_s)),
+                ("req_per_s", Json::num(r.req_per_s)),
+                ("hit_ratio", Json::num(r.hit_ratio)),
+                ("p50_ttft_s", Json::num(r.p50_ttft)),
+                ("p99_ttft_s", Json::num(r.p99_ttft)),
+                ("p99_queued_ttft_s", Json::num(r.p99_queued)),
+                ("p99_queued_ttft_short_s", Json::num(r.p99_queued_short)),
+                ("cached_tokens", Json::num(r.cached_tokens as f64)),
+                ("prefill_chunks", Json::num(r.prefill_chunks as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving")),
+        ("dataset", Json::str("mtrag-hybrid")),
+        ("requests", Json::num(w.len() as f64)),
+        ("sessions", Json::num(sessions as f64)),
+        ("turns", Json::num(turns as f64)),
+        ("shards", Json::num(N_SHARDS as f64)),
+        ("chunk_tokens", Json::num(chunk as f64)),
+        ("short_uncached_max_tokens", Json::num(chunk as f64)),
+        ("short_requests", Json::num(n_short as f64)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    let json_path = "BENCH_serving.json";
+    std::fs::write(json_path, format!("{doc}\n")).expect("write BENCH_serving.json");
+    eprintln!(
+        "bench_serving done in {:.2}s (quick={quick}); wrote {json_path}",
+        t_start.elapsed().as_secs_f64()
     );
 }

@@ -144,8 +144,14 @@ impl<V> RadixCache<V> {
         PrefixMatch { len: matched, path }
     }
 
-    /// How many leading tokens are cached, *without* counting it toward the
-    /// hit statistics (used by schedulers peeking at cache state).
+    /// How many leading tokens are cached, **observably side-effect-free**:
+    /// unlike [`RadixCache::match_prefix`] it neither advances the LRU
+    /// clock, nor touches `last_access`, nor counts toward
+    /// `stat_lookup_tokens`/`stat_matched_tokens`. Schedulers poll this
+    /// once per queued request per wave (LPM ordering, admission peeks), so
+    /// any stat or recency perturbation here would skew both the Fig. 12/13
+    /// counters and the eviction order. Contract pinned by
+    /// `peek_is_observably_side_effect_free` / `peek_agrees_with_match`.
     pub fn peek_prefix_len(&self, key: &[u32]) -> usize {
         let mut cur = ROOT;
         let mut matched = 0usize;
@@ -594,6 +600,72 @@ mod tests {
         assert_eq!(c.stat_inserted_tokens, 3);
         assert_eq!(c.stat_lookup_tokens, 5);
         assert_eq!(c.stat_matched_tokens, 4);
+    }
+
+    #[test]
+    fn peek_is_observably_side_effect_free() {
+        let mut c = cache(6);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[4, 5, 6], RequestId(2));
+        let (lookups, matched, inserted, evicted_toks) = (
+            c.stat_lookup_tokens,
+            c.stat_matched_tokens,
+            c.stat_inserted_tokens,
+            c.stat_evicted_tokens,
+        );
+        // hammer the LRU entry with peeks: stats must not move and the
+        // entry must NOT be refreshed (a match_prefix here would make
+        // request 2 the eviction victim instead)
+        for _ in 0..10 {
+            assert_eq!(c.peek_prefix_len(&[1, 2, 3]), 3);
+            assert_eq!(c.peek_prefix_len(&[1, 2, 9]), 2);
+            assert_eq!(c.peek_prefix_len(&[7]), 0);
+        }
+        assert_eq!(c.stat_lookup_tokens, lookups);
+        assert_eq!(c.stat_matched_tokens, matched);
+        assert_eq!(c.stat_inserted_tokens, inserted);
+        assert_eq!(c.stat_evicted_tokens, evicted_toks);
+        let (_, evicted) = c.insert(&[7, 8, 9], RequestId(3));
+        assert_eq!(
+            evicted,
+            vec![RequestId(1)],
+            "peek perturbed LRU recency"
+        );
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_agrees_with_match() {
+        use crate::util::prop::{check, Config};
+        use crate::util::prng::Rng;
+        check(
+            "peek_prefix_len == match_prefix().len",
+            Config {
+                cases: 128,
+                base_seed: 0x9EEC,
+                max_size: 24,
+            },
+            |rng: &mut Rng, size| {
+                let mut c = cache(1 << 16);
+                for i in 0..size.max(2) {
+                    let len = 1 + rng.below(12);
+                    let key: Vec<u32> = (0..len).map(|_| rng.below(6) as u32).collect();
+                    c.insert(&key, RequestId(i as u64));
+                }
+                for _ in 0..8 {
+                    let len = 1 + rng.below(14);
+                    let probe: Vec<u32> = (0..len).map(|_| rng.below(6) as u32).collect();
+                    let peeked = c.peek_prefix_len(&probe);
+                    let matched = c.match_prefix(&probe).len;
+                    if peeked != matched {
+                        return Err(format!(
+                            "probe {probe:?}: peek {peeked} != match {matched}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

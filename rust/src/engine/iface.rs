@@ -1,0 +1,116 @@
+//! The proxy ↔ engine contract (paper §4.1, Fig. 3).
+//!
+//! ContextPilot's headline architectural claim is a *clean interface that
+//! integrates with existing inference engines*: the proxy rewrites prompts
+//! and schedules batches, the engine owns the KV cache and reports
+//! evictions back by request id. [`InferenceEngine`] captures exactly that
+//! surface, so every serving layer ([`crate::serve`], the experiment
+//! runner, the CLI) is generic over the backend:
+//!
+//! ```text
+//!             ContextPilot proxy (align / dedup / annotate / Alg.-5)
+//!                               │ serve(request, prompt)
+//!                               ▼
+//!                    trait InferenceEngine
+//!                      │                │
+//!            ┌─────────┴───────┐ ┌──────┴─────────────┐
+//!            │ engine::SimEngine│ │ runtime::RealEngine│
+//!            │ (latency model + │ │ (TinyLM via PJRT,  │
+//!            │  radix cache)    │ │  `pjrt` feature)   │
+//!            └──────────────────┘ └────────────────────┘
+//! ```
+//!
+//! The trait is deliberately narrow: `serve` returns the engine request
+//! ids evicted to make room (the §4.1 eviction callback the proxy's
+//! context index consumes), `peek_cached`/`lpm_order` expose the
+//! side-effect-free cache introspection schedulers need, and
+//! `chunk_boundaries` exposes the prefix-shareable token offsets the
+//! chunked-prefill admission layer splits long prefills at.
+//!
+//! `Send` is a supertrait because the sharded [`crate::serve::ServingEngine`]
+//! moves one engine instance behind each shard mutex and drives shards
+//! from a worker pool.
+
+use crate::corpus::Corpus;
+use crate::quality::QualityModel;
+use crate::types::{Prompt, Request, RequestId, ServedRequest};
+
+/// Prefix-cache counters every engine exposes for telemetry
+/// ([`crate::metrics::ShardStats`], Fig. 12/13 reporting).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Tokens currently resident in the KV/prefix cache.
+    pub resident_tokens: usize,
+    /// Cache capacity in tokens.
+    pub capacity_tokens: usize,
+    /// Cumulative tokens looked up.
+    pub lookup_tokens: u64,
+    /// Cumulative tokens matched (hits).
+    pub matched_tokens: u64,
+    /// Cumulative tokens inserted.
+    pub inserted_tokens: u64,
+    /// Cumulative tokens evicted.
+    pub evicted_tokens: u64,
+}
+
+/// The engine side of the proxy↔engine contract (§4.1).
+///
+/// Implementations: [`crate::engine::sim::SimEngine`] (simulated latency
+/// model, always available), [`crate::runtime::RealEngine`] (PJRT-backed
+/// TinyLM, behind the `pjrt` feature) and
+/// [`crate::util::prop::MockEngine`] (scripted, for serving-layer tests).
+pub trait InferenceEngine: Send {
+    /// Serve one request: prefill `prompt` (reusing whatever prefix the
+    /// cache holds), decode, and return the served record plus the engine
+    /// request ids evicted to make room — the caller must feed those to
+    /// [`crate::pilot::ContextPilot::on_evict`] (§4.1).
+    fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>);
+
+    /// How many leading tokens of this prompt would hit the cache right
+    /// now. Must be observably side-effect-free: no LRU touch, no stat
+    /// counters (schedulers poll this per queued request).
+    fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize;
+
+    /// SGLang-style longest-prefix-match queue ordering: indices of
+    /// `batch` sorted by currently-cached baseline-prompt prefix length,
+    /// descending (stable, so arrival order breaks ties).
+    fn lpm_order(&mut self, batch: &[Request], corpus: &Corpus) -> Vec<usize> {
+        let peeks: Vec<usize> = batch
+            .iter()
+            .map(|r| self.peek_cached(r, &Prompt::baseline(r), corpus))
+            .collect();
+        let mut order: Vec<usize> = (0..batch.len()).collect();
+        order.sort_by(|&a, &b| peeks[b].cmp(&peeks[a]));
+        order
+    }
+
+    /// Whether baseline (pilot-less) queues should be LPM-ordered for this
+    /// engine. Engines whose reuse mechanism is not prefix-shaped (e.g.
+    /// CacheBlend-style block matching) serve in arrival order instead.
+    fn prefers_lpm(&self) -> bool {
+        true
+    }
+
+    /// Token offsets (ascending, last == total prompt tokens) at which the
+    /// rendered prompt can be split without breaking prefix sharing — the
+    /// positions where radix-cache nodes naturally end (segment/snapshot
+    /// boundaries). The chunked-prefill admission layer snaps chunk cuts
+    /// to these.
+    fn chunk_boundaries(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus)
+        -> Vec<usize>;
+
+    /// Conversation sessions tracked by this engine (serving telemetry).
+    fn session_count(&self) -> usize {
+        0
+    }
+
+    /// Prefix-cache occupancy and cumulative hit/miss counters.
+    fn cache_stats(&self) -> CacheStats;
+}

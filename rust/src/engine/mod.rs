@@ -1,13 +1,17 @@
-//! Inference-engine layer: cost profiles, prompt rendering, the simulated
+//! Inference-engine layer: the [`InferenceEngine`] trait (the proxy↔engine
+//! contract of §4.1), cost profiles, prompt rendering, the simulated
 //! serving engine (paper-scale sweeps), and the multi-worker router.
-//! The real PJRT-backed engine lives in [`crate::runtime`].
+//! The real PJRT-backed engine lives in [`crate::runtime`] and implements
+//! the same trait behind the `pjrt` feature.
 
 pub mod costmodel;
+pub mod iface;
 pub mod render;
 pub mod router;
 pub mod sim;
 
 pub use costmodel::{CostProfile, ModelSku};
+pub use iface::{CacheStats, InferenceEngine};
 pub use render::Renderer;
 pub use router::{RoutePolicy, Router};
 pub use sim::{ReusePolicy, SimEngine};

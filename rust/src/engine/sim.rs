@@ -18,6 +18,7 @@ use std::collections::{HashMap, HashSet};
 use crate::cache::RadixCache;
 use crate::corpus::Corpus;
 use crate::engine::costmodel::CostProfile;
+use crate::engine::iface::{CacheStats, InferenceEngine};
 use crate::engine::render::Renderer;
 use crate::quality::QualityModel;
 use crate::tokenizer::Tokenizer;
@@ -81,21 +82,6 @@ impl SimEngine {
     pub fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
         let tokens = self.assemble(req.session, prompt, corpus);
         self.cache.peek_prefix_len(&tokens)
-    }
-
-    /// SGLang-style longest-prefix-match queue ordering: indices of
-    /// `batch` sorted by currently-cached baseline-prompt prefix length,
-    /// descending (stable sort, so arrival order breaks ties). Shared by
-    /// the sequential runner and the sharded serving layer so their
-    /// baseline scheduling stays identical.
-    pub fn lpm_order(&mut self, batch: &[Request], corpus: &Corpus) -> Vec<usize> {
-        let peeks: Vec<usize> = batch
-            .iter()
-            .map(|r| self.peek_cached(r, &Prompt::baseline(r), corpus))
-            .collect();
-        let mut order: Vec<usize> = (0..batch.len()).collect();
-        order.sort_by(|&a, &b| peeks[b].cmp(&peeks[a]));
-        order
     }
 
     fn assemble(&mut self, session: SessionId, prompt: &Prompt, corpus: &Corpus) -> Vec<u32> {
@@ -230,9 +216,67 @@ impl SimEngine {
                 ttft,
                 wall,
                 quality: q,
+                queued_ttft: ttft,
+                prefill_chunks: 1,
             },
             evicted,
         )
+    }
+}
+
+/// The §4.1 proxy↔engine contract: every method delegates to the inherent
+/// implementation above, so concrete-typed callers (tests, examples) and
+/// generic serving code observe identical behaviour.
+impl InferenceEngine for SimEngine {
+    fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        SimEngine::serve(self, req, prompt, corpus, quality, decode_tokens)
+    }
+
+    fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
+        SimEngine::peek_cached(self, req, prompt, corpus)
+    }
+
+    // `lpm_order` uses the trait default (stable sort by `peek_cached`,
+    // descending) — one copy of the baseline scheduling logic for every
+    // engine.
+
+    /// Only the radix mechanism is prefix-shaped; the DocPrefix and
+    /// Approximate baselines serve queues in arrival order (mirroring
+    /// LMCache / CacheBlend schedulers).
+    fn prefers_lpm(&self) -> bool {
+        matches!(self.policy, ReusePolicy::RadixPrefix)
+    }
+
+    fn chunk_boundaries(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+    ) -> Vec<usize> {
+        let history_len = self.history.get(&req.session).map_or(0, |h| h.len());
+        self.segment_boundaries(history_len, prompt, corpus)
+    }
+
+    fn session_count(&self) -> usize {
+        SimEngine::session_count(self)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            resident_tokens: self.cache.resident_tokens(),
+            capacity_tokens: self.cache.capacity(),
+            lookup_tokens: self.cache.stat_lookup_tokens,
+            matched_tokens: self.cache.stat_matched_tokens,
+            inserted_tokens: self.cache.stat_inserted_tokens,
+            evicted_tokens: self.cache.stat_evicted_tokens,
+        }
     }
 }
 

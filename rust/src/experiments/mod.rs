@@ -24,7 +24,7 @@ pub mod table6;
 pub mod table7;
 pub mod table8;
 
-pub use runner::{corpus_for, run_f1, run_system, turn_waves, RunConfig, SystemKind};
+pub use runner::{corpus_for, run_f1, run_system, serve_config, turn_waves, RunConfig, SystemKind};
 
 /// Bench entry helper: true when CTXPILOT_FULL=1 (paper-scale sizes).
 pub fn full_mode() -> bool {

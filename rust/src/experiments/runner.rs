@@ -1,15 +1,25 @@
 //! Experiment driver: runs one (system, workload) pair through the
-//! simulated engine and collects metrics. Every bench table is produced
+//! serving pipeline and collects metrics. Every bench table is produced
 //! through this harness so systems differ *only* in their mechanism.
+//!
+//! Since the engine-generic refactor this module owns **no serve loop of
+//! its own**: [`run_system`] maps its [`RunConfig`] onto a single-shard,
+//! single-worker [`crate::serve::ServingEngine`] and submits one batch per
+//! arrival wave. The sequential path therefore *is* the sharded path at
+//! n = 1 — baseline LPM ordering, Alg.-5 scheduling, §4.1 eviction
+//! plumbing and metrics all live in one place ([`crate::serve`]).
+
+use std::collections::HashMap;
 
 use crate::corpus::{Corpus, CorpusConfig};
 use crate::engine::costmodel::ModelSku;
-use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::engine::sim::ReusePolicy;
 use crate::metrics::RunMetrics;
-use crate::pilot::{ContextPilot, PilotConfig};
+use crate::pilot::PilotConfig;
 use crate::quality::{ModelEra, QualityModel};
+use crate::serve::{ServeConfig, ServingEngine};
 use crate::tokenizer::Tokenizer;
-use crate::types::{Prompt, Request};
+use crate::types::{Request, RequestId};
 use crate::workload::{Dataset, DatasetProfile, Workload};
 
 /// The four systems of §7.
@@ -58,6 +68,15 @@ impl SystemKind {
             SystemKind::ContextPilot(_) => ReusePolicy::RadixPrefix,
         }
     }
+
+    /// The proxy configuration this system runs with (`None` = baseline
+    /// prompts, engine-only).
+    pub fn pilot_config(&self) -> Option<PilotConfig> {
+        match self {
+            SystemKind::ContextPilot(pc) => Some(pc.clone()),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -70,7 +89,8 @@ pub struct RunConfig {
     pub offline: bool,
     pub era: ModelEra,
     pub multi_hop: bool,
-    /// Per-request decode override (OpenClaw traces).
+    /// Per-request decode override (OpenClaw traces), indexed by workload
+    /// position.
     pub decode_override: Option<Vec<usize>>,
 }
 
@@ -86,6 +106,31 @@ impl RunConfig {
             decode_override: None,
         }
     }
+}
+
+/// Map an experiment run onto the serving layer: one shard, one worker —
+/// the sequential pipeline is literally the sharded pipeline at n = 1.
+/// Position-indexed decode overrides are rekeyed by request id (the
+/// generators guarantee ids are unique per workload).
+pub fn serve_config(system: &SystemKind, workload: &Workload, cfg: &RunConfig) -> ServeConfig {
+    let mut s = ServeConfig::new(cfg.sku);
+    s.n_shards = 1;
+    s.n_workers = 1;
+    s.capacity_tokens = cfg.capacity_tokens;
+    s.policy = system.reuse_policy();
+    s.pilot = system.pilot_config();
+    s.era = cfg.era;
+    s.multi_hop = cfg.multi_hop;
+    s.decode_tokens = cfg.decode_tokens;
+    s.decode_override = cfg.decode_override.as_ref().map(|v| {
+        workload
+            .requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.id, v.get(i).copied().unwrap_or(cfg.decode_tokens)))
+            .collect::<HashMap<RequestId, usize>>()
+    });
+    s
 }
 
 /// Split a request sequence into its arrival waves — maximal consecutive
@@ -127,64 +172,15 @@ pub fn run_system(
     corpus: &Corpus,
     cfg: &RunConfig,
 ) -> RunMetrics {
-    let quality = QualityModel::new(cfg.era, cfg.multi_hop);
-    let mut engine = SimEngine::new(cfg.sku.profile(), system.reuse_policy(), cfg.capacity_tokens);
-    let mut metrics = RunMetrics::new();
-
-    let mut pilot = match system {
-        SystemKind::ContextPilot(pc) => {
-            let mut p = ContextPilot::new(pc.clone());
-            if cfg.offline {
-                p.build_offline(&workload.requests);
-            }
-            Some(p)
-        }
-        _ => None,
-    };
-
-    let decode_of = |i: usize| -> usize {
-        cfg.decode_override
-            .as_ref()
-            .and_then(|v| v.get(i).copied())
-            .unwrap_or(cfg.decode_tokens)
-    };
-
+    let engine = ServingEngine::new(serve_config(system, workload, cfg));
+    if cfg.offline {
+        engine.build_offline(&workload.requests);
+    }
     // batches = arrival waves (consecutive same-turn runs)
     for (i, j) in turn_waves(&workload.requests) {
-        let batch = &workload.requests[i..j];
-        let batch_idx: Vec<usize> = (i..j).collect();
-
-        match &mut pilot {
-            Some(p) => {
-                // ContextPilot: rewrite + Alg.-5 schedule
-                let outputs = p.process_batch(batch, corpus);
-                for out in outputs {
-                    let gi = batch_idx
-                        [batch.iter().position(|r| r.id == out.request.id).unwrap()];
-                    let (served, evicted) =
-                        engine.serve(&out.request, &out.prompt, corpus, &quality, decode_of(gi));
-                    p.on_evict(&evicted);
-                    metrics.record(&served);
-                }
-            }
-            None => {
-                // baselines: LPM scheduling for RadixCache, arrival order
-                // for LMCache / CacheBlend
-                let order: Vec<usize> = match system {
-                    SystemKind::RadixCache => engine.lpm_order(batch, corpus),
-                    _ => (0..batch.len()).collect(),
-                };
-                for k in order {
-                    let r: &Request = &batch[k];
-                    let decode = decode_of(batch_idx[k]);
-                    let (served, _evicted) =
-                        engine.serve(r, &Prompt::baseline(r), corpus, &quality, decode);
-                    metrics.record(&served);
-                }
-            }
-        }
+        engine.serve_batch(&workload.requests[i..j], corpus);
     }
-    metrics
+    engine.metrics().0
 }
 
 /// Baseline-anchored F1 for a run: anchor = the RadixCache/LMCache prompt
@@ -263,5 +259,22 @@ mod tests {
             assert_eq!(m.len(), 60, "{}", s.name());
             assert!(m.prefill_throughput() > 0.0);
         }
+    }
+
+    #[test]
+    fn decode_override_is_rekeyed_by_request_id() {
+        let dataset = Dataset::MultihopRag;
+        let w = multi_session(dataset, 10, 5, 3);
+        let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_4B, dataset);
+        cfg.decode_override = Some((0..w.len()).map(|i| 4 + i).collect());
+        let scfg = serve_config(&SystemKind::RadixCache, &w, &cfg);
+        let map = scfg.decode_override.expect("override mapped");
+        assert_eq!(map.len(), w.len());
+        for (i, r) in w.requests.iter().enumerate() {
+            assert_eq!(map[&r.id], 4 + i);
+        }
+        assert_eq!(scfg.n_shards, 1);
+        assert_eq!(scfg.n_workers, 1);
+        assert!(scfg.pilot.is_none());
     }
 }

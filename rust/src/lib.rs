@@ -6,12 +6,35 @@
 //! - **Layer 3 (this crate)** — the paper's coordination contribution: a
 //!   context index ([`index`]), context alignment ([`align`]), request
 //!   scheduling ([`schedule`]), de-duplication ([`dedup`]) and annotations,
-//!   fronting an in-repo inference engine ([`engine`]) with a radix prefix
-//!   cache ([`cache`]). The concurrent sharded serving layer ([`serve`])
-//!   runs that whole pipeline for many sessions in parallel: sessions are
-//!   pinned to lock-striped shards (each owning a context index, a prefix
-//!   cache and an engine) and a worker pool drives shard queues, with
-//!   per-shard hit-rate/latency/queue metrics ([`metrics`]).
+//!   fronting any inference engine behind the
+//!   [`engine::InferenceEngine`] trait — the §4.1 proxy↔engine contract:
+//!
+//!   ```text
+//!   CLI / experiment runner / benches
+//!        │
+//!        ▼
+//!   serve::ServingEngine<E>      lock-striped shards + worker pool
+//!        │                       (the sequential runner is this at n = 1)
+//!        ▼
+//!   serve::Shard<E>              ContextPilot proxy ([`pilot`]) +
+//!        │                       chunked-prefill admission
+//!        │                       ([`serve::admission`])
+//!        ▼
+//!   engine::InferenceEngine      serve(request, prompt)
+//!        │        │                 -> (ServedRequest, evicted ids)
+//!        ▼        ▼
+//!   engine::SimEngine        runtime::RealEngine (`pjrt` feature)
+//!   (radix prefix cache      (TinyLM via PJRT, KV snapshots on the
+//!    [`cache`] + latency      same radix cache)
+//!    model)
+//!   ```
+//!
+//!   Sessions are pinned to shards (each owning a context index, a prefix
+//!   cache and an engine instance) and a worker pool drives shard queues;
+//!   prompts whose uncached prefill exceeds `--prefill-chunk` are split at
+//!   radix-node boundaries and interleaved across their shard queue so
+//!   short requests are not head-of-line blocked, with queue-aware TTFT
+//!   accounting in [`metrics`].
 //! - **Layer 2** — a JAX transformer (`python/compile/model.py`) AOT-lowered
 //!   to HLO text, executed from Rust via PJRT ([`runtime`]; gated on the
 //!   `pjrt` cargo feature, which needs the external `xla`/`anyhow` crates).

@@ -3,19 +3,23 @@
 //! Subcommands:
 //!   serve        run a workload through a system and print metrics
 //!                (--shards N --workers N switches to the concurrent
-//!                sharded ServingEngine and prints per-shard stats)
+//!                sharded ServingEngine and prints per-shard stats;
+//!                --engine sim|real selects the backend behind the
+//!                InferenceEngine trait; --prefill-chunk T enables
+//!                chunked-prefill admission)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
 //!                fig7, fig8, fig11, fig12, fig13, appendix_f, appendix_g)
 //!   index        build a context index over synthetic contexts and time it
 //!   demo         the quickstart walkthrough (see examples/quickstart.rs)
 
-use contextpilot::engine::ModelSku;
+use contextpilot::corpus::Corpus;
+use contextpilot::engine::{InferenceEngine, ModelSku};
 use contextpilot::experiments as exp;
 use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
 use contextpilot::pilot::PilotConfig;
-use contextpilot::serve::{ServeConfig, ServingEngine};
+use contextpilot::serve::ServingEngine;
 use contextpilot::util::cli::Args;
-use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset};
+use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset, Workload};
 
 fn parse_dataset(s: &str) -> Dataset {
     match s.to_ascii_lowercase().as_str() {
@@ -44,6 +48,105 @@ fn parse_system(s: &str) -> SystemKind {
     }
 }
 
+/// Drive a sharded serving engine (any backend) over the workload, one
+/// batch per arrival wave, then print aggregate + per-shard stats.
+fn drive_sharded<E: InferenceEngine>(
+    engine: &ServingEngine<E>,
+    system_name: &str,
+    dataset: Dataset,
+    workload: &Workload,
+    corpus: &Corpus,
+    offline: bool,
+    total_capacity_tokens: usize,
+) {
+    if offline {
+        engine.build_offline(&workload.requests);
+    }
+    // one batch per arrival wave, matching the sequential runner's
+    // batching so sharded and unsharded output stay comparable
+    let reqs = &workload.requests;
+    let t0 = std::time::Instant::now();
+    let mut served_total = 0usize;
+    for (i, j) in exp::turn_waves(reqs) {
+        served_total += engine.serve_batch(&reqs[i..j], corpus).len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut m, per_shard) = engine.metrics();
+    let cfg = engine.config();
+    println!("system           : {system_name} (sharded)");
+    println!("dataset          : {}", dataset.name());
+    println!(
+        "shards x workers : {} x {}",
+        engine.n_shards(),
+        engine.n_workers()
+    );
+    println!(
+        "KV budget        : {total_capacity_tokens} tokens total ({} per shard)",
+        cfg.capacity_tokens
+    );
+    match cfg.prefill_chunk {
+        Some(c) => println!("prefill chunk    : {c} tokens"),
+        None => println!("prefill chunk    : off (monolithic prefills)"),
+    }
+    println!("requests         : {served_total}");
+    println!(
+        "batch wall       : {:.3}s ({:.0} req/s)",
+        wall,
+        served_total as f64 / wall.max(1e-9)
+    );
+    println!("prefill tok/s    : {:.0}", m.prefill_throughput());
+    println!("prefill chunks   : {}", m.total_prefill_chunks);
+    println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
+    println!("mean TTFT        : {:.4}s", m.mean_ttft());
+    println!("p99 TTFT         : {:.4}s", m.p99_ttft());
+    println!("p99 queued TTFT  : {:.4}s", m.p99_queued_ttft());
+    for s in per_shard {
+        println!(
+            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions, {} resident tok",
+            s.shard,
+            s.served,
+            s.hit_ratio * 100.0,
+            s.p50_ttft,
+            s.p99_ttft,
+            s.p99_queued_ttft,
+            s.max_queue_depth,
+            s.prefill_chunks,
+            s.index_nodes,
+            s.sessions,
+            s.resident_tokens
+        );
+    }
+}
+
+/// `--engine real`: the PJRT-backed TinyLM engine behind the same trait.
+#[cfg(feature = "pjrt")]
+fn serve_real(
+    scfg: contextpilot::serve::ServeConfig,
+    system_name: &str,
+    dataset: Dataset,
+    workload: &Workload,
+    corpus: &Corpus,
+    offline: bool,
+    total_capacity_tokens: usize,
+) {
+    use contextpilot::runtime::{RealEngine, TinyLmRuntime};
+    let artifacts = std::env::var("CTXPILOT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = ServingEngine::with_engine_factory(scfg, |c| {
+        let rt = TinyLmRuntime::load(&artifacts)
+            .expect("load AOT artifacts (run `make artifacts` / python/compile/aot.py)");
+        RealEngine::new(rt, c.capacity_tokens)
+    });
+    drive_sharded(
+        &engine,
+        system_name,
+        dataset,
+        workload,
+        corpus,
+        offline,
+        total_capacity_tokens,
+    );
+}
+
 fn cmd_serve(args: &Args) {
     let dataset = parse_dataset(args.get_or("dataset", "multihoprag"));
     let system = parse_system(args.get_or("system", "contextpilot"));
@@ -66,69 +169,60 @@ fn cmd_serve(args: &Args) {
     cfg.offline = turns <= 1;
     cfg.capacity_tokens = args.get_usize("capacity", cfg.capacity_tokens);
 
+    let engine_kind = args.get_or("engine", "sim").to_string();
     let shards = args.get_usize("shards", 1);
     let workers = args.get_usize("workers", 1);
-    if shards > 1 || workers > 1 {
-        // concurrent sharded serving path
-        let mut scfg = ServeConfig::new(ModelSku::Qwen3_32B);
+    let prefill_chunk = args.get_usize("prefill-chunk", 0);
+
+    if shards > 1 || workers > 1 || prefill_chunk > 0 || engine_kind != "sim" {
+        // concurrent sharded serving path (trait-generic backend)
+        let mut scfg = exp::serve_config(&system, &workload, &cfg);
         scfg.n_shards = shards.max(1);
         scfg.n_workers = workers.max(1);
         // --capacity is the TOTAL KV budget in both modes: divide it across
         // shards so sharded and unsharded runs are capacity-comparable
-        let per_shard_cap = (cfg.capacity_tokens / shards.max(1)).max(1);
-        scfg.capacity_tokens = per_shard_cap;
-        scfg.policy = system.reuse_policy();
-        scfg.pilot = match &system {
-            SystemKind::ContextPilot(pc) => Some(pc.clone()),
-            _ => None,
-        };
-        scfg.era = cfg.era;
-        scfg.multi_hop = cfg.multi_hop;
-        scfg.decode_tokens = cfg.decode_tokens;
-        let engine = ServingEngine::new(scfg);
-        if cfg.offline {
-            engine.build_offline(&workload.requests);
-        }
-        // one batch per arrival wave, matching the sequential runner's
-        // batching so sharded and unsharded output stay comparable
-        let reqs = &workload.requests;
-        let t0 = std::time::Instant::now();
-        let mut served_total = 0usize;
-        for (i, j) in exp::turn_waves(reqs) {
-            served_total += engine.serve_batch(&reqs[i..j], &corpus).len();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let (mut m, per_shard) = engine.metrics();
-        println!("system           : {} (sharded)", system.name());
-        println!("dataset          : {}", dataset.name());
-        println!("shards x workers : {} x {}", shards.max(1), workers.max(1));
-        println!(
-            "KV budget        : {} tokens total ({per_shard_cap} per shard)",
-            cfg.capacity_tokens
-        );
-        println!("requests         : {served_total}");
-        println!(
-            "batch wall       : {:.3}s ({:.0} req/s)",
-            wall,
-            served_total as f64 / wall.max(1e-9)
-        );
-        println!("prefill tok/s    : {:.0}", m.prefill_throughput());
-        println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
-        println!("mean TTFT        : {:.4}s", m.mean_ttft());
-        println!("p99 TTFT         : {:.4}s", m.p99_ttft());
-        for s in per_shard {
-            println!(
-                "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, queue<={}, {} index nodes, {} sessions, {} resident tok",
-                s.shard,
-                s.served,
-                s.hit_ratio * 100.0,
-                s.p50_ttft,
-                s.p99_ttft,
-                s.max_queue_depth,
-                s.index_nodes,
-                s.sessions,
-                s.resident_tokens
-            );
+        scfg.capacity_tokens = (cfg.capacity_tokens / shards.max(1)).max(1);
+        scfg.prefill_chunk = (prefill_chunk > 0).then_some(prefill_chunk);
+        match engine_kind.as_str() {
+            "sim" => {
+                let engine = ServingEngine::new(scfg);
+                drive_sharded(
+                    &engine,
+                    system.name(),
+                    dataset,
+                    &workload,
+                    &corpus,
+                    cfg.offline,
+                    cfg.capacity_tokens,
+                );
+            }
+            "real" => {
+                #[cfg(feature = "pjrt")]
+                {
+                    serve_real(
+                        scfg,
+                        system.name(),
+                        dataset,
+                        &workload,
+                        &corpus,
+                        cfg.offline,
+                        cfg.capacity_tokens,
+                    );
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    eprintln!(
+                        "--engine real needs the PJRT runtime: build with \
+                         `--features pjrt` (plus the external xla/anyhow crates, \
+                         see rust/README.md)"
+                    );
+                    std::process::exit(2);
+                }
+            }
+            other => {
+                eprintln!("unknown engine '{other}' — try: sim | real");
+                std::process::exit(2);
+            }
         }
         return;
     }
@@ -218,6 +312,8 @@ fn main() {
             println!("  serve  --system pilot|radix|lmcache|cacheblend --dataset multihoprag");
             println!("         --workload multi-session|multi-turn|hybrid|mem0 --sessions N --k K");
             println!("         --shards N --workers N   (concurrent sharded serving layer)");
+            println!("         --engine sim|real        (backend behind the InferenceEngine trait)");
+            println!("         --prefill-chunk TOKENS   (chunked-prefill admission)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

@@ -8,12 +8,18 @@ use crate::util::histogram::Summary;
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
     pub ttft: Summary,
+    /// Queue-aware TTFT: completion on the shard's virtual clock, counting
+    /// time spent waiting behind (or interleaved with) the rest of the
+    /// admission wave — the metric chunked-prefill admission moves.
+    pub queued_ttft: Summary,
     pub wall: Summary,
     pub quality: Summary,
     pub prompt_tokens: Summary,
     pub total_prompt_tokens: u64,
     pub total_cached_tokens: u64,
     pub total_prefill_seconds: f64,
+    /// Prefill chunks issued (== requests served when chunking is off).
+    pub total_prefill_chunks: u64,
     /// (progress fraction of requests, cumulative hit ratio) samples for
     /// the Fig. 12 time series.
     pub hit_series: Vec<(f64, f64)>,
@@ -40,12 +46,14 @@ impl RunMetrics {
 
     pub fn record(&mut self, s: &ServedRequest) {
         self.ttft.record(s.ttft);
+        self.queued_ttft.record(s.queued_ttft);
         self.wall.record(s.wall);
         self.quality.record(s.quality);
         self.prompt_tokens.record(s.prompt_tokens as f64);
         self.total_prompt_tokens += s.prompt_tokens as u64;
         self.total_cached_tokens += s.cached_tokens as u64;
         self.total_prefill_seconds += s.ttft;
+        self.total_prefill_chunks += s.prefill_chunks as u64;
         self.n += 1;
         if self.n % self.series_every == 0 {
             self.hit_series.push((self.n as f64, self.hit_ratio()));
@@ -92,6 +100,10 @@ impl RunMetrics {
         self.ttft.p99()
     }
 
+    pub fn p99_queued_ttft(&mut self) -> f64 {
+        self.queued_ttft.p99()
+    }
+
     /// Fold another run's samples into this one (shard aggregation).
     ///
     /// Summaries and token totals combine exactly; the progress series are
@@ -100,12 +112,14 @@ impl RunMetrics {
     /// should read it per shard before merging.
     pub fn merge(&mut self, other: &RunMetrics) {
         self.ttft.merge(&other.ttft);
+        self.queued_ttft.merge(&other.queued_ttft);
         self.wall.merge(&other.wall);
         self.quality.merge(&other.quality);
         self.prompt_tokens.merge(&other.prompt_tokens);
         self.total_prompt_tokens += other.total_prompt_tokens;
         self.total_cached_tokens += other.total_cached_tokens;
         self.total_prefill_seconds += other.total_prefill_seconds;
+        self.total_prefill_chunks += other.total_prefill_chunks;
         self.hit_series.extend(other.hit_series.iter().copied());
         self.cached_series.extend(other.cached_series.iter().copied());
         self.n += other.n;
@@ -125,6 +139,11 @@ pub struct ShardStats {
     pub hit_ratio: f64,
     pub p50_ttft: f64,
     pub p99_ttft: f64,
+    /// p99 of queue-aware TTFT (waiting included) — what chunked-prefill
+    /// admission improves for short requests.
+    pub p99_queued_ttft: f64,
+    /// Prefill chunks issued by this shard (== served when chunking off).
+    pub prefill_chunks: u64,
     /// Alive nodes in the shard's context index (0 when serving baseline
     /// prompts without a pilot).
     pub index_nodes: usize,
@@ -155,6 +174,8 @@ mod tests {
             ttft,
             wall: ttft + 0.1,
             quality: q,
+            queued_ttft: ttft * 2.0,
+            prefill_chunks: 1,
         }
     }
 
@@ -183,6 +204,24 @@ mod tests {
         }
         assert_eq!(m.hit_series.len(), 5);
         assert_eq!(m.cached_series.last().unwrap().1, 50);
+    }
+
+    #[test]
+    fn queued_ttft_and_chunks_accumulate() {
+        let mut m = RunMetrics::new();
+        let mut s = served(100, 0, 0.2, 0.5);
+        s.prefill_chunks = 3;
+        m.record(&s);
+        m.record(&served(50, 0, 0.1, 0.5));
+        assert_eq!(m.total_prefill_chunks, 4);
+        // queued samples are tracked independently of raw ttft
+        assert!((m.queued_ttft.mean() - 0.3).abs() < 1e-9);
+        assert!((m.ttft.mean() - 0.15).abs() < 1e-9);
+        let mut other = RunMetrics::new();
+        other.record(&served(10, 0, 0.05, 0.5));
+        m.merge(&other);
+        assert_eq!(m.total_prefill_chunks, 5);
+        assert_eq!(m.queued_ttft.len(), 3);
     }
 
     #[test]

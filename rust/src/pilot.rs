@@ -67,10 +67,24 @@ impl PilotConfig {
 }
 
 /// One processed request: the rewritten prompt plus the metadata the
-/// engine/scheduler/metrics need.
+/// engine/scheduler/metrics need. Convenience shape for callers that want
+/// the request carried along; the serving hot path uses [`Rewrite`] (via
+/// [`ContextPilot::rewrite_batch`]) to avoid the owned `Request` copy.
 #[derive(Clone, Debug)]
 pub struct PilotOutput {
     pub request: Request,
+    pub prompt: Prompt,
+    /// Index search path (drives Alg.-5 grouping).
+    pub path: Vec<usize>,
+    pub aligned: Context,
+    pub dedup_stats: DedupStats,
+}
+
+/// The rewrite of one request, without an owned copy of the request
+/// itself — what [`crate::serve::Shard`] consumes on the hot path (the
+/// original `Request` stays borrowed from the caller's batch).
+#[derive(Clone, Debug)]
+pub struct Rewrite {
     pub prompt: Prompt,
     /// Index search path (drives Alg.-5 grouping).
     pub path: Vec<usize>,
@@ -127,7 +141,22 @@ impl ContextPilot {
     }
 
     /// Process one request: align → de-duplicate → annotate.
+    /// Thin wrapper over [`ContextPilot::rewrite`] that carries an owned
+    /// copy of the request (tests / sequential drivers).
     pub fn process(&mut self, req: &Request, corpus: &Corpus) -> PilotOutput {
+        let rw = self.rewrite(req, corpus);
+        PilotOutput {
+            request: req.clone(),
+            prompt: rw.prompt,
+            path: rw.path,
+            aligned: rw.aligned,
+            dedup_stats: rw.dedup_stats,
+        }
+    }
+
+    /// Rewrite one request (align → de-duplicate → annotate) without
+    /// cloning it — the serving hot path.
+    pub fn rewrite(&mut self, req: &Request, corpus: &Corpus) -> Rewrite {
         // ---- 1. alignment (§5) ------------------------------------------
         let (aligned, path) = if let Some((aligned, path)) = self.placements.get(&req.id) {
             (aligned.clone(), path.clone())
@@ -171,8 +200,7 @@ impl ContextPilot {
         }
         all.push(Segment::Question(req.query));
 
-        PilotOutput {
-            request: req.clone(),
+        Rewrite {
             prompt: Prompt { segments: all },
             path,
             aligned,
@@ -180,20 +208,42 @@ impl ContextPilot {
         }
     }
 
-    /// Process a batch and schedule it (Alg. 5): returns outputs in
-    /// execution order.
-    pub fn process_batch(&mut self, reqs: &[Request], corpus: &Corpus) -> Vec<PilotOutput> {
-        let outputs: Vec<PilotOutput> =
-            reqs.iter().map(|r| self.process(r, corpus)).collect();
+    /// Rewrite a batch and schedule it (Alg. 5): returns `(input index,
+    /// rewrite)` pairs in execution order. No `Request` or path clones —
+    /// scheduling borrows the search paths in place.
+    pub fn rewrite_batch(
+        &mut self,
+        reqs: &[Request],
+        corpus: &Corpus,
+    ) -> Vec<(usize, Rewrite)> {
+        let rewrites: Vec<Rewrite> = reqs.iter().map(|r| self.rewrite(r, corpus)).collect();
         if !self.cfg.schedule {
-            return outputs;
+            return rewrites.into_iter().enumerate().collect();
         }
-        let paths: Vec<Vec<usize>> = outputs.iter().map(|o| o.path.clone()).collect();
-        let order = schedule_by_paths(&paths);
-        let mut slots: Vec<Option<PilotOutput>> = outputs.into_iter().map(Some).collect();
+        let order = {
+            let paths: Vec<&[usize]> = rewrites.iter().map(|r| r.path.as_slice()).collect();
+            schedule_by_paths(&paths)
+        };
+        let mut slots: Vec<Option<Rewrite>> = rewrites.into_iter().map(Some).collect();
         order
             .into_iter()
-            .map(|i| slots[i].take().expect("schedule emitted duplicate index"))
+            .map(|i| (i, slots[i].take().expect("schedule emitted duplicate index")))
+            .collect()
+    }
+
+    /// Process a batch and schedule it (Alg. 5): returns outputs in
+    /// execution order. Wrapper over [`ContextPilot::rewrite_batch`] that
+    /// clones each request into its output.
+    pub fn process_batch(&mut self, reqs: &[Request], corpus: &Corpus) -> Vec<PilotOutput> {
+        self.rewrite_batch(reqs, corpus)
+            .into_iter()
+            .map(|(i, rw)| PilotOutput {
+                request: reqs[i].clone(),
+                prompt: rw.prompt,
+                path: rw.path,
+                aligned: rw.aligned,
+                dedup_stats: rw.dedup_stats,
+            })
             .collect()
     }
 }

@@ -13,7 +13,9 @@ use anyhow::Result;
 
 use crate::cache::RadixCache;
 use crate::corpus::Corpus;
+use crate::engine::iface::{CacheStats, InferenceEngine};
 use crate::engine::render::Renderer;
+use crate::quality::QualityModel;
 use crate::runtime::model::{KvState, TinyLmRuntime};
 use crate::tokenizer::Tokenizer;
 use crate::types::{Prompt, Request, RequestId, ServedRequest};
@@ -112,6 +114,7 @@ impl RealEngine {
         let mut evicted: Vec<RequestId> = Vec::new();
         let mut kv_cur = kv;
         let mut logits: Option<Vec<f32>> = None;
+        let mut prefill_runs = 0u32;
         if cached_len < total {
             // prefill segment-wise from the resume point, snapshotting at
             // every boundary
@@ -120,6 +123,7 @@ impl RealEngine {
                 let (lg, kv_next) = self.runtime.prefill(&tokens[pos..b], kv_cur)?;
                 kv_cur = kv_next;
                 logits = Some(lg);
+                prefill_runs += 1;
                 let snap = Arc::new(KvSnapshot {
                     literal: kv_cur.literal.clone(),
                     len: kv_cur.len,
@@ -158,9 +162,58 @@ impl RealEngine {
                 ttft,
                 wall,
                 quality: 0.0, // real engine measures latency, not the proxy
+                queued_ttft: ttft,
+                prefill_chunks: prefill_runs.max(1),
             },
             evicted,
             answer,
         ))
+    }
+}
+
+/// The §4.1 proxy↔engine contract for the PJRT-backed engine, so the
+/// generic serving layer ([`crate::serve::ServingEngine`]) can drive real
+/// model execution through the exact pipeline the simulated engine uses
+/// (`ctxpilot serve --engine real`). The quality model is a proxy-side
+/// concern, so it is ignored here; PJRT failures are fatal (the serving
+/// layer has no error channel, and a dead accelerator is not recoverable
+/// per-request).
+impl InferenceEngine for RealEngine {
+    fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        _quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        let (served, evicted, _answer) = RealEngine::serve(self, req, prompt, corpus, decode_tokens)
+            .expect("PJRT engine failure");
+        (served, evicted)
+    }
+
+    fn peek_cached(&mut self, _req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
+        let tokens = self.renderer.render(prompt, corpus);
+        self.cache.peek_prefix_len(&tokens)
+    }
+
+    fn chunk_boundaries(
+        &mut self,
+        _req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+    ) -> Vec<usize> {
+        self.boundaries(prompt, corpus)
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            resident_tokens: self.cache.resident_tokens(),
+            capacity_tokens: self.cache.capacity(),
+            lookup_tokens: self.cache.stat_lookup_tokens,
+            matched_tokens: self.cache.stat_matched_tokens,
+            inserted_tokens: self.cache.stat_inserted_tokens,
+            evicted_tokens: self.cache.stat_evicted_tokens,
+        }
     }
 }

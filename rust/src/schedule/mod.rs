@@ -15,13 +15,15 @@
 use std::collections::HashMap;
 
 /// Schedule items by their alignment search paths. Returns the execution
-/// order as indices into the input slice.
-pub fn schedule_by_paths(paths: &[Vec<usize>]) -> Vec<usize> {
+/// order as indices into the input slice. Generic over the path storage
+/// (`Vec<usize>`, `&[usize]`, …) so batch callers can schedule borrowed
+/// paths without cloning them into a side `Vec`.
+pub fn schedule_by_paths<P: AsRef<[usize]>>(paths: &[P]) -> Vec<usize> {
     // Phase 1: group by first path element (None for empty paths).
     let mut groups: HashMap<Option<usize>, Vec<usize>> = HashMap::new();
     let mut group_order: Vec<Option<usize>> = Vec::new();
     for (i, p) in paths.iter().enumerate() {
-        let key = p.first().copied();
+        let key = p.as_ref().first().copied();
         let entry = groups.entry(key).or_insert_with(|| {
             group_order.push(key);
             Vec::new()
@@ -31,7 +33,7 @@ pub fn schedule_by_paths(paths: &[Vec<usize>]) -> Vec<usize> {
     // Phase 2: in-group sort by path length, longest first (stable so
     // arrival order breaks ties deterministically).
     for g in groups.values_mut() {
-        g.sort_by(|&a, &b| paths[b].len().cmp(&paths[a].len()));
+        g.sort_by(|&a, &b| paths[b].as_ref().len().cmp(&paths[a].as_ref().len()));
     }
     // Phase 3: groups by size descending (stable on first-seen order).
     group_order.sort_by(|a, b| groups[b].len().cmp(&groups[a].len()));
@@ -134,7 +136,7 @@ mod tests {
 
     #[test]
     fn empty_and_single() {
-        assert!(schedule_by_paths(&[]).is_empty());
+        assert!(schedule_by_paths::<Vec<usize>>(&[]).is_empty());
         assert_eq!(schedule_by_paths(&[vec![7, 7]]), vec![0]);
     }
 

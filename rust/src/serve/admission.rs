@@ -1,0 +1,191 @@
+//! Chunked-prefill admission: head-of-line-blocking relief for long
+//! prompts (cf. Context Parallelism, Yang et al. 2024; FastKV, Jo et al.
+//! 2025 — long-context prefill as schedulable chunks, not one monolithic
+//! call).
+//!
+//! A shard queue is served by one engine; without chunking a million-token
+//! prefill occupies it end-to-end and every short request behind it eats
+//! the full delay. With `prefill_chunk` set, a request whose *uncached*
+//! prefill exceeds the chunk budget is split into chunks — cut points
+//! snapped to radix-node boundaries ([`crate::engine::InferenceEngine::
+//! chunk_boundaries`]) so chunk ends coincide with shareable prefixes —
+//! and the shard round-robins the queue one chunk at a time: a long
+//! request yields the engine to the requests behind it between chunks.
+//!
+//! Chunking is a *scheduling overlay*: the engine still performs each
+//! request's cache match/insert atomically in the pipeline's execution
+//! order, so hit/miss results are bit-identical with chunking on or off
+//! (chunked prefill computes the same tokens — only *when* they are
+//! computed changes). What moves is the per-request queue-aware TTFT
+//! ([`crate::types::ServedRequest::queued_ttft`]), accounted on a
+//! per-shard virtual clock and reported through
+//! [`crate::metrics::RunMetrics`].
+
+/// Split one served request's engine occupancy (`ttft` seconds covering
+/// its uncached prefill) into per-chunk durations.
+///
+/// * `prefill_chunk` — admission chunk budget in tokens; `None` disables
+///   chunking (single chunk).
+/// * `cached_tokens`/`prompt_tokens` — the request's hit/miss outcome;
+///   only the uncached region `[cached_tokens, prompt_tokens)` is chunked.
+/// * `boundaries` — ascending token offsets at which the prompt may be
+///   split (radix-node / segment ends). Cuts snap to the largest boundary
+///   within budget; a boundary gap wider than the budget falls back to a
+///   hard cut so a single giant block cannot defeat admission.
+///
+/// Durations are proportional to chunk token counts and always sum to
+/// `ttft` (the first chunk absorbs the constant overheads pro rata), so
+/// the virtual clock advances by exactly the unchunked amount in total.
+pub fn chunk_plan(
+    prefill_chunk: Option<usize>,
+    cached_tokens: usize,
+    prompt_tokens: usize,
+    ttft: f64,
+    boundaries: &[usize],
+) -> Vec<f64> {
+    let uncached = prompt_tokens.saturating_sub(cached_tokens);
+    let Some(chunk) = prefill_chunk else {
+        return vec![ttft];
+    };
+    let chunk = chunk.max(1);
+    if uncached <= chunk {
+        return vec![ttft];
+    }
+    let mut cuts: Vec<usize> = Vec::new();
+    let mut pos = cached_tokens;
+    while prompt_tokens - pos > chunk {
+        let snapped = boundaries
+            .iter()
+            .copied()
+            .filter(|&b| b > pos && b <= pos + chunk)
+            .max();
+        let cut = snapped.unwrap_or(pos + chunk);
+        cuts.push(cut);
+        pos = cut;
+    }
+    cuts.push(prompt_tokens);
+    let mut durations = Vec::with_capacity(cuts.len());
+    let mut prev = cached_tokens;
+    for &c in &cuts {
+        durations.push(ttft * (c - prev) as f64 / uncached as f64);
+        prev = c;
+    }
+    durations
+}
+
+/// Run one shard queue's chunk plans on a virtual clock with round-robin
+/// chunk admission: the queue is walked in execution order, each request
+/// runs one chunk per turn, and a request with chunks remaining rotates to
+/// the back of the queue. Single-chunk (short / unchunked) requests
+/// therefore complete on their first turn instead of waiting out every
+/// long prefill ahead of them; with all-single-chunk plans this degrades
+/// to plain FIFO (prefix sums).
+///
+/// Returns each request's completion time (its queue-aware TTFT), indexed
+/// like `plans`.
+pub fn interleave(plans: &[Vec<f64>]) -> Vec<f64> {
+    let mut queue: std::collections::VecDeque<usize> = (0..plans.len()).collect();
+    let mut next_chunk = vec![0usize; plans.len()];
+    let mut finish = vec![0f64; plans.len()];
+    let mut clock = 0f64;
+    while let Some(t) = queue.pop_front() {
+        match plans[t].get(next_chunk[t]).copied() {
+            Some(d) => {
+                clock += d;
+                next_chunk[t] += 1;
+                if next_chunk[t] < plans[t].len() {
+                    queue.push_back(t);
+                } else {
+                    finish[t] = clock;
+                }
+            }
+            // degenerate empty plan: completes instantly at the current clock
+            None => finish[t] = clock,
+        }
+    }
+    finish
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total(plan: &[f64]) -> f64 {
+        plan.iter().sum()
+    }
+
+    #[test]
+    fn unchunked_is_a_single_slot() {
+        assert_eq!(chunk_plan(None, 100, 500, 2.0, &[200, 300]), vec![2.0]);
+        // under budget: no split either
+        let p = chunk_plan(Some(1000), 0, 400, 1.5, &[100, 400]);
+        assert_eq!(p, vec![1.5]);
+    }
+
+    #[test]
+    fn cuts_snap_to_boundaries_and_durations_sum_to_ttft() {
+        // uncached region [0, 1000), budget 300, boundaries at multiples
+        // of 250: cuts must land on 250, 500, 750, 1000.
+        let bounds = [250, 500, 750, 1000];
+        let p = chunk_plan(Some(300), 0, 1000, 4.0, &bounds);
+        assert_eq!(p.len(), 4);
+        for d in &p {
+            assert!((d - 1.0).abs() < 1e-9, "equal 250-token chunks: {p:?}");
+        }
+        assert!((total(&p) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundary_gap_falls_back_to_hard_cut() {
+        // one giant block with no internal boundary: budget still splits it
+        let p = chunk_plan(Some(100), 0, 350, 3.5, &[350]);
+        assert_eq!(p.len(), 4); // 100 + 100 + 100 + 50
+        assert!((total(&p) - 3.5).abs() < 1e-9);
+        assert!(p[3] < p[0], "tail chunk is the 50-token remainder");
+    }
+
+    #[test]
+    fn cached_prefix_is_not_chunked() {
+        // 900 of 1000 tokens cached: uncached 100 <= budget 128 -> single
+        let p = chunk_plan(Some(128), 900, 1000, 0.3, &[500, 950, 1000]);
+        assert_eq!(p, vec![0.3]);
+        // uncached 300: cuts only in [700, 1000)
+        let p = chunk_plan(Some(128), 700, 1000, 0.9, &[100, 800, 900, 1000]);
+        assert_eq!(p.len(), 3);
+        assert!((total(&p) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interleave_of_single_chunks_is_fifo() {
+        let plans = vec![vec![1.0], vec![2.0], vec![0.5]];
+        assert_eq!(interleave(&plans), vec![1.0, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn short_request_overtakes_chunked_long_prefill() {
+        // long = 4 chunks of 1s, short = 0.1s: FIFO would make the short
+        // wait 4s; round-robin admits it after the first chunk.
+        let plans = vec![vec![1.0, 1.0, 1.0, 1.0], vec![0.1]];
+        let finish = interleave(&plans);
+        assert!((finish[1] - 1.1).abs() < 1e-9, "short at {}", finish[1]);
+        // the long request still completes at the total span
+        assert!((finish[0] - 4.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interleave_span_is_total_work() {
+        let plans = vec![vec![0.5, 0.5], vec![0.25], vec![1.0, 0.75]];
+        let finish = interleave(&plans);
+        let span = finish.iter().cloned().fold(0.0f64, f64::max);
+        let work: f64 = plans.iter().map(|p| total(p)).sum();
+        assert!((span - work).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_queue_and_empty_plan_are_safe() {
+        assert!(interleave(&[]).is_empty());
+        let finish = interleave(&[vec![], vec![1.0]]);
+        assert_eq!(finish[0], 0.0);
+        assert!((finish[1] - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,35 +1,61 @@
-//! The [`ServingEngine`]: a lock-striped shard array plus a worker pool.
-//! Callers hand it whole batches ([`ServingEngine::serve_batch`]) or
-//! stream single requests from many threads ([`ServingEngine::serve_one`]);
-//! either way each session's requests land on its pinned shard in arrival
-//! order, which is what makes results independent of the worker count.
+//! The [`ServingEngine`]: a lock-striped shard array plus a worker pool,
+//! generic over the backend ([`crate::engine::InferenceEngine`]). Callers
+//! hand it whole batches ([`ServingEngine::serve_batch`]) or stream single
+//! requests from many threads ([`ServingEngine::serve_one`]); either way
+//! each session's requests land on its pinned shard in arrival order,
+//! which is what makes results independent of the worker count.
+//!
+//! [`ServingEngine::new`] builds the default simulated backend
+//! ([`crate::engine::sim::SimEngine`]); [`ServingEngine::with_engine_factory`]
+//! accepts any engine constructor — the CLI's `--engine real` path hands
+//! it a PJRT-backed [`crate::runtime::RealEngine`] factory, tests hand it
+//! mocks and recording wrappers.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::corpus::Corpus;
+use crate::engine::iface::InferenceEngine;
+use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
 use crate::serve::shard::{shard_of, Shard};
 use crate::serve::ServeConfig;
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
 use crate::util::threadpool::par_map_tasks;
 
-pub struct ServingEngine {
+pub struct ServingEngine<E = SimEngine> {
     cfg: ServeConfig,
     /// Lock striping: one mutex per shard; concurrent callers contend only
     /// when they hit the same shard.
-    shards: Vec<Mutex<Shard>>,
+    shards: Vec<Mutex<Shard<E>>>,
     /// Engine request id → owning shard, so external eviction notifications
-    /// (§4.1) can be routed without broadcasting to every shard.
+    /// (§4.1) can be routed without broadcasting to every shard. Entries
+    /// are pruned by engine-reported and external evictions; under an
+    /// engine/policy that never evicts (e.g. CacheBlend-style block reuse)
+    /// the map grows with served-request count — acceptable at one small
+    /// entry per request, but a retention bound is the first thing to add
+    /// if this layer ever fronts an unbounded stream with such a policy.
     req_shard: Mutex<HashMap<RequestId, usize>>,
 }
 
-impl ServingEngine {
-    pub fn new(mut cfg: ServeConfig) -> ServingEngine {
+impl ServingEngine<SimEngine> {
+    /// Serving engine with the default simulated backend.
+    pub fn new(cfg: ServeConfig) -> ServingEngine<SimEngine> {
+        ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine)
+    }
+}
+
+impl<E: InferenceEngine> ServingEngine<E> {
+    /// Serving engine over an arbitrary backend: `factory` is called once
+    /// per shard (in shard order) to build that shard's engine instance.
+    pub fn with_engine_factory(
+        mut cfg: ServeConfig,
+        mut factory: impl FnMut(&ServeConfig) -> E,
+    ) -> ServingEngine<E> {
         cfg.n_shards = cfg.n_shards.max(1);
         cfg.n_workers = cfg.n_workers.max(1);
         let shards = (0..cfg.n_shards)
-            .map(|i| Mutex::new(Shard::new(i, &cfg)))
+            .map(|i| Mutex::new(Shard::new(i, &cfg, factory(&cfg))))
             .collect();
         ServingEngine {
             shards,
@@ -44,6 +70,11 @@ impl ServingEngine {
 
     pub fn n_workers(&self) -> usize {
         self.cfg.n_workers
+    }
+
+    /// The (normalized) configuration this engine runs with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
     }
 
     /// The shard a session is pinned to.
@@ -92,7 +123,8 @@ impl ServingEngine {
     /// *within* a batch, so submit one batch per arrival wave (e.g. per
     /// turn, as the experiment runner does) when turn ordering should be
     /// reflected in engine history; a whole multi-turn workload in one
-    /// batch is still deterministic, just scheduled as one wave.
+    /// batch is still deterministic, just scheduled as one wave. The
+    /// chunked-prefill virtual clock likewise spans one wave per shard.
     pub fn serve_batch(&self, reqs: &[Request], corpus: &Corpus) -> Vec<ServedRequest> {
         let queues = self.partition(reqs);
         let per_shard: Vec<Vec<(usize, ServedRequest)>> =
@@ -101,10 +133,10 @@ impl ServingEngine {
                 if idxs.is_empty() {
                     return Vec::new();
                 }
-                // the clone exists because ContextPilot::process_batch
-                // takes a contiguous &[Request]; it is one small Vec per
-                // request vs. the thousands of tokens rendered per serve,
-                // so borrowing is not worth rippling the pilot API.
+                // the clone exists because the pilot pipeline takes a
+                // contiguous &[Request]; it is one small Vec per request
+                // vs. the thousands of tokens rendered per serve, so
+                // borrowing is not worth rippling the pilot API.
                 let batch: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
                 let mut shard = self.shards[s].lock().expect("shard poisoned");
                 let (served, evicted) = shard.serve_queue(&batch, corpus);
@@ -276,7 +308,7 @@ mod tests {
         let engine = ServingEngine::new(small_cfg(3, 3));
         engine.build_offline(&reqs);
         let served = engine.serve_batch(&reqs, &corpus);
-        // ground truth per shard
+        // ground truth per shard: a hand-rolled concrete-engine pipeline
         for shard in 0..3 {
             let mine: Vec<Request> = reqs
                 .iter()
@@ -344,5 +376,28 @@ mod tests {
         let cached: usize = served.iter().map(|s| s.cached_tokens).sum();
         let total: usize = served.iter().map(|s| s.prompt_tokens).sum();
         assert!((agg.hit_ratio() - cached as f64 / total as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_admission_does_not_change_batch_results() {
+        let corpus = corpus();
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, i as u32 % 9, &[(i % 8) as u32 + 1, (i % 5) as u32 + 9, 20]))
+            .collect();
+        let plain = ServingEngine::new(small_cfg(4, 2));
+        let a = plain.serve_batch(&reqs, &corpus);
+        let mut cfg = small_cfg(4, 2);
+        cfg.prefill_chunk = Some(96);
+        let chunked = ServingEngine::new(cfg);
+        let b = chunked.serve_batch(&reqs, &corpus);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.id, y.request.id);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.cached_tokens, y.cached_tokens, "chunking changed cache semantics");
+        }
+        assert!(
+            b.iter().any(|s| s.prefill_chunks > 1),
+            "budget below prompt length must split at least one prefill"
+        );
     }
 }

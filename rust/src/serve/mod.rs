@@ -1,17 +1,32 @@
 //! Concurrent sharded serving layer — the production-scale front of the
 //! reproduction (ROADMAP north star; paper §4/Fig. 3 at serving scale).
 //!
-//! The single-threaded pipeline ([`crate::pilot`] → [`crate::engine::sim`])
-//! serves one request at a time. This module scales it out while keeping
-//! every result bit-identical to the sequential pipeline:
+//! Since the engine-generic refactor there is exactly **one** serving
+//! pipeline in the repo: the sequential experiment runner
+//! ([`crate::experiments::runner`]) is a single-shard, single-worker
+//! instance of this module, and every layer programs against the
+//! [`crate::engine::InferenceEngine`] trait rather than a concrete
+//! engine:
+//!
+//! ```text
+//!   callers (CLI serve / experiment runner / benches / tests)
+//!        │ serve_batch / serve_one / build_offline / on_evict
+//!        ▼
+//!   ServingEngine<E>  ── lock-striped Vec<Mutex<Shard<E>>> + worker pool
+//!        │ per-shard queues (sessions pinned by shard_of)
+//!        ▼
+//!   Shard<E>          ── ContextPilot proxy + chunked-prefill admission
+//!        │ serve(request, rewritten prompt)   ▲ evicted RequestIds (§4.1)
+//!        ▼                                    │
+//!   trait InferenceEngine ──► SimEngine | RealEngine (pjrt) | MockEngine
+//! ```
 //!
 //! * **Sharding** — sessions are pinned to shards by a deterministic hash
 //!   ([`shard_of`]). Each [`Shard`] owns a full pipeline instance: a
 //!   [`crate::pilot::ContextPilot`] (context index, conversation records)
-//!   and a [`crate::engine::sim::SimEngine`] (radix prefix cache, history).
-//!   Pinning keeps multi-turn history, §6 dedup records and §4.1 eviction
-//!   callbacks shard-local, so no cross-shard coordination is ever needed
-//!   on the hot path.
+//!   and an engine `E`. Pinning keeps multi-turn history, §6 dedup records
+//!   and §4.1 eviction callbacks shard-local, so no cross-shard
+//!   coordination is ever needed on the hot path.
 //! * **Lock striping** — the [`ServingEngine`] holds one mutex per shard;
 //!   concurrent callers contend only when they hit the same shard.
 //! * **Worker pool** — [`ServingEngine::serve_batch`] partitions a batch
@@ -20,25 +35,38 @@
 //!   the full pipeline (Alg.-1 search/insert, §5 alignment, §6 dedup,
 //!   §5.3 annotation, Alg.-5 scheduling, engine serve, §4.1 eviction sync)
 //!   in arrival order.
+//! * **Chunked-prefill admission** — with [`ServeConfig::prefill_chunk`]
+//!   set, a request whose uncached prefill exceeds the budget is split at
+//!   radix-node boundaries and round-robined across its shard queue, so
+//!   short requests are not head-of-line blocked behind giant prefills.
+//!   Cache semantics are provably unchanged; only the queue-aware TTFT
+//!   ([`crate::types::ServedRequest::queued_ttft`]) moves. See
+//!   [`admission`].
 //! * **Determinism** — shard state is session-local and queues preserve
 //!   arrival order, so hit/miss results are independent of `n_workers`
-//!   and equal to a single-shard ground-truth run of the same queue
-//!   (pinned by `rust/tests/serve_stress.rs`).
+//!   (and of `prefill_chunk`) and equal a single-shard ground-truth run of
+//!   the same queue (pinned by `rust/tests/serve_stress.rs` and
+//!   `rust/tests/engine_trait.rs`).
 //!
 //! Per-shard hit rate, queue depth and latency percentiles surface through
 //! [`crate::metrics::ShardStats`]; `benches/bench_serving.rs` reports
-//! whole-batch throughput across worker counts.
+//! whole-batch throughput across worker counts and chunk settings
+//! (`BENCH_serving.json`).
 
+pub mod admission;
 mod engine;
 mod shard;
 
 pub use engine::ServingEngine;
 pub use shard::{shard_of, Shard};
 
+use std::collections::HashMap;
+
 use crate::engine::costmodel::{CostProfile, ModelSku};
-use crate::engine::sim::ReusePolicy;
+use crate::engine::sim::{ReusePolicy, SimEngine};
 use crate::pilot::PilotConfig;
 use crate::quality::ModelEra;
+use crate::types::RequestId;
 
 /// Knobs of the sharded serving layer.
 #[derive(Clone, Debug)]
@@ -55,11 +83,20 @@ pub struct ServeConfig {
     /// Engine reuse mechanism under test.
     pub policy: ReusePolicy,
     /// ContextPilot proxy configuration; `None` serves baseline prompts
-    /// (engine-only, LPM-ordered within each shard queue).
+    /// (engine-only, LPM-ordered within each shard queue when the engine
+    /// prefers it).
     pub pilot: Option<PilotConfig>,
     pub era: ModelEra,
     pub multi_hop: bool,
     pub decode_tokens: usize,
+    /// Chunked-prefill admission budget in tokens: requests whose uncached
+    /// prefill exceeds this are split at radix-node boundaries and
+    /// interleaved across their shard queue ([`admission`]). `None`
+    /// disables chunking (monolithic prefills, FIFO accounting).
+    pub prefill_chunk: Option<usize>,
+    /// Per-request decode-length overrides (trace replay); requests not in
+    /// the map use `decode_tokens`.
+    pub decode_override: Option<HashMap<RequestId, usize>>,
 }
 
 impl ServeConfig {
@@ -76,7 +113,17 @@ impl ServeConfig {
             era: ModelEra::Modern,
             multi_hop: false,
             decode_tokens: 32,
+            prefill_chunk: None,
+            decode_override: None,
         }
+    }
+
+    /// The default engine for this config: a [`SimEngine`] built from the
+    /// profile / reuse policy / per-shard KV budget. Factory for
+    /// [`ServingEngine::new`] and the one place the serving layer names
+    /// the concrete simulated engine.
+    pub fn sim_engine(&self) -> SimEngine {
+        SimEngine::new(self.profile, self.policy, self.capacity_tokens)
     }
 }
 
@@ -91,6 +138,8 @@ mod tests {
         assert!(cfg.n_workers >= 1);
         assert!(cfg.pilot.is_some());
         assert!(cfg.capacity_tokens > 0);
+        assert!(cfg.prefill_chunk.is_none());
+        assert!(cfg.decode_override.is_none());
     }
 
     #[test]
@@ -98,5 +147,13 @@ mod tests {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ServeConfig>();
         assert_send_sync::<ServingEngine>();
+    }
+
+    #[test]
+    fn sim_engine_factory_respects_config() {
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.capacity_tokens = 1234;
+        let engine = cfg.sim_engine();
+        assert_eq!(engine.cache.capacity(), 1234);
     }
 }

@@ -1,14 +1,18 @@
-//! One serving shard: a ContextPilot proxy + simulated engine pair owning
-//! the sessions hashed to it. All mutable state is private to the shard,
-//! so interleavings of *other* shards cannot change this shard's results —
-//! the determinism contract `rust/tests/serve_stress.rs` pins down.
+//! One serving shard: a ContextPilot proxy + inference engine pair owning
+//! the sessions hashed to it. The shard is generic over the engine
+//! ([`crate::engine::InferenceEngine`]) — the same pipeline drives the
+//! simulated engine, the PJRT-backed real engine and test mocks. All
+//! mutable state is private to the shard, so interleavings of *other*
+//! shards cannot change this shard's results — the determinism contract
+//! `rust/tests/serve_stress.rs` pins down.
 
 use crate::corpus::Corpus;
-use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::engine::iface::InferenceEngine;
+use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
 use crate::pilot::ContextPilot;
 use crate::quality::QualityModel;
-use crate::serve::ServeConfig;
+use crate::serve::{admission, ServeConfig};
 use crate::types::{Prompt, Request, RequestId, ServedRequest, SessionId};
 use crate::util::prng::SplitMix64;
 
@@ -20,25 +24,59 @@ pub fn shard_of(session: SessionId, n_shards: usize) -> usize {
     (SplitMix64::new(session.0 as u64).next_u64() % n_shards.max(1) as u64) as usize
 }
 
-pub struct Shard {
+/// Per-request admission inputs: the decode budget and (when chunking is
+/// enabled) the radix-node boundaries of the prompt. A free function over
+/// the shard's disjoint fields so both serve paths can call it while the
+/// pilot is mutably borrowed. Boundary extraction re-renders the prompt
+/// segment-by-segment — a known second render on the chunked hot path
+/// (engines could return boundaries from `serve` itself to fold the two;
+/// not worth widening the trait until profiles say so) — which is why it
+/// is skipped entirely when `prefill_chunk` is off.
+fn admission_inputs<E: InferenceEngine>(
+    engine: &mut E,
+    decode_override: &Option<std::collections::HashMap<RequestId, usize>>,
+    decode_tokens: usize,
+    prefill_chunk: Option<usize>,
+    req: &Request,
+    prompt: &Prompt,
+    corpus: &Corpus,
+) -> (usize, Vec<usize>) {
+    let decode = decode_override
+        .as_ref()
+        .and_then(|m| m.get(&req.id).copied())
+        .unwrap_or(decode_tokens);
+    let boundaries = if prefill_chunk.is_some() {
+        engine.chunk_boundaries(req, prompt, corpus)
+    } else {
+        Vec::new()
+    };
+    (decode, boundaries)
+}
+
+pub struct Shard<E = SimEngine> {
     pub(crate) id: usize,
-    /// `None` = baseline mode: engine-only, LPM-ordered queues.
+    /// `None` = baseline mode: engine-only, LPM-ordered queues (when the
+    /// engine prefers LPM).
     pub(crate) pilot: Option<ContextPilot>,
-    pub(crate) engine: SimEngine,
+    pub(crate) engine: E,
     pub(crate) quality: QualityModel,
     pub(crate) decode_tokens: usize,
+    pub(crate) decode_override: Option<std::collections::HashMap<RequestId, usize>>,
+    pub(crate) prefill_chunk: Option<usize>,
     pub(crate) metrics: RunMetrics,
     pub(crate) max_queue_depth: usize,
 }
 
-impl Shard {
-    pub(crate) fn new(id: usize, cfg: &ServeConfig) -> Shard {
+impl<E: InferenceEngine> Shard<E> {
+    pub(crate) fn new(id: usize, cfg: &ServeConfig, engine: E) -> Shard<E> {
         Shard {
             id,
             pilot: cfg.pilot.clone().map(ContextPilot::new),
-            engine: SimEngine::new(cfg.profile, cfg.policy, cfg.capacity_tokens),
+            engine,
             quality: QualityModel::new(cfg.era, cfg.multi_hop),
             decode_tokens: cfg.decode_tokens,
+            decode_override: cfg.decode_override.clone(),
+            prefill_chunk: cfg.prefill_chunk,
             metrics: RunMetrics::new(),
             max_queue_depth: 0,
         }
@@ -49,6 +87,11 @@ impl Shard {
     /// reorder within the queue) and every engine request id evicted while
     /// serving; the evictions have already been fed back into this shard's
     /// context index (§4.1).
+    ///
+    /// Engine cache operations run atomically per request in execution
+    /// order regardless of chunking; the chunked-prefill admission overlay
+    /// only redistributes *when* each request's prefill time elapses on
+    /// the shard's virtual clock (`queued_ttft`).
     pub(crate) fn serve_queue(
         &mut self,
         batch: &[Request],
@@ -56,88 +99,145 @@ impl Shard {
     ) -> (Vec<ServedRequest>, Vec<RequestId>) {
         self.max_queue_depth = self.max_queue_depth.max(batch.len());
         let mut out = Vec::with_capacity(batch.len());
+        let mut plans: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
         let mut all_evicted = Vec::new();
         match &mut self.pilot {
             Some(pilot) => {
-                for o in pilot.process_batch(batch, corpus) {
-                    let (served, evicted) = self.engine.serve(
-                        &o.request,
-                        &o.prompt,
-                        corpus,
-                        &self.quality,
+                for (i, rw) in pilot.rewrite_batch(batch, corpus) {
+                    let req = &batch[i];
+                    let (decode, boundaries) = admission_inputs(
+                        &mut self.engine,
+                        &self.decode_override,
                         self.decode_tokens,
+                        self.prefill_chunk,
+                        req,
+                        &rw.prompt,
+                        corpus,
                     );
+                    let (served, evicted) =
+                        self.engine
+                            .serve(req, &rw.prompt, corpus, &self.quality, decode);
                     pilot.on_evict(&evicted);
                     all_evicted.extend(evicted);
-                    self.metrics.record(&served);
+                    plans.push(admission::chunk_plan(
+                        self.prefill_chunk,
+                        served.cached_tokens,
+                        served.prompt_tokens,
+                        served.ttft,
+                        &boundaries,
+                    ));
                     out.push(served);
                 }
             }
             None => {
-                // baseline: radix-cache serving uses longest-prefix-match
+                // baseline: radix-style engines use longest-prefix-match
                 // ordering within the queue (what SGLang's scheduler does);
-                // the other baseline mechanisms serve in arrival order —
-                // mirroring the sequential experiment runner so sharded and
-                // unsharded results stay comparable per system.
-                let order: Vec<usize> =
-                    if matches!(self.engine.policy, ReusePolicy::RadixPrefix) {
-                        self.engine.lpm_order(batch, corpus)
-                    } else {
-                        (0..batch.len()).collect()
-                    };
+                // non-prefix mechanisms serve in arrival order — mirroring
+                // the sequential experiment runner so sharded and unsharded
+                // results stay comparable per system.
+                let order: Vec<usize> = if self.engine.prefers_lpm() {
+                    self.engine.lpm_order(batch, corpus)
+                } else {
+                    (0..batch.len()).collect()
+                };
                 for i in order {
-                    let r = &batch[i];
-                    let (served, evicted) = self.engine.serve(
-                        r,
-                        &Prompt::baseline(r),
-                        corpus,
-                        &self.quality,
+                    let req = &batch[i];
+                    let prompt = Prompt::baseline(req);
+                    let (decode, boundaries) = admission_inputs(
+                        &mut self.engine,
+                        &self.decode_override,
                         self.decode_tokens,
+                        self.prefill_chunk,
+                        req,
+                        &prompt,
+                        corpus,
                     );
+                    let (served, evicted) =
+                        self.engine
+                            .serve(req, &prompt, corpus, &self.quality, decode);
                     all_evicted.extend(evicted);
-                    self.metrics.record(&served);
+                    plans.push(admission::chunk_plan(
+                        self.prefill_chunk,
+                        served.cached_tokens,
+                        served.prompt_tokens,
+                        served.ttft,
+                        &boundaries,
+                    ));
                     out.push(served);
                 }
             }
+        }
+        // admission accounting: one virtual clock per queue wave
+        let finish = admission::interleave(&plans);
+        for (k, served) in out.iter_mut().enumerate() {
+            served.queued_ttft = finish[k];
+            served.prefill_chunks = plans[k].len() as u32;
+            self.metrics.record(served);
         }
         (out, all_evicted)
     }
 
     /// Serve a single request (the streaming path). Identical pipeline to a
-    /// one-element queue: Alg.-5 scheduling of a singleton is the identity.
+    /// one-element queue: Alg.-5 scheduling of a singleton is the identity
+    /// and a singleton queue has nothing to interleave with, so
+    /// `queued_ttft == ttft`.
     pub(crate) fn serve_one(
         &mut self,
         req: &Request,
         corpus: &Corpus,
     ) -> (ServedRequest, Vec<RequestId>) {
         self.max_queue_depth = self.max_queue_depth.max(1);
-        let (served, evicted) = match &mut self.pilot {
+        let (mut served, evicted, boundaries) = match &mut self.pilot {
             Some(pilot) => {
-                let o = pilot.process(req, corpus);
-                let (served, evicted) = self.engine.serve(
-                    &o.request,
-                    &o.prompt,
-                    corpus,
-                    &self.quality,
+                let rw = pilot.rewrite(req, corpus);
+                let (decode, boundaries) = admission_inputs(
+                    &mut self.engine,
+                    &self.decode_override,
                     self.decode_tokens,
+                    self.prefill_chunk,
+                    req,
+                    &rw.prompt,
+                    corpus,
                 );
+                let (served, evicted) =
+                    self.engine
+                        .serve(req, &rw.prompt, corpus, &self.quality, decode);
                 pilot.on_evict(&evicted);
-                (served, evicted)
+                (served, evicted, boundaries)
             }
-            None => self.engine.serve(
-                req,
-                &Prompt::baseline(req),
-                corpus,
-                &self.quality,
-                self.decode_tokens,
-            ),
+            None => {
+                let prompt = Prompt::baseline(req);
+                let (decode, boundaries) = admission_inputs(
+                    &mut self.engine,
+                    &self.decode_override,
+                    self.decode_tokens,
+                    self.prefill_chunk,
+                    req,
+                    &prompt,
+                    corpus,
+                );
+                let (served, evicted) =
+                    self.engine
+                        .serve(req, &prompt, corpus, &self.quality, decode);
+                (served, evicted, boundaries)
+            }
         };
+        let plan = admission::chunk_plan(
+            self.prefill_chunk,
+            served.cached_tokens,
+            served.prompt_tokens,
+            served.ttft,
+            &boundaries,
+        );
+        served.queued_ttft = served.ttft;
+        served.prefill_chunks = plan.len() as u32;
         self.metrics.record(&served);
         (served, evicted)
     }
 
     /// Telemetry snapshot (sorts the latency samples for percentiles).
     pub(crate) fn stats(&mut self) -> ShardStats {
+        let cache = self.engine.cache_stats();
         ShardStats {
             shard: self.id,
             served: self.metrics.len(),
@@ -145,8 +245,10 @@ impl Shard {
             hit_ratio: self.metrics.hit_ratio(),
             p50_ttft: self.metrics.ttft.p50(),
             p99_ttft: self.metrics.ttft.p99(),
+            p99_queued_ttft: self.metrics.queued_ttft.p99(),
+            prefill_chunks: self.metrics.total_prefill_chunks,
             index_nodes: self.pilot.as_ref().map_or(0, |p| p.index_size()),
-            resident_tokens: self.engine.cache.resident_tokens(),
+            resident_tokens: cache.resident_tokens,
             sessions: self.engine.session_count(),
         }
     }
@@ -180,6 +282,10 @@ mod tests {
         )
     }
 
+    fn sim_shard(id: usize, cfg: &ServeConfig) -> Shard {
+        Shard::new(id, cfg, cfg.sim_engine())
+    }
+
     #[test]
     fn shard_of_is_deterministic_and_in_range() {
         for n in [1usize, 2, 5, 8, 64] {
@@ -209,9 +315,9 @@ mod tests {
         let corpus = corpus();
         let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
         let batch = vec![req(1, 1, &[1, 2, 3]), req(2, 2, &[1, 2, 9])];
-        let mut as_queue = Shard::new(0, &cfg);
+        let mut as_queue = sim_shard(0, &cfg);
         let (q, _) = as_queue.serve_queue(&batch, &corpus);
-        let mut one_by_one = Shard::new(0, &cfg);
+        let mut one_by_one = sim_shard(0, &cfg);
         // serve in the same execution order the queue chose
         for served in &q {
             let (s, _) = one_by_one.serve_one(&served.request, &corpus);
@@ -225,7 +331,7 @@ mod tests {
         let corpus = corpus();
         let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
         cfg.pilot = None;
-        let mut shard = Shard::new(0, &cfg);
+        let mut shard = sim_shard(0, &cfg);
         // warm the cache with {1,2,3}
         shard.serve_queue(&[req(1, 1, &[1, 2, 3])], &corpus);
         // a queue where the second request shares the cached prefix: LPM
@@ -239,7 +345,7 @@ mod tests {
     fn stats_reflect_served_traffic() {
         let corpus = corpus();
         let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
-        let mut shard = Shard::new(3, &cfg);
+        let mut shard = sim_shard(3, &cfg);
         let batch = vec![
             req(1, 1, &[1, 2, 3]),
             req(2, 2, &[1, 2, 9]),
@@ -254,5 +360,58 @@ mod tests {
         assert!(st.index_nodes > 1, "pilot index should hold leaves");
         assert!(st.resident_tokens > 0);
         assert!(st.p99_ttft >= st.p50_ttft);
+        // unchunked: one prefill slot per request, FIFO accounting
+        assert_eq!(st.prefill_chunks, 3);
+        assert!(st.p99_queued_ttft >= st.p99_ttft);
+    }
+
+    #[test]
+    fn queued_ttft_is_fifo_prefix_sum_without_chunking() {
+        let corpus = corpus();
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.pilot = None;
+        let mut shard = sim_shard(0, &cfg);
+        let batch = vec![req(1, 1, &[1, 2, 3]), req(2, 2, &[4, 5, 6])];
+        let (out, _) = shard.serve_queue(&batch, &corpus);
+        assert!((out[0].queued_ttft - out[0].ttft).abs() < 1e-12);
+        assert!((out[1].queued_ttft - (out[0].ttft + out[1].ttft)).abs() < 1e-9);
+        assert!(out.iter().all(|s| s.prefill_chunks == 1));
+    }
+
+    #[test]
+    fn chunking_preserves_results_and_unblocks_short_requests() {
+        let corpus = corpus();
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.pilot = None;
+        // long request (8 blocks) ahead of a short one (1 block), cold
+        // cache so LPM keeps arrival order
+        let batch = vec![req(1, 1, &[1, 2, 3, 4, 5, 6, 7, 8]), req(2, 2, &[9])];
+
+        let mut plain = sim_shard(0, &cfg);
+        let (unchunked, _) = plain.serve_queue(&batch, &corpus);
+
+        cfg.prefill_chunk = Some(64);
+        let mut chunked_shard = sim_shard(0, &cfg);
+        let (chunked, _) = chunked_shard.serve_queue(&batch, &corpus);
+
+        // cache semantics identical
+        for (a, b) in unchunked.iter().zip(&chunked) {
+            assert_eq!(a.request.id, b.request.id);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.cached_tokens, b.cached_tokens);
+            assert!((a.ttft - b.ttft).abs() < 1e-12);
+        }
+        // the long prefill was split; the short request was not
+        assert!(chunked[0].prefill_chunks > 1, "long prompt must chunk");
+        assert_eq!(chunked[1].prefill_chunks, 1);
+        // head-of-line relief: the short request finishes strictly earlier
+        assert!(
+            chunked[1].queued_ttft < unchunked[1].queued_ttft,
+            "chunked {} vs unchunked {}",
+            chunked[1].queued_ttft,
+            unchunked[1].queued_ttft
+        );
+        // conservation: the long request still pays its full prefill
+        assert!(chunked[0].queued_ttft >= unchunked[0].ttft - 1e-9);
     }
 }

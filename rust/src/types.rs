@@ -115,6 +115,15 @@ pub struct ServedRequest {
     pub wall: f64,
     /// Quality-model score in [0, 1] (the F1 proxy).
     pub quality: f64,
+    /// Queue-aware TTFT: when this request's prefill finished on the
+    /// shard's virtual clock, counting the time spent waiting behind (or
+    /// interleaved with) other requests of the same admission wave.
+    /// Engines set this to `ttft`; the chunked-prefill admission layer
+    /// ([`crate::serve::admission`]) overwrites it with the scheduled value.
+    pub queued_ttft: f64,
+    /// Number of prefill chunks admission split this request into
+    /// (1 = served as a single monolithic prefill).
+    pub prefill_chunks: u32,
 }
 
 impl ServedRequest {
@@ -165,6 +174,8 @@ mod tests {
             ttft: 0.0,
             wall: 0.0,
             quality: 0.0,
+            queued_ttft: 0.0,
+            prefill_chunks: 1,
         };
         assert_eq!(s.hit_ratio(), 0.0);
     }

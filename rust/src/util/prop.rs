@@ -179,6 +179,194 @@ pub fn gen_requests(
         .collect()
 }
 
+// ---- serving-layer test engines --------------------------------------------
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::corpus::Corpus;
+use crate::engine::iface::{CacheStats, InferenceEngine};
+use crate::quality::QualityModel;
+use crate::types::{Prompt, Request, RequestId, ServedRequest, SessionId};
+
+/// Hit/miss determinism fingerprint: `(request id, prompt tokens, cached
+/// tokens)` per served request. Worker count, chunking and backend choice
+/// must never change it — shared by the serving bench and the
+/// engine-trait integration tests.
+pub fn hit_miss_fingerprint(served: &[ServedRequest]) -> Vec<(u64, usize, usize)> {
+    served
+        .iter()
+        .map(|s| (s.request.id.0, s.prompt_tokens, s.cached_tokens))
+        .collect()
+}
+
+/// One proxy→engine interaction, as observed by [`RecordingEngine`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineCall {
+    /// Which shard's engine instance served it.
+    pub shard: usize,
+    pub request: RequestId,
+    /// Eviction callback the engine returned for this serve (§4.1).
+    pub evicted: Vec<RequestId>,
+}
+
+/// Shared interaction log, appendable from engines owned by shard mutexes.
+pub type EngineLog = Arc<Mutex<Vec<EngineCall>>>;
+
+/// Scripted [`InferenceEngine`] for serving-layer tests: deterministic
+/// token accounting (a fixed cost per prompt segment, no corpus access)
+/// and FIFO eviction under a token capacity — just enough behaviour to
+/// exercise the proxy↔engine contract without the simulated latency model.
+pub struct MockEngine {
+    pub tokens_per_segment: usize,
+    pub capacity_tokens: usize,
+    resident: VecDeque<(RequestId, usize)>,
+    resident_tokens: usize,
+    sessions: HashSet<SessionId>,
+    served: u64,
+}
+
+impl MockEngine {
+    pub fn new(tokens_per_segment: usize, capacity_tokens: usize) -> MockEngine {
+        MockEngine {
+            tokens_per_segment: tokens_per_segment.max(1),
+            capacity_tokens: capacity_tokens.max(1),
+            resident: VecDeque::new(),
+            resident_tokens: 0,
+            sessions: HashSet::new(),
+            served: 0,
+        }
+    }
+}
+
+impl InferenceEngine for MockEngine {
+    fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        _corpus: &Corpus,
+        _quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        let total = prompt.segments.len() * self.tokens_per_segment;
+        let ttft = 1e-3 + total as f64 * 1e-6;
+        self.sessions.insert(req.session);
+        self.served += 1;
+        self.resident.push_back((req.id, total));
+        self.resident_tokens += total;
+        let mut evicted = Vec::new();
+        while self.resident_tokens > self.capacity_tokens && self.resident.len() > 1 {
+            let (victim, len) = self.resident.pop_front().expect("non-empty queue");
+            self.resident_tokens -= len;
+            evicted.push(victim);
+        }
+        (
+            ServedRequest {
+                request: req.clone(),
+                prompt: prompt.clone(),
+                prompt_tokens: total,
+                cached_tokens: 0,
+                ttft,
+                wall: ttft + decode_tokens as f64 * 1e-6,
+                quality: 0.0,
+                queued_ttft: ttft,
+                prefill_chunks: 1,
+            },
+            evicted,
+        )
+    }
+
+    fn peek_cached(&mut self, _req: &Request, _prompt: &Prompt, _corpus: &Corpus) -> usize {
+        0
+    }
+
+    fn prefers_lpm(&self) -> bool {
+        false
+    }
+
+    fn chunk_boundaries(
+        &mut self,
+        _req: &Request,
+        prompt: &Prompt,
+        _corpus: &Corpus,
+    ) -> Vec<usize> {
+        (1..=prompt.segments.len())
+            .map(|i| i * self.tokens_per_segment)
+            .collect()
+    }
+
+    fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            resident_tokens: self.resident_tokens,
+            capacity_tokens: self.capacity_tokens,
+            lookup_tokens: self.served,
+            ..CacheStats::default()
+        }
+    }
+}
+
+/// Transparent [`InferenceEngine`] wrapper that appends every `serve`
+/// interaction (request id + eviction callback) to a shared [`EngineLog`].
+/// Used to assert that the serving layer issues *identical* engine-call
+/// sequences regardless of the backend behind the trait.
+pub struct RecordingEngine<E> {
+    pub inner: E,
+    pub shard_tag: usize,
+    pub log: EngineLog,
+}
+
+impl<E: InferenceEngine> InferenceEngine for RecordingEngine<E> {
+    fn serve(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+        quality: &QualityModel,
+        decode_tokens: usize,
+    ) -> (ServedRequest, Vec<RequestId>) {
+        let (served, evicted) = self.inner.serve(req, prompt, corpus, quality, decode_tokens);
+        self.log.lock().expect("engine log poisoned").push(EngineCall {
+            shard: self.shard_tag,
+            request: req.id,
+            evicted: evicted.clone(),
+        });
+        (served, evicted)
+    }
+
+    fn peek_cached(&mut self, req: &Request, prompt: &Prompt, corpus: &Corpus) -> usize {
+        self.inner.peek_cached(req, prompt, corpus)
+    }
+
+    fn lpm_order(&mut self, batch: &[Request], corpus: &Corpus) -> Vec<usize> {
+        self.inner.lpm_order(batch, corpus)
+    }
+
+    fn prefers_lpm(&self) -> bool {
+        self.inner.prefers_lpm()
+    }
+
+    fn chunk_boundaries(
+        &mut self,
+        req: &Request,
+        prompt: &Prompt,
+        corpus: &Corpus,
+    ) -> Vec<usize> {
+        self.inner.chunk_boundaries(req, prompt, corpus)
+    }
+
+    fn session_count(&self) -> usize {
+        self.inner.session_count()
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.inner.cache_stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +445,90 @@ mod tests {
                 *t += 1;
             }
         }
+    }
+
+    #[test]
+    fn mock_engine_evicts_fifo_and_tracks_sessions() {
+        use crate::corpus::CorpusConfig;
+        use crate::quality::{ModelEra, QualityModel};
+        use crate::tokenizer::Tokenizer;
+        use crate::types::{BlockId, QueryId};
+
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 8,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        );
+        let qm = QualityModel::new(ModelEra::Modern, false);
+        // 3 segments x 10 tokens per request, capacity 70 -> the 3rd serve
+        // overflows and evicts the oldest resident
+        let mut eng = MockEngine::new(10, 70);
+        let mk = |id: u64, session: u32| Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: vec![BlockId(1)],
+            query: QueryId(id),
+        };
+        let mut evictions = Vec::new();
+        for i in 0..3u64 {
+            let r = mk(i, i as u32);
+            let (served, ev) = eng.serve(&r, &Prompt::baseline(&r), &corpus, &qm, 4);
+            assert_eq!(served.prompt_tokens, 30);
+            evictions.extend(ev);
+        }
+        assert_eq!(evictions, vec![RequestId(0)]);
+        assert_eq!(eng.session_count(), 3);
+        assert!(eng.cache_stats().resident_tokens <= 70);
+        // boundaries are per-segment multiples
+        let r = mk(9, 9);
+        assert_eq!(
+            eng.chunk_boundaries(&r, &Prompt::baseline(&r), &corpus),
+            vec![10, 20, 30]
+        );
+    }
+
+    #[test]
+    fn recording_engine_logs_serves_and_evictions() {
+        use crate::corpus::CorpusConfig;
+        use crate::quality::{ModelEra, QualityModel};
+        use crate::tokenizer::Tokenizer;
+        use crate::types::{BlockId, QueryId};
+
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 8,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        );
+        let qm = QualityModel::new(ModelEra::Modern, false);
+        let log = EngineLog::default();
+        let mut eng = RecordingEngine {
+            inner: MockEngine::new(10, 1_000_000),
+            shard_tag: 7,
+            log: log.clone(),
+        };
+        let r = Request {
+            id: RequestId(42),
+            session: SessionId(1),
+            turn: 0,
+            context: vec![BlockId(2)],
+            query: QueryId(42),
+        };
+        eng.serve(&r, &Prompt::baseline(&r), &corpus, &qm, 4);
+        let calls = log.lock().unwrap();
+        assert_eq!(calls.len(), 1);
+        assert_eq!(
+            calls[0],
+            EngineCall {
+                shard: 7,
+                request: RequestId(42),
+                evicted: vec![]
+            }
+        );
     }
 
     #[test]

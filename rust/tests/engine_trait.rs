@@ -1,0 +1,221 @@
+//! Integration: the engine-generic serving layer.
+//!
+//! The `InferenceEngine` trait is the §4.1 proxy↔engine contract; these
+//! tests pin the property that makes it a *contract*: the serving layer's
+//! behaviour toward the engine — which requests it serves, in which order,
+//! and how eviction callbacks flow — is decided by the proxy pipeline and
+//! is identical for any backend behind the trait. Plus the chunked-prefill
+//! admission acceptance: chunking must never change cache semantics, and
+//! must improve the queue-aware tail latency of short requests stuck
+//! behind long prefills.
+
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::corpus_for;
+use contextpilot::serve::{ServeConfig, ServingEngine};
+use contextpilot::types::{BlockId, QueryId, Request, RequestId, ServedRequest, SessionId};
+use contextpilot::util::prng::Rng;
+use contextpilot::util::prop::{
+    check, gen_requests, hit_miss_fingerprint, Config, EngineCall, EngineLog, MockEngine,
+    RecordingEngine,
+};
+use contextpilot::workload::{hybrid, Dataset};
+
+fn base_cfg(shards: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+    cfg.n_shards = shards;
+    // single worker: shard queues drain in shard order, so the interaction
+    // logs below are strictly deterministic
+    cfg.n_workers = 1;
+    // roomy KV budget: no capacity evictions, so engine feedback cannot
+    // steer the pilot and the two backends face identical pipelines
+    cfg.capacity_tokens = 1 << 22;
+    cfg.decode_tokens = 8;
+    cfg
+}
+
+/// Serve `reqs` through a recorded ServingEngine built by `factory`-per-
+/// shard engines, returning the proxy→engine interaction sequence.
+fn record_run<E, F>(cfg: ServeConfig, reqs: &[Request], corpus: &contextpilot::corpus::Corpus, mut factory: F) -> Vec<EngineCall>
+where
+    E: contextpilot::engine::InferenceEngine,
+    F: FnMut(&ServeConfig) -> E,
+{
+    let log = EngineLog::default();
+    let engine = {
+        let log = log.clone();
+        let mut tag = 0usize;
+        ServingEngine::with_engine_factory(cfg, move |c| {
+            let e = RecordingEngine {
+                inner: factory(c),
+                shard_tag: tag,
+                log: log.clone(),
+            };
+            tag += 1;
+            e
+        })
+    };
+    engine.serve_batch(reqs, corpus);
+    let calls = log.lock().expect("log poisoned");
+    calls.clone()
+}
+
+// ---- satellite: MockEngine property ---------------------------------------
+
+#[test]
+fn mock_and_sim_issue_identical_engine_call_sequences() {
+    // For any workload, ServingEngine<MockEngine> and ServingEngine<SimEngine>
+    // must issue the same (request, evict-callback) sequence to their
+    // engines: partitioning, Alg.-5 scheduling and §4.1 plumbing live
+    // above the trait and may not depend on the backend.
+    let corpus = corpus_for(Dataset::MtRag);
+    check(
+        "serving layer is engine-agnostic",
+        Config {
+            cases: 10,
+            base_seed: 0x7A17,
+            max_size: 40,
+        },
+        |rng: &mut Rng, size| {
+            let reqs = gen_requests(rng, size.max(6), 9, 6, corpus.len());
+            let cfg = base_cfg(3);
+            let sim_calls =
+                record_run(cfg.clone(), &reqs, &corpus, |c: &ServeConfig| c.sim_engine());
+            let mock_calls = record_run(cfg, &reqs, &corpus, |_c: &ServeConfig| {
+                MockEngine::new(16, 1 << 30)
+            });
+            if sim_calls.len() != reqs.len() {
+                return Err(format!(
+                    "sim engine saw {} serves for {} requests",
+                    sim_calls.len(),
+                    reqs.len()
+                ));
+            }
+            if sim_calls != mock_calls {
+                return Err(format!(
+                    "engine-call sequences diverged:\n sim: {sim_calls:?}\n mock: {mock_calls:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mock_engine_eviction_callbacks_prune_the_pilot_index() {
+    // a tiny mock FIFO capacity forces per-serve evictions; the shard must
+    // feed them into its pilot, keeping the context index bounded
+    let corpus = corpus_for(Dataset::MtRag);
+    let mut rng = Rng::new(0xEE);
+    let reqs = gen_requests(&mut rng, 60, 6, 6, corpus.len());
+
+    let mut roomy_cfg = base_cfg(1);
+    roomy_cfg.n_shards = 1;
+    let roomy = ServingEngine::with_engine_factory(roomy_cfg, |_c| MockEngine::new(16, 1 << 30));
+    roomy.serve_batch(&reqs, &corpus);
+    let (_, roomy_stats) = roomy.metrics();
+
+    let mut tight_cfg = base_cfg(1);
+    tight_cfg.n_shards = 1;
+    let tight = ServingEngine::with_engine_factory(tight_cfg, |_c| MockEngine::new(16, 400));
+    tight.serve_batch(&reqs, &corpus);
+    let (_, tight_stats) = tight.metrics();
+
+    assert_eq!(roomy_stats[0].served, 60);
+    assert_eq!(tight_stats[0].served, 60);
+    assert!(
+        tight_stats[0].index_nodes < roomy_stats[0].index_nodes,
+        "evictions must prune the index: tight {} vs roomy {}",
+        tight_stats[0].index_nodes,
+        roomy_stats[0].index_nodes
+    );
+
+    // external §4.1 eviction of everything prunes each index to its root
+    let ids: Vec<RequestId> = reqs.iter().map(|r| r.id).collect();
+    roomy.on_evict(&ids);
+    let (_, per) = roomy.metrics();
+    assert!(per[0].index_nodes <= 1, "kept {} nodes", per[0].index_nodes);
+}
+
+// ---- acceptance: chunked-prefill admission --------------------------------
+
+#[test]
+fn chunking_never_changes_cache_semantics() {
+    let w = hybrid(Dataset::MtRag, 20, 3, 8, 0xC4A4);
+    let corpus = corpus_for(Dataset::MtRag);
+    let run = |chunk: Option<usize>| {
+        let mut cfg = base_cfg(4);
+        cfg.n_workers = 4;
+        cfg.capacity_tokens = 40_000;
+        cfg.prefill_chunk = chunk;
+        let engine = ServingEngine::new(cfg);
+        hit_miss_fingerprint(&engine.serve_batch(&w.requests, &corpus))
+    };
+    let base = run(None);
+    for chunk in [64usize, 300, 1_000, 10_000] {
+        assert_eq!(run(Some(chunk)), base, "chunk={chunk} changed hit/miss results");
+    }
+}
+
+#[test]
+fn chunking_improves_short_request_tail_latency() {
+    // single shard, baseline mode, cold cache: a short request queued
+    // behind a long prefill. Unchunked it waits out the whole prefill;
+    // chunked it is admitted after one chunk.
+    let corpus = corpus_for(Dataset::MtRag);
+    let req = |id: u64, session: u32, ids: &[u32]| Request {
+        id: RequestId(id),
+        session: SessionId(session),
+        turn: 0,
+        context: ids.iter().map(|&i| BlockId(i)).collect(),
+        query: QueryId(id),
+    };
+    let batch = vec![
+        req(1, 1, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]),
+        req(2, 2, &[20]),
+    ];
+    let run = |chunk: Option<usize>| {
+        let mut cfg = base_cfg(1);
+        cfg.pilot = None;
+        cfg.prefill_chunk = chunk;
+        let engine = ServingEngine::new(cfg);
+        engine.serve_batch(&batch, &corpus)
+    };
+    let plain = run(None);
+    let chunked = run(Some(64));
+    // identical serving outcomes...
+    assert_eq!(hit_miss_fingerprint(&plain), hit_miss_fingerprint(&chunked));
+    // ...split prefill for the long request only...
+    assert!(chunked[0].prefill_chunks > 1, "long prompt must chunk");
+    assert_eq!(chunked[1].prefill_chunks, 1);
+    assert_eq!(plain[0].prefill_chunks, 1);
+    // ...and a strictly better queue-aware tail for the short request
+    assert!(
+        chunked[1].queued_ttft < plain[1].queued_ttft,
+        "short request not unblocked: chunked {} vs plain {}",
+        chunked[1].queued_ttft,
+        plain[1].queued_ttft
+    );
+    // conservation: total engine occupancy is unchanged
+    let span = |v: &[ServedRequest]| v.iter().map(|s| s.queued_ttft).fold(0.0f64, f64::max);
+    assert!((span(&plain) - span(&chunked)).abs() < 1e-9);
+}
+
+#[test]
+fn streaming_path_reports_singleton_admission() {
+    let corpus = corpus_for(Dataset::MtRag);
+    let mut cfg = base_cfg(2);
+    cfg.prefill_chunk = Some(64);
+    let engine = ServingEngine::new(cfg);
+    let r = Request {
+        id: RequestId(5),
+        session: SessionId(3),
+        turn: 0,
+        context: (1u32..=10).map(BlockId).collect(),
+        query: QueryId(5),
+    };
+    let served = engine.serve_one(&r, &corpus);
+    // a singleton has nothing to interleave with: queued == raw TTFT, but
+    // the chunk accounting still reflects the split
+    assert!((served.queued_ttft - served.ttft).abs() < 1e-12);
+    assert!(served.prefill_chunks > 1);
+}
