@@ -1,5 +1,13 @@
 //! Prefix-cache substrate: the KV reuse layer of the inference engine.
+//!
+//! [`RadixCache`] is the GPU-resident (HBM) tier; [`TierStore`] adds the
+//! DRAM/SSD tiers behind it so capacity eviction demotes KV instead of
+//! discarding it, with cost-aware admission and promotion ([`policy`]).
 
+pub mod policy;
 pub mod radix;
+pub mod tier;
 
-pub use radix::{PrefixMatch, RadixCache};
+pub use policy::{AdmissionPolicy, TierCosts};
+pub use radix::{EvictedEntry, PrefixMatch, RadixCache};
+pub use tier::{Promotion, Tier, TierConfig, TierStore};

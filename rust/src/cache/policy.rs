@@ -1,0 +1,116 @@
+//! Cost-aware tiering policy: when is a KV block worth *keeping* in a
+//! colder tier (demotion admission), and when is a cold block worth
+//! *reloading* instead of recomputing (promotion profitability)?
+//!
+//! The decision mirrors the latency model ([`crate::engine::costmodel`]):
+//! recomputing `n` tokens costs `n / prefill_rate` seconds of engine
+//! occupancy, while reloading them from a tier costs a fixed per-entry
+//! overhead plus a per-token transfer cost. A tier whose reload is slower
+//! than recompute is worse than a discard — caching there would *add*
+//! latency on every future hit — so [`AdmissionPolicy::CostAware`] refuses
+//! it. The same comparison gates promotion: a stored prefix is reloaded
+//! only when the load beats recomputing the promoted span.
+
+/// Per-tier reload cost model: what it takes to bring KV for `n` tokens
+/// back into HBM from this tier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierCosts {
+    /// Per-token transfer cost (seconds/token).
+    pub load_s_per_tok: f64,
+    /// Fixed per-entry cost (lookup, page-in, kernel launch) in seconds —
+    /// this is what makes tiny entries not worth demoting.
+    pub load_overhead_s: f64,
+}
+
+impl TierCosts {
+    /// DRAM (CPU-offload) defaults: the per-token cost matches the LMCache
+    /// offload penalty the experiment runner charges
+    /// ([`crate::experiments::SystemKind::LMCache`], 6 µs/token).
+    pub fn dram_default() -> TierCosts {
+        TierCosts {
+            load_s_per_tok: 6e-6,
+            load_overhead_s: 5e-4,
+        }
+    }
+
+    /// SSD (NVMe) defaults: ~3x DRAM per-token, larger fixed cost. Sits
+    /// below recompute for large dense models (Qwen3-32B: 50 µs/token)
+    /// and *above* it for small fast ones (Qwen3-4B: ~17 µs/token), so
+    /// the cost-aware policy genuinely bites per SKU.
+    pub fn ssd_default() -> TierCosts {
+        TierCosts {
+            load_s_per_tok: 2e-5,
+            load_overhead_s: 2e-3,
+        }
+    }
+
+    /// Seconds to reload an `n`-token entry from this tier.
+    pub fn reload_s(&self, n: usize) -> f64 {
+        self.load_overhead_s + n as f64 * self.load_s_per_tok
+    }
+}
+
+/// Demotion-admission / promotion-profitability policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit every evicted block (capacity permitting). Useful as the
+    /// ablation baseline: shows what naive tiering costs.
+    Always,
+    /// Admit only blocks cheaper to reload than to recompute:
+    /// `reload_s(n) < n / prefill_rate`.
+    CostAware,
+}
+
+impl AdmissionPolicy {
+    /// Is an `n`-token span worth holding in (or reloading from) a tier
+    /// with the given costs, when recompute runs at
+    /// `recompute_s_per_tok` seconds/token?
+    pub fn admits(&self, costs: &TierCosts, recompute_s_per_tok: f64, n: usize) -> bool {
+        match self {
+            AdmissionPolicy::Always => true,
+            AdmissionPolicy::CostAware => costs.reload_s(n) < n as f64 * recompute_s_per_tok,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reload_cost_is_affine() {
+        let c = TierCosts {
+            load_s_per_tok: 1e-5,
+            load_overhead_s: 1e-3,
+        };
+        assert!((c.reload_s(0) - 1e-3).abs() < 1e-12);
+        assert!((c.reload_s(1000) - 11e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_aware_refuses_tiny_entries() {
+        // overhead dominates small spans: reload 10 tokens from DRAM
+        // (0.5 ms + 60 µs) vs recompute at 50 µs/token (0.5 ms) -> refuse
+        let dram = TierCosts::dram_default();
+        let recompute = 5e-5; // Qwen3-32B
+        assert!(!AdmissionPolicy::CostAware.admits(&dram, recompute, 10));
+        assert!(AdmissionPolicy::CostAware.admits(&dram, recompute, 1000));
+        // Always admits anything
+        assert!(AdmissionPolicy::Always.admits(&dram, recompute, 1));
+    }
+
+    #[test]
+    fn cost_aware_is_sku_sensitive() {
+        let ssd = TierCosts::ssd_default();
+        // 32B dense: recompute 50 µs/token -> SSD (20 µs/token) wins
+        assert!(AdmissionPolicy::CostAware.admits(&ssd, 5e-5, 10_000));
+        // 4B: recompute ~17 µs/token -> SSD reload is slower, refuse
+        assert!(!AdmissionPolicy::CostAware.admits(&ssd, 1.0 / 60_000.0, 10_000));
+    }
+
+    #[test]
+    fn zero_tokens_never_admitted_cost_aware() {
+        let dram = TierCosts::dram_default();
+        assert!(!AdmissionPolicy::CostAware.admits(&dram, 1e-3, 0));
+    }
+}

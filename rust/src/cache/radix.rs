@@ -9,10 +9,30 @@
 //! ContextPilot integration (paper §4.1): every insert is tagged with the
 //! engine `RequestId`; `evict` returns the request ids of removed nodes so
 //! the context index can prune the matching entries.
+//!
+//! Tiered mode ([`RadixCache::enable_demotion`]): eviction becomes
+//! *demotion* — removed leaves are reconstructed into root-anchored
+//! [`EvictedEntry`]s (full token prefix + request-id tags + payload) and
+//! buffered for a [`crate::cache::TierStore`] to absorb, and the §4.1
+//! prune list stays empty until the tier store finally discards an entry
+//! (the content is still servable while it sits in DRAM/SSD).
 
 use std::collections::HashMap;
 
 use crate::types::RequestId;
+
+/// A radix entry removed by eviction, reconstructed as a root-anchored
+/// token prefix — what a demotion sink ([`crate::cache::TierStore`])
+/// consumes. The payload travels with it so demote-then-promote
+/// round-trips KV byte-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvictedEntry<V> {
+    /// Full token prefix from the root through the evicted node.
+    pub tokens: Vec<u32>,
+    /// Request ids tagged on the evicted node (§4.1 ownership).
+    pub request_ids: Vec<RequestId>,
+    pub payload: Option<V>,
+}
 
 pub type NodeId = usize;
 const ROOT: NodeId = 0;
@@ -40,6 +60,10 @@ pub struct RadixCache<V> {
     capacity: usize,
     resident: usize,
     clock: u64,
+    /// Demotion mode: evicted leaves are buffered as [`EvictedEntry`]s
+    /// instead of reporting their request ids for index pruning.
+    demote: bool,
+    demoted: Vec<EvictedEntry<V>>,
     /// Cumulative counters for Fig. 12/13 style reporting.
     pub stat_matched_tokens: u64,
     pub stat_lookup_tokens: u64,
@@ -74,6 +98,8 @@ impl<V> RadixCache<V> {
             capacity: capacity_tokens,
             resident: 0,
             clock: 0,
+            demote: false,
+            demoted: Vec::new(),
             stat_matched_tokens: 0,
             stat_lookup_tokens: 0,
             stat_inserted_tokens: 0,
@@ -87,6 +113,87 @@ impl<V> RadixCache<V> {
 
     pub fn resident_tokens(&self) -> usize {
         self.resident
+    }
+
+    /// Switch eviction from discard to demotion: removed leaves are
+    /// reconstructed into [`EvictedEntry`]s (drain with
+    /// [`RadixCache::take_demotions`]) and the request ids returned by
+    /// `insert`/`evict_tokens` no longer include them — the caller prunes
+    /// the §4.1 index only when the tier store reports a final discard.
+    pub fn enable_demotion(&mut self) {
+        self.demote = true;
+    }
+
+    pub fn demotion_enabled(&self) -> bool {
+        self.demote
+    }
+
+    /// Drain the demotion buffer (entries evicted since the last drain, in
+    /// eviction order). Observably side-effect-free on cache state: no
+    /// clock tick, no recency touch, no stat change.
+    pub fn take_demotions(&mut self) -> Vec<EvictedEntry<V>> {
+        std::mem::take(&mut self.demoted)
+    }
+
+    /// Current LRU clock — exposed so tests can *prove* peek paths never
+    /// advance recency (`peek_is_observably_side_effect_free`).
+    pub fn lru_clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Root-anchored token prefix ending at `id` (demotion reconstruction;
+    /// touches nothing).
+    fn full_key(&self, id: NodeId) -> Vec<u32> {
+        let mut chain = Vec::new();
+        let mut cur = id;
+        while cur != ROOT {
+            chain.push(cur);
+            cur = self.nodes[cur].parent;
+        }
+        let mut out = Vec::new();
+        for &n in chain.iter().rev() {
+            out.extend_from_slice(&self.nodes[n].tokens);
+        }
+        out
+    }
+
+    /// Append `reqs` to the request-id tags of every node on the matched
+    /// path of `key`. Promotion re-attaches ownership after a demoted
+    /// prefix returns to the hot tier, without touching recency or stats
+    /// (the §4.1 index keeps tracking ids whose content is hot again).
+    ///
+    /// Returns how many leading tokens of `key` were actually covered by
+    /// tagged nodes — under extreme thrash the very insert that reloaded
+    /// a promoted span can evict parts of it again before tagging, and
+    /// the caller must treat a partial cover as an eviction of `reqs`
+    /// (otherwise their eventual discard never reaches the prune chain).
+    pub fn tag_requests(&mut self, key: &[u32], reqs: &[RequestId]) -> usize {
+        let mut cur = ROOT;
+        let mut matched = 0usize;
+        while matched < key.len() {
+            let next = match self.nodes[cur].children.get(&key[matched]) {
+                Some(&n) => n,
+                None => break,
+            };
+            let span_len = self.nodes[next].tokens.len();
+            let common = self.nodes[next]
+                .tokens
+                .iter()
+                .zip(&key[matched..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            matched += common;
+            for &r in reqs {
+                if !self.nodes[next].request_ids.contains(&r) {
+                    self.nodes[next].request_ids.push(r);
+                }
+            }
+            if common < span_len {
+                break;
+            }
+            cur = next;
+        }
+        matched
     }
 
     fn alloc(&mut self, node: Node<V>) -> NodeId {
@@ -295,12 +402,27 @@ impl<V> RadixCache<V> {
 
     fn remove_leaf(&mut self, id: NodeId, evicted_reqs: &mut Vec<RequestId>) {
         debug_assert!(self.nodes[id].children.is_empty());
+        if self.demote {
+            // demotion: reconstruct the root-anchored prefix (before
+            // unlinking, while the parent chain is intact) and buffer it;
+            // the ids stay out of the prune list — the content lives on in
+            // a colder tier until the tier store reports a final discard
+            let tokens = self.full_key(id);
+            let request_ids = std::mem::take(&mut self.nodes[id].request_ids);
+            let payload = self.nodes[id].payload.take();
+            self.demoted.push(EvictedEntry {
+                tokens,
+                request_ids,
+                payload,
+            });
+        } else {
+            evicted_reqs.extend(self.nodes[id].request_ids.drain(..));
+        }
         let parent = self.nodes[id].parent;
         let first = self.nodes[id].tokens[0];
         self.nodes[parent].children.remove(&first);
         self.resident -= self.nodes[id].tokens.len();
         self.stat_evicted_tokens += self.nodes[id].tokens.len() as u64;
-        evicted_reqs.extend(self.nodes[id].request_ids.drain(..));
         self.nodes[id].alive = false;
         self.nodes[id].tokens.clear();
         self.nodes[id].payload = None;
@@ -602,11 +724,19 @@ mod tests {
         assert_eq!(c.stat_matched_tokens, 4);
     }
 
-    #[test]
-    fn peek_is_observably_side_effect_free() {
+    /// Runs the peek-side-effect-freeness regression in both eviction
+    /// modes: `tiered = false` is the original discard path, `tiered =
+    /// true` enables the demotion sink — the peeks (and the demotion
+    /// bookkeeping itself) must not advance the LRU clock, touch recency,
+    /// move a stat counter, or change the eviction victim order.
+    fn peek_side_effect_free_case(tiered: bool) {
         let mut c = cache(6);
+        if tiered {
+            c.enable_demotion();
+        }
         c.insert(&[1, 2, 3], RequestId(1));
         c.insert(&[4, 5, 6], RequestId(2));
+        let clock = c.lru_clock();
         let (lookups, matched, inserted, evicted_toks) = (
             c.stat_lookup_tokens,
             c.stat_matched_tokens,
@@ -621,16 +751,102 @@ mod tests {
             assert_eq!(c.peek_prefix_len(&[1, 2, 9]), 2);
             assert_eq!(c.peek_prefix_len(&[7]), 0);
         }
+        assert_eq!(c.lru_clock(), clock, "peek advanced the LRU clock");
         assert_eq!(c.stat_lookup_tokens, lookups);
         assert_eq!(c.stat_matched_tokens, matched);
         assert_eq!(c.stat_inserted_tokens, inserted);
         assert_eq!(c.stat_evicted_tokens, evicted_toks);
         let (_, evicted) = c.insert(&[7, 8, 9], RequestId(3));
-        assert_eq!(
-            evicted,
-            vec![RequestId(1)],
-            "peek perturbed LRU recency"
-        );
+        if tiered {
+            // demotion mode: the victim goes to the sink, not the prune list
+            assert!(evicted.is_empty(), "demoted ids must not be pruned");
+            let demoted = c.take_demotions();
+            assert_eq!(demoted.len(), 1, "exactly one leaf demoted");
+            assert_eq!(demoted[0].tokens, vec![1, 2, 3], "peek perturbed LRU recency");
+            assert_eq!(demoted[0].request_ids, vec![RequestId(1)]);
+            assert!(c.take_demotions().is_empty(), "drain is draining");
+        } else {
+            assert_eq!(evicted, vec![RequestId(1)], "peek perturbed LRU recency");
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peek_is_observably_side_effect_free() {
+        peek_side_effect_free_case(false);
+    }
+
+    #[test]
+    fn peek_is_observably_side_effect_free_tiered() {
+        peek_side_effect_free_case(true);
+    }
+
+    #[test]
+    fn demotion_reconstructs_root_anchored_prefixes() {
+        // shared prefix {1,2} with two leaves: evicting a leaf must emit
+        // the FULL path from the root, not just the leaf's edge label
+        let mut c: RadixCache<String> = RadixCache::new(100);
+        c.enable_demotion();
+        c.set_payload(&[1, 2, 3, 4], RequestId(1), "kv@4".to_string());
+        c.insert(&[1, 2, 9], RequestId(2));
+        let before = c.resident_tokens();
+        c.evict_tokens(1);
+        assert!(c.resident_tokens() < before);
+        let demoted = c.take_demotions();
+        assert_eq!(demoted.len(), 1);
+        let e = &demoted[0];
+        // LRU leaf is the {3,4} tail of the first insert: full key 1,2,3,4
+        assert_eq!(e.tokens, vec![1, 2, 3, 4]);
+        assert_eq!(e.request_ids, vec![RequestId(1)]);
+        assert_eq!(e.payload.as_deref(), Some("kv@4"));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demotion_mode_keeps_victim_order_identical_to_discard_mode() {
+        // eviction order (who gets removed, when) may not depend on the
+        // demotion flag — tiering only changes where victims *go*
+        let ops: &[&[u32]] = &[&[1, 2, 3], &[4, 5, 6], &[1, 2, 9], &[7, 8], &[9, 9, 9, 9]];
+        let mut plain = cache(8);
+        let mut tiered = cache(8);
+        tiered.enable_demotion();
+        let mut plain_victims: Vec<RequestId> = Vec::new();
+        let mut tiered_victims: Vec<RequestId> = Vec::new();
+        for (i, key) in ops.iter().enumerate() {
+            let (_, ev) = plain.insert(key, RequestId(i as u64));
+            plain_victims.extend(ev);
+            let (_, ev) = tiered.insert(key, RequestId(i as u64));
+            assert!(ev.is_empty());
+            tiered_victims.extend(
+                tiered
+                    .take_demotions()
+                    .into_iter()
+                    .flat_map(|e| e.request_ids),
+            );
+        }
+        assert!(!plain_victims.is_empty(), "capacity 8 must evict");
+        assert_eq!(plain_victims, tiered_victims);
+        assert_eq!(plain.resident_tokens(), tiered.resident_tokens());
+        plain.check_invariants().unwrap();
+        tiered.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tag_requests_appends_ownership_without_touching_recency() {
+        let mut c = cache(100);
+        c.insert(&[1, 2, 3], RequestId(1));
+        c.insert(&[1, 2, 9], RequestId(2));
+        let clock = c.lru_clock();
+        let covered = c.tag_requests(&[1, 2, 3], &[RequestId(7), RequestId(8)]);
+        assert_eq!(covered, 3, "resident path must be fully covered");
+        assert_eq!(c.lru_clock(), clock, "tagging must not tick the clock");
+        // a key whose tail is absent reports partial cover
+        assert_eq!(c.tag_requests(&[1, 2, 3, 4, 5], &[RequestId(9)]), 3);
+        // evicting the tagged leaf now reports the appended ids too
+        let evicted = c.evict_tokens(100);
+        let mut ids = evicted;
+        ids.sort_unstable();
+        assert!(ids.contains(&RequestId(7)) && ids.contains(&RequestId(8)));
         c.check_invariants().unwrap();
     }
 

@@ -1,0 +1,761 @@
+//! Hierarchical KV-cache tier store: HBM → DRAM → SSD.
+//!
+//! The GPU-resident [`crate::cache::RadixCache`] is the **hot** (HBM)
+//! tier. Under capacity pressure its LRU eviction normally *discards* KV —
+//! recurring context blocks then pay full prefill again. With a
+//! `TierStore` attached (see [`crate::cache::RadixCache::enable_demotion`]),
+//! eviction becomes **demotion**: the evicted node's root-anchored token
+//! prefix (plus its request-id tags and payload) moves down to DRAM;
+//! DRAM overflow spills to SSD; SSD overflow finally discards — and only
+//! that final discard reports request ids for §4.1 context-index pruning,
+//! because until then the content is still servable.
+//!
+//! A prefix match that lands in a cold tier triggers **promotion**: the
+//! stored prefix is reloaded at the owning tier's transfer rate
+//! ([`crate::cache::policy::TierCosts`]) instead of recomputed at the
+//! prefill rate. Both directions are cost-gated by
+//! [`crate::cache::policy::AdmissionPolicy`]: blocks cheaper to recompute
+//! than to reload are never demoted, and unprofitable promotions are left
+//! in place.
+//!
+//! Determinism: the store is engine-local (one per shard), every operation
+//! is driven by the shard's serve order, and LRU stamps come from a local
+//! counter — so serving results are bit-identical for any worker count,
+//! exactly like the radix cache itself (pinned by `tests/serve_stress.rs`
+//! and `benches/bench_tiering.rs`).
+
+use crate::cache::policy::{AdmissionPolicy, TierCosts};
+use crate::cache::radix::EvictedEntry;
+use crate::types::RequestId;
+
+/// Which tier served (or holds) a token span. `Hbm` is the radix cache;
+/// the store itself only holds `Dram` and `Ssd` entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Hbm,
+    Dram,
+    Ssd,
+}
+
+/// Longest common prefix of two token sequences.
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Tier::Hbm => "hbm",
+            Tier::Dram => "dram",
+            Tier::Ssd => "ssd",
+        })
+    }
+}
+
+/// Tier-store shape: per-tier capacities in tokens plus reload costs and
+/// the admission policy. `dram_tokens`/`ssd_tokens` of 0 disable a tier.
+#[derive(Clone, Debug)]
+pub struct TierConfig {
+    pub dram_tokens: usize,
+    pub ssd_tokens: usize,
+    pub dram: TierCosts,
+    pub ssd: TierCosts,
+    pub admission: AdmissionPolicy,
+}
+
+impl TierConfig {
+    /// Default costs ([`TierCosts::dram_default`]/[`TierCosts::ssd_default`])
+    /// and cost-aware admission.
+    pub fn new(dram_tokens: usize, ssd_tokens: usize) -> TierConfig {
+        TierConfig {
+            dram_tokens,
+            ssd_tokens,
+            dram: TierCosts::dram_default(),
+            ssd: TierCosts::ssd_default(),
+            admission: AdmissionPolicy::CostAware,
+        }
+    }
+
+    /// Parse the CLI shape `hbm=N,dram=N,ssd=N` (token counts; `hbm` is
+    /// required — it sizes the radix cache — `dram`/`ssd` default to 0 =
+    /// disabled). Returns `(hbm_tokens, config)`.
+    pub fn parse(spec: &str) -> Result<(usize, TierConfig), String> {
+        let mut hbm: Option<usize> = None;
+        let mut dram = 0usize;
+        let mut ssd = 0usize;
+        for part in spec.split(',').filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=tokens, got '{part}'"))?;
+            let n: usize = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("'{key}' expects a token count, got '{val}'"))?;
+            match key.trim() {
+                "hbm" => hbm = Some(n),
+                "dram" => dram = n,
+                "ssd" => ssd = n,
+                other => return Err(format!("unknown tier '{other}' (try hbm/dram/ssd)")),
+            }
+        }
+        let hbm = hbm.ok_or_else(|| "missing hbm=<tokens> (sizes the radix cache)".to_string())?;
+        if hbm == 0 {
+            return Err("hbm capacity must be > 0".to_string());
+        }
+        Ok((hbm, TierConfig::new(dram, ssd)))
+    }
+
+    /// Split total tier budgets across `n` shards (each shard owns an
+    /// independent store, mirroring how `--capacity` is divided).
+    pub fn per_shard(&self, n: usize) -> TierConfig {
+        let n = n.max(1);
+        TierConfig {
+            dram_tokens: self.dram_tokens / n,
+            ssd_tokens: self.ssd_tokens / n,
+            ..self.clone()
+        }
+    }
+}
+
+/// A successful promotion: the consumed entry's tokens, the request ids
+/// that own it, its payload, and the modeled load cost of bringing the
+/// promoted span back into HBM.
+///
+/// `matched` is the longest common prefix of the entry and the probe key;
+/// when the entry diverges from the key past `matched` (demoted entries
+/// carry request-specific tails, e.g. the previous owner's question
+/// tokens), only the shared span is promoted — the tail is dropped and
+/// `payload` (a snapshot at the entry's *end*) is `None` because it is
+/// not valid at the divergence point.
+#[derive(Debug)]
+pub struct Promotion<V> {
+    pub tier: Tier,
+    /// Longest common prefix of the stored entry and the probe key.
+    pub matched: usize,
+    /// The consumed entry's full token sequence (`matched <= tokens.len()`).
+    pub tokens: Vec<u32>,
+    pub request_ids: Vec<RequestId>,
+    /// Present only when the entry matched in full (`matched ==
+    /// tokens.len()`), i.e. the end-of-entry KV snapshot is usable.
+    pub payload: Option<V>,
+    /// Seconds to reload the promoted span `[min_len, matched)`.
+    pub load_s: f64,
+}
+
+#[derive(Debug)]
+struct Entry<V> {
+    tokens: Vec<u32>,
+    request_ids: Vec<RequestId>,
+    payload: Option<V>,
+    /// LRU stamp (from the store's local counter; unique, deterministic).
+    stamp: u64,
+}
+
+#[derive(Debug)]
+struct Shelf<V> {
+    capacity: usize,
+    resident: usize,
+    entries: Vec<Entry<V>>,
+}
+
+impl<V> Shelf<V> {
+    fn new(capacity: usize) -> Shelf<V> {
+        Shelf {
+            capacity,
+            resident: 0,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Entry with the longest common prefix against `key`, strictly beyond
+    /// `min_len`. Returns `(index, lcp)`. Deterministic tie-breaking:
+    /// longer lcp wins, then a fully-matched entry beats a diverging one
+    /// (no tail to waste), then the older stamp.
+    fn best_match(&self, key: &[u32], min_len: usize) -> Option<(usize, usize)> {
+        // A qualifying entry needs lcp > min_len, which requires agreeing
+        // with `key` at position min_len — an O(1) necessary condition
+        // that rejects most entries without the full lcp scan (and bails
+        // out entirely when the hot match already covers the whole key,
+        // the common case on the serve hot path).
+        let probe = *key.get(min_len)?;
+        let mut best: Option<(usize, usize)> = None; // (idx, lcp)
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.tokens.len() <= min_len || e.tokens[min_len] != probe {
+                continue;
+            }
+            let l = lcp(&e.tokens, key);
+            if l <= min_len {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bi, bl)) => {
+                    let b = &self.entries[bi];
+                    let full = l == e.tokens.len();
+                    let b_full = bl == b.tokens.len();
+                    l > bl || (l == bl && ((full && !b_full) || (full == b_full && e.stamp < b.stamp)))
+                }
+            };
+            if better {
+                best = Some((i, l));
+            }
+        }
+        best
+    }
+
+    /// Remove and return the LRU entry (min stamp). `None` when empty.
+    fn pop_lru(&mut self) -> Option<Entry<V>> {
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(i, _)| i)?;
+        let e = self.entries.remove(idx);
+        self.resident -= e.tokens.len();
+        Some(e)
+    }
+
+    /// Insert, merging into an existing entry with *identical* tokens
+    /// (newest payload wins, request ids union, stamp refreshed).
+    fn insert(&mut self, e: Entry<V>) {
+        if let Some(existing) = self.entries.iter_mut().find(|x| x.tokens == e.tokens) {
+            for r in e.request_ids {
+                if !existing.request_ids.contains(&r) {
+                    existing.request_ids.push(r);
+                }
+            }
+            if e.payload.is_some() {
+                existing.payload = e.payload;
+            }
+            existing.stamp = e.stamp;
+            return;
+        }
+        self.resident += e.tokens.len();
+        self.entries.push(e);
+    }
+}
+
+/// The DRAM + SSD shelves behind a demotion-enabled radix cache. `V` is
+/// the payload type carried by the radix nodes (`()` for the simulated
+/// engine, KV snapshots for a real one) — demotion and promotion move it
+/// through the hierarchy untouched (round-trip pinned by the
+/// `demote_then_promote_roundtrips_*` properties below).
+///
+/// Accounting caveat: shelf entries are **root-anchored** (a demoted leaf
+/// carries its full prefix from the radix root, because a bare edge label
+/// would be unpromotable without its ancestors), so entries evicted from
+/// a shared subtree repeat their common ancestors and shelf residency
+/// over-counts relative to the HBM tokens actually freed. Tier budgets
+/// are therefore approximate working-set bounds, not exact KV footprints
+/// — size them generously relative to `RadixCache` capacity (the
+/// defaults and benches use 16x/64x).
+#[derive(Debug)]
+pub struct TierStore<V> {
+    dram: Shelf<V>,
+    ssd: Shelf<V>,
+    dram_costs: TierCosts,
+    ssd_costs: TierCosts,
+    admission: AdmissionPolicy,
+    /// Engine recompute cost (1 / prefill rate), the admission comparator.
+    recompute_s_per_tok: f64,
+    clock: u64,
+    /// Tokens admitted into the store by demotion.
+    pub stat_demoted_tokens: u64,
+    /// Tokens reloaded into HBM by promotion (the span beyond the hot match).
+    pub stat_promoted_tokens: u64,
+    /// Tokens that left the hierarchy entirely (admission refusal or SSD
+    /// overflow).
+    pub stat_discarded_tokens: u64,
+}
+
+impl<V> TierStore<V> {
+    pub fn new(cfg: &TierConfig, recompute_s_per_tok: f64) -> TierStore<V> {
+        TierStore {
+            dram: Shelf::new(cfg.dram_tokens),
+            ssd: Shelf::new(cfg.ssd_tokens),
+            dram_costs: cfg.dram,
+            ssd_costs: cfg.ssd,
+            admission: cfg.admission,
+            recompute_s_per_tok,
+            clock: 0,
+            stat_demoted_tokens: 0,
+            stat_promoted_tokens: 0,
+            stat_discarded_tokens: 0,
+        }
+    }
+
+    pub fn dram_resident_tokens(&self) -> usize {
+        self.dram.resident
+    }
+
+    pub fn ssd_resident_tokens(&self) -> usize {
+        self.ssd.resident
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.dram.entries.len() + self.ssd.entries.len()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn admits(&self, tier: Tier, n: usize) -> bool {
+        let (costs, capacity) = match tier {
+            Tier::Dram => (&self.dram_costs, self.dram.capacity),
+            Tier::Ssd => (&self.ssd_costs, self.ssd.capacity),
+            Tier::Hbm => return false,
+        };
+        n > 0 && n <= capacity && self.admission.admits(costs, self.recompute_s_per_tok, n)
+    }
+
+    /// Demote one evicted radix entry into the hierarchy (DRAM first, LRU
+    /// spill to SSD, SSD overflow discards). Returns the request ids whose
+    /// content left the hierarchy entirely — the caller feeds them to the
+    /// §4.1 context-index pruning exactly as it would plain evictions.
+    pub fn demote(&mut self, entry: EvictedEntry<V>) -> Vec<RequestId> {
+        let mut discarded: Vec<RequestId> = Vec::new();
+        let len = entry.tokens.len();
+        let mut e = Entry {
+            tokens: entry.tokens,
+            request_ids: entry.request_ids,
+            payload: entry.payload,
+            stamp: self.tick(),
+        };
+        // cross-shelf dedup: an identical key may already sit in SSD from
+        // an earlier demote-spill cycle (Shelf::insert only dedups within
+        // one shelf). Absorb it so at most ONE copy of a key exists in the
+        // hierarchy — otherwise the stale copy's eventual discard would
+        // prune §4.1 ids whose content is still servable from the fresh
+        // copy. (Admission is deterministic in the key length, so the
+        // merged entry is placeable wherever the old copy was.)
+        if let Some(pos) = self.ssd.entries.iter().position(|x| x.tokens == e.tokens) {
+            let old = self.ssd.entries.remove(pos);
+            self.ssd.resident -= old.tokens.len();
+            for r in old.request_ids {
+                if !e.request_ids.contains(&r) {
+                    e.request_ids.push(r);
+                }
+            }
+            if e.payload.is_none() {
+                e.payload = old.payload;
+            }
+        }
+        // (entry, already counted as demoted?) — DRAM spills were counted
+        // on their original admission; DRAM-refused entries were not
+        let mut to_ssd: Vec<(Entry<V>, bool)> = Vec::new();
+        if self.admits(Tier::Dram, len) {
+            self.stat_demoted_tokens += len as u64;
+            self.dram.insert(e);
+            while self.dram.resident > self.dram.capacity {
+                let victim = self.dram.pop_lru().expect("resident > 0 implies entries");
+                to_ssd.push((victim, true));
+            }
+        } else {
+            to_ssd.push((e, false));
+        }
+        for (e, counted) in to_ssd {
+            let n = e.tokens.len();
+            if self.admits(Tier::Ssd, n) {
+                if !counted {
+                    self.stat_demoted_tokens += n as u64;
+                }
+                self.ssd.insert(e);
+                while self.ssd.resident > self.ssd.capacity {
+                    let victim = self.ssd.pop_lru().expect("resident > 0 implies entries");
+                    self.stat_discarded_tokens += victim.tokens.len() as u64;
+                    discarded.extend(victim.request_ids);
+                }
+            } else {
+                self.stat_discarded_tokens += n as u64;
+                discarded.extend(e.request_ids);
+            }
+        }
+        discarded.sort_unstable();
+        discarded.dedup();
+        discarded
+    }
+
+    /// Observably side-effect-free probe (`&self` — provably no LRU or
+    /// stat perturbation, mirroring
+    /// [`crate::cache::RadixCache::peek_prefix_len`]): the longest common
+    /// prefix any stored entry shares with `key` strictly beyond
+    /// `min_len`, or `min_len` when no tier extends the match.
+    pub fn peek_longest(&self, key: &[u32], min_len: usize) -> usize {
+        let d = self.dram.best_match(key, min_len).map_or(min_len, |(_, l)| l);
+        let s = self.ssd.best_match(key, min_len).map_or(min_len, |(_, l)| l);
+        d.max(s)
+    }
+
+    /// Promote the stored entry sharing the longest prefix with `key`
+    /// beyond `min_len` (the hot match): the entry is removed from its
+    /// shelf and returned with the modeled load cost for the span
+    /// `[min_len, matched)`. Any entry tail past the divergence point is
+    /// dropped (counted in `stat_discarded_tokens`; its ids are NOT
+    /// reported for pruning — the caller re-tags them onto the promoted
+    /// prefix, which is real resident content again). Prefers the longer
+    /// match; at equal length the cheaper tier (DRAM). Under
+    /// [`AdmissionPolicy::CostAware`], promotions that would cost more
+    /// than recomputing the span are refused and the entry left in place.
+    pub fn promote(&mut self, key: &[u32], min_len: usize) -> Option<Promotion<V>> {
+        let d_match = self
+            .dram
+            .best_match(key, min_len)
+            .map(|(i, l)| (Tier::Dram, i, l, l == self.dram.entries[i].tokens.len()));
+        let s_match = self
+            .ssd
+            .best_match(key, min_len)
+            .map(|(i, l)| (Tier::Ssd, i, l, l == self.ssd.entries[i].tokens.len()));
+        // the same comparison that gates demotion admission gates
+        // promotion profitability (one rule, both directions — the basis
+        // of the "demote-mode TTFT never worse" guarantee)
+        let gate = |m: Option<(Tier, usize, usize, bool)>, costs: &TierCosts| {
+            let (tier, idx, matched, full) = m?;
+            let span = matched - min_len;
+            self.admission
+                .admits(costs, self.recompute_s_per_tok, span)
+                .then(|| (tier, idx, matched, full, costs.reload_s(span)))
+        };
+        let d = gate(d_match, &self.dram_costs);
+        let s = gate(s_match, &self.ssd_costs);
+        let (tier, idx, matched, _full, load_s) = match (d, s) {
+            (Some(d), Some(s)) => {
+                // longer match wins; at equal length a fully-matched entry
+                // beats a diverging one (same rule as Shelf::best_match —
+                // no tail or payload to waste); then DRAM (cheaper load)
+                if s.2 > d.2 || (s.2 == d.2 && s.3 && !d.3) {
+                    s
+                } else {
+                    d
+                }
+            }
+            (Some(d), None) => d,
+            (None, Some(s)) => s,
+            (None, None) => return None,
+        };
+        let shelf = match tier {
+            Tier::Dram => &mut self.dram,
+            Tier::Ssd => &mut self.ssd,
+            Tier::Hbm => unreachable!("store holds no HBM entries"),
+        };
+        let e = shelf.entries.remove(idx);
+        shelf.resident -= e.tokens.len();
+        debug_assert!(matched <= e.tokens.len());
+        self.stat_promoted_tokens += (matched - min_len) as u64;
+        let full = matched == e.tokens.len();
+        if !full {
+            // the diverged tail leaves the hierarchy
+            self.stat_discarded_tokens += (e.tokens.len() - matched) as u64;
+        }
+        Some(Promotion {
+            tier,
+            matched,
+            tokens: e.tokens,
+            request_ids: e.request_ids,
+            payload: if full { e.payload } else { None },
+            load_s,
+        })
+    }
+
+    /// Structural invariants (tests / failure injection).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (name, shelf) in [("dram", &self.dram), ("ssd", &self.ssd)] {
+            let counted: usize = shelf.entries.iter().map(|e| e.tokens.len()).sum();
+            if counted != shelf.resident {
+                return Err(format!(
+                    "{name}: counted {counted} != tracked {}",
+                    shelf.resident
+                ));
+            }
+            if shelf.resident > shelf.capacity {
+                return Err(format!("{name} over capacity"));
+            }
+            for e in &shelf.entries {
+                if e.tokens.is_empty() {
+                    return Err(format!("{name}: empty entry"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, Config};
+
+    fn entry(tokens: &[u32], req: u64) -> EvictedEntry<Vec<u8>> {
+        EvictedEntry {
+            tokens: tokens.to_vec(),
+            request_ids: vec![RequestId(req)],
+            payload: Some(tokens.iter().map(|&t| t as u8).collect()),
+        }
+    }
+
+    fn roomy() -> TierConfig {
+        let mut cfg = TierConfig::new(1 << 20, 1 << 20);
+        cfg.admission = AdmissionPolicy::Always;
+        cfg
+    }
+
+    #[test]
+    fn parse_cli_spec() {
+        let (hbm, cfg) = TierConfig::parse("hbm=4000,dram=16000,ssd=64000").unwrap();
+        assert_eq!(hbm, 4000);
+        assert_eq!(cfg.dram_tokens, 16_000);
+        assert_eq!(cfg.ssd_tokens, 64_000);
+        assert_eq!(cfg.admission, AdmissionPolicy::CostAware);
+        // subset: missing tiers disabled
+        let (hbm, cfg) = TierConfig::parse("hbm=500").unwrap();
+        assert_eq!((hbm, cfg.dram_tokens, cfg.ssd_tokens), (500, 0, 0));
+        // errors
+        assert!(TierConfig::parse("dram=10").is_err(), "hbm required");
+        assert!(TierConfig::parse("hbm=0").is_err());
+        assert!(TierConfig::parse("hbm=x").is_err());
+        assert!(TierConfig::parse("vram=10,hbm=1").is_err());
+    }
+
+    #[test]
+    fn per_shard_divides_budgets() {
+        let cfg = TierConfig::new(1000, 4000).per_shard(4);
+        assert_eq!((cfg.dram_tokens, cfg.ssd_tokens), (250, 1000));
+    }
+
+    #[test]
+    fn demote_then_promote_returns_entry() {
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+        let discarded = store.demote(entry(&[1, 2, 3, 4], 7));
+        assert!(discarded.is_empty());
+        assert_eq!(store.dram_resident_tokens(), 4);
+        let p = store.promote(&[1, 2, 3, 4, 5, 6], 0).expect("promoted");
+        assert_eq!(p.tier, Tier::Dram);
+        assert_eq!(p.matched, 4);
+        assert_eq!(p.tokens, vec![1, 2, 3, 4]);
+        assert_eq!(p.request_ids, vec![RequestId(7)]);
+        assert_eq!(p.payload.unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(store.entry_count(), 0);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_divergence_promotes_common_prefix_and_drops_tail() {
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+        store.demote(entry(&[1, 2, 3, 4], 1));
+        // already covered by the hot match: nothing to promote
+        assert!(store.promote(&[1, 2, 3, 4], 4).is_none());
+        assert_eq!(store.entry_count(), 1, "refused probes leave entries");
+        // diverges at position 2: the shared span promotes, the {3,4} tail
+        // (a snapshot past the divergence) is dropped without its payload
+        let p = store.promote(&[1, 2, 9, 9], 0).expect("common prefix");
+        assert_eq!(p.matched, 2);
+        assert_eq!(p.tokens, vec![1, 2, 3, 4]);
+        assert_eq!(p.request_ids, vec![RequestId(1)]);
+        assert!(p.payload.is_none(), "end-of-entry KV invalid at divergence");
+        assert_eq!(store.entry_count(), 0);
+        assert_eq!(store.stat_promoted_tokens, 2);
+        assert_eq!(store.stat_discarded_tokens, 2);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn equal_lcp_prefers_fully_matched_entry() {
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+        store.demote(entry(&[1, 2, 3, 8, 8], 1)); // diverging tail
+        store.demote(entry(&[1, 2, 3], 2)); // exact
+        let p = store.promote(&[1, 2, 3, 4], 0).unwrap();
+        assert_eq!(p.request_ids, vec![RequestId(2)], "full match preferred");
+        assert!(p.payload.is_some());
+        assert_eq!(store.entry_count(), 1, "diverging entry left in place");
+    }
+
+    #[test]
+    fn dram_overflow_spills_lru_to_ssd_and_ssd_overflow_discards() {
+        let mut cfg = TierConfig::new(6, 6);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        assert!(store.demote(entry(&[1, 2, 3], 1)).is_empty());
+        assert!(store.demote(entry(&[4, 5, 6], 2)).is_empty());
+        // third demotion overflows DRAM: entry 1 (LRU) spills to SSD
+        assert!(store.demote(entry(&[7, 8, 9], 3)).is_empty());
+        assert_eq!(store.dram_resident_tokens(), 6);
+        assert_eq!(store.ssd_resident_tokens(), 3);
+        assert_eq!(store.peek_longest(&[1, 2, 3], 0), 3, "spilled, not lost");
+        // two more: SSD fills, then the oldest SSD entry is discarded
+        assert!(store.demote(entry(&[10, 11, 12], 4)).is_empty());
+        let discarded = store.demote(entry(&[13, 14, 15], 5));
+        assert_eq!(discarded, vec![RequestId(1)]);
+        assert_eq!(store.peek_longest(&[1, 2, 3], 0), 0, "finally discarded");
+        assert!(store.stat_discarded_tokens >= 3);
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cost_aware_admission_refuses_and_reports_ids() {
+        // CostAware + tiny entries: reload overhead beats recompute, so
+        // demotion must discard immediately and report the ids for pruning
+        let cfg = TierConfig::new(1 << 20, 1 << 20); // CostAware default
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        let discarded = store.demote(entry(&[1, 2], 9));
+        assert_eq!(discarded, vec![RequestId(9)]);
+        assert_eq!(store.entry_count(), 0);
+        assert_eq!(store.stat_demoted_tokens, 0);
+        assert_eq!(store.stat_discarded_tokens, 2);
+    }
+
+    #[test]
+    fn cost_aware_promotion_skips_unprofitable_spans() {
+        let cfg = TierConfig::new(1 << 20, 1 << 20);
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        let long: Vec<u32> = (0..1000).collect();
+        assert!(store.demote(entry(&long, 1)).is_empty(), "1000 tok admits");
+        // hot match already covers 995 of 1000: reloading 5 tokens costs
+        // more than recomputing them -> leave the entry in place
+        assert!(store.promote(&long, 995).is_none());
+        assert_eq!(store.entry_count(), 1);
+        // a cold probe promotes the full kilotoken span profitably
+        let p = store.promote(&long, 0).expect("profitable");
+        assert!(p.load_s < 1000.0 * 5e-5);
+    }
+
+    #[test]
+    fn cross_shelf_duplicates_are_absorbed_on_demote() {
+        // an entry spilled to SSD, then the same key demoted again: the
+        // stale SSD copy must be absorbed into the fresh one, so its
+        // eventual discard can never prune ids with servable content
+        let mut cfg = TierConfig::new(6, 1 << 20);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        store.demote(entry(&[1, 2, 3], 1));
+        store.demote(entry(&[4, 5, 6], 2)); // DRAM now full
+        store.demote(entry(&[7, 8, 9], 3)); // spills [1,2,3] to SSD
+        assert_eq!(store.ssd_resident_tokens(), 3);
+        // the same key comes back down (re-hot, then re-evicted)
+        assert!(store.demote(entry(&[1, 2, 3], 4)).is_empty());
+        let p = store.promote(&[1, 2, 3], 0).expect("merged copy");
+        let mut ids = p.request_ids.clone();
+        ids.sort_unstable();
+        assert!(
+            ids.contains(&RequestId(1)) && ids.contains(&RequestId(4)),
+            "old ids not absorbed: {ids:?}"
+        );
+        assert!(
+            store.promote(&[1, 2, 3], 0).is_none(),
+            "duplicate copy survived in a shelf"
+        );
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cross_shelf_tie_prefers_full_match_over_dram() {
+        // equal lcp in both shelves: the fully-matched SSD entry (usable
+        // payload, no tail waste) must beat the diverging DRAM entry,
+        // mirroring the in-shelf tie rule
+        let mut cfg = TierConfig::new(6, 1 << 20);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        store.demote(entry(&[1, 2, 3], 1));
+        store.demote(entry(&[9, 9, 9], 2)); // DRAM full
+        store.demote(entry(&[1, 2, 3, 8, 8], 3)); // spills both to SSD
+        let p = store.promote(&[1, 2, 3, 4], 0).expect("tie candidate");
+        assert_eq!(p.tier, Tier::Ssd);
+        assert_eq!(p.request_ids, vec![RequestId(1)]);
+        assert!(p.payload.is_some(), "full match keeps its snapshot");
+        store.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn identical_tokens_merge_instead_of_duplicating() {
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+        store.demote(entry(&[1, 2, 3], 1));
+        let mut second = entry(&[1, 2, 3], 2);
+        second.payload = Some(vec![9, 9, 9]);
+        store.demote(second);
+        assert_eq!(store.entry_count(), 1);
+        assert_eq!(store.dram_resident_tokens(), 3);
+        let p = store.promote(&[1, 2, 3], 0).unwrap();
+        let mut ids = p.request_ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![RequestId(1), RequestId(2)]);
+        assert_eq!(p.payload.unwrap(), vec![9, 9, 9], "newest payload wins");
+    }
+
+    #[test]
+    fn peek_longest_is_side_effect_free_and_agrees_with_promote() {
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+        store.demote(entry(&[1, 2, 3], 1));
+        store.demote(entry(&[1, 2, 3, 4, 5], 2));
+        let before = format!("{store:?}");
+        for _ in 0..10 {
+            assert_eq!(store.peek_longest(&[1, 2, 3, 4, 5, 6], 0), 5);
+            assert_eq!(store.peek_longest(&[1, 2, 3, 9], 0), 3);
+            assert_eq!(store.peek_longest(&[7], 0), 0);
+            assert_eq!(store.peek_longest(&[1, 2, 3], 3), 3, "min_len respected");
+        }
+        assert_eq!(format!("{store:?}"), before, "peek mutated the store");
+        let p = store.promote(&[1, 2, 3, 4, 5, 6], 0).unwrap();
+        assert_eq!(p.matched, 5, "promote takes the longest prefix");
+    }
+
+    /// Satellite: demote-then-promote round-trips payloads byte-identically
+    /// for arbitrary entry populations (the eviction→demotion→promotion
+    /// chain may never corrupt KV).
+    #[test]
+    fn prop_demote_then_promote_roundtrips_payloads_byte_identically() {
+        check(
+            "tier demote/promote round-trip",
+            Config {
+                cases: 96,
+                base_seed: 0x71E2,
+                max_size: 24,
+            },
+            |rng: &mut Rng, size| {
+                let mut store: TierStore<Vec<u8>> = TierStore::new(&roomy(), 5e-5);
+                // distinct first tokens -> no entry is a prefix of another,
+                // so every demoted entry must survive verbatim
+                let n = size.clamp(1, 24);
+                let mut keys: Vec<Vec<u32>> = Vec::new();
+                for i in 0..n {
+                    let len = 1 + rng.below(12);
+                    let mut key = vec![i as u32 + 1];
+                    key.extend((0..len).map(|_| rng.below(50) as u32 + 100));
+                    keys.push(key);
+                }
+                for (i, key) in keys.iter().enumerate() {
+                    let payload: Vec<u8> = key.iter().map(|&t| (t % 251) as u8).collect();
+                    let discarded = store.demote(EvictedEntry {
+                        tokens: key.clone(),
+                        request_ids: vec![RequestId(i as u64)],
+                        payload: Some(payload),
+                    });
+                    if !discarded.is_empty() {
+                        return Err("roomy store discarded an entry".to_string());
+                    }
+                }
+                store.check_invariants().map_err(|e| e.to_string())?;
+                for (i, key) in keys.iter().enumerate() {
+                    let p = store
+                        .promote(key, 0)
+                        .ok_or_else(|| format!("entry {i} lost"))?;
+                    if p.tokens != *key {
+                        return Err(format!("entry {i}: tokens corrupted"));
+                    }
+                    let want: Vec<u8> = key.iter().map(|&t| (t % 251) as u8).collect();
+                    if p.payload.as_deref() != Some(want.as_slice()) {
+                        return Err(format!("entry {i}: payload corrupted"));
+                    }
+                    if p.request_ids != vec![RequestId(i as u64)] {
+                        return Err(format!("entry {i}: request ids corrupted"));
+                    }
+                }
+                if store.entry_count() != 0 {
+                    return Err("promotion left stale entries".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -51,6 +51,25 @@ pub struct CacheStats {
     pub inserted_tokens: u64,
     /// Cumulative tokens evicted.
     pub evicted_tokens: u64,
+    // -- tier-store counters (zero for engines without tiering) ----------
+    /// Tokens resident in the DRAM tier ([`crate::cache::TierStore`]).
+    pub dram_resident_tokens: usize,
+    /// Tokens resident in the SSD tier.
+    pub ssd_resident_tokens: usize,
+    /// Cumulative hit tokens served hot from HBM.
+    pub hot_hit_tokens: u64,
+    /// Cumulative hit tokens promoted from DRAM (warm).
+    pub warm_hit_tokens: u64,
+    /// Cumulative hit tokens promoted from SSD (cold).
+    pub cold_hit_tokens: u64,
+    /// Cumulative tokens demoted into the tier store on eviction.
+    pub demoted_tokens: u64,
+    /// Cumulative tokens promoted back into HBM from a cold tier.
+    pub promoted_tokens: u64,
+    /// Cumulative tokens that left the hierarchy entirely (admission
+    /// refusal or last-tier overflow) — discard-mode eviction reports 0
+    /// here and everything under `evicted_tokens`.
+    pub discarded_tokens: u64,
 }
 
 /// The engine side of the proxy↔engine contract (§4.1).

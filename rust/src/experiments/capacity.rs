@@ -1,0 +1,118 @@
+//! Capacity-pressure table (tier-store subsystem): KV reuse and TTFT vs
+//! HBM budget, discard-mode vs demote-mode eviction.
+//!
+//! The paper's capacity axis (Fig. 6 / App. G) only sweeps how much fits
+//! in HBM; this table opens the axis the tier store adds — what happens
+//! to the reuse that *doesn't* fit. Under pressure (HBM below the
+//! workload's working set), discard-mode eviction forfeits every
+//! recurring prefix while demote-mode recovers it from DRAM/SSD at reload
+//! cost: strictly more total reuse (hot+warm+cold) and strictly lower
+//! modeled TTFT, converging to identical results once HBM is roomy enough
+//! that nothing evicts. Run sequentially (1 shard, 1 worker), baseline
+//! RadixCache system, so the two modes face byte-identical schedules and
+//! the comparison isolates the eviction policy.
+
+use crate::cache::TierConfig;
+use crate::engine::costmodel::ModelSku;
+use crate::experiments::runner::{corpus_for, run_system, RunConfig, SystemKind};
+use crate::metrics::RunMetrics;
+use crate::util::table::Table;
+use crate::workload::{hybrid, Dataset};
+
+/// One sweep cell: the MT-RAG hybrid workload through a RadixCache
+/// baseline at the given HBM budget, with (`tiered`) or without a
+/// DRAM/SSD store behind it. Tier budgets scale with HBM (4x / 16x).
+pub fn pressure_run(hbm: usize, tiered: bool, sessions: usize, turns: usize) -> RunMetrics {
+    let dataset = Dataset::MtRag;
+    let corpus = corpus_for(dataset);
+    let w = hybrid(dataset, sessions, turns, 8, 0x71E55);
+    let mut cfg = RunConfig::for_dataset(ModelSku::Qwen3_32B, dataset);
+    cfg.offline = false;
+    cfg.capacity_tokens = hbm;
+    cfg.tiers = tiered.then(|| TierConfig::new(4 * hbm, 16 * hbm));
+    run_system(&SystemKind::RadixCache, &w, &corpus, &cfg)
+}
+
+pub fn run(quick: bool) -> Vec<Table> {
+    let (sessions, turns) = if quick { (16, 3) } else { (64, 4) };
+    let mut t = Table::new(
+        &format!(
+            "Capacity pressure — reuse + TTFT vs HBM budget, discard vs demote \
+             (MT-RAG hybrid, {sessions} sessions x {turns} turns, RadixCache)"
+        ),
+        &[
+            "HBM (tokens)",
+            "Discard reuse",
+            "Demote reuse (hot/warm/cold)",
+            "Discard mean TTFT",
+            "Demote mean TTFT",
+            "TTFT saved",
+        ],
+    );
+    for hbm in [2_000usize, 8_000, 128_000] {
+        let mut discard = pressure_run(hbm, false, sessions, turns);
+        let mut demote = pressure_run(hbm, true, sessions, turns);
+        let d_ttft = discard.mean_ttft();
+        let m_ttft = demote.mean_ttft();
+        t.row(vec![
+            format!("{hbm}"),
+            format!("{:.1}%", discard.hit_ratio() * 100.0),
+            format!(
+                "{:.1}% ({}/{}/{})",
+                demote.hit_ratio() * 100.0,
+                demote.total_hot_hit_tokens,
+                demote.total_warm_hit_tokens,
+                demote.total_cold_hit_tokens
+            ),
+            format!("{d_ttft:.4}s"),
+            format!("{m_ttft:.4}s"),
+            format!("{:+.1}%", (d_ttft - m_ttft) / d_ttft.max(1e-12) * 100.0),
+        ]);
+    }
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pressure_makes_demotion_strictly_better() {
+        // HBM far below the working set: recurring session prefixes are
+        // evicted between turns, so demote-mode must recover reuse the
+        // discard baseline forfeits — and pay less than recompute for it
+        let mut discard = pressure_run(2_000, false, 12, 3);
+        let mut demote = pressure_run(2_000, true, 12, 3);
+        assert!(
+            demote.total_cached_tokens > discard.total_cached_tokens,
+            "demote reuse {} <= discard reuse {}",
+            demote.total_cached_tokens,
+            discard.total_cached_tokens
+        );
+        assert!(
+            demote.total_warm_hit_tokens + demote.total_cold_hit_tokens > 0,
+            "pressure must trigger promotions"
+        );
+        assert_eq!(
+            demote.total_hot_hit_tokens, discard.total_cached_tokens,
+            "tiering must not change hot-tier behaviour"
+        );
+        assert!(
+            demote.mean_ttft() < discard.mean_ttft(),
+            "cost-gated promotion must lower TTFT: {} vs {}",
+            demote.mean_ttft(),
+            discard.mean_ttft()
+        );
+    }
+
+    #[test]
+    fn roomy_hbm_makes_modes_identical() {
+        // nothing evicts -> nothing demotes -> the tier store is inert
+        let mut discard = pressure_run(1 << 20, false, 12, 3);
+        let mut demote = pressure_run(1 << 20, true, 12, 3);
+        assert_eq!(demote.total_cached_tokens, discard.total_cached_tokens);
+        assert_eq!(demote.total_warm_hit_tokens, 0);
+        assert_eq!(demote.total_cold_hit_tokens, 0);
+        assert!((demote.mean_ttft() - discard.mean_ttft()).abs() < 1e-12);
+    }
+}

@@ -8,6 +8,7 @@ pub mod runner;
 
 pub mod appendix_f;
 pub mod appendix_g;
+pub mod capacity;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;

@@ -11,6 +11,7 @@
 
 use std::collections::HashMap;
 
+use crate::cache::TierConfig;
 use crate::corpus::{Corpus, CorpusConfig};
 use crate::engine::costmodel::ModelSku;
 use crate::engine::sim::ReusePolicy;
@@ -92,6 +93,9 @@ pub struct RunConfig {
     /// Per-request decode override (OpenClaw traces), indexed by workload
     /// position.
     pub decode_override: Option<Vec<usize>>,
+    /// DRAM/SSD tier store behind the radix cache (`None` = discard-mode
+    /// eviction — the pre-tiering behaviour every table defaults to).
+    pub tiers: Option<TierConfig>,
 }
 
 impl RunConfig {
@@ -104,6 +108,7 @@ impl RunConfig {
             era: ModelEra::Modern,
             multi_hop: matches!(dataset, Dataset::MultihopRag),
             decode_override: None,
+            tiers: None,
         }
     }
 }
@@ -130,6 +135,7 @@ pub fn serve_config(system: &SystemKind, workload: &Workload, cfg: &RunConfig) -
             .map(|(i, r)| (r.id, v.get(i).copied().unwrap_or(cfg.decode_tokens)))
             .collect::<HashMap<RequestId, usize>>()
     });
+    s.tiers = cfg.tiers.clone();
     s
 }
 

@@ -27,6 +27,9 @@
 //!   (radix prefix cache      (TinyLM via PJRT, KV snapshots on the
 //!    [`cache`] + latency      same radix cache)
 //!    model)
+//!        │ evict = demote ▼  ▲ promote @ reload cost
+//!   cache::TierStore (DRAM ⇄ SSD tiers behind the radix cache, `--tiers`;
+//!    cost-aware admission/promotion in [`cache::policy`])
 //!   ```
 //!
 //!   Sessions are pinned to shards (each owning a context index, a prefix

@@ -6,12 +6,16 @@
 //!                sharded ServingEngine and prints per-shard stats;
 //!                --engine sim|real selects the backend behind the
 //!                InferenceEngine trait; --prefill-chunk T enables
-//!                chunked-prefill admission)
+//!                chunked-prefill admission; --tiers hbm=N,dram=N,ssd=N
+//!                attaches a KV tier store so eviction demotes to
+//!                DRAM/SSD instead of discarding)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
-//!                fig7, fig8, fig11, fig12, fig13, appendix_f, appendix_g)
+//!                fig7, fig8, fig11, fig12, fig13, appendix_f,
+//!                appendix_g) or the capacity-pressure table (capacity)
 //!   index        build a context index over synthetic contexts and time it
 //!   demo         the quickstart walkthrough (see examples/quickstart.rs)
 
+use contextpilot::cache::TierConfig;
 use contextpilot::corpus::Corpus;
 use contextpilot::engine::{InferenceEngine, ModelSku};
 use contextpilot::experiments as exp;
@@ -88,6 +92,13 @@ fn drive_sharded<E: InferenceEngine>(
         Some(c) => println!("prefill chunk    : {c} tokens"),
         None => println!("prefill chunk    : off (monolithic prefills)"),
     }
+    match &cfg.tiers {
+        Some(t) => println!(
+            "KV tiers         : dram={} ssd={} tokens per shard (evict = demote)",
+            t.dram_tokens, t.ssd_tokens
+        ),
+        None => println!("KV tiers         : off (evict = discard)"),
+    }
     println!("requests         : {served_total}");
     println!(
         "batch wall       : {:.3}s ({:.0} req/s)",
@@ -97,12 +108,28 @@ fn drive_sharded<E: InferenceEngine>(
     println!("prefill tok/s    : {:.0}", m.prefill_throughput());
     println!("prefill chunks   : {}", m.total_prefill_chunks);
     println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
+    if cfg.tiers.is_some() {
+        println!(
+            "reuse h/w/c tok  : {} hot / {} warm / {} cold",
+            m.total_hot_hit_tokens, m.total_warm_hit_tokens, m.total_cold_hit_tokens
+        );
+    }
     println!("mean TTFT        : {:.4}s", m.mean_ttft());
     println!("p99 TTFT         : {:.4}s", m.p99_ttft());
     println!("p99 queued TTFT  : {:.4}s", m.p99_queued_ttft());
     for s in per_shard {
+        // gate on the config, not per-shard activity, so every shard row
+        // has the same columns whenever --tiers is on
+        let tiers = if cfg.tiers.is_some() {
+            format!(
+                ", dram {} tok, ssd {} tok, {} warm + {} cold hits",
+                s.dram_resident_tokens, s.ssd_resident_tokens, s.warm_hit_tokens, s.cold_hit_tokens
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions, {} resident tok",
+            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions, {} resident tok{}",
             s.shard,
             s.served,
             s.hit_ratio * 100.0,
@@ -113,7 +140,8 @@ fn drive_sharded<E: InferenceEngine>(
             s.prefill_chunks,
             s.index_nodes,
             s.sessions,
-            s.resident_tokens
+            s.resident_tokens,
+            tiers
         );
     }
 }
@@ -173,8 +201,18 @@ fn cmd_serve(args: &Args) {
     let shards = args.get_usize("shards", 1);
     let workers = args.get_usize("workers", 1);
     let prefill_chunk = args.get_usize("prefill-chunk", 0);
+    // --tiers hbm=N,dram=N,ssd=N — total budgets, divided across shards
+    // like --capacity; hbm replaces --capacity as the radix budget
+    let tiers = args.get("tiers").map(|spec| match TierConfig::parse(spec) {
+        Ok(parsed) => parsed,
+        Err(e) => {
+            eprintln!("--tiers: {e}");
+            std::process::exit(2);
+        }
+    });
 
-    if shards > 1 || workers > 1 || prefill_chunk > 0 || engine_kind != "sim" {
+    if shards > 1 || workers > 1 || prefill_chunk > 0 || engine_kind != "sim" || tiers.is_some()
+    {
         // concurrent sharded serving path (trait-generic backend)
         let mut scfg = exp::serve_config(&system, &workload, &cfg);
         scfg.n_shards = shards.max(1);
@@ -183,6 +221,25 @@ fn cmd_serve(args: &Args) {
         // shards so sharded and unsharded runs are capacity-comparable
         scfg.capacity_tokens = (cfg.capacity_tokens / shards.max(1)).max(1);
         scfg.prefill_chunk = (prefill_chunk > 0).then_some(prefill_chunk);
+        if let Some((hbm, tier_cfg)) = tiers {
+            cfg.capacity_tokens = hbm;
+            scfg.capacity_tokens = (hbm / shards.max(1)).max(1);
+            // tiering is prefix-shaped: only the radix reuse mechanism can
+            // demote/promote, so keep the config off (and say so) for
+            // other systems rather than printing demote-mode headers over
+            // discard-mode results
+            if matches!(scfg.policy, contextpilot::engine::ReusePolicy::RadixPrefix)
+                && engine_kind == "sim"
+            {
+                scfg.tiers = Some(tier_cfg.per_shard(shards.max(1)));
+            } else {
+                eprintln!(
+                    "note: --tiers applies to the simulated radix-prefix engine only; \
+                     running {} with discard-mode eviction (hbm budget still applied)",
+                    system.name()
+                );
+            }
+        }
         match engine_kind.as_str() {
             "sim" => {
                 let engine = ServingEngine::new(scfg);
@@ -260,6 +317,7 @@ fn cmd_bench(args: &Args) {
         ("fig13", exp::fig13::run),
         ("appendix_f", exp::appendix_f::run),
         ("appendix_g", exp::appendix_g::run),
+        ("capacity", exp::capacity::run),
     ];
     let mut ran = false;
     for (id, f) in all {
@@ -314,7 +372,8 @@ fn main() {
             println!("         --shards N --workers N   (concurrent sharded serving layer)");
             println!("         --engine sim|real        (backend behind the InferenceEngine trait)");
             println!("         --prefill-chunk TOKENS   (chunked-prefill admission)");
-            println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|all> [--full]");
+            println!("         --tiers hbm=N,dram=N,ssd=N (KV tier store: evict = demote, not discard)");
+            println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|capacity|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }
     }

@@ -17,6 +17,12 @@ pub struct RunMetrics {
     pub prompt_tokens: Summary,
     pub total_prompt_tokens: u64,
     pub total_cached_tokens: u64,
+    /// Per-tier breakdown of `total_cached_tokens` (hot = HBM radix hits,
+    /// warm = DRAM promotions, cold = SSD promotions); the three always
+    /// sum to `total_cached_tokens`.
+    pub total_hot_hit_tokens: u64,
+    pub total_warm_hit_tokens: u64,
+    pub total_cold_hit_tokens: u64,
     pub total_prefill_seconds: f64,
     /// Prefill chunks issued (== requests served when chunking is off).
     pub total_prefill_chunks: u64,
@@ -52,6 +58,9 @@ impl RunMetrics {
         self.prompt_tokens.record(s.prompt_tokens as f64);
         self.total_prompt_tokens += s.prompt_tokens as u64;
         self.total_cached_tokens += s.cached_tokens as u64;
+        self.total_hot_hit_tokens += s.tier_hits.hbm as u64;
+        self.total_warm_hit_tokens += s.tier_hits.dram as u64;
+        self.total_cold_hit_tokens += s.tier_hits.ssd as u64;
         self.total_prefill_seconds += s.ttft;
         self.total_prefill_chunks += s.prefill_chunks as u64;
         self.n += 1;
@@ -118,6 +127,9 @@ impl RunMetrics {
         self.prompt_tokens.merge(&other.prompt_tokens);
         self.total_prompt_tokens += other.total_prompt_tokens;
         self.total_cached_tokens += other.total_cached_tokens;
+        self.total_hot_hit_tokens += other.total_hot_hit_tokens;
+        self.total_warm_hit_tokens += other.total_warm_hit_tokens;
+        self.total_cold_hit_tokens += other.total_cold_hit_tokens;
         self.total_prefill_seconds += other.total_prefill_seconds;
         self.total_prefill_chunks += other.total_prefill_chunks;
         self.hit_series.extend(other.hit_series.iter().copied());
@@ -147,8 +159,16 @@ pub struct ShardStats {
     /// Alive nodes in the shard's context index (0 when serving baseline
     /// prompts without a pilot).
     pub index_nodes: usize,
-    /// Tokens resident in the shard's radix prefix cache.
+    /// Tokens resident in the shard's radix prefix cache (the HBM tier).
     pub resident_tokens: usize,
+    /// Tokens resident in the shard's DRAM tier (0 without a tier store).
+    pub dram_resident_tokens: usize,
+    /// Tokens resident in the shard's SSD tier.
+    pub ssd_resident_tokens: usize,
+    /// Cumulative hit tokens promoted from DRAM (warm).
+    pub warm_hit_tokens: u64,
+    /// Cumulative hit tokens promoted from SSD (cold).
+    pub cold_hit_tokens: u64,
     /// Conversation sessions pinned to this shard so far.
     pub sessions: usize,
 }
@@ -176,6 +196,7 @@ mod tests {
             quality: q,
             queued_ttft: ttft * 2.0,
             prefill_chunks: 1,
+            tier_hits: TierHits::hot(cached),
         }
     }
 
@@ -222,6 +243,41 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.total_prefill_chunks, 5);
         assert_eq!(m.queued_ttft.len(), 3);
+    }
+
+    #[test]
+    fn tier_hit_totals_track_and_merge() {
+        let mut m = RunMetrics::new();
+        let mut s = served(100, 60, 0.1, 0.5);
+        s.tier_hits = TierHits {
+            hbm: 40,
+            dram: 15,
+            ssd: 5,
+        };
+        m.record(&s);
+        m.record(&served(50, 10, 0.1, 0.5)); // all-hot
+        assert_eq!(m.total_hot_hit_tokens, 50);
+        assert_eq!(m.total_warm_hit_tokens, 15);
+        assert_eq!(m.total_cold_hit_tokens, 5);
+        // the three tiers partition the cached total
+        assert_eq!(
+            m.total_hot_hit_tokens + m.total_warm_hit_tokens + m.total_cold_hit_tokens,
+            m.total_cached_tokens
+        );
+        let mut other = RunMetrics::new();
+        let mut s2 = served(10, 4, 0.1, 0.5);
+        s2.tier_hits = TierHits {
+            hbm: 0,
+            dram: 0,
+            ssd: 4,
+        };
+        other.record(&s2);
+        m.merge(&other);
+        assert_eq!(m.total_cold_hit_tokens, 9);
+        assert_eq!(
+            m.total_hot_hit_tokens + m.total_warm_hit_tokens + m.total_cold_hit_tokens,
+            m.total_cached_tokens
+        );
     }
 
     #[test]

@@ -164,6 +164,8 @@ impl RealEngine {
                 quality: 0.0, // real engine measures latency, not the proxy
                 queued_ttft: ttft,
                 prefill_chunks: prefill_runs.max(1),
+                // no tier store behind the real engine (yet): all hot
+                tier_hits: crate::types::TierHits::hot(cached_len),
             },
             evicted,
             answer,
@@ -214,6 +216,9 @@ impl InferenceEngine for RealEngine {
             matched_tokens: self.cache.stat_matched_tokens,
             inserted_tokens: self.cache.stat_inserted_tokens,
             evicted_tokens: self.cache.stat_evicted_tokens,
+            hot_hit_tokens: self.stat_reused_tokens,
+            // no tier store: residency/demotion/promotion counters stay 0
+            ..CacheStats::default()
         }
     }
 }

@@ -22,37 +22,44 @@
 //! [`crate::metrics::RunMetrics`].
 
 /// Split one served request's engine occupancy (`ttft` seconds covering
-/// its uncached prefill) into per-chunk durations.
+/// its uncached prefill plus any cold-tier promotion load) into per-chunk
+/// durations.
 ///
 /// * `prefill_chunk` — admission chunk budget in tokens; `None` disables
 ///   chunking (single chunk).
-/// * `cached_tokens`/`prompt_tokens` — the request's hit/miss outcome;
-///   only the uncached region `[cached_tokens, prompt_tokens)` is chunked.
+/// * `hot_tokens`/`prompt_tokens` — only the region
+///   `[hot_tokens, prompt_tokens)` occupies the engine and is therefore
+///   chunkable. `hot_tokens` counts HBM hits alone
+///   ([`crate::types::TierHits::hbm`]): tokens *promoted* from a cold
+///   tier still occupy the engine while their KV loads, so they belong to
+///   the chunkable region — callers pass `tier_hits.hbm`, not
+///   `cached_tokens`.
 /// * `boundaries` — ascending token offsets at which the prompt may be
 ///   split (radix-node / segment ends). Cuts snap to the largest boundary
 ///   within budget; a boundary gap wider than the budget falls back to a
 ///   hard cut so a single giant block cannot defeat admission.
 ///
 /// Durations are proportional to chunk token counts and always sum to
-/// `ttft` (the first chunk absorbs the constant overheads pro rata), so
-/// the virtual clock advances by exactly the unchunked amount in total.
+/// `ttft` (the first chunk absorbs the constant overheads and promotion
+/// load pro rata), so the virtual clock advances by exactly the unchunked
+/// amount in total.
 pub fn chunk_plan(
     prefill_chunk: Option<usize>,
-    cached_tokens: usize,
+    hot_tokens: usize,
     prompt_tokens: usize,
     ttft: f64,
     boundaries: &[usize],
 ) -> Vec<f64> {
-    let uncached = prompt_tokens.saturating_sub(cached_tokens);
+    let occupying = prompt_tokens.saturating_sub(hot_tokens);
     let Some(chunk) = prefill_chunk else {
         return vec![ttft];
     };
     let chunk = chunk.max(1);
-    if uncached <= chunk {
+    if occupying <= chunk {
         return vec![ttft];
     }
     let mut cuts: Vec<usize> = Vec::new();
-    let mut pos = cached_tokens;
+    let mut pos = hot_tokens;
     while prompt_tokens - pos > chunk {
         let snapped = boundaries
             .iter()
@@ -65,9 +72,9 @@ pub fn chunk_plan(
     }
     cuts.push(prompt_tokens);
     let mut durations = Vec::with_capacity(cuts.len());
-    let mut prev = cached_tokens;
+    let mut prev = hot_tokens;
     for &c in &cuts {
-        durations.push(ttft * (c - prev) as f64 / uncached as f64);
+        durations.push(ttft * (c - prev) as f64 / occupying as f64);
         prev = c;
     }
     durations
@@ -153,6 +160,19 @@ mod tests {
         let p = chunk_plan(Some(128), 700, 1000, 0.9, &[100, 800, 900, 1000]);
         assert_eq!(p.len(), 3);
         assert!((total(&p) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn promoted_tokens_are_chunkable() {
+        // 900 of 1000 tokens "cached", but only 100 of those are hot HBM
+        // hits — the 800 promoted tokens occupy the engine while loading,
+        // so the chunkable region is [100, 1000), not [900, 1000)
+        let hot = 100;
+        let p = chunk_plan(Some(300), hot, 1000, 1.8, &[300, 600, 900, 1000]);
+        assert_eq!(p.len(), 4, "cuts at 300/600/900 then the 100-token tail");
+        assert!((total(&p) - 1.8).abs() < 1e-9);
+        // had the caller passed cached_tokens (900) instead, no split:
+        assert_eq!(chunk_plan(Some(300), 900, 1000, 1.8, &[1000]).len(), 1);
     }
 
     #[test]

@@ -16,9 +16,15 @@
 //!        │ per-shard queues (sessions pinned by shard_of)
 //!        ▼
 //!   Shard<E>          ── ContextPilot proxy + chunked-prefill admission
-//!        │ serve(request, rewritten prompt)   ▲ evicted RequestIds (§4.1)
-//!        ▼                                    │
-//!   trait InferenceEngine ──► SimEngine | RealEngine (pjrt) | MockEngine
+//!        │ serve(request, rewritten prompt)   ▲ evicted RequestIds (§4.1,
+//!        ▼                                    │  final-discard only when
+//!   trait InferenceEngine                     │  tiering is on)
+//!        │
+//!        ├──► SimEngine ── RadixCache (HBM tier)
+//!        │        │  evict = demote ▼   ▲ promote @ reload cost
+//!        │        └─── cache::TierStore (DRAM ⇄ SSD, --tiers)
+//!        ├──► RealEngine (pjrt)
+//!        └──► MockEngine (tests)
 //! ```
 //!
 //! * **Sharding** — sessions are pinned to shards by a deterministic hash
@@ -40,18 +46,34 @@
 //!   radix-node boundaries and round-robined across its shard queue, so
 //!   short requests are not head-of-line blocked behind giant prefills.
 //!   Cache semantics are provably unchanged; only the queue-aware TTFT
-//!   ([`crate::types::ServedRequest::queued_ttft`]) moves. See
-//!   [`admission`].
-//! * **Determinism** — shard state is session-local and queues preserve
-//!   arrival order, so hit/miss results are independent of `n_workers`
-//!   (and of `prefill_chunk`) and equal a single-shard ground-truth run of
-//!   the same queue (pinned by `rust/tests/serve_stress.rs` and
+//!   ([`crate::types::ServedRequest::queued_ttft`]) moves. Promoted
+//!   (cold-tier) tokens count toward the chunkable region — they occupy
+//!   the engine while loading, unlike hot hits. See [`admission`].
+//! * **KV tiering** — with [`ServeConfig::tiers`] set (CLI `--tiers
+//!   hbm=N,dram=N,ssd=N`), each shard's engine runs a
+//!   [`crate::cache::TierStore`] behind its radix cache: capacity eviction
+//!   *demotes* KV to DRAM (overflowing to SSD) instead of discarding it,
+//!   and a later prefix match landing in a cold tier *promotes* at that
+//!   tier's reload cost instead of re-prefilling. Admission and promotion
+//!   are cost-gated ([`crate::cache::AdmissionPolicy::CostAware`]): spans
+//!   cheaper to recompute than to reload are discarded, so demote-mode
+//!   TTFT is never worse than discard-mode. §4.1 index pruning fires only
+//!   on *final* discard (content in a cold tier is still servable).
+//!   Per-request hit tokens split hot/warm/cold
+//!   ([`crate::types::TierHits`], [`crate::metrics::ShardStats`]).
+//! * **Determinism** — shard state (including the tier store) is
+//!   session-local and queues preserve arrival order, so hit/miss results
+//!   and the hot/warm/cold split are independent of `n_workers` (and of
+//!   `prefill_chunk`) and equal a single-shard ground-truth run of the
+//!   same queue (pinned by `rust/tests/serve_stress.rs` and
 //!   `rust/tests/engine_trait.rs`).
 //!
-//! Per-shard hit rate, queue depth and latency percentiles surface through
-//! [`crate::metrics::ShardStats`]; `benches/bench_serving.rs` reports
-//! whole-batch throughput across worker counts and chunk settings
-//! (`BENCH_serving.json`).
+//! Per-shard hit rate, tier residency, queue depth and latency percentiles
+//! surface through [`crate::metrics::ShardStats`];
+//! `benches/bench_serving.rs` reports whole-batch throughput across worker
+//! counts and chunk settings (`BENCH_serving.json`), and
+//! `benches/bench_tiering.rs` sweeps HBM capacity x tier config
+//! (`BENCH_tiering.json`).
 
 pub mod admission;
 mod engine;
@@ -62,6 +84,7 @@ pub use shard::{shard_of, Shard};
 
 use std::collections::HashMap;
 
+use crate::cache::TierConfig;
 use crate::engine::costmodel::{CostProfile, ModelSku};
 use crate::engine::sim::{ReusePolicy, SimEngine};
 use crate::pilot::PilotConfig;
@@ -97,6 +120,11 @@ pub struct ServeConfig {
     /// Per-request decode-length overrides (trace replay); requests not in
     /// the map use `decode_tokens`.
     pub decode_override: Option<HashMap<RequestId, usize>>,
+    /// Per-shard DRAM/SSD tier store behind the radix cache (CLI
+    /// `--tiers`): eviction demotes instead of discarding, cold-tier
+    /// prefix matches promote at reload cost. `None` = classic discard
+    /// eviction. Only effective for the radix reuse policy.
+    pub tiers: Option<TierConfig>,
 }
 
 impl ServeConfig {
@@ -115,15 +143,19 @@ impl ServeConfig {
             decode_tokens: 32,
             prefill_chunk: None,
             decode_override: None,
+            tiers: None,
         }
     }
 
     /// The default engine for this config: a [`SimEngine`] built from the
-    /// profile / reuse policy / per-shard KV budget. Factory for
-    /// [`ServingEngine::new`] and the one place the serving layer names
-    /// the concrete simulated engine.
+    /// profile / reuse policy / per-shard KV budget (plus the tier store
+    /// when configured). Factory for [`ServingEngine::new`] and the one
+    /// place the serving layer names the concrete simulated engine.
     pub fn sim_engine(&self) -> SimEngine {
-        SimEngine::new(self.profile, self.policy, self.capacity_tokens)
+        match &self.tiers {
+            Some(t) => SimEngine::with_tiers(self.profile, self.policy, self.capacity_tokens, t),
+            None => SimEngine::new(self.profile, self.policy, self.capacity_tokens),
+        }
     }
 }
 
@@ -140,6 +172,7 @@ mod tests {
         assert!(cfg.capacity_tokens > 0);
         assert!(cfg.prefill_chunk.is_none());
         assert!(cfg.decode_override.is_none());
+        assert!(cfg.tiers.is_none());
     }
 
     #[test]
@@ -155,5 +188,16 @@ mod tests {
         cfg.capacity_tokens = 1234;
         let engine = cfg.sim_engine();
         assert_eq!(engine.cache.capacity(), 1234);
+        assert!(!engine.cache.demotion_enabled());
+    }
+
+    #[test]
+    fn sim_engine_factory_wires_tier_store() {
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.capacity_tokens = 1234;
+        cfg.tiers = Some(TierConfig::new(10_000, 40_000));
+        let engine = cfg.sim_engine();
+        assert_eq!(engine.cache.capacity(), 1234, "hbm budget unchanged");
+        assert!(engine.cache.demotion_enabled());
     }
 }

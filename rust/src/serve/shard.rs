@@ -119,9 +119,12 @@ impl<E: InferenceEngine> Shard<E> {
                             .serve(req, &rw.prompt, corpus, &self.quality, decode);
                     pilot.on_evict(&evicted);
                     all_evicted.extend(evicted);
+                    // hot hits skip the engine entirely; promoted (cold-
+                    // tier) tokens occupy it while loading, so the
+                    // chunkable region starts at the hot boundary
                     plans.push(admission::chunk_plan(
                         self.prefill_chunk,
-                        served.cached_tokens,
+                        served.tier_hits.hbm,
                         served.prompt_tokens,
                         served.ttft,
                         &boundaries,
@@ -158,7 +161,7 @@ impl<E: InferenceEngine> Shard<E> {
                     all_evicted.extend(evicted);
                     plans.push(admission::chunk_plan(
                         self.prefill_chunk,
-                        served.cached_tokens,
+                        served.tier_hits.hbm,
                         served.prompt_tokens,
                         served.ttft,
                         &boundaries,
@@ -224,7 +227,7 @@ impl<E: InferenceEngine> Shard<E> {
         };
         let plan = admission::chunk_plan(
             self.prefill_chunk,
-            served.cached_tokens,
+            served.tier_hits.hbm,
             served.prompt_tokens,
             served.ttft,
             &boundaries,
@@ -249,6 +252,10 @@ impl<E: InferenceEngine> Shard<E> {
             prefill_chunks: self.metrics.total_prefill_chunks,
             index_nodes: self.pilot.as_ref().map_or(0, |p| p.index_size()),
             resident_tokens: cache.resident_tokens,
+            dram_resident_tokens: cache.dram_resident_tokens,
+            ssd_resident_tokens: cache.ssd_resident_tokens,
+            warm_hit_tokens: cache.warm_hit_tokens,
+            cold_hit_tokens: cache.cold_hit_tokens,
             sessions: self.engine.session_count(),
         }
     }

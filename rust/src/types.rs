@@ -102,6 +102,40 @@ impl Prompt {
     }
 }
 
+/// Per-tier breakdown of one request's reused (cache-hit) tokens: `hbm`
+/// tokens were hot in the radix cache, `dram`/`ssd` tokens were promoted
+/// from a cold tier at that tier's reload cost
+/// ([`crate::cache::TierStore`]). Engines without tiering report
+/// everything as `hbm` ([`TierHits::hot`]); `hbm + dram + ssd ==
+/// cached_tokens` always.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierHits {
+    pub hbm: usize,
+    pub dram: usize,
+    pub ssd: usize,
+}
+
+impl TierHits {
+    /// All hits from the hot tier (the non-tiered engine shape).
+    pub fn hot(n: usize) -> TierHits {
+        TierHits {
+            hbm: n,
+            dram: 0,
+            ssd: 0,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.hbm + self.dram + self.ssd
+    }
+
+    /// Tokens that came from a cold tier (DRAM + SSD) — what the tier
+    /// store added over discard-mode eviction.
+    pub fn promoted(&self) -> usize {
+        self.dram + self.ssd
+    }
+}
+
 /// Outcome of serving one request (metrics inputs).
 #[derive(Clone, Debug)]
 pub struct ServedRequest {
@@ -124,6 +158,9 @@ pub struct ServedRequest {
     /// Number of prefill chunks admission split this request into
     /// (1 = served as a single monolithic prefill).
     pub prefill_chunks: u32,
+    /// Which tier each reused token came from;
+    /// `tier_hits.total() == cached_tokens`.
+    pub tier_hits: TierHits,
 }
 
 impl ServedRequest {
@@ -176,7 +213,22 @@ mod tests {
             quality: 0.0,
             queued_ttft: 0.0,
             prefill_chunks: 1,
+            tier_hits: TierHits::default(),
         };
         assert_eq!(s.hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn tier_hits_arithmetic() {
+        let t = TierHits {
+            hbm: 10,
+            dram: 5,
+            ssd: 2,
+        };
+        assert_eq!(t.total(), 17);
+        assert_eq!(t.promoted(), 7);
+        let hot = TierHits::hot(9);
+        assert_eq!((hot.total(), hot.promoted()), (9, 0));
+        assert_eq!(TierHits::default().total(), 0);
     }
 }

@@ -200,6 +200,30 @@ pub fn hit_miss_fingerprint(served: &[ServedRequest]) -> Vec<(u64, usize, usize)
         .collect()
 }
 
+/// Tier-aware determinism fingerprint: [`hit_miss_fingerprint`] plus the
+/// per-request hot/warm/cold hit split. Worker count must never change it
+/// either — the per-shard tier store evolves in shard serve order, which
+/// is worker-independent (pinned by `tests/serve_stress.rs` and
+/// `benches/bench_tiering.rs`).
+#[allow(clippy::type_complexity)]
+pub fn reuse_fingerprint(
+    served: &[ServedRequest],
+) -> Vec<(u64, usize, usize, usize, usize, usize)> {
+    served
+        .iter()
+        .map(|s| {
+            (
+                s.request.id.0,
+                s.prompt_tokens,
+                s.cached_tokens,
+                s.tier_hits.hbm,
+                s.tier_hits.dram,
+                s.tier_hits.ssd,
+            )
+        })
+        .collect()
+}
+
 /// One proxy→engine interaction, as observed by [`RecordingEngine`].
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct EngineCall {
@@ -271,6 +295,7 @@ impl InferenceEngine for MockEngine {
                 quality: 0.0,
                 queued_ttft: ttft,
                 prefill_chunks: 1,
+                tier_hits: crate::types::TierHits::default(),
             },
             evicted,
         )

@@ -11,6 +11,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+use contextpilot::cache::TierConfig;
 use contextpilot::dedup::{dedup_context, DedupConfig};
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::engine::sim::{ReusePolicy, SimEngine};
@@ -21,7 +22,9 @@ use contextpilot::quality::{ModelEra, QualityModel};
 use contextpilot::serve::{shard_of, ServeConfig, ServingEngine};
 use contextpilot::types::{Request, RequestId, Segment, ServedRequest, SessionId};
 use contextpilot::util::prng::Rng;
-use contextpilot::util::prop::{check, gen_context, gen_requests, CaseResult, Config};
+use contextpilot::util::prop::{
+    check, gen_context, gen_requests, reuse_fingerprint, CaseResult, Config,
+};
 use contextpilot::workload::{hybrid, Dataset};
 
 fn serve_cfg(shards: usize, workers: usize) -> ServeConfig {
@@ -260,6 +263,107 @@ fn dedup_is_idempotent() {
             }
             CaseResult::Pass
         },
+    );
+}
+
+#[test]
+fn tiered_accounting_is_worker_count_invariant() {
+    // tight per-shard HBM under a multi-turn workload: session history is
+    // evicted (demoted) between turns and promoted back on the next turn.
+    // The per-request hot/warm/cold split and the aggregate tier totals
+    // must be bit-identical for any worker count — the tier store is
+    // shard-local state driven in shard serve order, like the radix cache.
+    let w = hybrid(Dataset::MtRag, 24, 3, 8, 0x71E7);
+    let corpus = corpus_for(Dataset::MtRag);
+    let run = |workers: usize| {
+        let mut cfg = serve_cfg(6, workers);
+        cfg.capacity_tokens = 1_500;
+        cfg.tiers = Some(TierConfig::new(16_000, 64_000));
+        let engine = ServingEngine::new(cfg);
+        let served = engine.serve_batch(&w.requests, &corpus);
+        let fp = reuse_fingerprint(&served);
+        let (m, per) = engine.metrics();
+        let residency: Vec<(usize, usize, u64, u64)> = per
+            .iter()
+            .map(|s| {
+                (
+                    s.dram_resident_tokens,
+                    s.ssd_resident_tokens,
+                    s.warm_hit_tokens,
+                    s.cold_hit_tokens,
+                )
+            })
+            .collect();
+        (
+            fp,
+            m.total_hot_hit_tokens,
+            m.total_warm_hit_tokens,
+            m.total_cold_hit_tokens,
+            m.total_cached_tokens,
+            residency,
+        )
+    };
+    let base = run(1);
+    assert!(
+        base.2 + base.3 > 0,
+        "tight HBM must force warm/cold promotions"
+    );
+    assert_eq!(
+        base.1 + base.2 + base.3,
+        base.4,
+        "hot+warm+cold must partition cached tokens"
+    );
+    for workers in [2usize, 4, 8] {
+        assert_eq!(
+            run(workers),
+            base,
+            "workers={workers} changed tier accounting"
+        );
+    }
+}
+
+#[test]
+fn index_pruning_fires_on_final_discard_only() {
+    // the eviction→index-prune→demotion chain, both ends:
+    //  * roomy store: radix evictions demote, nothing is finally
+    //    discarded, so the §4.1 prune callbacks NEVER fire — the pilot
+    //    index must evolve exactly as it would with no evictions at all
+    //    (same node count as a discard run with unbounded HBM);
+    //  * tiny store: demotions overflow every tier, the discard ids
+    //    surface through serve, and the index IS pruned.
+    let w = hybrid(Dataset::MtRag, 10, 3, 8, 0xD15C);
+    let corpus = corpus_for(Dataset::MtRag);
+    let run = |capacity: usize, tiers: Option<TierConfig>| {
+        let mut cfg = serve_cfg(1, 1);
+        cfg.capacity_tokens = capacity;
+        cfg.tiers = tiers;
+        let engine = ServingEngine::new(cfg);
+        engine.serve_batch(&w.requests, &corpus);
+        let (_, per) = engine.metrics();
+        (
+            per[0].index_nodes,
+            per[0].dram_resident_tokens + per[0].ssd_resident_tokens,
+        )
+    };
+    let (unbounded_nodes, _) = run(1 << 24, None);
+    // Always-admit: cost-aware admission would discard sub-50-token split
+    // leaves (reload overhead beats recompute), firing prunes this test
+    // needs provably absent
+    let mut roomy_tiers = TierConfig::new(1 << 20, 1 << 20);
+    roomy_tiers.admission = contextpilot::cache::AdmissionPolicy::Always;
+    let (demote_nodes, demote_resident) = run(1_500, Some(roomy_tiers));
+    assert!(
+        demote_resident > 0,
+        "tight HBM must actually demote (evictions occurred)"
+    );
+    assert_eq!(
+        demote_nodes, unbounded_nodes,
+        "no final discard -> the prune callback may never fire"
+    );
+    let (tiny_nodes, _) = run(1_500, Some(TierConfig::new(500, 500)));
+    assert!(
+        tiny_nodes < unbounded_nodes,
+        "overflowing every tier must prune the index: {tiny_nodes} vs {unbounded_nodes}"
     );
 }
 
