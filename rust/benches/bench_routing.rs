@@ -1,0 +1,230 @@
+//! Placement bench: placement policy × shard count × worker count on the
+//! recurring-context workload (`BENCH_routing.json`).
+//!
+//! One seeded recurring-context workload (many sessions sharing a few RAG
+//! corpora — the §7.2 / Table 6 routing scenario) through the sharded
+//! `ServingEngine` under every placement policy, at several shard counts,
+//! each at 1/2/4 workers. The ContextPilot proxy is ON for every cell so
+//! the *only* independent variable per row is where sessions land.
+//!
+//! Pinned invariants (the placement acceptance contract):
+//!  * per-request reuse results are bit-identical across worker counts
+//!    for every (placement, shards) cell — placement happens at enqueue
+//!    time, before workers run;
+//!  * context-aware placement never loses to session hashing on cached
+//!    tokens, and strictly beats it whenever there is more than one shard
+//!    to get wrong;
+//!  * at one shard every policy is byte-identical (placement is inert).
+//!
+//! Sizes: `--cheap` (CI smoke) < default quick < CTXPILOT_FULL=1.
+
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::{full_mode, turn_waves};
+use contextpilot::serve::{PlacementKind, ServeConfig, ServingEngine};
+use contextpilot::util::cli::Args;
+use contextpilot::util::json::Json;
+use contextpilot::util::prop::reuse_fingerprint;
+use contextpilot::util::table::{reset_result_file, Table};
+use contextpilot::workload::{recurring, Dataset};
+
+const PLACEMENTS: [PlacementKind; 3] = [
+    PlacementKind::SessionHash,
+    PlacementKind::RoundRobin,
+    PlacementKind::ContextAware,
+];
+const SHARD_SWEEP: [usize; 3] = [1, 4, 8];
+const WORKER_SWEEP: [usize; 3] = [1, 2, 4];
+
+struct Cell {
+    placement: PlacementKind,
+    shards: usize,
+    workers: usize,
+    wall_s: f64,
+    req_per_s: f64,
+    hit_ratio: f64,
+    cached: u64,
+    affinity: u64,
+    mean_ttft: f64,
+    p99_ttft: f64,
+}
+
+/// Deterministic result signature: per-request reuse fingerprint plus the
+/// aggregate mean-TTFT bit pattern.
+type Signature = (Vec<(u64, usize, usize, usize, usize, usize)>, u64);
+
+fn run_once(
+    w: &contextpilot::workload::Workload,
+    corpus: &contextpilot::corpus::Corpus,
+    placement: PlacementKind,
+    shards: usize,
+    workers: usize,
+) -> (Signature, Cell) {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
+    cfg.n_shards = shards;
+    cfg.n_workers = workers;
+    cfg.capacity_tokens = 1 << 20; // roomy: the sweep isolates placement
+    cfg.decode_tokens = 16;
+    cfg.placement = placement;
+    let engine = ServingEngine::new(cfg);
+    let t0 = std::time::Instant::now();
+    let mut served = Vec::with_capacity(w.len());
+    for (i, j) in turn_waves(&w.requests) {
+        served.extend(engine.serve_batch(&w.requests[i..j], corpus));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut m, _) = engine.metrics();
+    let cell = Cell {
+        placement,
+        shards,
+        workers,
+        wall_s: wall,
+        req_per_s: served.len() as f64 / wall.max(1e-9),
+        hit_ratio: m.hit_ratio(),
+        cached: m.total_cached_tokens,
+        affinity: m.total_affinity_hit_tokens,
+        mean_ttft: m.mean_ttft(),
+        p99_ttft: m.p99_ttft(),
+    };
+    ((reuse_fingerprint(&served), m.mean_ttft().to_bits()), cell)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cheap = args.flag("cheap");
+    let quick = !full_mode();
+    reset_result_file("routing");
+    let (sessions, turns, groups, k) = if cheap {
+        (24, 2, 6, 6)
+    } else if quick {
+        (64, 3, 8, 8)
+    } else {
+        (256, 4, 12, 10)
+    };
+    let w = recurring(Dataset::MtRag, sessions, turns, groups, k, 0x9047);
+    let corpus = contextpilot::experiments::corpus_for(Dataset::MtRag);
+    let t_start = std::time::Instant::now();
+
+    let mut t = Table::new(
+        &format!(
+            "Reuse-aware placement — {} requests ({sessions} sessions x {turns} turns, \
+             {groups} recurring context groups of {k} blocks, MT-RAG corpus)",
+            w.len()
+        ),
+        &[
+            "Shards",
+            "Placement",
+            "Hit ratio",
+            "Cached tok",
+            "Affinity tok",
+            "Mean TTFT",
+            "Req/s (1..4w)",
+        ],
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &shards in &SHARD_SWEEP {
+        let mut per_placement: Vec<(PlacementKind, Signature, Cell)> = Vec::new();
+        for placement in PLACEMENTS {
+            let mut sig: Option<Signature> = None;
+            let mut rps = Vec::new();
+            let mut first_cell: Option<Cell> = None;
+            for &workers in &WORKER_SWEEP {
+                let (s, cell) = run_once(&w, &corpus, placement, shards, workers);
+                match &sig {
+                    None => sig = Some(s),
+                    Some(base) => assert_eq!(
+                        *base, s,
+                        "{placement} shards={shards} workers={workers} changed results"
+                    ),
+                }
+                rps.push(cell.req_per_s);
+                if first_cell.is_none() {
+                    first_cell = Some(cell);
+                } else {
+                    cells.push(cell);
+                }
+            }
+            let cell = first_cell.expect("worker sweep ran");
+            t.row(vec![
+                format!("{shards}"),
+                placement.name().to_string(),
+                format!("{:.1}%", cell.hit_ratio * 100.0),
+                format!("{}", cell.cached),
+                format!("{}", cell.affinity),
+                format!("{:.4}s", cell.mean_ttft),
+                rps.iter()
+                    .map(|r| format!("{r:.0}"))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]);
+            per_placement.push((placement, sig.expect("sweep ran"), cell));
+        }
+        // acceptance: the placement comparison at this shard count
+        let cached_of = |kind: PlacementKind| {
+            per_placement
+                .iter()
+                .find(|(p, _, _)| *p == kind)
+                .map(|(_, _, c)| c.cached)
+                .expect("cell ran")
+        };
+        let aware = cached_of(PlacementKind::ContextAware);
+        let hashed = cached_of(PlacementKind::SessionHash);
+        assert!(
+            aware >= hashed,
+            "shards={shards}: context-aware {aware} < session-hash {hashed} cached tokens"
+        );
+        if shards > 1 {
+            assert!(
+                aware > hashed,
+                "shards={shards}: context-aware must strictly beat session-hash \
+                 on the recurring workload ({aware} vs {hashed})"
+            );
+        } else {
+            // one shard: placement cannot matter, byte-identical results
+            let base = &per_placement[0].1;
+            for (p, sig, _) in &per_placement[1..] {
+                assert_eq!(sig, base, "shards=1: {p} diverged from {}", per_placement[0].0);
+            }
+        }
+        for (_, _, c) in per_placement {
+            cells.push(c);
+        }
+    }
+    t.emit("routing");
+
+    let json_rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("placement", Json::str(c.placement.name())),
+                ("shards", Json::num(c.shards as f64)),
+                ("workers", Json::num(c.workers as f64)),
+                ("wall_s", Json::num(c.wall_s)),
+                ("req_per_s", Json::num(c.req_per_s)),
+                ("hit_ratio", Json::num(c.hit_ratio)),
+                ("cached_tokens", Json::num(c.cached as f64)),
+                ("affinity_hit_tokens", Json::num(c.affinity as f64)),
+                ("mean_ttft_s", Json::num(c.mean_ttft)),
+                ("p99_ttft_s", Json::num(c.p99_ttft)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("routing")),
+        ("dataset", Json::str("mtrag-recurring")),
+        ("requests", Json::num(w.len() as f64)),
+        ("sessions", Json::num(sessions as f64)),
+        ("turns", Json::num(turns as f64)),
+        ("groups", Json::num(groups as f64)),
+        ("k", Json::num(k as f64)),
+        ("cheap", Json::Bool(cheap)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    let json_path = "BENCH_routing.json";
+    std::fs::write(json_path, format!("{doc}\n")).expect("write BENCH_routing.json");
+    eprintln!(
+        "bench_routing done in {:.2}s (cheap={cheap} quick={quick}); wrote {json_path}",
+        t_start.elapsed().as_secs_f64()
+    );
+}

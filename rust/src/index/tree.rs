@@ -128,6 +128,33 @@ impl ContextIndex {
         self.req_to_leaf.get(&req).copied()
     }
 
+    /// Placement probe ([`crate::serve::placement`]): how many distinct
+    /// blocks of `context` appear in any alive leaf. Side-effect-free
+    /// (`&self` — no `freq` ticks, unlike [`ContextIndex::search`]), so
+    /// the serving layer can poll it per queued request. Leaves carry full
+    /// aligned contexts, so scanning them covers everything the index
+    /// knows; eviction pruning (§4.1) removes dead leaves from the count
+    /// automatically, which is exactly what keeps context-aware placement
+    /// honest about what is still cached.
+    pub fn known_blocks(&self, context: &Context) -> usize {
+        if context.is_empty() {
+            return 0;
+        }
+        let want: HashSet<BlockId> = context.iter().copied().collect();
+        let mut found: HashSet<BlockId> = HashSet::new();
+        for n in self.nodes.iter().filter(|n| n.alive && n.is_leaf()) {
+            for b in &n.context {
+                if want.contains(b) {
+                    found.insert(*b);
+                    if found.len() == want.len() {
+                        return found.len();
+                    }
+                }
+            }
+        }
+        found.len()
+    }
+
     pub(crate) fn alloc(&mut self, node: IndexNode) -> NodeId {
         if let Some(id) = self.free.pop() {
             self.nodes[id] = node;
@@ -594,6 +621,23 @@ mod tests {
             .seen_blocks
             .contains(&BlockId(5)));
         assert!(ix.conversation_ref(SessionId(2)).is_none());
+    }
+
+    #[test]
+    fn known_blocks_probe_is_side_effect_free_and_tracks_eviction() {
+        let (mut ix, _, _) = fig4_index();
+        let freq_before: Vec<u64> = (0..ix.capacity()).map(|i| ix.node(i).freq).collect();
+        // leaves hold {1,4,0}, {1,2,3}, {1,2,6}
+        assert_eq!(ix.known_blocks(&ctx(&[1, 2, 4])), 3);
+        assert_eq!(ix.known_blocks(&ctx(&[7, 8])), 0);
+        assert_eq!(ix.known_blocks(&ctx(&[6, 9])), 1);
+        assert_eq!(ix.known_blocks(&ctx(&[])), 0);
+        let freq_after: Vec<u64> = (0..ix.capacity()).map(|i| ix.node(i).freq).collect();
+        assert_eq!(freq_before, freq_after, "probe ticked freq counters");
+        // §4.1 pruning shrinks the probe's view
+        ix.on_evict(&[RequestId(1), RequestId(2)]);
+        assert_eq!(ix.known_blocks(&ctx(&[2, 3, 6])), 0, "evicted leaves counted");
+        assert_eq!(ix.known_blocks(&ctx(&[4, 0])), 2, "surviving leaf ignored");
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //!        │
 //!        ▼
 //!   serve::ServingEngine<E>      lock-striped shards + worker pool
-//!        │                       (the sequential runner is this at n = 1)
+//!        │                       (the sequential runner is this at n = 1);
+//!        │                       serve::placement picks each session's
+//!        │                       first-turn shard (session-hash / round-
+//!        │                       robin / context-aware reuse voting)
 //!        ▼
 //!   serve::Shard<E>              ContextPilot proxy ([`pilot`]) +
 //!        │                       chunked-prefill admission
@@ -33,10 +36,15 @@
 //!   ```
 //!
 //!   Sessions are pinned to shards (each owning a context index, a prefix
-//!   cache and an engine instance) and a worker pool drives shard queues;
-//!   prompts whose uncached prefill exceeds `--prefill-chunk` are split at
-//!   radix-node boundaries and interleaved across their shard queue so
-//!   short requests are not head-of-line blocked, with queue-aware TTFT
+//!   cache and an engine instance) and a worker pool drives shard queues.
+//!   *Which* shard a session is pinned to is the placement layer's call
+//!   ([`serve::placement`], CLI `--placement session|rr|context`): the
+//!   context-aware policy votes by each shard's real index/cache state so
+//!   users sharing a corpus land where its KV already lives (§7.2 /
+//!   Table 6 routing, folded into the serving layer). Prompts whose
+//!   uncached prefill exceeds `--prefill-chunk` are split at radix-node
+//!   boundaries and interleaved across their shard queue so short
+//!   requests are not head-of-line blocked, with queue-aware TTFT
 //!   accounting in [`metrics`].
 //! - **Layer 2** — a JAX transformer (`python/compile/model.py`) AOT-lowered
 //!   to HLO text, executed from Rust via PJRT ([`runtime`]; gated on the

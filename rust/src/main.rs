@@ -8,7 +8,10 @@
 //!                InferenceEngine trait; --prefill-chunk T enables
 //!                chunked-prefill admission; --tiers hbm=N,dram=N,ssd=N
 //!                attaches a KV tier store so eviction demotes to
-//!                DRAM/SSD instead of discarding)
+//!                DRAM/SSD instead of discarding; --placement
+//!                session|rr|context picks the first-turn session →
+//!                shard policy, `context` being §7.2 reuse-aware
+//!                placement)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
 //!                fig7, fig8, fig11, fig12, fig13, appendix_f,
 //!                appendix_g) or the capacity-pressure table (capacity)
@@ -21,7 +24,7 @@ use contextpilot::engine::{InferenceEngine, ModelSku};
 use contextpilot::experiments as exp;
 use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
 use contextpilot::pilot::PilotConfig;
-use contextpilot::serve::ServingEngine;
+use contextpilot::serve::{PlacementKind, ServingEngine};
 use contextpilot::util::cli::Args;
 use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset, Workload};
 
@@ -99,6 +102,7 @@ fn drive_sharded<E: InferenceEngine>(
         ),
         None => println!("KV tiers         : off (evict = discard)"),
     }
+    println!("placement        : {}", cfg.placement);
     println!("requests         : {served_total}");
     println!(
         "batch wall       : {:.3}s ({:.0} req/s)",
@@ -108,6 +112,12 @@ fn drive_sharded<E: InferenceEngine>(
     println!("prefill tok/s    : {:.0}", m.prefill_throughput());
     println!("prefill chunks   : {}", m.total_prefill_chunks);
     println!("cache hit ratio  : {:.1}%", m.hit_ratio() * 100.0);
+    if cfg.placement == contextpilot::serve::PlacementKind::ContextAware {
+        println!(
+            "affinity reuse   : {} of {} cached tokens on affinity-placed sessions",
+            m.total_affinity_hit_tokens, m.total_cached_tokens
+        );
+    }
     if cfg.tiers.is_some() {
         println!(
             "reuse h/w/c tok  : {} hot / {} warm / {} cold",
@@ -128,8 +138,13 @@ fn drive_sharded<E: InferenceEngine>(
         } else {
             String::new()
         };
+        let affinity = if cfg.placement == contextpilot::serve::PlacementKind::ContextAware {
+            format!(", {} affinity tok", s.affinity_hit_tokens)
+        } else {
+            String::new()
+        };
         println!(
-            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions, {} resident tok{}",
+            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions ({} placed), {} resident tok{}{}",
             s.shard,
             s.served,
             s.hit_ratio * 100.0,
@@ -140,7 +155,9 @@ fn drive_sharded<E: InferenceEngine>(
             s.prefill_chunks,
             s.index_nodes,
             s.sessions,
+            s.placed_sessions,
             s.resident_tokens,
+            affinity,
             tiers
         );
     }
@@ -201,6 +218,13 @@ fn cmd_serve(args: &Args) {
     let shards = args.get_usize("shards", 1);
     let workers = args.get_usize("workers", 1);
     let prefill_chunk = args.get_usize("prefill-chunk", 0);
+    let placement = match PlacementKind::parse(args.get_or("placement", "session")) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("--placement: {e}");
+            std::process::exit(2);
+        }
+    };
     // --tiers hbm=N,dram=N,ssd=N — total budgets, divided across shards
     // like --capacity; hbm replaces --capacity as the radix budget
     let tiers = args.get("tiers").map(|spec| match TierConfig::parse(spec) {
@@ -211,12 +235,18 @@ fn cmd_serve(args: &Args) {
         }
     });
 
-    if shards > 1 || workers > 1 || prefill_chunk > 0 || engine_kind != "sim" || tiers.is_some()
+    if shards > 1
+        || workers > 1
+        || prefill_chunk > 0
+        || engine_kind != "sim"
+        || tiers.is_some()
+        || placement != PlacementKind::SessionHash
     {
         // concurrent sharded serving path (trait-generic backend)
         let mut scfg = exp::serve_config(&system, &workload, &cfg);
         scfg.n_shards = shards.max(1);
         scfg.n_workers = workers.max(1);
+        scfg.placement = placement;
         // --capacity is the TOTAL KV budget in both modes: divide it across
         // shards so sharded and unsharded runs are capacity-comparable
         scfg.capacity_tokens = (cfg.capacity_tokens / shards.max(1)).max(1);
@@ -373,6 +403,7 @@ fn main() {
             println!("         --engine sim|real        (backend behind the InferenceEngine trait)");
             println!("         --prefill-chunk TOKENS   (chunked-prefill admission)");
             println!("         --tiers hbm=N,dram=N,ssd=N (KV tier store: evict = demote, not discard)");
+            println!("         --placement session|rr|context (first-turn session -> shard policy)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|capacity|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

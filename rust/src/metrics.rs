@@ -26,6 +26,13 @@ pub struct RunMetrics {
     pub total_prefill_seconds: f64,
     /// Prefill chunks issued (== requests served when chunking is off).
     pub total_prefill_chunks: u64,
+    /// Cached tokens served to requests whose session was placed on its
+    /// shard by a positive context-affinity vote
+    /// ([`crate::serve::placement`]); 0 under session-hash / round-robin
+    /// placement. Filled at the serving-engine level (the per-shard
+    /// recorder cannot see placement decisions), so it is 0 on the raw
+    /// per-shard `RunMetrics` and set on the aggregate.
+    pub total_affinity_hit_tokens: u64,
     /// (progress fraction of requests, cumulative hit ratio) samples for
     /// the Fig. 12 time series.
     pub hit_series: Vec<(f64, f64)>,
@@ -132,6 +139,7 @@ impl RunMetrics {
         self.total_cold_hit_tokens += other.total_cold_hit_tokens;
         self.total_prefill_seconds += other.total_prefill_seconds;
         self.total_prefill_chunks += other.total_prefill_chunks;
+        self.total_affinity_hit_tokens += other.total_affinity_hit_tokens;
         self.hit_series.extend(other.hit_series.iter().copied());
         self.cached_series.extend(other.cached_series.iter().copied());
         self.n += other.n;
@@ -159,6 +167,13 @@ pub struct ShardStats {
     /// Alive nodes in the shard's context index (0 when serving baseline
     /// prompts without a pilot).
     pub index_nodes: usize,
+    /// Sessions the placement layer pinned to this shard
+    /// ([`crate::serve::placement`]) — counts placement decisions, unlike
+    /// `sessions` which counts conversations the engine has served.
+    pub placed_sessions: usize,
+    /// Cached tokens served here to affinity-placed sessions (0 under
+    /// session-hash / round-robin placement).
+    pub affinity_hit_tokens: u64,
     /// Tokens resident in the shard's radix prefix cache (the HBM tier).
     pub resident_tokens: usize,
     /// Tokens resident in the shard's DRAM tier (0 without a tier store).
@@ -278,6 +293,18 @@ mod tests {
             m.total_hot_hit_tokens + m.total_warm_hit_tokens + m.total_cold_hit_tokens,
             m.total_cached_tokens
         );
+    }
+
+    #[test]
+    fn affinity_tokens_merge_and_default_to_zero() {
+        let mut a = RunMetrics::new();
+        a.record(&served(100, 50, 0.1, 0.8));
+        assert_eq!(a.total_affinity_hit_tokens, 0, "record never attributes");
+        a.total_affinity_hit_tokens = 10;
+        let mut b = RunMetrics::new();
+        b.total_affinity_hit_tokens = 5;
+        a.merge(&b);
+        assert_eq!(a.total_affinity_hit_tokens, 15);
     }
 
     #[test]

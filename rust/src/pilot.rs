@@ -132,6 +132,14 @@ impl ContextPilot {
         self.index.len_alive()
     }
 
+    /// Side-effect-free placement probe ([`crate::serve::placement`]): how
+    /// many of `context`'s blocks this pilot's index already knows —
+    /// i.e. how much of the request the shard behind this pilot could
+    /// reuse. Delegates to [`ContextIndex::known_blocks`].
+    pub fn known_blocks(&self, context: &Context) -> usize {
+        self.index.known_blocks(context)
+    }
+
     /// Engine eviction callback (§4.1).
     pub fn on_evict(&mut self, reqs: &[RequestId]) {
         self.index.on_evict(reqs);
@@ -352,6 +360,18 @@ mod tests {
         assert!(pilot.index.leaf_of_request(RequestId(1)).is_none());
         assert!(pilot.index.leaf_of_request(RequestId(2)).is_some());
         pilot.index.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn known_blocks_tracks_serving_and_eviction() {
+        let corpus = corpus();
+        let mut pilot = ContextPilot::new(PilotConfig::default());
+        let probe: Context = [1u32, 2, 9].iter().map(|&i| BlockId(i)).collect();
+        assert_eq!(pilot.known_blocks(&probe), 0, "cold index knows nothing");
+        pilot.process(&req(1, 1, 0, &[1, 2, 3]), &corpus);
+        assert_eq!(pilot.known_blocks(&probe), 2);
+        pilot.on_evict(&[RequestId(1)]);
+        assert_eq!(pilot.known_blocks(&probe), 0, "§4.1 pruning must be seen");
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! each session's requests land on its pinned shard in arrival order,
 //! which is what makes results independent of the worker count.
 //!
+//! Which shard a session is pinned *to* is the placement layer's decision
+//! ([`crate::serve::placement`], [`crate::serve::ServeConfig::placement`]):
+//! batches are partitioned through the policy at enqueue time —
+//! deterministically, in arrival order, before any worker runs — and a
+//! session's later turns always reuse its first-turn pin.
+//!
 //! [`ServingEngine::new`] builds the default simulated backend
 //! ([`crate::engine::sim::SimEngine`]); [`ServingEngine::with_engine_factory`]
 //! accepts any engine constructor — the CLI's `--engine real` path hands
@@ -18,6 +24,7 @@ use crate::corpus::Corpus;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
+use crate::serve::placement::{PlacementBook, ShardProbe};
 use crate::serve::shard::{shard_of, Shard};
 use crate::serve::ServeConfig;
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
@@ -28,6 +35,11 @@ pub struct ServingEngine<E = SimEngine> {
     /// Lock striping: one mutex per shard; concurrent callers contend only
     /// when they hit the same shard.
     shards: Vec<Mutex<Shard<E>>>,
+    /// Session placement ledger: the policy, the session → shard pins and
+    /// the per-shard placement/affinity telemetry. Lock order is strictly
+    /// placement → shard (probing locks shards while holding this; no
+    /// path takes this while holding a shard).
+    placement: Mutex<PlacementBook>,
     /// Engine request id → owning shard, so external eviction notifications
     /// (§4.1) can be routed without broadcasting to every shard. Entries
     /// are pruned by engine-reported and external evictions; under an
@@ -57,9 +69,11 @@ impl<E: InferenceEngine> ServingEngine<E> {
         let shards = (0..cfg.n_shards)
             .map(|i| Mutex::new(Shard::new(i, &cfg, factory(&cfg))))
             .collect();
+        let placement = Mutex::new(PlacementBook::new(cfg.placement, cfg.n_shards));
         ServingEngine {
             shards,
             cfg,
+            placement,
             req_shard: Mutex::new(HashMap::new()),
         }
     }
@@ -77,22 +91,76 @@ impl<E: InferenceEngine> ServingEngine<E> {
         &self.cfg
     }
 
-    /// The shard a session is pinned to.
+    /// The shard a session is pinned to: its recorded placement when it
+    /// has been placed, otherwise the session-hash default (exact under
+    /// [`crate::serve::PlacementKind::SessionHash`]; a prediction for
+    /// not-yet-placed sessions under other policies).
     pub fn shard_of_session(&self, session: SessionId) -> usize {
+        if let Some(s) = self
+            .placement
+            .lock()
+            .expect("placement poisoned")
+            .pinned(session)
+        {
+            return s;
+        }
         shard_of(session, self.shards.len())
+    }
+
+    /// Probe every shard's live state for one placement decision: the
+    /// request's block overlap with the shard's context index (0 without a
+    /// pilot) and the engine's prefix-cache residency. Called while the
+    /// placement lock is held (strict placement → shard lock order).
+    fn probe_shards(&self, req: &Request, book: &PlacementBook) -> Vec<ShardProbe> {
+        (0..self.shards.len())
+            .map(|s| {
+                let shard = self.shards[s].lock().expect("shard poisoned");
+                ShardProbe {
+                    shard: s,
+                    index_blocks: shard
+                        .pilot
+                        .as_ref()
+                        .map_or(0, |p| p.known_blocks(&req.context)),
+                    resident_tokens: shard.engine.cache_stats().resident_tokens,
+                    placed_requests: book.placed_requests_on(s),
+                }
+            })
+            .collect()
+    }
+
+    /// Place a batch through the policy at enqueue time: one shard index
+    /// per request, decided in arrival order before any worker runs (so
+    /// placement is invariant in `n_workers`). Pinned sessions reuse their
+    /// first-turn shard; each batch is one placement wave.
+    fn place_batch(&self, reqs: &[Request]) -> Vec<usize> {
+        let mut book = self.placement.lock().expect("placement poisoned");
+        book.begin_wave();
+        reqs.iter()
+            .map(|r| {
+                if book.wants_probe(r.session) {
+                    let probes = self.probe_shards(r, &book);
+                    book.assign(r, Some(&probes))
+                } else {
+                    book.assign(r, None)
+                }
+            })
+            .collect()
     }
 
     /// Arrival indices per shard, preserving arrival order within a shard.
     fn partition(&self, reqs: &[Request]) -> Vec<Vec<usize>> {
+        let assignment = self.place_batch(reqs);
         let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
-        for (i, r) in reqs.iter().enumerate() {
-            queues[shard_of(r.session, self.shards.len())].push(i);
+        for (i, &s) in assignment.iter().enumerate() {
+            queues[s].push(i);
         }
         queues
     }
 
     /// Offline mode (§5.1): cluster-build each shard's context index over
-    /// its own slice of the batch (Alg. 4), shards built in parallel.
+    /// its own slice of the batch (Alg. 4), shards built in parallel. The
+    /// partition runs through the placement policy and pins the sessions,
+    /// so the subsequent serves land exactly where their index was built.
     /// No-op for shards without a pilot or without requests.
     pub fn build_offline(&self, reqs: &[Request]) {
         let queues = self.partition(reqs);
@@ -170,10 +238,16 @@ impl<E: InferenceEngine> ServingEngine<E> {
                 slots[i] = Some(sr);
             }
         }
-        slots
+        let out: Vec<ServedRequest> = slots
             .into_iter()
             .map(|x| x.expect("every request served exactly once"))
-            .collect()
+            .collect();
+        // affinity attribution (no shard lock held: placement → shard order)
+        self.placement
+            .lock()
+            .expect("placement poisoned")
+            .record_served(&out);
+        out
     }
 
     /// Serve a single request against its owning shard (the streaming
@@ -182,7 +256,8 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// submitted in order (sessions are pinned, so independent sessions
     /// may race freely).
     pub fn serve_one(&self, req: &Request, corpus: &Corpus) -> ServedRequest {
-        let s = shard_of(req.session, self.shards.len());
+        // placement: a streaming singleton is its own wave
+        let s = self.place_batch(std::slice::from_ref(req))[0];
         let mut shard = self.shards[s].lock().expect("shard poisoned");
         let (served, evicted) = shard.serve_one(req, corpus);
         // map upkeep under the shard lock — see serve_batch for why
@@ -194,6 +269,10 @@ impl<E: InferenceEngine> ServingEngine<E> {
             }
         }
         drop(shard);
+        self.placement
+            .lock()
+            .expect("placement poisoned")
+            .record_served(std::slice::from_ref(&served));
         served
     }
 
@@ -218,15 +297,30 @@ impl<E: InferenceEngine> ServingEngine<E> {
         }
     }
 
-    /// Aggregate run metrics plus a per-shard telemetry snapshot.
+    /// Aggregate run metrics plus a per-shard telemetry snapshot. Shard
+    /// rows carry the placement telemetry (sessions placed there and the
+    /// cached tokens attributed to affinity placements); the aggregate's
+    /// `total_affinity_hit_tokens` is their sum.
     pub fn metrics(&self) -> (RunMetrics, Vec<ShardStats>) {
+        // snapshot placement first, then release (placement → shard order)
+        let (placed_sessions, affinity_hits) = {
+            let book = self.placement.lock().expect("placement poisoned");
+            (
+                book.placed_sessions().to_vec(),
+                book.affinity_hit_tokens().to_vec(),
+            )
+        };
         let mut agg = RunMetrics::new();
         let mut per = Vec::with_capacity(self.shards.len());
-        for m in &self.shards {
+        for (i, m) in self.shards.iter().enumerate() {
             let mut shard = m.lock().expect("shard poisoned");
             agg.merge(&shard.metrics);
-            per.push(shard.stats());
+            let mut stats = shard.stats();
+            stats.placed_sessions = placed_sessions[i];
+            stats.affinity_hit_tokens = affinity_hits[i];
+            per.push(stats);
         }
+        agg.total_affinity_hit_tokens = affinity_hits.iter().sum();
         (agg, per)
     }
 }
@@ -376,6 +470,117 @@ mod tests {
         let cached: usize = served.iter().map(|s| s.cached_tokens).sum();
         let total: usize = served.iter().map(|s| s.prompt_tokens).sum();
         assert!((agg.hit_ratio() - cached as f64 / total as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_robin_placement_spreads_new_sessions_evenly() {
+        use crate::serve::PlacementKind;
+        let corpus = corpus();
+        let mut cfg = small_cfg(4, 2);
+        cfg.placement = PlacementKind::RoundRobin;
+        let engine = ServingEngine::new(cfg);
+        // 12 single-turn sessions over 4 shards: exactly 3 sessions each
+        let reqs: Vec<Request> = (0..12).map(|i| req(i, i as u32, &[1, 2])).collect();
+        engine.serve_batch(&reqs, &corpus);
+        let (m, per) = engine.metrics();
+        for s in &per {
+            assert_eq!(s.placed_sessions, 3, "shard {} not balanced", s.shard);
+            assert_eq!(s.affinity_hit_tokens, 0, "rr never claims affinity");
+        }
+        assert_eq!(m.total_affinity_hit_tokens, 0);
+    }
+
+    #[test]
+    fn context_aware_placement_co_places_shared_contexts() {
+        use crate::pilot::PilotConfig;
+        use crate::serve::PlacementKind;
+        let corpus = corpus();
+        let mut cfg = small_cfg(4, 2);
+        cfg.placement = PlacementKind::ContextAware;
+        // Alg.-5 scheduling off: arrival order decides which group member
+        // eats the cold miss, so the first-placed (non-affinity) session
+        // is also the first served and the affinity attribution below is
+        // exact rather than order-dependent
+        cfg.pilot = Some(PilotConfig::with(true, true, true, false));
+        let engine = ServingEngine::new(cfg);
+        // two context groups, 4 sessions each, interleaved arrival
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| {
+                let blocks: &[u32] = if i % 2 == 0 { &[1, 2, 3] } else { &[7, 8, 9] };
+                req(i, i as u32, blocks)
+            })
+            .collect();
+        let served = engine.serve_batch(&reqs, &corpus);
+        let even = engine.shard_of_session(SessionId(0));
+        let odd = engine.shard_of_session(SessionId(1));
+        for i in 0..8u32 {
+            let want = if i % 2 == 0 { even } else { odd };
+            assert_eq!(
+                engine.shard_of_session(SessionId(i)),
+                want,
+                "session {i} split from its context group"
+            );
+        }
+        assert_ne!(even, odd, "disjoint groups should spread for load");
+        // group members after the first hit the group's shared prefix,
+        // and that reuse is attributed to affinity placement
+        let reused: usize = served.iter().map(|s| s.cached_tokens).sum();
+        assert!(reused > 0, "co-placement produced no reuse");
+        let (m, per) = engine.metrics();
+        assert_eq!(m.total_affinity_hit_tokens as usize, reused);
+        assert_eq!(
+            per.iter().map(|s| s.affinity_hit_tokens).sum::<u64>(),
+            m.total_affinity_hit_tokens
+        );
+        assert_eq!(per.iter().map(|s| s.placed_sessions).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn context_aware_returns_recurring_context_to_its_home_shard() {
+        use crate::serve::PlacementKind;
+        let corpus = corpus();
+        let mut cfg = small_cfg(4, 1);
+        cfg.placement = PlacementKind::ContextAware;
+        let engine = ServingEngine::new(cfg);
+        // wave 1: one session warms blocks {1,2,3}; spread filler sessions
+        let w1: Vec<Request> = vec![
+            req(1, 1, &[1, 2, 3]),
+            req(2, 2, &[11, 12]),
+            req(3, 3, &[13, 14]),
+            req(4, 4, &[15, 16]),
+        ];
+        engine.serve_batch(&w1, &corpus);
+        // wave 2: a NEW session with the recurring context must land on
+        // session 1's shard via the real index probe (the wave-local
+        // overlay was cleared between batches)
+        let w2 = vec![req(9, 9, &[1, 2, 3])];
+        let served = engine.serve_batch(&w2, &corpus);
+        assert_eq!(
+            engine.shard_of_session(SessionId(9)),
+            engine.shard_of_session(SessionId(1)),
+            "recurring blocks not routed home"
+        );
+        assert!(
+            served[0].cached_tokens > 0,
+            "affinity routing should hit the warmed cache"
+        );
+    }
+
+    #[test]
+    fn session_hash_placement_reproduces_shard_of() {
+        let corpus = corpus();
+        let engine = ServingEngine::new(small_cfg(5, 2));
+        let reqs: Vec<Request> = (0..30)
+            .map(|i| req(i, (i % 13) as u32, &[(i % 9) as u32 + 1]))
+            .collect();
+        engine.serve_batch(&reqs, &corpus);
+        for s in 0..13u32 {
+            assert_eq!(
+                engine.shard_of_session(SessionId(s)),
+                shard_of(SessionId(s), 5),
+                "session {s} diverged from the legacy hash"
+            );
+        }
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //!        │ serve_batch / serve_one / build_offline / on_evict
 //!        ▼
 //!   ServingEngine<E>  ── lock-striped Vec<Mutex<Shard<E>>> + worker pool
-//!        │ per-shard queues (sessions pinned by shard_of)
+//!        │ placement::PlacementPolicy picks each session's first-turn
+//!        │ shard (session-hash / round-robin / context-aware votes over
+//!        │ the real per-shard index + cache probes); later turns reuse
+//!        │ the pin; per-shard queues preserve arrival order
 //!        ▼
 //!   Shard<E>          ── ContextPilot proxy + chunked-prefill admission
 //!        │ serve(request, rewritten prompt)   ▲ evicted RequestIds (§4.1,
@@ -27,12 +30,20 @@
 //!        └──► MockEngine (tests)
 //! ```
 //!
-//! * **Sharding** — sessions are pinned to shards by a deterministic hash
-//!   ([`shard_of`]). Each [`Shard`] owns a full pipeline instance: a
-//!   [`crate::pilot::ContextPilot`] (context index, conversation records)
-//!   and an engine `E`. Pinning keeps multi-turn history, §6 dedup records
-//!   and §4.1 eviction callbacks shard-local, so no cross-shard
-//!   coordination is ever needed on the hot path.
+//! * **Sharding & placement** — each [`Shard`] owns a full pipeline
+//!   instance: a [`crate::pilot::ContextPilot`] (context index,
+//!   conversation records) and an engine `E`. A session's **first-turn**
+//!   shard is chosen by the configured [`placement::PlacementPolicy`]
+//!   ([`ServeConfig::placement`], CLI `--placement session|rr|context`):
+//!   the deterministic session hash ([`shard_of`], the default),
+//!   round-robin spreading, or context-aware block-overlap voting against
+//!   each shard's real context index with a least-loaded tie-break (§7.2
+//!   / Table 6 routing, folded into this layer). Every later turn reuses
+//!   the first-turn pin, whatever the policy — pinning keeps multi-turn
+//!   history, §6 dedup records and §4.1 eviction callbacks shard-local,
+//!   so no cross-shard coordination is ever needed on the hot path.
+//!   Placement decisions happen at enqueue time, in arrival order, before
+//!   workers run, so they are invariant in `n_workers`.
 //! * **Lock striping** — the [`ServingEngine`] holds one mutex per shard;
 //!   concurrent callers contend only when they hit the same shard.
 //! * **Worker pool** — [`ServingEngine::serve_batch`] partitions a batch
@@ -68,18 +79,22 @@
 //!   same queue (pinned by `rust/tests/serve_stress.rs` and
 //!   `rust/tests/engine_trait.rs`).
 //!
-//! Per-shard hit rate, tier residency, queue depth and latency percentiles
-//! surface through [`crate::metrics::ShardStats`];
-//! `benches/bench_serving.rs` reports whole-batch throughput across worker
-//! counts and chunk settings (`BENCH_serving.json`), and
-//! `benches/bench_tiering.rs` sweeps HBM capacity x tier config
-//! (`BENCH_tiering.json`).
+//! Per-shard hit rate, tier residency, placement/affinity counters, queue
+//! depth and latency percentiles surface through
+//! [`crate::metrics::ShardStats`]; `benches/bench_serving.rs` reports
+//! whole-batch throughput across worker counts and chunk settings
+//! (`BENCH_serving.json`), `benches/bench_tiering.rs` sweeps HBM capacity
+//! x tier config (`BENCH_tiering.json`), and `benches/bench_routing.rs`
+//! sweeps placement x shards x workers on the recurring-context workload
+//! (`BENCH_routing.json`).
 
 pub mod admission;
 mod engine;
+pub mod placement;
 mod shard;
 
 pub use engine::ServingEngine;
+pub use placement::{PlacementKind, PlacementPolicy, ShardProbe};
 pub use shard::{shard_of, Shard};
 
 use std::collections::HashMap;
@@ -125,6 +140,11 @@ pub struct ServeConfig {
     /// prefix matches promote at reload cost. `None` = classic discard
     /// eviction. Only effective for the radix reuse policy.
     pub tiers: Option<TierConfig>,
+    /// First-turn session → shard placement policy (CLI `--placement`):
+    /// session hash (default, the pre-placement behaviour bit-for-bit),
+    /// round-robin, or context-aware block-overlap voting over the real
+    /// per-shard index/cache state. See [`placement`].
+    pub placement: PlacementKind,
 }
 
 impl ServeConfig {
@@ -144,6 +164,7 @@ impl ServeConfig {
             prefill_chunk: None,
             decode_override: None,
             tiers: None,
+            placement: PlacementKind::SessionHash,
         }
     }
 
@@ -173,6 +194,7 @@ mod tests {
         assert!(cfg.prefill_chunk.is_none());
         assert!(cfg.decode_override.is_none());
         assert!(cfg.tiers.is_none());
+        assert_eq!(cfg.placement, PlacementKind::SessionHash);
     }
 
     #[test]

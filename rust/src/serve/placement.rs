@@ -1,0 +1,541 @@
+//! Reuse-aware shard placement (§7.2 / Table 6 context-aware routing,
+//! folded into the serving layer).
+//!
+//! Sessions must be *pinned* to shards — multi-turn history, §6 dedup
+//! records and §4.1 eviction callbacks are shard-local — but the choice of
+//! the **first-turn** shard is a policy decision, and it is exactly where
+//! ContextPilot's cross-user reuse meets multi-worker scale: two users
+//! sharing a RAG corpus only share KV if their sessions land on the same
+//! shard. A blind session hash scatters them; the paper's context-aware
+//! routing sends recurring context blocks to the shard already holding
+//! their KV.
+//!
+//! The [`PlacementPolicy`] trait captures that decision point:
+//!
+//! * [`SessionHash`] — the classic [`crate::serve::shard_of`] hash
+//!   (default; reproduces pre-placement behaviour bit-for-bit).
+//! * [`RoundRobin`] — new sessions cycle over shards (vanilla load
+//!   spreading, the Table 6 baseline).
+//! * [`ContextAware`] — block-overlap voting with a least-loaded
+//!   tie-break, lifted from the retired `engine::Router` but probing the
+//!   **real** per-shard state ([`ShardProbe`]: context-index block
+//!   overlap + prefix-cache residency) instead of a shadow block-home
+//!   map, so votes stay synchronized with §4.1 eviction pruning. Within
+//!   one admission wave — where placed requests have not reached their
+//!   shard's index yet — a wave-local block-home overlay supplies the
+//!   votes; it is cleared at every wave boundary precisely so it can
+//!   never go stale the way the router's persistent map could.
+//!
+//! Placement happens at **enqueue time**, deterministically, in arrival
+//! order, before any worker runs — so hit/miss results stay invariant in
+//! `n_workers` for every policy (pinned by `rust/tests/placement.rs`).
+//! Later turns of a session always reuse the first-turn pin, whatever the
+//! policy decided.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::serve::shard::shard_of;
+use crate::types::{BlockId, Request, RequestId, ServedRequest, SessionId};
+
+/// Which placement policy the serving layer runs (CLI `--placement`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Deterministic session hash ([`crate::serve::shard_of`]) — the
+    /// pre-placement behaviour, bit-for-bit.
+    SessionHash,
+    /// New sessions cycle over shards in arrival order.
+    RoundRobin,
+    /// Block-overlap voting against each shard's real context index,
+    /// least-loaded tie-break.
+    ContextAware,
+}
+
+impl PlacementKind {
+    /// Parse the CLI shape: `session` | `rr` | `context`.
+    pub fn parse(s: &str) -> Result<PlacementKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "session" | "session-hash" | "hash" => Ok(PlacementKind::SessionHash),
+            "rr" | "round-robin" | "roundrobin" => Ok(PlacementKind::RoundRobin),
+            "context" | "context-aware" | "aware" => Ok(PlacementKind::ContextAware),
+            other => Err(format!(
+                "unknown placement '{other}' (try session | rr | context)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::SessionHash => "session-hash",
+            PlacementKind::RoundRobin => "round-robin",
+            PlacementKind::ContextAware => "context-aware",
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One shard's state snapshot at a placement decision, probed from the
+/// live shard (not a shadow map): how much of the request's context its
+/// pilot index knows, how full its prefix cache is, and how much work
+/// placement has already sent it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardProbe {
+    pub shard: usize,
+    /// Blocks of the request's context present in this shard's context
+    /// index (side-effect-free probe,
+    /// [`crate::index::tree::ContextIndex::known_blocks`]); 0 for shards
+    /// serving baseline prompts without a pilot.
+    pub index_blocks: usize,
+    /// Tokens resident in the shard engine's prefix cache
+    /// ([`crate::engine::CacheStats::resident_tokens`]).
+    pub resident_tokens: usize,
+    /// Requests placed on this shard so far (pinned turns included) — the
+    /// load signal for tie-breaking.
+    pub placed_requests: usize,
+}
+
+/// Outcome of placing one first-turn session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub shard: usize,
+    /// True when the shard won by context affinity (a positive block
+    /// vote), not by load balancing — what the affinity-hit-token
+    /// telemetry attributes reuse to.
+    pub affinity: bool,
+}
+
+/// The first-turn shard choice. Implementations must be deterministic in
+/// the sequence of `place` calls (arrival order): the serving layer
+/// guarantees it never calls `place` concurrently or out of order.
+pub trait PlacementPolicy: Send {
+    fn kind(&self) -> PlacementKind;
+
+    /// Whether `place` wants real shard probes (index/cache state). Cheap
+    /// policies skip the per-shard probing pass entirely.
+    fn needs_probes(&self) -> bool {
+        false
+    }
+
+    /// Choose a shard for the first request of a session. `probes` holds
+    /// one entry per shard, in shard order.
+    fn place(&mut self, req: &Request, probes: &[ShardProbe]) -> Placement;
+
+    /// Wave boundary: the serving layer starts a new admission wave
+    /// (batch) or a streaming singleton. Wave-local state resets here.
+    fn begin_wave(&mut self) {}
+}
+
+/// Today's behaviour, verbatim: [`shard_of`] on the session id.
+pub struct SessionHash;
+
+impl PlacementPolicy for SessionHash {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::SessionHash
+    }
+
+    fn place(&mut self, req: &Request, probes: &[ShardProbe]) -> Placement {
+        Placement {
+            shard: shard_of(req.session, probes.len()),
+            affinity: false,
+        }
+    }
+}
+
+/// Vanilla spreading: new sessions cycle over shards in arrival order.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        RoundRobin::new()
+    }
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::RoundRobin
+    }
+
+    fn place(&mut self, _req: &Request, probes: &[ShardProbe]) -> Placement {
+        let shard = self.next % probes.len().max(1);
+        self.next = (self.next + 1) % probes.len().max(1);
+        Placement {
+            shard,
+            affinity: false,
+        }
+    }
+}
+
+/// ContextPilot's §7.2 routing at the placement layer: each shard's vote
+/// is the number of the request's blocks its real context index already
+/// holds, plus the blocks placed onto it earlier in the *current wave*
+/// (those requests have not been served yet, so the index cannot know
+/// them). Highest vote wins; ties — and the no-affinity case — fall back
+/// to least-loaded (fewest placed requests, then fewest resident cache
+/// tokens, then lowest shard id).
+pub struct ContextAware {
+    /// block → shard chosen earlier in this wave (cleared per wave, so it
+    /// can never drift from the real index across waves).
+    wave_home: HashMap<BlockId, usize>,
+}
+
+impl ContextAware {
+    pub fn new() -> ContextAware {
+        ContextAware {
+            wave_home: HashMap::new(),
+        }
+    }
+}
+
+impl Default for ContextAware {
+    fn default() -> Self {
+        ContextAware::new()
+    }
+}
+
+impl PlacementPolicy for ContextAware {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::ContextAware
+    }
+
+    fn needs_probes(&self) -> bool {
+        true
+    }
+
+    fn place(&mut self, req: &Request, probes: &[ShardProbe]) -> Placement {
+        let mut votes = vec![0usize; probes.len()];
+        for p in probes {
+            votes[p.shard] = p.index_blocks;
+        }
+        for b in &req.context {
+            if let Some(&s) = self.wave_home.get(b) {
+                votes[s] += 1;
+            }
+        }
+        // highest vote wins; the no-affinity case degenerates to the same
+        // least-loaded rule over every shard (all votes equal at 0)
+        let max = votes.iter().copied().max().unwrap_or(0);
+        let shard = probes
+            .iter()
+            .filter(|p| votes[p.shard] == max)
+            .min_by_key(|p| (p.placed_requests, p.resident_tokens, p.shard))
+            .map_or(0, |p| p.shard);
+        for b in &req.context {
+            self.wave_home.insert(*b, shard);
+        }
+        Placement {
+            shard,
+            affinity: max > 0,
+        }
+    }
+
+    fn begin_wave(&mut self) {
+        self.wave_home.clear();
+    }
+}
+
+fn build_policy(kind: PlacementKind) -> Box<dyn PlacementPolicy> {
+    match kind {
+        PlacementKind::SessionHash => Box::new(SessionHash),
+        PlacementKind::RoundRobin => Box::new(RoundRobin::new()),
+        PlacementKind::ContextAware => Box::new(ContextAware::new()),
+    }
+}
+
+struct Pin {
+    shard: usize,
+    affinity: bool,
+}
+
+/// The serving engine's placement ledger: the policy plus the session →
+/// shard pins and the per-shard placement/affinity telemetry. One per
+/// [`crate::serve::ServingEngine`], behind its own mutex, always locked
+/// *before* any shard mutex (strict placement → shard lock order).
+///
+/// Pins (one entry per session) and the counted-request-id set (one per
+/// request) are never dropped — the same retention trade-off as the
+/// request → shard eviction map (a retention bound is the first thing to
+/// add if this layer ever fronts an unbounded stream).
+pub(crate) struct PlacementBook {
+    policy: Box<dyn PlacementPolicy>,
+    pins: HashMap<SessionId, Pin>,
+    /// Request ids already counted into `placed_requests`, so a request
+    /// that flows through placement twice — once in `build_offline`, once
+    /// when actually served — contributes to the load signal exactly once.
+    counted: HashSet<RequestId>,
+    placed_requests: Vec<usize>,
+    placed_sessions: Vec<usize>,
+    affinity_hit_tokens: Vec<u64>,
+}
+
+impl PlacementBook {
+    pub(crate) fn new(kind: PlacementKind, n_shards: usize) -> PlacementBook {
+        PlacementBook {
+            policy: build_policy(kind),
+            pins: HashMap::new(),
+            counted: HashSet::new(),
+            placed_requests: vec![0; n_shards],
+            placed_sessions: vec![0; n_shards],
+            affinity_hit_tokens: vec![0; n_shards],
+        }
+    }
+
+    /// The shard this session is pinned to, if it has been placed.
+    pub(crate) fn pinned(&self, session: SessionId) -> Option<usize> {
+        self.pins.get(&session).map(|p| p.shard)
+    }
+
+    /// Whether the next unpinned `assign` wants real shard probes.
+    pub(crate) fn wants_probe(&self, session: SessionId) -> bool {
+        self.policy.needs_probes() && !self.pins.contains_key(&session)
+    }
+
+    pub(crate) fn begin_wave(&mut self) {
+        self.policy.begin_wave();
+    }
+
+    /// Place one request: pinned sessions reuse their first-turn shard;
+    /// unpinned sessions go through the policy (with `probes`, or
+    /// load-only synthetic probes when the policy does not need real
+    /// ones) and are pinned to its choice.
+    pub(crate) fn assign(&mut self, req: &Request, probes: Option<&[ShardProbe]>) -> usize {
+        if let Some(pin) = self.pins.get(&req.session) {
+            let shard = pin.shard;
+            if self.counted.insert(req.id) {
+                self.placed_requests[shard] += 1;
+            }
+            return shard;
+        }
+        let owned: Vec<ShardProbe>;
+        let probes = match probes {
+            Some(p) => p,
+            None => {
+                owned = self.load_probes();
+                &owned
+            }
+        };
+        let placed = self.policy.place(req, probes);
+        debug_assert!(placed.shard < self.placed_requests.len());
+        self.pins.insert(
+            req.session,
+            Pin {
+                shard: placed.shard,
+                affinity: placed.affinity,
+            },
+        );
+        self.placed_sessions[placed.shard] += 1;
+        if self.counted.insert(req.id) {
+            self.placed_requests[placed.shard] += 1;
+        }
+        placed.shard
+    }
+
+    /// Load-only probes (no shard locks) for policies that do not inspect
+    /// index/cache state.
+    pub(crate) fn load_probes(&self) -> Vec<ShardProbe> {
+        self.placed_requests
+            .iter()
+            .enumerate()
+            .map(|(shard, &placed_requests)| ShardProbe {
+                shard,
+                index_blocks: 0,
+                resident_tokens: 0,
+                placed_requests,
+            })
+            .collect()
+    }
+
+    /// Requests placed on this shard so far (for probe construction).
+    pub(crate) fn placed_requests_on(&self, shard: usize) -> usize {
+        self.placed_requests[shard]
+    }
+
+    /// Attribute served reuse to affinity placements: cached tokens of
+    /// requests whose session was placed by a positive context vote.
+    pub(crate) fn record_served(&mut self, served: &[ServedRequest]) {
+        for s in served {
+            if let Some(pin) = self.pins.get(&s.request.session) {
+                if pin.affinity {
+                    self.affinity_hit_tokens[pin.shard] += s.cached_tokens as u64;
+                }
+            }
+        }
+    }
+
+    pub(crate) fn placed_sessions(&self) -> &[usize] {
+        &self.placed_sessions
+    }
+
+    pub(crate) fn affinity_hit_tokens(&self) -> &[u64] {
+        &self.affinity_hit_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{QueryId, RequestId};
+
+    fn req(id: u64, session: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    fn probes(n: usize) -> Vec<ShardProbe> {
+        (0..n)
+            .map(|shard| ShardProbe {
+                shard,
+                ..ShardProbe::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_cli_spec() {
+        assert_eq!(
+            PlacementKind::parse("session").unwrap(),
+            PlacementKind::SessionHash
+        );
+        assert_eq!(PlacementKind::parse("rr").unwrap(), PlacementKind::RoundRobin);
+        assert_eq!(
+            PlacementKind::parse("Context-Aware").unwrap(),
+            PlacementKind::ContextAware
+        );
+        assert!(PlacementKind::parse("nearest").is_err());
+    }
+
+    #[test]
+    fn session_hash_matches_shard_of() {
+        let mut p = SessionHash;
+        for s in 0..200u32 {
+            let placed = p.place(&req(s as u64, s, &[1]), &probes(5));
+            assert_eq!(placed.shard, shard_of(SessionId(s), 5));
+            assert!(!placed.affinity);
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_over_new_sessions() {
+        let mut p = RoundRobin::new();
+        let shards: Vec<usize> = (0..8)
+            .map(|i| p.place(&req(i, i as u32, &[1]), &probes(4)).shard)
+            .collect();
+        assert_eq!(shards, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn context_aware_votes_follow_index_probes() {
+        let mut p = ContextAware::new();
+        let mut ps = probes(4);
+        ps[2].index_blocks = 3; // shard 2 already holds 3 of the blocks
+        let placed = p.place(&req(1, 1, &[5, 6, 7]), &ps);
+        assert_eq!(placed.shard, 2);
+        assert!(placed.affinity);
+    }
+
+    #[test]
+    fn context_aware_groups_a_wave_before_any_serve() {
+        // all-new shards (empty indexes): the first session of a block
+        // group lands by load, every later group member follows it via the
+        // wave-local home map
+        let mut p = ContextAware::new();
+        p.begin_wave();
+        let first = p.place(&req(1, 1, &[5, 6, 7]), &probes(4));
+        assert!(!first.affinity, "empty indexes cannot vote");
+        let mut ps = probes(4);
+        for probe in ps.iter_mut() {
+            probe.placed_requests = usize::from(probe.shard == first.shard);
+        }
+        let second = p.place(&req(2, 2, &[5, 6, 9]), &ps);
+        assert_eq!(second.shard, first.shard, "group member not co-placed");
+        assert!(second.affinity);
+        // a fresh wave forgets the overlay (the real index takes over)
+        p.begin_wave();
+        let third = p.place(&req(3, 3, &[5, 6, 7]), &probes(4));
+        assert!(!third.affinity, "wave overlay must not leak across waves");
+    }
+
+    #[test]
+    fn context_aware_no_affinity_falls_back_to_least_loaded() {
+        let mut p = ContextAware::new();
+        let mut ps = probes(3);
+        ps[0].placed_requests = 2;
+        ps[1].placed_requests = 1;
+        ps[2].placed_requests = 2;
+        let placed = p.place(&req(1, 1, &[1]), &ps);
+        assert_eq!(placed.shard, 1);
+        assert!(!placed.affinity);
+        // equal load: fewer resident cache tokens wins, then shard id
+        let mut ps = probes(3);
+        ps[0].resident_tokens = 500;
+        assert_eq!(p.place(&req(2, 2, &[2]), &ps).shard, 1);
+    }
+
+    #[test]
+    fn book_pins_sessions_and_counts_load() {
+        let mut book = PlacementBook::new(PlacementKind::RoundRobin, 3);
+        let a = book.assign(&req(1, 7, &[1]), None);
+        let b = book.assign(&req(2, 7, &[2]), None); // same session, later turn
+        assert_eq!(a, b, "session must stick to its first-turn shard");
+        assert_eq!(book.pinned(SessionId(7)), Some(a));
+        assert_eq!(book.pinned(SessionId(8)), None);
+        assert_eq!(book.placed_requests_on(a), 2);
+        assert_eq!(book.placed_sessions()[a], 1);
+    }
+
+    #[test]
+    fn reassigning_the_same_request_counts_load_once() {
+        // a request flows through placement twice when build_offline runs
+        // before serving: the load signal must not double-count it
+        let mut book = PlacementBook::new(PlacementKind::RoundRobin, 2);
+        let r = req(5, 3, &[1]);
+        let a = book.assign(&r, None); // offline-build pass
+        let b = book.assign(&r, None); // serve pass (pinned)
+        assert_eq!(a, b);
+        assert_eq!(book.placed_requests_on(a), 1, "request double-counted");
+        assert_eq!(book.placed_sessions()[a], 1);
+    }
+
+    #[test]
+    fn book_attributes_affinity_hits() {
+        use crate::types::{Prompt, TierHits};
+        let mut book = PlacementBook::new(PlacementKind::ContextAware, 2);
+        let warm = req(1, 1, &[1, 2]);
+        book.assign(&warm, Some(&probes(2)));
+        let mut ps = probes(2);
+        ps[0].index_blocks = 2;
+        let follow = req(2, 2, &[1, 2]);
+        let s = book.assign(&follow, Some(&ps));
+        assert_eq!(s, 0);
+        let served = ServedRequest {
+            prompt: Prompt::baseline(&follow),
+            request: follow,
+            prompt_tokens: 100,
+            cached_tokens: 40,
+            ttft: 0.1,
+            wall: 0.2,
+            quality: 0.5,
+            queued_ttft: 0.1,
+            prefill_chunks: 1,
+            tier_hits: TierHits::hot(40),
+        };
+        book.record_served(std::slice::from_ref(&served));
+        assert_eq!(book.affinity_hit_tokens(), &[40, 0]);
+    }
+}

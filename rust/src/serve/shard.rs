@@ -239,11 +239,16 @@ impl<E: InferenceEngine> Shard<E> {
     }
 
     /// Telemetry snapshot (sorts the latency samples for percentiles).
+    /// Placement telemetry (`placed_sessions`, `affinity_hit_tokens`) is
+    /// engine-level state the shard cannot see; [`crate::serve::ServingEngine`]
+    /// fills those two fields from its placement ledger.
     pub(crate) fn stats(&mut self) -> ShardStats {
         let cache = self.engine.cache_stats();
         ShardStats {
             shard: self.id,
             served: self.metrics.len(),
+            placed_sessions: 0,
+            affinity_hit_tokens: 0,
             max_queue_depth: self.max_queue_depth,
             hit_ratio: self.metrics.hit_ratio(),
             p50_ttft: self.metrics.ttft.p50(),

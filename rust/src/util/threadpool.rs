@@ -1,9 +1,10 @@
 //! Scoped parallel-map substrate (no rayon/tokio in the offline image).
 //!
 //! The context-index build parallelizes its O(N^2) distance matrix across
-//! cores (the paper builds it on CPUs/GPUs, §4.1); the multi-worker router
-//! (Table 6) runs one engine per thread. `std::thread::scope` gives us
-//! borrow-safe fork-join without a persistent pool.
+//! cores (the paper builds it on CPUs/GPUs, §4.1); the sharded serving
+//! layer (Table 6) drives one engine per shard from a worker pool.
+//! `std::thread::scope` gives us borrow-safe fork-join without a
+//! persistent pool.
 
 /// Parallel map over `items`, preserving order. Splits into at most
 /// `threads` contiguous chunks. Falls back to serial for tiny inputs.

@@ -294,6 +294,52 @@ pub fn openclaw(tasks: usize, turns_per_task: usize, seed: u64, coding: bool) ->
     )
 }
 
+/// Recurring-context workload (§7.2 routing / Table 6): `sessions`
+/// conversations of `turns` turns where session `s` always retrieves the
+/// SAME `k`-block context group (`s % groups`) — many users sharing a few
+/// RAG corpora. Arrival is turn-major with a seeded per-wave session
+/// shuffle. The worst case for blind session hashing (group members
+/// scatter across shards and each shard re-prefills the group) and the
+/// best case for context-aware placement (the whole group lands on one
+/// shard and shares its prefix) — the workload `benches/bench_routing.rs`
+/// and `tests/placement.rs` pin the placement comparison on.
+pub fn recurring(
+    dataset: Dataset,
+    sessions: usize,
+    turns: usize,
+    groups: usize,
+    k: usize,
+    seed: u64,
+) -> Workload {
+    let profile = DatasetProfile::get(dataset);
+    let groups = groups.max(1);
+    let k = k.max(1);
+    assert!(
+        groups * k <= profile.n_docs,
+        "corpus too small for {groups} disjoint groups of {k} blocks"
+    );
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(sessions * turns);
+    let mut next_id = 0u64;
+    for t in 0..turns {
+        let mut order: Vec<usize> = (0..sessions).collect();
+        rng.shuffle(&mut order);
+        for &s in &order {
+            let g = s % groups;
+            let context: Vec<BlockId> = (0..k).map(|i| BlockId((g * k + i) as u32)).collect();
+            requests.push(Request {
+                id: RequestId(next_id),
+                session: SessionId(s as u32),
+                turn: t as u32,
+                context,
+                query: qid(s as u32, t as u32),
+            });
+            next_id += 1;
+        }
+    }
+    Workload { dataset, requests }
+}
+
 /// A zero-overlap adversarial workload (Appendix F): every request
 /// retrieves disjoint blocks — the worst case for context reuse, isolating
 /// pure ContextPilot overhead.
@@ -435,6 +481,25 @@ mod tests {
         let m_doc: f64 = d_doc.iter().sum::<usize>() as f64 / d_doc.len() as f64;
         let m_code: f64 = d_code.iter().sum::<usize>() as f64 / d_code.len() as f64;
         assert!(m_code > 3.0 * m_doc);
+    }
+
+    #[test]
+    fn recurring_sessions_stay_in_their_group() {
+        let w = recurring(Dataset::MtRag, 12, 3, 4, 6, 0xE1);
+        assert_eq!(w.len(), 36);
+        for r in &w.requests {
+            let g = (r.session.0 as usize) % 4;
+            let want: Vec<BlockId> = (0..6).map(|i| BlockId((g * 6 + i) as u32)).collect();
+            assert_eq!(r.context, want, "session {:?} left its group", r.session);
+        }
+        // turn-major waves: first 12 requests are all turn 0, etc.
+        for (i, r) in w.requests.iter().enumerate() {
+            assert_eq!(r.turn as usize, i / 12);
+        }
+        // every session appears exactly once per wave
+        let wave0: std::collections::HashSet<u32> =
+            w.requests[..12].iter().map(|r| r.session.0).collect();
+        assert_eq!(wave0.len(), 12);
     }
 
     #[test]

@@ -8,7 +8,8 @@ pub mod profiles;
 pub mod retrieval;
 
 pub use generators::{
-    chain_of_agents, hybrid, mem0, multi_session, multi_turn, openclaw, zero_overlap, Workload,
+    chain_of_agents, hybrid, mem0, multi_session, multi_turn, openclaw, recurring, zero_overlap,
+    Workload,
 };
 pub use profiles::{Dataset, DatasetProfile};
 pub use retrieval::Retriever;

@@ -1,0 +1,198 @@
+//! Integration: the placement layer (`serve::placement`).
+//!
+//! Invariants under test, for every policy:
+//!  * a session's turns all run on one shard (the first-turn pin);
+//!  * placement — and therefore hit/miss results — is independent of
+//!    `n_workers` (decisions happen at enqueue time, before workers run);
+//!  * `SessionHash` reproduces the legacy `serve::shard_of` partition
+//!    bit-for-bit;
+//! plus the §7.2 acceptance claim: on the recurring-context workload,
+//! `ContextAware` placement strictly beats `SessionHash` on cached
+//! tokens (the same assertion `benches/bench_routing.rs` sweeps).
+
+use std::collections::HashMap;
+
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::{corpus_for, turn_waves};
+use contextpilot::serve::{shard_of, PlacementKind, ServeConfig, ServingEngine};
+use contextpilot::types::{Request, SessionId};
+use contextpilot::util::prng::Rng;
+use contextpilot::util::prop::{
+    check, gen_requests, reuse_fingerprint, Config, EngineCall, EngineLog, RecordingEngine,
+};
+use contextpilot::workload::{recurring, Dataset};
+
+const POLICIES: [PlacementKind; 3] = [
+    PlacementKind::SessionHash,
+    PlacementKind::RoundRobin,
+    PlacementKind::ContextAware,
+];
+
+fn cfg_with(placement: PlacementKind, shards: usize, workers: usize) -> ServeConfig {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+    cfg.n_shards = shards;
+    cfg.n_workers = workers;
+    cfg.capacity_tokens = 1 << 20; // roomy: isolate placement, not eviction
+    cfg.decode_tokens = 8;
+    cfg.placement = placement;
+    cfg
+}
+
+/// Serve `reqs` through a recorded engine and return each request's shard.
+fn shard_log(
+    cfg: ServeConfig,
+    reqs: &[Request],
+    corpus: &contextpilot::corpus::Corpus,
+) -> Vec<EngineCall> {
+    let log = EngineLog::default();
+    let engine = {
+        let log = log.clone();
+        let mut tag = 0usize;
+        ServingEngine::with_engine_factory(cfg, move |c| {
+            let e = RecordingEngine {
+                inner: ServeConfig::sim_engine(c),
+                shard_tag: tag,
+                log: log.clone(),
+            };
+            tag += 1;
+            e
+        })
+    };
+    for (i, j) in turn_waves(reqs) {
+        engine.serve_batch(&reqs[i..j], corpus);
+    }
+    let calls = log.lock().expect("log poisoned");
+    calls.clone()
+}
+
+#[test]
+fn every_policy_keeps_a_sessions_turns_on_one_shard() {
+    let corpus = corpus_for(Dataset::MtRag);
+    for policy in POLICIES {
+        check(
+            &format!("{policy}: sessions stick to one shard"),
+            Config {
+                cases: 8,
+                base_seed: 0x9AC3,
+                max_size: 40,
+            },
+            |rng: &mut Rng, size| {
+                let reqs = gen_requests(rng, size.max(6), 8, 5, corpus.len());
+                let calls = shard_log(cfg_with(policy, 4, 2), &reqs, &corpus);
+                if calls.len() != reqs.len() {
+                    return Err(format!("{} served of {}", calls.len(), reqs.len()));
+                }
+                let session_of: HashMap<u64, u32> =
+                    reqs.iter().map(|r| (r.id.0, r.session.0)).collect();
+                let mut home: HashMap<u32, usize> = HashMap::new();
+                for c in &calls {
+                    let s = session_of[&c.request.0];
+                    let shard = *home.entry(s).or_insert(c.shard);
+                    if shard != c.shard {
+                        return Err(format!(
+                            "session {s} ran on shards {shard} and {} under {policy}",
+                            c.shard
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn placement_is_independent_of_worker_count() {
+    let corpus = corpus_for(Dataset::MtRag);
+    let w = recurring(Dataset::MtRag, 18, 3, 5, 6, 0x9C4);
+    for policy in POLICIES {
+        let run = |workers: usize| {
+            let engine = ServingEngine::new(cfg_with(policy, 4, workers));
+            let mut served = Vec::new();
+            for (i, j) in turn_waves(&w.requests) {
+                served.extend(engine.serve_batch(&w.requests[i..j], &corpus));
+            }
+            let (m, per) = engine.metrics();
+            let placed: Vec<usize> = per.iter().map(|s| s.placed_sessions).collect();
+            let by_shard: Vec<usize> = per.iter().map(|s| s.served).collect();
+            (
+                reuse_fingerprint(&served),
+                placed,
+                by_shard,
+                m.total_affinity_hit_tokens,
+            )
+        };
+        let base = run(1);
+        for workers in [2usize, 4, 8] {
+            assert_eq!(
+                run(workers),
+                base,
+                "{policy}: workers={workers} changed placement or results"
+            );
+        }
+    }
+}
+
+#[test]
+fn session_hash_reproduces_shard_of_bit_for_bit() {
+    let corpus = corpus_for(Dataset::MtRag);
+    check(
+        "session-hash placement == shard_of",
+        Config {
+            cases: 8,
+            base_seed: 0x5EED5,
+            max_size: 48,
+        },
+        |rng: &mut Rng, size| {
+            let n_shards = 1 + rng.below(7);
+            let reqs = gen_requests(rng, size.max(4), 10, 5, corpus.len());
+            let calls = shard_log(
+                cfg_with(PlacementKind::SessionHash, n_shards, 2),
+                &reqs,
+                &corpus,
+            );
+            let session_of: HashMap<u64, u32> =
+                reqs.iter().map(|r| (r.id.0, r.session.0)).collect();
+            for c in &calls {
+                let session = SessionId(session_of[&c.request.0]);
+                let want = shard_of(session, n_shards);
+                if c.shard != want {
+                    return Err(format!(
+                        "request {:?} (session {session:?}) on shard {} != shard_of {want}",
+                        c.request, c.shard
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn context_aware_strictly_beats_session_hash_on_recurring_contexts() {
+    // the Table 6 / §7.2 acceptance pin: many users sharing a few RAG
+    // corpora. Blind hashing scatters each corpus group over the shards
+    // and every shard re-prefills it; context-aware placement keeps each
+    // group on one shard and shares the prefix.
+    let corpus = corpus_for(Dataset::MtRag);
+    let w = recurring(Dataset::MtRag, 24, 2, 4, 6, 0x70C);
+    let run = |placement: PlacementKind| {
+        let engine = ServingEngine::new(cfg_with(placement, 4, 2));
+        for (i, j) in turn_waves(&w.requests) {
+            engine.serve_batch(&w.requests[i..j], &corpus);
+        }
+        let (m, _) = engine.metrics();
+        (m.total_cached_tokens, m.total_affinity_hit_tokens)
+    };
+    let (aware_cached, aware_affinity) = run(PlacementKind::ContextAware);
+    let (hashed_cached, hashed_affinity) = run(PlacementKind::SessionHash);
+    assert!(
+        aware_cached > hashed_cached,
+        "context-aware {aware_cached} <= session-hash {hashed_cached} cached tokens"
+    );
+    assert!(
+        aware_affinity > 0,
+        "context-aware reuse must be attributed to affinity placements"
+    );
+    assert_eq!(hashed_affinity, 0, "session hash can never claim affinity");
+}
