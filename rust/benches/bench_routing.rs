@@ -3,7 +3,7 @@
 //!
 //! One seeded recurring-context workload (many sessions sharing a few RAG
 //! corpora — the §7.2 / Table 6 routing scenario) through the sharded
-//! `ServingEngine` under every placement policy, at several shard counts,
+//! `api::Server` under every placement policy, at several shard counts,
 //! each at 1/2/4 workers. The ContextPilot proxy is ON for every cell so
 //! the *only* independent variable per row is where sessions land.
 //!
@@ -18,9 +18,12 @@
 //!
 //! Sizes: `--cheap` (CI smoke) < default quick < CTXPILOT_FULL=1.
 
+use std::sync::Arc;
+
+use contextpilot::api::Server;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{full_mode, turn_waves};
-use contextpilot::serve::{PlacementKind, ServeConfig, ServingEngine};
+use contextpilot::serve::PlacementKind;
 use contextpilot::util::cli::Args;
 use contextpilot::util::json::Json;
 use contextpilot::util::prop::reuse_fingerprint;
@@ -54,25 +57,27 @@ type Signature = (Vec<(u64, usize, usize, usize, usize, usize)>, u64);
 
 fn run_once(
     w: &contextpilot::workload::Workload,
-    corpus: &contextpilot::corpus::Corpus,
+    corpus: &Arc<contextpilot::corpus::Corpus>,
     placement: PlacementKind,
     shards: usize,
     workers: usize,
 ) -> (Signature, Cell) {
-    let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
-    cfg.n_shards = shards;
-    cfg.n_workers = workers;
-    cfg.capacity_tokens = 1 << 20; // roomy: the sweep isolates placement
-    cfg.decode_tokens = 16;
-    cfg.placement = placement;
-    let engine = ServingEngine::new(cfg);
+    let server = Server::builder(ModelSku::Qwen3_32B)
+        .shards(shards)
+        .workers(workers)
+        .capacity(1 << 20) // roomy: the sweep isolates placement
+        .decode_tokens(16)
+        .placement(placement)
+        .corpus(corpus.clone())
+        .build()
+        .expect("bench routing config is valid");
     let t0 = std::time::Instant::now();
     let mut served = Vec::with_capacity(w.len());
     for (i, j) in turn_waves(&w.requests) {
-        served.extend(engine.serve_batch(&w.requests[i..j], corpus));
+        served.extend(server.serve_batch(&w.requests[i..j]).expect("serve wave"));
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (mut m, _) = engine.metrics();
+    let (mut m, _) = server.metrics().expect("metrics");
     let cell = Cell {
         placement,
         shards,
@@ -101,7 +106,7 @@ fn main() {
         (256, 4, 12, 10)
     };
     let w = recurring(Dataset::MtRag, sessions, turns, groups, k, 0x9047);
-    let corpus = contextpilot::experiments::corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(contextpilot::experiments::corpus_for(Dataset::MtRag));
     let t_start = std::time::Instant::now();
 
     let mut t = Table::new(

@@ -1,5 +1,5 @@
 //! Serving-layer throughput bench: one seeded hybrid workload through the
-//! sharded ServingEngine at 1/2/4/8 workers, with chunked-prefill
+//! sharded api::Server at 1/2/4/8 workers, with chunked-prefill
 //! admission off and on. Shard state is session-local, so every row serves
 //! identical hit/miss results (asserted — neither worker count nor
 //! chunking may change cache semantics); what moves is wall-clock and the
@@ -8,10 +8,12 @@
 //! `BENCH_serving.json` so future PRs have a perf trajectory to compare
 //! against.
 
+use std::sync::Arc;
+
+use contextpilot::api::Server;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{corpus_for, full_mode};
 use contextpilot::pilot::PilotConfig;
-use contextpilot::serve::{ServeConfig, ServingEngine};
 use contextpilot::types::ServedRequest;
 use contextpilot::util::histogram::Summary;
 use contextpilot::util::json::Json;
@@ -55,22 +57,24 @@ fn p99_queued_short(served: &[ServedRequest], short_uncached_max: usize) -> f64 
 /// in once the chunk budget (and hence the short-request class) is known.
 fn run_once(
     w: &contextpilot::workload::Workload,
-    corpus: &contextpilot::corpus::Corpus,
+    corpus: &Arc<contextpilot::corpus::Corpus>,
     workers: usize,
     prefill_chunk: Option<usize>,
 ) -> (Row, Vec<ServedRequest>) {
-    let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
-    cfg.n_shards = N_SHARDS;
-    cfg.n_workers = workers;
-    cfg.capacity_tokens = 60_000;
-    cfg.decode_tokens = 16;
-    cfg.pilot = Some(PilotConfig::default());
-    cfg.prefill_chunk = prefill_chunk;
-    let engine = ServingEngine::new(cfg);
+    let server = Server::builder(ModelSku::Qwen3_32B)
+        .shards(N_SHARDS)
+        .workers(workers)
+        .capacity(60_000)
+        .decode_tokens(16)
+        .pilot(PilotConfig::default())
+        .prefill_chunk(prefill_chunk)
+        .corpus(corpus.clone())
+        .build()
+        .expect("bench serve config is valid");
     let t0 = std::time::Instant::now();
-    let served = engine.serve_batch(&w.requests, corpus);
+    let served = server.serve_batch(&w.requests).expect("serve batch");
     let wall = t0.elapsed().as_secs_f64();
-    let (mut m, _) = engine.metrics();
+    let (mut m, _) = server.metrics().expect("metrics");
     let row = Row {
         workers,
         prefill_chunk,
@@ -93,7 +97,7 @@ fn main() {
     let sessions = if quick { 192 } else { 768 };
     let turns = if quick { 3 } else { 6 };
     let w = hybrid(Dataset::MtRag, sessions, turns, 10, 0x5E27E);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let t_start = std::time::Instant::now();
 
     // the first sweep cell (1 worker, unchunked) doubles as the probe: its

@@ -1,6 +1,6 @@
 //! Tier-store bench: HBM capacity x tier config sweep (`BENCH_tiering.json`).
 //!
-//! One seeded MT-RAG hybrid workload through the sharded ServingEngine at
+//! One seeded MT-RAG hybrid workload through the sharded api::Server at
 //! three per-shard HBM budgets (tight / medium / roomy), with eviction in
 //! discard mode (no tier store) and demote mode (DRAM+SSD behind the
 //! radix cache), each at 1/2/4/8 workers. Baseline RadixCache system
@@ -17,10 +17,12 @@
 //!
 //! Sizes: `--cheap` (CI smoke) < default quick < CTXPILOT_FULL=1.
 
+use std::sync::Arc;
+
+use contextpilot::api::Server;
 use contextpilot::cache::TierConfig;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{corpus_for, full_mode};
-use contextpilot::serve::{ServeConfig, ServingEngine};
 use contextpilot::util::cli::Args;
 use contextpilot::util::json::Json;
 use contextpilot::util::prop::reuse_fingerprint;
@@ -53,24 +55,26 @@ type Signature = (Vec<(u64, usize, usize, usize, usize, usize)>, u64);
 
 fn run_once(
     w: &contextpilot::workload::Workload,
-    corpus: &contextpilot::corpus::Corpus,
+    corpus: &Arc<contextpilot::corpus::Corpus>,
     hbm: usize,
     tiers: Option<TierConfig>,
     workers: usize,
 ) -> (Signature, Cell) {
-    let mut cfg = ServeConfig::new(ModelSku::Qwen3_32B);
-    cfg.n_shards = N_SHARDS;
-    cfg.n_workers = workers;
-    cfg.capacity_tokens = hbm;
-    cfg.decode_tokens = 16;
-    cfg.pilot = None; // baseline RadixCache: identical schedules both modes
     let demote = tiers.is_some();
-    cfg.tiers = tiers;
-    let engine = ServingEngine::new(cfg);
+    let server = Server::builder(ModelSku::Qwen3_32B)
+        .shards(N_SHARDS)
+        .workers(workers)
+        .capacity(hbm)
+        .decode_tokens(16)
+        .pilot(None) // baseline RadixCache: identical schedules both modes
+        .tier_config(tiers)
+        .corpus(corpus.clone())
+        .build()
+        .expect("bench tiering config is valid");
     let t0 = std::time::Instant::now();
-    let served = engine.serve_batch(&w.requests, corpus);
+    let served = server.serve_batch(&w.requests).expect("serve batch");
     let wall = t0.elapsed().as_secs_f64();
-    let (mut m, per) = engine.metrics();
+    let (mut m, per) = server.metrics().expect("metrics");
     let cell = Cell {
         hbm,
         demote,
@@ -103,7 +107,7 @@ fn main() {
         (256, 6)
     };
     let w = hybrid(Dataset::MtRag, sessions, turns, 8, 0x71E21);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let t_start = std::time::Instant::now();
 
     // per-shard budgets: tight and medium force eviction under this

@@ -1,0 +1,282 @@
+//! [`ServerBuilder`]: one fluent entry point for every serving knob.
+//!
+//! Before the facade, a caller assembled a [`ServeConfig`] by hand, parsed
+//! tier and placement specs through separate `Result<_, String>` parsers,
+//! and learned about bad values from panics at serve time. The builder
+//! subsumes all of it: every knob is a chained method, raw CLI-shaped
+//! specs (`.tiers("hbm=64k,dram=256k")`) are parsed at [`build`] time, and
+//! validation happens *once*, there, returning [`Error::InvalidConfig`]
+//! instead of scattering `max(1)` clamps and panics through the stack.
+//!
+//! [`build`]: ServerBuilder::build
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::api::{Error, Server};
+use crate::cache::TierConfig;
+use crate::corpus::Corpus;
+use crate::engine::costmodel::ModelSku;
+use crate::engine::iface::InferenceEngine;
+use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::pilot::PilotConfig;
+use crate::quality::ModelEra;
+use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
+use crate::types::RequestId;
+
+/// Fluent configuration for a [`Server`]. Obtained from
+/// [`Server::builder`]; consumed by [`ServerBuilder::build`] (simulated
+/// backend) or [`ServerBuilder::build_with`] (any
+/// [`crate::engine::InferenceEngine`] factory).
+///
+/// Capacities (`capacity`, tier budgets) are **per shard**, matching the
+/// underlying [`ServeConfig`] semantics; the CLI divides its user-facing
+/// total budgets across shards before reaching the builder.
+#[derive(Clone, Debug)]
+pub struct ServerBuilder {
+    cfg: ServeConfig,
+    corpus: Option<Arc<Corpus>>,
+    /// Unparsed `--tiers`-shaped spec; parsed (and validated) at build
+    /// time so a malformed string surfaces as `InvalidConfig`, not a
+    /// panic inside a parser.
+    raw_tiers: Option<String>,
+}
+
+impl ServerBuilder {
+    pub(crate) fn new(sku: ModelSku) -> ServerBuilder {
+        ServerBuilder {
+            cfg: ServeConfig::new(sku),
+            corpus: None,
+            raw_tiers: None,
+        }
+    }
+
+    /// Start from a preassembled [`ServeConfig`] — the escape hatch for
+    /// harness code that already maps experiment configs onto the serving
+    /// layer ([`crate::experiments::serve_config`]). The config still goes
+    /// through the same [`build`](ServerBuilder::build)-time validation as
+    /// the fluent path.
+    pub fn from_config(cfg: ServeConfig) -> ServerBuilder {
+        ServerBuilder {
+            cfg,
+            corpus: None,
+            raw_tiers: None,
+        }
+    }
+
+    /// Independent shards (each owns a context index, a prefix cache and
+    /// an engine instance). Must be ≥ 1 at build time.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.n_shards = n;
+        self
+    }
+
+    /// Worker threads driving shard queues. Must be ≥ 1 at build time.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.n_workers = n;
+        self
+    }
+
+    /// KV (HBM) budget per shard, in tokens. Must be ≥ 1 at build time.
+    /// A `hbm=` component in [`tiers`](ServerBuilder::tiers) overrides it.
+    pub fn capacity(mut self, tokens_per_shard: usize) -> Self {
+        self.cfg.capacity_tokens = tokens_per_shard;
+        self
+    }
+
+    /// Decode length per request (tokens).
+    pub fn decode_tokens(mut self, n: usize) -> Self {
+        self.cfg.decode_tokens = n;
+        self
+    }
+
+    /// Engine reuse mechanism under test (radix / doc-prefix /
+    /// approximate).
+    pub fn reuse_policy(mut self, p: ReusePolicy) -> Self {
+        self.cfg.policy = p;
+        self
+    }
+
+    /// ContextPilot proxy configuration; `None` serves baseline prompts
+    /// (engine-only, LPM-ordered within each shard queue when the engine
+    /// prefers it).
+    pub fn pilot(mut self, p: impl Into<Option<PilotConfig>>) -> Self {
+        self.cfg.pilot = p.into();
+        self
+    }
+
+    /// Quality-model era.
+    pub fn era(mut self, e: ModelEra) -> Self {
+        self.cfg.era = e;
+        self
+    }
+
+    /// Multi-hop quality scoring (MultihopRAG-style workloads).
+    pub fn multi_hop(mut self, on: bool) -> Self {
+        self.cfg.multi_hop = on;
+        self
+    }
+
+    /// Chunked-prefill admission budget in tokens; `None` disables
+    /// chunking. `Some(0)` is rejected at build time.
+    pub fn prefill_chunk(mut self, chunk: impl Into<Option<usize>>) -> Self {
+        self.cfg.prefill_chunk = chunk.into();
+        self
+    }
+
+    /// Per-request decode-length overrides (trace replay).
+    pub fn decode_override(mut self, m: impl Into<Option<HashMap<RequestId, usize>>>) -> Self {
+        self.cfg.decode_override = m.into();
+        self
+    }
+
+    /// First-turn session → shard placement policy.
+    pub fn placement(mut self, k: PlacementKind) -> Self {
+        self.cfg.placement = k;
+        self
+    }
+
+    /// KV tier store from a CLI-shaped spec, e.g. `"hbm=64k,dram=256k"`
+    /// ([`TierConfig::parse`]; budgets are per shard, `k`/`m` suffixes
+    /// scale by 10³/10⁶). The `hbm=` component sizes the radix cache
+    /// (overriding [`capacity`](ServerBuilder::capacity)); `dram`/`ssd`
+    /// size the demotion shelves. Parsed and validated at build time.
+    pub fn tiers(mut self, spec: &str) -> Self {
+        self.raw_tiers = Some(spec.to_string());
+        self
+    }
+
+    /// KV tier store from an already-assembled [`TierConfig`] (per shard);
+    /// `None` keeps classic discard-mode eviction.
+    pub fn tier_config(mut self, t: impl Into<Option<TierConfig>>) -> Self {
+        self.cfg.tiers = t.into();
+        self
+    }
+
+    /// The corpus every request's context blocks are rendered from. The
+    /// server owns (a handle to) it so sessions can submit requests
+    /// without threading a corpus through every call. Required.
+    pub fn corpus(mut self, c: impl Into<Arc<Corpus>>) -> Self {
+        self.corpus = Some(c.into());
+        self
+    }
+
+    /// Validate the assembled configuration and build a server over the
+    /// default simulated backend.
+    pub fn build(self) -> Result<Server<SimEngine>, Error> {
+        let (cfg, corpus) = self.finish()?;
+        Ok(Server::from_engine(
+            ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine),
+            corpus,
+        ))
+    }
+
+    /// Validate and build over an arbitrary backend: `factory` is called
+    /// once per shard (in shard order) with the resolved config to
+    /// construct that shard's engine instance — the CLI's `--engine real`
+    /// path hands it a PJRT-backed factory, tests hand it mocks and
+    /// recording wrappers.
+    pub fn build_with<E, F>(self, factory: F) -> Result<Server<E>, Error>
+    where
+        E: InferenceEngine,
+        F: FnMut(&ServeConfig) -> E,
+    {
+        let (cfg, corpus) = self.finish()?;
+        Ok(Server::from_engine(
+            ServingEngine::with_engine_factory(cfg, factory),
+            corpus,
+        ))
+    }
+
+    /// All build-time validation in one place: every rejected value is an
+    /// [`Error::InvalidConfig`], never a panic or a silent clamp.
+    fn finish(self) -> Result<(ServeConfig, Arc<Corpus>), Error> {
+        let ServerBuilder {
+            mut cfg,
+            corpus,
+            raw_tiers,
+        } = self;
+        if let Some(spec) = raw_tiers {
+            let (hbm, tiers) = TierConfig::parse(&spec)?;
+            cfg.capacity_tokens = hbm;
+            cfg.tiers = Some(tiers);
+        }
+        if cfg.n_shards == 0 {
+            return Err(Error::InvalidConfig(
+                "shards must be >= 1 (each shard owns an index, a cache and an engine)".into(),
+            ));
+        }
+        if cfg.n_workers == 0 {
+            return Err(Error::InvalidConfig(
+                "workers must be >= 1 (the pool that drives shard queues)".into(),
+            ));
+        }
+        if cfg.capacity_tokens == 0 {
+            return Err(Error::InvalidConfig(
+                "capacity must be >= 1 token per shard".into(),
+            ));
+        }
+        if cfg.prefill_chunk == Some(0) {
+            return Err(Error::InvalidConfig(
+                "prefill chunk of 0 tokens admits nothing; use None to disable chunking".into(),
+            ));
+        }
+        let corpus = corpus.ok_or_else(|| {
+            Error::InvalidConfig("a corpus is required: call .corpus(..) before build()".into())
+        })?;
+        Ok((cfg, corpus))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::tokenizer::Tokenizer;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(
+            &CorpusConfig {
+                n_docs: 10,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        )
+    }
+
+    fn builder() -> ServerBuilder {
+        Server::builder(ModelSku::Qwen3_4B).corpus(corpus())
+    }
+
+    #[test]
+    fn defaults_build() {
+        let server = builder().build().expect("defaults are valid");
+        assert!(server.n_shards() >= 1);
+        assert!(server.n_workers() >= 1);
+    }
+
+    #[test]
+    fn tiers_spec_sets_capacity_and_store() {
+        let server = builder()
+            .shards(2)
+            .tiers("hbm=4k,dram=16k,ssd=1m")
+            .build()
+            .expect("tier spec is valid");
+        let cfg = server.config();
+        assert_eq!(cfg.capacity_tokens, 4_000);
+        let tiers = cfg.tiers.as_ref().expect("store attached");
+        assert_eq!(tiers.dram_tokens, 16_000);
+        assert_eq!(tiers.ssd_tokens, 1_000_000);
+    }
+
+    #[test]
+    fn from_config_goes_through_the_same_validation() {
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.n_shards = 0;
+        let err = ServerBuilder::from_config(cfg)
+            .corpus(corpus())
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+}

@@ -1,0 +1,105 @@
+//! [`Error`]: the typed error surface of the facade.
+//!
+//! Before the facade existed, failure reporting was scattered: the CLI
+//! parsers returned `Result<_, String>`, and a poisoned shard mutex
+//! surfaced as an `expect("shard poisoned")` panic deep inside the
+//! serving layer. The facade folds every failure a caller can observe
+//! into this one enum, so `?`-style composition works end to end. Panic
+//! scope: the call whose worker panics still unwinds (the panic
+//! propagates through the thread-scope join), but it no longer cascades
+//! — concurrent waiters and every *subsequent* call observe
+//! [`Error::ShardPoisoned`] instead of hitting further `expect`s.
+
+use std::fmt;
+
+use crate::types::{RequestId, SessionId};
+
+/// Everything `contextpilot::api` can fail with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// A configuration (or configuration-shaped input, e.g. a `--tiers`
+    /// spec or `--placement` name) was rejected by validation. Raised at
+    /// [`crate::api::ServerBuilder::build`] time — never as a panic from
+    /// deep inside the stack.
+    InvalidConfig(String),
+    /// A facade-boundary mutex (shard, placement ledger, request map,
+    /// ticket wave) was poisoned by a panicking worker thread, or a
+    /// flush panicked with tickets outstanding. The payload names the
+    /// poisoned component. State behind the mutex may be incomplete, and
+    /// calls that need it (including [`crate::api::Server::metrics`])
+    /// keep failing with this error until the server is rebuilt.
+    ShardPoisoned(&'static str),
+    /// The session has never been placed on a shard (no request of it
+    /// was ever submitted), so there is no pin to report.
+    UnknownSession(SessionId),
+    /// A request id was submitted twice. Request ids key the §4.1
+    /// eviction plumbing and the ticket ledger, so they must be unique
+    /// within a server's lifetime.
+    DuplicateRequest(RequestId),
+    /// The backend engine violated its contract (e.g. dropped a request
+    /// from a batch) or an engine backend is unavailable in this build.
+    EngineFailure(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::ShardPoisoned(what) => write!(
+                f,
+                "{what} poisoned: a worker thread panicked while holding its lock"
+            ),
+            Error::UnknownSession(s) => {
+                write!(f, "unknown session {}: never placed on a shard", s.0)
+            }
+            Error::DuplicateRequest(r) => write!(
+                f,
+                "duplicate request id {}: ids must be unique per server",
+                r.0
+            ),
+            Error::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_displays_its_payload() {
+        let cases: Vec<(Error, &str)> = vec![
+            (
+                Error::InvalidConfig("shards must be >= 1".into()),
+                "invalid configuration: shards must be >= 1",
+            ),
+            (
+                Error::ShardPoisoned("shard"),
+                "shard poisoned: a worker thread panicked while holding its lock",
+            ),
+            (
+                Error::UnknownSession(SessionId(7)),
+                "unknown session 7: never placed on a shard",
+            ),
+            (
+                Error::DuplicateRequest(RequestId(42)),
+                "duplicate request id 42: ids must be unique per server",
+            ),
+            (
+                Error::EngineFailure("request 3 not served".into()),
+                "engine failure: request 3 not served",
+            ),
+        ];
+        for (e, want) in cases {
+            assert_eq!(e.to_string(), want);
+        }
+    }
+
+    #[test]
+    fn works_as_a_boxed_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(Error::ShardPoisoned("placement ledger"));
+        assert!(e.to_string().contains("placement ledger"));
+    }
+}

@@ -1,0 +1,121 @@
+//! `contextpilot::api` — the stable, documented front door of the crate.
+//!
+//! The paper's architectural claim (§5) is a proxy with a *clean
+//! interface that integrates with existing inference engines*. This
+//! module is that interface: one fluent builder for every serving knob,
+//! one typed error enum, and a session/ticket request lifecycle that
+//! serves streams the way the engine room serves batches. Everything
+//! underneath — the sharded [`crate::serve`] engine, placement, KV
+//! tiering, chunked admission — is reached through it; the serving engine
+//! itself is crate-private.
+//!
+//! ```text
+//!   Server::builder(sku)                 one fluent config; validation at
+//!     .shards(..).workers(..)            build() time → Error::InvalidConfig
+//!     .tiers("hbm=64k,dram=256k")        (never a panic, never a clamp)
+//!     .placement(..).prefill_chunk(..)
+//!     .corpus(corpus)
+//!     .build()?                          → Server
+//!
+//!   server.session(id)                   → SessionHandle (stamps session)
+//!       .submit(request)?                → Ticket (joins the pending wave)
+//!   ticket.wait()?                       → Response (flushes the wave on
+//!                                          first wait; typed errors)
+//!
+//!   server.serve_batch(&reqs)? / server.serve_one(&req)?
+//!                                        thin shims over the same
+//!                                        submit → flush → wait lifecycle
+//! ```
+//!
+//! # End-to-end example
+//!
+//! Three sessions share context blocks; submissions from different
+//! sessions interleave in one admission wave, placement co-locates the
+//! overlap, and the prefix cache turns it into KV reuse:
+//!
+//! ```
+//! use contextpilot::api::{PlacementKind, Server};
+//! use contextpilot::corpus::{Corpus, CorpusConfig};
+//! use contextpilot::engine::ModelSku;
+//! use contextpilot::tokenizer::Tokenizer;
+//! use contextpilot::types::{BlockId, QueryId, Request, RequestId, SessionId};
+//!
+//! let corpus = Corpus::generate(
+//!     &CorpusConfig { n_docs: 24, ..Default::default() },
+//!     &Tokenizer::default(),
+//! );
+//! let server = Server::builder(ModelSku::Qwen3_4B)
+//!     .shards(2)
+//!     .workers(2)
+//!     .capacity(32_000)
+//!     .placement(PlacementKind::ContextAware)
+//!     .prefill_chunk(2048)
+//!     .corpus(corpus)
+//!     .build()?;
+//!
+//! let req = |id: u64, session: u32, blocks: &[u32]| Request {
+//!     id: RequestId(id),
+//!     session: SessionId(session),
+//!     turn: 0,
+//!     context: blocks.iter().map(|&b| BlockId(b)).collect(),
+//!     query: QueryId(id),
+//! };
+//!
+//! // Streaming tickets: two sessions submit into the same pending wave;
+//! // the first wait() flushes it through the sharded engine.
+//! let a = server.session(SessionId(1)).submit(req(1, 1, &[1, 2, 3]))?;
+//! let b = server.session(SessionId(2)).submit(req(2, 2, &[1, 2, 9]))?;
+//! let first = a.wait()?;
+//! let second = b.wait()?; // already resolved by the same flush
+//! assert_eq!(first.request.id, RequestId(1));
+//! assert!(second.cached_tokens > 0, "overlapping contexts share KV");
+//!
+//! // Batches run through the same session/ticket lifecycle.
+//! let served = server.serve_batch(&[req(3, 3, &[1, 2, 3])])?;
+//! assert_eq!(served.len(), 1);
+//!
+//! // Typed telemetry and session introspection.
+//! let (metrics, per_shard) = server.metrics()?;
+//! assert_eq!(metrics.len(), 3);
+//! assert_eq!(per_shard.len(), 2);
+//! assert!(metrics.hit_ratio() > 0.0);
+//! let pinned = server.session_shard(SessionId(1))?;
+//! assert!(pinned < server.n_shards());
+//! # Ok::<(), contextpilot::api::Error>(())
+//! ```
+//!
+//! # Errors
+//!
+//! Every fallible call returns [`Error`]: configuration problems are
+//! rejected at [`ServerBuilder::build`] time ([`Error::InvalidConfig`] —
+//! zero shards/workers, a chunk budget of 0, a malformed tier spec); a
+//! worker panic surfaces to concurrent waiters and every subsequent call
+//! as [`Error::ShardPoisoned`] instead of cascading panics (the call
+//! that drove the panicking worker itself still unwinds); duplicate
+//! submissions and unplaced-session lookups get their own variants. See
+//! [`Error`] for the full catalogue.
+//!
+//! # Relation to the engine room
+//!
+//! [`Server`] wraps the crate-private sharded serving engine. The
+//! [`ServeConfig`] it resolves to is still public — engine factories
+//! receive it ([`ServerBuilder::build_with`]) and harness code may
+//! preassemble one ([`ServerBuilder::from_config`]) — but construction
+//! and serving always flow through this facade, which is what lets the
+//! crate evolve the engine room freely underneath it.
+
+mod builder;
+mod error;
+mod server;
+
+pub use builder::ServerBuilder;
+pub use error::Error;
+pub use server::{Response, Server, SessionHandle, Ticket};
+
+// One-stop imports for facade users: the enums and configs that appear in
+// builder signatures.
+pub use crate::cache::{AdmissionPolicy, TierConfig};
+pub use crate::engine::costmodel::ModelSku;
+pub use crate::engine::sim::ReusePolicy;
+pub use crate::pilot::PilotConfig;
+pub use crate::serve::{PlacementKind, ServeConfig};

@@ -1,0 +1,474 @@
+//! [`Server`], [`SessionHandle`] and [`Ticket`]: the request-lifecycle
+//! front of the facade.
+//!
+//! The engine room ([`crate::serve`]) thinks in whole batches; real
+//! traffic arrives as *streams* — many sessions submitting concurrently,
+//! interleaving arbitrarily. The ticket layer bridges the two: every
+//! [`SessionHandle::submit`] appends to the server's **pending wave** (in
+//! arrival order, whatever session it came from) and returns a [`Ticket`];
+//! [`Server::flush`] — called explicitly or implicitly by the first
+//! [`Ticket::wait`] — drains the wave through the sharded engine as one
+//! admission wave and resolves every ticket it contained. Requests from
+//! different sessions therefore share waves exactly the way a batch
+//! endpoint's callers would, while each caller only ever touches its own
+//! ticket.
+//!
+//! [`Server::serve_batch`] and [`Server::serve_one`] are thin shims over
+//! this lifecycle (submit → flush → wait), so the batch path and the
+//! streaming path are literally the same code — which is what keeps the
+//! worker-count-invariance and placement pins of the test suite valid for
+//! both.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::{Error, ServerBuilder};
+use crate::corpus::Corpus;
+use crate::engine::costmodel::ModelSku;
+use crate::engine::iface::InferenceEngine;
+use crate::engine::sim::SimEngine;
+use crate::metrics::{RunMetrics, ShardStats};
+use crate::serve::{shard_guard, ServeConfig, ServingEngine};
+use crate::types::{Request, RequestId, ServedRequest, SessionId};
+
+/// What a resolved ticket yields: the full served record (prompt layout,
+/// token accounting, latency model outputs, tier split).
+pub type Response = ServedRequest;
+
+/// One submission's result slot, shared between its [`Ticket`] and the
+/// flush that resolves it.
+struct TicketCell {
+    slot: Mutex<Option<Result<Response, Error>>>,
+    ready: Condvar,
+}
+
+impl TicketCell {
+    fn new() -> TicketCell {
+        TicketCell {
+            slot: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Resolve the cell (first write wins). Runs on the flushing thread;
+    /// recovers the inner value even from a poisoned slot so a waiter is
+    /// never stranded.
+    fn fill(&self, r: Result<Response, Error>) {
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(r);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Non-blocking peek (clones; for the non-consuming
+    /// [`Ticket::try_result`]).
+    fn peek(&self) -> Result<Option<Result<Response, Error>>, Error> {
+        Ok(shard_guard(&self.slot, "ticket slot")?.clone())
+    }
+
+    /// Non-blocking take. Only the consuming [`Ticket::wait`] path calls
+    /// this: a cell has exactly one ticket, so moving the response out
+    /// (instead of cloning it) is safe and saves a full `ServedRequest`
+    /// copy per request.
+    fn take_now(&self) -> Result<Option<Result<Response, Error>>, Error> {
+        Ok(shard_guard(&self.slot, "ticket slot")?.take())
+    }
+
+    /// Block until a flush fills the cell (the wave holding this request
+    /// was drained by another thread, which will resolve it), then move
+    /// the result out.
+    fn take_filled(&self) -> Result<Response, Error> {
+        let mut slot = shard_guard(&self.slot, "ticket slot")?;
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self
+                .ready
+                .wait(slot)
+                .map_err(|_| Error::ShardPoisoned("ticket slot"))?;
+        }
+    }
+}
+
+/// The pending admission wave: submissions (in arrival order) that have
+/// not been flushed through the engine yet, plus the all-time request-id
+/// ledger that rejects duplicate submissions. The ledger is never pruned
+/// — one `RequestId` per served request, the same retention trade-off as
+/// the engine room's request → shard eviction map.
+struct Wave {
+    reqs: Vec<Request>,
+    cells: Vec<Arc<TicketCell>>,
+    seen: HashSet<RequestId>,
+}
+
+/// Fills every still-unresolved cell of a drained wave with an error when
+/// dropped. Armed by [`Server::flush`] the moment it takes ownership of a
+/// wave: if the flushing thread panics mid-serve (a worker panic
+/// resurfacing through the thread-scope join), unwinding resolves the
+/// cells instead of stranding concurrent [`Ticket::wait`] callers on the
+/// condvar forever. On the normal paths every cell is already filled, so
+/// the drop is a no-op (cells are first-write-wins).
+struct ResolveOnDrop {
+    cells: Vec<Arc<TicketCell>>,
+}
+
+impl Drop for ResolveOnDrop {
+    fn drop(&mut self) {
+        for c in &self.cells {
+            c.fill(Err(Error::ShardPoisoned("ticket wave")));
+        }
+    }
+}
+
+/// A running ContextPilot serving stack: sharded engine, placement
+/// ledger, KV tiers and the ticket front, behind one handle. Built by
+/// [`Server::builder`]; safe to share across threads (`&Server` is all
+/// any caller needs).
+pub struct Server<E: InferenceEngine = SimEngine> {
+    engine: ServingEngine<E>,
+    corpus: Arc<Corpus>,
+    wave: Mutex<Wave>,
+}
+
+impl Server<SimEngine> {
+    /// Start configuring a server for the given model SKU. See
+    /// [`ServerBuilder`] for the knobs and [`crate::api`] for a worked
+    /// end-to-end example.
+    pub fn builder(sku: ModelSku) -> ServerBuilder {
+        ServerBuilder::new(sku)
+    }
+}
+
+impl<E: InferenceEngine> Server<E> {
+    pub(crate) fn from_engine(engine: ServingEngine<E>, corpus: Arc<Corpus>) -> Server<E> {
+        Server {
+            engine,
+            corpus,
+            wave: Mutex::new(Wave {
+                reqs: Vec::new(),
+                cells: Vec::new(),
+                seen: HashSet::new(),
+            }),
+        }
+    }
+
+    /// The resolved configuration this server runs with (after builder
+    /// validation; shard/worker counts as built).
+    pub fn config(&self) -> &ServeConfig {
+        self.engine.config()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.engine.n_shards()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.engine.n_workers()
+    }
+
+    /// The corpus requests are rendered against.
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    /// A handle for submitting requests under one session. Cheap —
+    /// sessions exist implicitly; their state (pin, history, dedup
+    /// records) lives on whichever shard placement chose.
+    pub fn session(&self, id: SessionId) -> SessionHandle<'_, E> {
+        SessionHandle { server: self, id }
+    }
+
+    /// The shard a session is pinned to, or
+    /// [`Error::UnknownSession`] if no request of it was ever placed.
+    pub fn session_shard(&self, id: SessionId) -> Result<usize, Error> {
+        self.engine
+            .placed_shard(id)?
+            .ok_or(Error::UnknownSession(id))
+    }
+
+    /// The shard a session's next request *would* run on: its recorded
+    /// pin when placed, otherwise the session-hash prediction (exact
+    /// under [`crate::api::PlacementKind::SessionHash`]).
+    pub fn predicted_shard(&self, id: SessionId) -> Result<usize, Error> {
+        self.engine.shard_of_session(id)
+    }
+
+    /// Drain the pending wave through the sharded engine as one admission
+    /// wave, resolving every ticket it contained. Returns how many
+    /// requests were served. A no-op (`Ok(0)`) when nothing is pending —
+    /// including when a concurrent caller drained the wave first; their
+    /// flush resolves the tickets.
+    pub fn flush(&self) -> Result<usize, Error> {
+        let (reqs, cells) = {
+            let mut wave = shard_guard(&self.wave, "ticket wave")?;
+            (
+                std::mem::take(&mut wave.reqs),
+                std::mem::take(&mut wave.cells),
+            )
+        };
+        if reqs.is_empty() {
+            return Ok(0);
+        }
+        // from here on the drained cells are this thread's responsibility:
+        // if the serve below panics, unwinding resolves them (waiters get
+        // ShardPoisoned instead of blocking forever)
+        let guard = ResolveOnDrop { cells };
+        match self.engine.serve_batch(&reqs, &self.corpus) {
+            Ok(served) => {
+                // the engine fails with EngineFailure rather than return a
+                // partial batch, so Ok is always complete — and output is
+                // in arrival order == submission order
+                debug_assert_eq!(served.len(), reqs.len());
+                for (cell, sr) in guard.cells.iter().zip(served) {
+                    cell.fill(Ok(sr));
+                }
+                Ok(reqs.len())
+            }
+            Err(e) => {
+                for cell in &guard.cells {
+                    cell.fill(Err(e.clone()));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Queue a whole slice atomically: validated first (duplicate ids —
+    /// against the ledger *and* within the slice — admit nothing), then
+    /// admitted to the pending wave in slice order under one lock, so a
+    /// rejected batch leaves no half-queued prefix behind and no ids
+    /// burned in the ledger.
+    fn submit_all(&self, reqs: &[Request]) -> Result<Vec<Ticket<'_, E>>, Error> {
+        let mut wave = shard_guard(&self.wave, "ticket wave")?;
+        let mut in_slice: HashSet<RequestId> = HashSet::with_capacity(reqs.len());
+        for r in reqs {
+            if wave.seen.contains(&r.id) || !in_slice.insert(r.id) {
+                return Err(Error::DuplicateRequest(r.id));
+            }
+        }
+        let mut tickets = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let cell = Arc::new(TicketCell::new());
+            wave.seen.insert(r.id);
+            wave.reqs.push(r.clone());
+            wave.cells.push(cell.clone());
+            tickets.push(Ticket { server: self, cell });
+        }
+        Ok(tickets)
+    }
+
+    /// Serve a whole batch through the session/ticket lifecycle: admit
+    /// every request atomically (arrival order = slice order), flush
+    /// once, collect in the original order. With no concurrent submitters
+    /// this hands the engine exactly this slice as one wave — bit-for-bit
+    /// the pre-facade `serve_batch` semantics.
+    pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>, Error> {
+        let tickets = self.submit_all(reqs)?;
+        self.flush()?;
+        tickets.into_iter().map(Ticket::wait).collect()
+    }
+
+    /// Serve a single request (the streaming path): submit + wait. Safe
+    /// to call concurrently from many threads; a session's requests are
+    /// always served in submission order (sessions are pinned to one
+    /// shard and waves preserve arrival order).
+    ///
+    /// Note the wave semantics: concurrent callers' submissions may land
+    /// in one admission wave, and *different* sessions racing onto the
+    /// same shard are then scheduled together (Alg.-5 ordering, shared
+    /// chunked-admission clock) rather than serialized as singletons —
+    /// the same freedom the engine has within any batch. Cross-session
+    /// arrival order under concurrency was never deterministic; per-
+    /// session results for a fixed per-shard arrival order are.
+    pub fn serve_one(&self, req: &Request) -> Result<Response, Error> {
+        self.session(req.session).submit(req.clone())?.wait()
+    }
+
+    /// Offline mode (§5.1): cluster-build each shard's context index over
+    /// its slice of the batch. Runs through placement, pinning sessions,
+    /// so subsequent serves land where their index was built.
+    pub fn build_offline(&self, reqs: &[Request]) -> Result<(), Error> {
+        self.engine.build_offline(reqs)
+    }
+
+    /// External eviction callback (§4.1): prune each owning shard's
+    /// context index. Unknown ids are ignored.
+    pub fn on_evict(&self, reqs: &[RequestId]) -> Result<(), Error> {
+        self.engine.on_evict(reqs)
+    }
+
+    /// Aggregate run metrics plus a per-shard telemetry snapshot.
+    pub fn metrics(&self) -> Result<(RunMetrics, Vec<ShardStats>), Error> {
+        self.engine.metrics()
+    }
+}
+
+/// Submission scope for one session. The handle is the authority on the
+/// session identity: requests submitted through it are stamped with its
+/// id, so a request built for one session cannot leak into another.
+pub struct SessionHandle<'a, E: InferenceEngine> {
+    server: &'a Server<E>,
+    id: SessionId,
+}
+
+impl<'a, E: InferenceEngine> SessionHandle<'a, E> {
+    pub fn id(&self) -> SessionId {
+        self.id
+    }
+
+    /// The shard this session is pinned to ([`Error::UnknownSession`]
+    /// until a request of it has been placed).
+    pub fn shard(&self) -> Result<usize, Error> {
+        self.server.session_shard(self.id)
+    }
+
+    /// Queue a request into the server's pending wave and return its
+    /// ticket. Fails with [`Error::DuplicateRequest`] if the request id
+    /// was ever submitted to this server before; the request is not
+    /// queued in that case.
+    pub fn submit(&self, mut req: Request) -> Result<Ticket<'a, E>, Error> {
+        req.session = self.id;
+        let cell = Arc::new(TicketCell::new());
+        let mut wave = shard_guard(&self.server.wave, "ticket wave")?;
+        if !wave.seen.insert(req.id) {
+            return Err(Error::DuplicateRequest(req.id));
+        }
+        wave.reqs.push(req);
+        wave.cells.push(cell.clone());
+        Ok(Ticket {
+            server: self.server,
+            cell,
+        })
+    }
+}
+
+/// A claim on one submitted request's result. [`Ticket::wait`] drives the
+/// server if needed (flushing the pending wave) and returns this
+/// request's record; dropping a ticket without waiting is allowed — the
+/// request is still served by whichever flush drains its wave.
+#[must_use = "a ticket does nothing until waited on (or the server is flushed)"]
+pub struct Ticket<'a, E: InferenceEngine> {
+    server: &'a Server<E>,
+    cell: Arc<TicketCell>,
+}
+
+impl<E: InferenceEngine> Ticket<'_, E> {
+    /// Non-blocking probe: `Ok(None)` while the request's wave has not
+    /// been flushed, `Ok(Some(response))` once it served, `Err` if the
+    /// wave was flushed and failed.
+    pub fn try_result(&self) -> Result<Option<Response>, Error> {
+        match self.cell.peek()? {
+            None => Ok(None),
+            Some(Ok(r)) => Ok(Some(r)),
+            Some(Err(e)) => Err(e),
+        }
+    }
+
+    /// Resolve the ticket: if its wave is still pending this flushes it
+    /// (serving every pending submission, whatever session they belong
+    /// to); if a concurrent caller drained the wave first, this blocks
+    /// until that flush resolves the cell.
+    pub fn wait(self) -> Result<Response, Error> {
+        if let Some(r) = self.cell.take_now()? {
+            return r;
+        }
+        // Either this flush serves our wave, or another thread already
+        // drained it and will fill the cell; flush errors that resolved
+        // our cell are reported through the cell itself.
+        let flushed = self.server.flush();
+        if let Some(r) = self.cell.take_now()? {
+            return r;
+        }
+        // the flush failed before our wave was drained (e.g. a poisoned
+        // wave lock): nobody will ever fill the cell, so report directly
+        // instead of blocking forever
+        flushed?;
+        self.cell.take_filled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::CorpusConfig;
+    use crate::tokenizer::Tokenizer;
+    use crate::types::{BlockId, QueryId};
+
+    fn server() -> Server {
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 30,
+                ..Default::default()
+            },
+            &Tokenizer::default(),
+        );
+        Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(2)
+            .decode_tokens(8)
+            .corpus(corpus)
+            .build()
+            .expect("test config is valid")
+    }
+
+    fn req(id: u64, session: u32, ids: &[u32]) -> Request {
+        Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: ids.iter().map(|&i| BlockId(i)).collect(),
+            query: QueryId(id),
+        }
+    }
+
+    #[test]
+    fn tickets_resolve_in_submission_order_across_sessions() {
+        let server = server();
+        let a = server.session(SessionId(1)).submit(req(1, 1, &[1, 2])).unwrap();
+        let b = server.session(SessionId(2)).submit(req(2, 2, &[3, 4])).unwrap();
+        assert!(a.try_result().unwrap().is_none(), "nothing flushed yet");
+        let first = a.wait().expect("serve");
+        // a's wait flushed the whole wave: b resolves without serving
+        let pending = server.flush().expect("flush");
+        assert_eq!(pending, 0, "wave already drained");
+        let second = b.wait().expect("serve");
+        assert_eq!(first.request.id, RequestId(1));
+        assert_eq!(second.request.id, RequestId(2));
+    }
+
+    #[test]
+    fn duplicate_request_id_is_rejected_without_queueing() {
+        let server = server();
+        let t = server.session(SessionId(1)).submit(req(7, 1, &[1])).unwrap();
+        let err = server
+            .session(SessionId(2))
+            .submit(req(7, 2, &[2]))
+            .unwrap_err();
+        assert_eq!(err, Error::DuplicateRequest(RequestId(7)));
+        t.wait().expect("original request unaffected");
+        let (m, _) = server.metrics().expect("metrics");
+        assert_eq!(m.len(), 1, "the duplicate must not have been queued");
+    }
+
+    #[test]
+    fn handle_stamps_its_session_onto_requests() {
+        let server = server();
+        // request built with session 9, submitted via session 3
+        let t = server.session(SessionId(3)).submit(req(1, 9, &[1])).unwrap();
+        let served = t.wait().expect("serve");
+        assert_eq!(served.request.session, SessionId(3));
+        assert!(server.session_shard(SessionId(3)).is_ok());
+        assert_eq!(
+            server.session_shard(SessionId(9)).unwrap_err(),
+            Error::UnknownSession(SessionId(9))
+        );
+    }
+
+    #[test]
+    fn server_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Server>();
+    }
+}

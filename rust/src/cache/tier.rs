@@ -76,31 +76,57 @@ impl TierConfig {
         }
     }
 
-    /// Parse the CLI shape `hbm=N,dram=N,ssd=N` (token counts; `hbm` is
-    /// required — it sizes the radix cache — `dram`/`ssd` default to 0 =
-    /// disabled). Returns `(hbm_tokens, config)`.
-    pub fn parse(spec: &str) -> Result<(usize, TierConfig), String> {
+    /// Parse the CLI shape `hbm=N,dram=N,ssd=N` (token counts, optionally
+    /// suffixed `k`/`m` for 10³/10⁶ — `hbm=64k` is 64 000 tokens; `hbm`
+    /// is required — it sizes the radix cache — `dram`/`ssd` default to
+    /// 0 = disabled). Returns `(hbm_tokens, config)`. Malformed specs are
+    /// an [`crate::api::Error::InvalidConfig`], the same typed error the
+    /// facade's builder validation raises.
+    pub fn parse(spec: &str) -> Result<(usize, TierConfig), crate::api::Error> {
+        use crate::api::Error;
+        fn tokens(key: &str, val: &str) -> Result<usize, Error> {
+            let t = val.trim().to_ascii_lowercase();
+            let (digits, mult) = match (t.strip_suffix('k'), t.strip_suffix('m')) {
+                (Some(d), _) => (d, 1_000usize),
+                (_, Some(d)) => (d, 1_000_000),
+                _ => (t.as_str(), 1),
+            };
+            digits
+                .trim()
+                .parse::<usize>()
+                .ok()
+                .and_then(|n| n.checked_mul(mult))
+                .ok_or_else(|| {
+                    Error::InvalidConfig(format!(
+                        "tier '{key}' expects a token count (plain or k/m-suffixed), got '{val}'"
+                    ))
+                })
+        }
         let mut hbm: Option<usize> = None;
         let mut dram = 0usize;
         let mut ssd = 0usize;
         for part in spec.split(',').filter(|p| !p.is_empty()) {
-            let (key, val) = part
-                .split_once('=')
-                .ok_or_else(|| format!("expected key=tokens, got '{part}'"))?;
-            let n: usize = val
-                .trim()
-                .parse()
-                .map_err(|_| format!("'{key}' expects a token count, got '{val}'"))?;
-            match key.trim() {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::InvalidConfig(format!("tier spec expects key=tokens, got '{part}'"))
+            })?;
+            let key = key.trim();
+            let n = tokens(key, val)?;
+            match key {
                 "hbm" => hbm = Some(n),
                 "dram" => dram = n,
                 "ssd" => ssd = n,
-                other => return Err(format!("unknown tier '{other}' (try hbm/dram/ssd)")),
+                other => {
+                    return Err(Error::InvalidConfig(format!(
+                        "unknown tier '{other}' (try hbm/dram/ssd)"
+                    )))
+                }
             }
         }
-        let hbm = hbm.ok_or_else(|| "missing hbm=<tokens> (sizes the radix cache)".to_string())?;
+        let hbm = hbm.ok_or_else(|| {
+            Error::InvalidConfig("tier spec is missing hbm=<tokens> (sizes the radix cache)".into())
+        })?;
         if hbm == 0 {
-            return Err("hbm capacity must be > 0".to_string());
+            return Err(Error::InvalidConfig("hbm capacity must be > 0".into()));
         }
         Ok((hbm, TierConfig::new(dram, ssd)))
     }
@@ -512,11 +538,29 @@ mod tests {
         // subset: missing tiers disabled
         let (hbm, cfg) = TierConfig::parse("hbm=500").unwrap();
         assert_eq!((hbm, cfg.dram_tokens, cfg.ssd_tokens), (500, 0, 0));
-        // errors
-        assert!(TierConfig::parse("dram=10").is_err(), "hbm required");
-        assert!(TierConfig::parse("hbm=0").is_err());
-        assert!(TierConfig::parse("hbm=x").is_err());
-        assert!(TierConfig::parse("vram=10,hbm=1").is_err());
+        // k/m suffixes scale by 10^3 / 10^6
+        let (hbm, cfg) = TierConfig::parse("hbm=64k,dram=256K,ssd=1m").unwrap();
+        assert_eq!(hbm, 64_000);
+        assert_eq!((cfg.dram_tokens, cfg.ssd_tokens), (256_000, 1_000_000));
+        // errors — every rejection is the facade's typed InvalidConfig
+        // (incl. a suffixed count that would overflow usize)
+        for bad in [
+            "dram=10",
+            "hbm=0",
+            "hbm=x",
+            "vram=10,hbm=1",
+            "hbm",
+            "hbm=4q",
+            "hbm=18446744073709551615k",
+        ] {
+            assert!(
+                matches!(
+                    TierConfig::parse(bad),
+                    Err(crate::api::Error::InvalidConfig(_))
+                ),
+                "spec '{bad}' must be rejected as InvalidConfig"
+            );
+        }
     }
 
     #[test]

@@ -27,9 +27,9 @@
 //! `chunk_boundaries` exposes the prefix-shareable token offsets the
 //! chunked-prefill admission layer splits long prefills at.
 //!
-//! `Send` is a supertrait because the sharded [`crate::serve::ServingEngine`]
-//! moves one engine instance behind each shard mutex and drives shards
-//! from a worker pool.
+//! `Send` is a supertrait because the sharded serving engine behind
+//! [`crate::api::Server`] moves one engine instance behind each shard
+//! mutex and drives shards from a worker pool.
 
 use crate::corpus::Corpus;
 use crate::quality::QualityModel;

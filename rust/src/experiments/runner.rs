@@ -4,13 +4,14 @@
 //!
 //! Since the engine-generic refactor this module owns **no serve loop of
 //! its own**: [`run_system`] maps its [`RunConfig`] onto a single-shard,
-//! single-worker [`crate::serve::ServingEngine`] and submits one batch per
+//! single-worker [`crate::api::Server`] and submits one batch per
 //! arrival wave. The sequential path therefore *is* the sharded path at
 //! n = 1 — baseline LPM ordering, Alg.-5 scheduling, §4.1 eviction
-//! plumbing and metrics all live in one place ([`crate::serve`]).
+//! plumbing and metrics all live in one place (behind [`crate::api`]).
 
 use std::collections::HashMap;
 
+use crate::api::ServerBuilder;
 use crate::cache::TierConfig;
 use crate::corpus::{Corpus, CorpusConfig};
 use crate::engine::costmodel::ModelSku;
@@ -18,7 +19,7 @@ use crate::engine::sim::ReusePolicy;
 use crate::metrics::RunMetrics;
 use crate::pilot::PilotConfig;
 use crate::quality::{ModelEra, QualityModel};
-use crate::serve::{ServeConfig, ServingEngine};
+use crate::serve::ServeConfig;
 use crate::tokenizer::Tokenizer;
 use crate::types::{Request, RequestId};
 use crate::workload::{Dataset, DatasetProfile, Workload};
@@ -172,21 +173,32 @@ pub fn corpus_for(dataset: Dataset) -> Corpus {
 }
 
 /// Run a workload through a system; returns the metrics.
+///
+/// Experiment configs are static and known-valid, and the harness has no
+/// error channel of its own, so facade errors (which can only be poisoned
+/// locks here) abort the run with a message instead of propagating.
 pub fn run_system(
     system: &SystemKind,
     workload: &Workload,
     corpus: &Corpus,
     cfg: &RunConfig,
 ) -> RunMetrics {
-    let engine = ServingEngine::new(serve_config(system, workload, cfg));
+    let server = ServerBuilder::from_config(serve_config(system, workload, cfg))
+        .corpus(corpus.clone())
+        .build()
+        .expect("experiment serve config is valid");
     if cfg.offline {
-        engine.build_offline(&workload.requests);
+        server
+            .build_offline(&workload.requests)
+            .expect("offline index build");
     }
     // batches = arrival waves (consecutive same-turn runs)
     for (i, j) in turn_waves(&workload.requests) {
-        engine.serve_batch(&workload.requests[i..j], corpus);
+        server
+            .serve_batch(&workload.requests[i..j])
+            .expect("serve wave");
     }
-    engine.metrics().0
+    server.metrics().expect("metrics snapshot").0
 }
 
 /// Baseline-anchored F1 for a run: anchor = the RadixCache/LMCache prompt

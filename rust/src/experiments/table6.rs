@@ -5,19 +5,20 @@
 //! system).
 //!
 //! Since the placement refactor this experiment runs on the production
-//! [`crate::serve::ServingEngine`]: each hardware "worker" of the paper is
-//! one serving shard (its own context index, prefix cache and engine), and
-//! the routing policy is the serving layer's
+//! serving stack behind [`crate::api::Server`]: each hardware "worker" of
+//! the paper is one serving shard (its own context index, prefix cache
+//! and engine), and the routing policy is the serving layer's
 //! [`crate::serve::placement::PlacementPolicy`] — the same code path the
 //! CLI's `--placement` flag exercises, not a bespoke router.
 
+use crate::api::Server;
 use crate::corpus::Corpus;
 use crate::engine::costmodel::ModelSku;
 use crate::engine::sim::ReusePolicy;
 use crate::experiments::runner::{corpus_for, turn_waves};
 use crate::pilot::PilotConfig;
 use crate::quality::{to_f1, ModelEra, QualityModel};
-use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
+use crate::serve::PlacementKind;
 use crate::util::table::{f2, Table};
 use crate::workload::{multi_session, Dataset, Workload};
 
@@ -36,24 +37,26 @@ fn run_variant(
     multi_hop: bool,
     baseline_f1: f64,
 ) -> (f64, f64, f64) {
-    let mut cfg = ServeConfig::new(sku);
-    cfg.n_shards = shards;
-    cfg.n_workers = shards;
-    cfg.capacity_tokens = 120_000; // per shard, matching the old per-worker budget
-    cfg.policy = ReusePolicy::RadixPrefix;
-    cfg.pilot = v.pilot.clone();
-    cfg.era = ModelEra::Modern;
-    cfg.multi_hop = multi_hop;
-    cfg.decode_tokens = 32;
-    cfg.placement = v.placement;
-    let engine = ServingEngine::new(cfg);
+    let server = Server::builder(sku)
+        .shards(shards)
+        .workers(shards)
+        .capacity(120_000) // per shard, matching the old per-worker budget
+        .reuse_policy(ReusePolicy::RadixPrefix)
+        .pilot(v.pilot.clone())
+        .era(ModelEra::Modern)
+        .multi_hop(multi_hop)
+        .decode_tokens(32)
+        .placement(v.placement)
+        .corpus(corpus.clone())
+        .build()
+        .expect("table6 serve config is valid");
     if v.pilot.is_some() {
-        engine.build_offline(&w.requests);
+        server.build_offline(&w.requests).expect("offline build");
     }
     for (i, j) in turn_waves(&w.requests) {
-        engine.serve_batch(&w.requests[i..j], corpus);
+        server.serve_batch(&w.requests[i..j]).expect("serve wave");
     }
-    let (metrics, _) = engine.metrics();
+    let (metrics, _) = server.metrics().expect("metrics snapshot");
     let qm = QualityModel::new(ModelEra::Modern, multi_hop);
     let base_q: f64 = w
         .requests

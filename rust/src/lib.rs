@@ -7,19 +7,28 @@
 //!   context index ([`index`]), context alignment ([`align`]), request
 //!   scheduling ([`schedule`]), de-duplication ([`dedup`]) and annotations,
 //!   fronting any inference engine behind the
-//!   [`engine::InferenceEngine`] trait — the §4.1 proxy↔engine contract:
+//!   [`engine::InferenceEngine`] trait — the §4.1 proxy↔engine contract.
+//!   The stable entry point is [`api`]: a builder-configured
+//!   [`api::Server`] with a session/ticket request lifecycle and typed
+//!   errors ([`api::Error`]); the sharded serving machinery underneath is
+//!   crate-private:
 //!
 //!   ```text
-//!   CLI / experiment runner / benches
-//!        │
+//!   CLI / experiment runner / benches / library users
+//!        │  Server::builder(sku)…build()?; session(id).submit(req)?
+//!        │  → Ticket::wait()?; serve_batch / serve_one shims
 //!        ▼
-//!   serve::ServingEngine<E>      lock-striped shards + worker pool
+//!   api::Server                  the facade: pending-wave tickets, typed
+//!        │                       errors, corpus ownership
+//!        ▼
+//!   serving engine (crate-private, [`serve`])
+//!        │                       lock-striped shards + worker pool
 //!        │                       (the sequential runner is this at n = 1);
 //!        │                       serve::placement picks each session's
 //!        │                       first-turn shard (session-hash / round-
 //!        │                       robin / context-aware reuse voting)
 //!        ▼
-//!   serve::Shard<E>              ContextPilot proxy ([`pilot`]) +
+//!   shard                        ContextPilot proxy ([`pilot`]) +
 //!        │                       chunked-prefill admission
 //!        │                       ([`serve::admission`])
 //!        ▼
@@ -54,6 +63,8 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `rust/README.md` for build/test/bench instructions.
+
+pub mod api;
 
 pub mod align;
 pub mod cache;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   serve        run a workload through a system and print metrics
 //!                (--shards N --workers N switches to the concurrent
-//!                sharded ServingEngine and prints per-shard stats;
+//!                sharded api::Server and prints per-shard stats;
 //!                --engine sim|real selects the backend behind the
 //!                InferenceEngine trait; --prefill-chunk T enables
 //!                chunked-prefill admission; --tiers hbm=N,dram=N,ssd=N
@@ -18,15 +18,26 @@
 //!   index        build a context index over synthetic contexts and time it
 //!   demo         the quickstart walkthrough (see examples/quickstart.rs)
 
+use contextpilot::api::{Error, Server, ServerBuilder};
 use contextpilot::cache::TierConfig;
-use contextpilot::corpus::Corpus;
 use contextpilot::engine::{InferenceEngine, ModelSku};
 use contextpilot::experiments as exp;
 use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
 use contextpilot::pilot::PilotConfig;
-use contextpilot::serve::{PlacementKind, ServingEngine};
+use contextpilot::serve::PlacementKind;
 use contextpilot::util::cli::Args;
 use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset, Workload};
+
+/// CLI error boundary: every facade [`Error`] (bad flag values at parse
+/// time, poisoned shards at run time) prints once and exits 2.
+fn fail(ctx: &str, e: Error) -> ! {
+    eprintln!("{ctx}: {e}");
+    std::process::exit(2);
+}
+
+fn check<T>(ctx: &str, r: Result<T, Error>) -> T {
+    r.unwrap_or_else(|e| fail(ctx, e))
+}
 
 fn parse_dataset(s: &str) -> Dataset {
     match s.to_ascii_lowercase().as_str() {
@@ -55,19 +66,18 @@ fn parse_system(s: &str) -> SystemKind {
     }
 }
 
-/// Drive a sharded serving engine (any backend) over the workload, one
-/// batch per arrival wave, then print aggregate + per-shard stats.
+/// Drive a sharded server (any backend) over the workload, one batch per
+/// arrival wave, then print aggregate + per-shard stats.
 fn drive_sharded<E: InferenceEngine>(
-    engine: &ServingEngine<E>,
+    server: &Server<E>,
     system_name: &str,
     dataset: Dataset,
     workload: &Workload,
-    corpus: &Corpus,
     offline: bool,
     total_capacity_tokens: usize,
 ) {
     if offline {
-        engine.build_offline(&workload.requests);
+        check("offline build", server.build_offline(&workload.requests));
     }
     // one batch per arrival wave, matching the sequential runner's
     // batching so sharded and unsharded output stay comparable
@@ -75,17 +85,17 @@ fn drive_sharded<E: InferenceEngine>(
     let t0 = std::time::Instant::now();
     let mut served_total = 0usize;
     for (i, j) in exp::turn_waves(reqs) {
-        served_total += engine.serve_batch(&reqs[i..j], corpus).len();
+        served_total += check("serve", server.serve_batch(&reqs[i..j])).len();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (mut m, per_shard) = engine.metrics();
-    let cfg = engine.config();
+    let (mut m, per_shard) = check("metrics", server.metrics());
+    let cfg = server.config();
     println!("system           : {system_name} (sharded)");
     println!("dataset          : {}", dataset.name());
     println!(
         "shards x workers : {} x {}",
-        engine.n_shards(),
-        engine.n_workers()
+        server.n_shards(),
+        server.n_workers()
     );
     println!(
         "KV budget        : {total_capacity_tokens} tokens total ({} per shard)",
@@ -170,23 +180,27 @@ fn serve_real(
     system_name: &str,
     dataset: Dataset,
     workload: &Workload,
-    corpus: &Corpus,
+    corpus: &contextpilot::corpus::Corpus,
     offline: bool,
     total_capacity_tokens: usize,
 ) {
     use contextpilot::runtime::{RealEngine, TinyLmRuntime};
     let artifacts = std::env::var("CTXPILOT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let engine = ServingEngine::with_engine_factory(scfg, |c| {
-        let rt = TinyLmRuntime::load(&artifacts)
-            .expect("load AOT artifacts (run `make artifacts` / python/compile/aot.py)");
-        RealEngine::new(rt, c.capacity_tokens)
-    });
+    let server = check(
+        "--engine real",
+        ServerBuilder::from_config(scfg)
+            .corpus(corpus.clone())
+            .build_with(|c| {
+                let rt = TinyLmRuntime::load(&artifacts)
+                    .expect("load AOT artifacts (run `make artifacts` / python/compile/aot.py)");
+                RealEngine::new(rt, c.capacity_tokens)
+            }),
+    );
     drive_sharded(
-        &engine,
+        &server,
         system_name,
         dataset,
         workload,
-        corpus,
         offline,
         total_capacity_tokens,
     );
@@ -218,22 +232,15 @@ fn cmd_serve(args: &Args) {
     let shards = args.get_usize("shards", 1);
     let workers = args.get_usize("workers", 1);
     let prefill_chunk = args.get_usize("prefill-chunk", 0);
-    let placement = match PlacementKind::parse(args.get_or("placement", "session")) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("--placement: {e}");
-            std::process::exit(2);
-        }
-    };
+    let placement = check(
+        "--placement",
+        PlacementKind::parse(args.get_or("placement", "session")),
+    );
     // --tiers hbm=N,dram=N,ssd=N — total budgets, divided across shards
     // like --capacity; hbm replaces --capacity as the radix budget
-    let tiers = args.get("tiers").map(|spec| match TierConfig::parse(spec) {
-        Ok(parsed) => parsed,
-        Err(e) => {
-            eprintln!("--tiers: {e}");
-            std::process::exit(2);
-        }
-    });
+    let tiers = args
+        .get("tiers")
+        .map(|spec| check("--tiers", TierConfig::parse(spec)));
 
     if shards > 1
         || workers > 1
@@ -272,13 +279,15 @@ fn cmd_serve(args: &Args) {
         }
         match engine_kind.as_str() {
             "sim" => {
-                let engine = ServingEngine::new(scfg);
+                let server = check(
+                    "serve config",
+                    ServerBuilder::from_config(scfg).corpus(corpus.clone()).build(),
+                );
                 drive_sharded(
-                    &engine,
+                    &server,
                     system.name(),
                     dataset,
                     &workload,
-                    &corpus,
                     cfg.offline,
                     cfg.capacity_tokens,
                 );

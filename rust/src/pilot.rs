@@ -12,7 +12,7 @@
 //!    request is searched + inserted incrementally.
 //!
 //! At serving scale one `ContextPilot` instance runs per shard inside
-//! [`crate::serve::ServingEngine`]; sessions are pinned to shards, so the
+//! the serving engine behind [`crate::api::Server`]; sessions are pinned to shards, so the
 //! conversation records and the eviction callbacks stay consistent
 //! without any cross-instance coordination.
 
@@ -81,7 +81,7 @@ pub struct PilotOutput {
 }
 
 /// The rewrite of one request, without an owned copy of the request
-/// itself — what [`crate::serve::Shard`] consumes on the hot path (the
+/// itself — what a serving shard consumes on the hot path (the
 /// original `Request` stays borrowed from the caller's batch).
 #[derive(Clone, Debug)]
 pub struct Rewrite {

@@ -174,7 +174,7 @@ impl RealEngine {
 }
 
 /// The §4.1 proxy↔engine contract for the PJRT-backed engine, so the
-/// generic serving layer ([`crate::serve::ServingEngine`]) can drive real
+/// generic serving layer behind [`crate::api::Server`] can drive real
 /// model execution through the exact pipeline the simulated engine uses
 /// (`ctxpilot serve --engine real`). The quality model is a proxy-side
 /// concern, so it is ignored here; PJRT failures are fatal (the serving

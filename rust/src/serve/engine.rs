@@ -1,9 +1,10 @@
-//! The [`ServingEngine`]: a lock-striped shard array plus a worker pool,
-//! generic over the backend ([`crate::engine::InferenceEngine`]). Callers
-//! hand it whole batches ([`ServingEngine::serve_batch`]) or stream single
-//! requests from many threads ([`ServingEngine::serve_one`]); either way
-//! each session's requests land on its pinned shard in arrival order,
-//! which is what makes results independent of the worker count.
+//! The `ServingEngine`: a lock-striped shard array plus a worker pool,
+//! generic over the backend ([`crate::engine::InferenceEngine`]). Since
+//! the facade redesign this is the crate-private **engine room** behind
+//! [`crate::api::Server`]: the facade hands it whole admission waves
+//! (`serve_batch`), and each session's requests land on its pinned shard
+//! in arrival order, which is what makes results independent of the
+//! worker count.
 //!
 //! Which shard a session is pinned *to* is the placement layer's decision
 //! ([`crate::serve::placement`], [`crate::serve::ServeConfig::placement`]):
@@ -11,15 +12,17 @@
 //! deterministically, in arrival order, before any worker runs — and a
 //! session's later turns always reuse its first-turn pin.
 //!
-//! [`ServingEngine::new`] builds the default simulated backend
-//! ([`crate::engine::sim::SimEngine`]); [`ServingEngine::with_engine_factory`]
-//! accepts any engine constructor — the CLI's `--engine real` path hands
-//! it a PJRT-backed [`crate::runtime::RealEngine`] factory, tests hand it
-//! mocks and recording wrappers.
+//! Every facade-boundary lock acquisition goes through [`shard_guard`],
+//! so a worker thread that panicked while holding a shard surfaces to
+//! callers as a recoverable [`Error::ShardPoisoned`] instead of a
+//! cascading `expect` panic. Locks *inside* a shard's pipeline (none
+//! today — shard state is single-owner behind its mutex) may stay
+//! infallible: once a guard is held, the hot path runs lock-free.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
+use crate::api::Error;
 use crate::corpus::Corpus;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
@@ -29,6 +32,17 @@ use crate::serve::shard::{shard_of, Shard};
 use crate::serve::ServeConfig;
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
 use crate::util::threadpool::par_map_tasks;
+
+/// Lock a facade-boundary mutex, converting poison (a worker thread
+/// panicked while holding it) into a recoverable
+/// [`Error::ShardPoisoned`] naming the component. The single choke point
+/// replacing the former per-site `lock().expect("… poisoned")` calls.
+pub(crate) fn shard_guard<'a, T>(
+    m: &'a Mutex<T>,
+    what: &'static str,
+) -> Result<MutexGuard<'a, T>, Error> {
+    m.lock().map_err(|_| Error::ShardPoisoned(what))
+}
 
 pub struct ServingEngine<E = SimEngine> {
     cfg: ServeConfig,
@@ -50,16 +64,13 @@ pub struct ServingEngine<E = SimEngine> {
     req_shard: Mutex<HashMap<RequestId, usize>>,
 }
 
-impl ServingEngine<SimEngine> {
-    /// Serving engine with the default simulated backend.
-    pub fn new(cfg: ServeConfig) -> ServingEngine<SimEngine> {
-        ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine)
-    }
-}
-
 impl<E: InferenceEngine> ServingEngine<E> {
     /// Serving engine over an arbitrary backend: `factory` is called once
     /// per shard (in shard order) to build that shard's engine instance.
+    ///
+    /// Shard/worker counts are clamped to ≥ 1 as a last-resort guard;
+    /// the facade builder ([`crate::api::ServerBuilder`]) rejects zero
+    /// values with a typed error before they ever reach this layer.
     pub fn with_engine_factory(
         mut cfg: ServeConfig,
         mut factory: impl FnMut(&ServeConfig) -> E,
@@ -91,31 +102,31 @@ impl<E: InferenceEngine> ServingEngine<E> {
         &self.cfg
     }
 
-    /// The shard a session is pinned to: its recorded placement when it
-    /// has been placed, otherwise the session-hash default (exact under
+    /// The shard this session was placed on, if any request of it has
+    /// been placed.
+    pub fn placed_shard(&self, session: SessionId) -> Result<Option<usize>, Error> {
+        Ok(shard_guard(&self.placement, "placement ledger")?.pinned(session))
+    }
+
+    /// The shard a session runs on: its recorded placement when it has
+    /// been placed, otherwise the session-hash default (exact under
     /// [`crate::serve::PlacementKind::SessionHash`]; a prediction for
     /// not-yet-placed sessions under other policies).
-    pub fn shard_of_session(&self, session: SessionId) -> usize {
-        if let Some(s) = self
-            .placement
-            .lock()
-            .expect("placement poisoned")
-            .pinned(session)
-        {
-            return s;
-        }
-        shard_of(session, self.shards.len())
+    pub fn shard_of_session(&self, session: SessionId) -> Result<usize, Error> {
+        Ok(self
+            .placed_shard(session)?
+            .unwrap_or_else(|| shard_of(session, self.shards.len())))
     }
 
     /// Probe every shard's live state for one placement decision: the
     /// request's block overlap with the shard's context index (0 without a
     /// pilot) and the engine's prefix-cache residency. Called while the
     /// placement lock is held (strict placement → shard lock order).
-    fn probe_shards(&self, req: &Request, book: &PlacementBook) -> Vec<ShardProbe> {
+    fn probe_shards(&self, req: &Request, book: &PlacementBook) -> Result<Vec<ShardProbe>, Error> {
         (0..self.shards.len())
             .map(|s| {
-                let shard = self.shards[s].lock().expect("shard poisoned");
-                ShardProbe {
+                let shard = shard_guard(&self.shards[s], "shard")?;
+                Ok(ShardProbe {
                     shard: s,
                     index_blocks: shard
                         .pilot
@@ -123,7 +134,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
                         .map_or(0, |p| p.known_blocks(&req.context)),
                     resident_tokens: shard.engine.cache_stats().resident_tokens,
                     placed_requests: book.placed_requests_on(s),
-                }
+                })
             })
             .collect()
     }
@@ -132,29 +143,29 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// per request, decided in arrival order before any worker runs (so
     /// placement is invariant in `n_workers`). Pinned sessions reuse their
     /// first-turn shard; each batch is one placement wave.
-    fn place_batch(&self, reqs: &[Request]) -> Vec<usize> {
-        let mut book = self.placement.lock().expect("placement poisoned");
+    fn place_batch(&self, reqs: &[Request]) -> Result<Vec<usize>, Error> {
+        let mut book = shard_guard(&self.placement, "placement ledger")?;
         book.begin_wave();
         reqs.iter()
             .map(|r| {
                 if book.wants_probe(r.session) {
-                    let probes = self.probe_shards(r, &book);
-                    book.assign(r, Some(&probes))
+                    let probes = self.probe_shards(r, &book)?;
+                    Ok(book.assign(r, Some(&probes)))
                 } else {
-                    book.assign(r, None)
+                    Ok(book.assign(r, None))
                 }
             })
             .collect()
     }
 
     /// Arrival indices per shard, preserving arrival order within a shard.
-    fn partition(&self, reqs: &[Request]) -> Vec<Vec<usize>> {
-        let assignment = self.place_batch(reqs);
+    fn partition(&self, reqs: &[Request]) -> Result<Vec<Vec<usize>>, Error> {
+        let assignment = self.place_batch(reqs)?;
         let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, &s) in assignment.iter().enumerate() {
             queues[s].push(i);
         }
-        queues
+        Ok(queues)
     }
 
     /// Offline mode (§5.1): cluster-build each shard's context index over
@@ -162,18 +173,21 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// partition runs through the placement policy and pins the sessions,
     /// so the subsequent serves land exactly where their index was built.
     /// No-op for shards without a pilot or without requests.
-    pub fn build_offline(&self, reqs: &[Request]) {
-        let queues = self.partition(reqs);
+    pub fn build_offline(&self, reqs: &[Request]) -> Result<(), Error> {
+        let queues = self.partition(reqs)?;
         par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
             if queues[s].is_empty() {
-                return;
+                return Ok(());
             }
             let mine: Vec<Request> = queues[s].iter().map(|&i| reqs[i].clone()).collect();
-            let mut shard = self.shards[s].lock().expect("shard poisoned");
+            let mut shard = shard_guard(&self.shards[s], "shard")?;
             if let Some(p) = &mut shard.pilot {
                 p.build_offline(&mine);
             }
-        });
+            Ok(())
+        })
+        .into_iter()
+        .collect()
     }
 
     /// Serve a batch: requests are partitioned into per-shard queues and
@@ -182,10 +196,10 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// original arrival order.
     ///
     /// Request ids must be unique within the engine's lifetime (the
-    /// workload generators guarantee this); they key both the §4.1
-    /// eviction plumbing and the order restoration here. Results are
-    /// independent of `n_workers` because every stateful structure is
-    /// shard-local.
+    /// facade's ticket ledger and the workload generators both guarantee
+    /// it); they key both the §4.1 eviction plumbing and the order
+    /// restoration here. Results are independent of `n_workers` because
+    /// every stateful structure is shard-local.
     ///
     /// Batching granularity is the caller's: Alg.-5 may reorder freely
     /// *within* a batch, so submit one batch per arrival wave (e.g. per
@@ -193,27 +207,31 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// reflected in engine history; a whole multi-turn workload in one
     /// batch is still deterministic, just scheduled as one wave. The
     /// chunked-prefill virtual clock likewise spans one wave per shard.
-    pub fn serve_batch(&self, reqs: &[Request], corpus: &Corpus) -> Vec<ServedRequest> {
-        let queues = self.partition(reqs);
-        let per_shard: Vec<Vec<(usize, ServedRequest)>> =
+    pub fn serve_batch(
+        &self,
+        reqs: &[Request],
+        corpus: &Corpus,
+    ) -> Result<Vec<ServedRequest>, Error> {
+        let queues = self.partition(reqs)?;
+        let per_shard: Vec<Result<Vec<(usize, ServedRequest)>, Error>> =
             par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
                 let idxs = &queues[s];
                 if idxs.is_empty() {
-                    return Vec::new();
+                    return Ok(Vec::new());
                 }
                 // the clone exists because the pilot pipeline takes a
                 // contiguous &[Request]; it is one small Vec per request
                 // vs. the thousands of tokens rendered per serve, so
                 // borrowing is not worth rippling the pilot API.
                 let batch: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
-                let mut shard = self.shards[s].lock().expect("shard poisoned");
+                let mut shard = shard_guard(&self.shards[s], "shard")?;
                 let (served, evicted) = shard.serve_queue(&batch, corpus);
                 // ownership-map upkeep while still holding the shard lock:
                 // a concurrent serve on this shard cannot interleave its
                 // eviction removals with these inserts (shard → map nesting
                 // is safe: no path holds the map lock while taking a shard)
                 {
-                    let mut map = self.req_shard.lock().expect("request map poisoned");
+                    let mut map = shard_guard(&self.req_shard, "request map")?;
                     for sr in &served {
                         map.insert(sr.request.id, s);
                     }
@@ -224,65 +242,44 @@ impl<E: InferenceEngine> ServingEngine<E> {
                 drop(shard);
                 let arrival: HashMap<RequestId, usize> =
                     idxs.iter().map(|&i| (reqs[i].id, i)).collect();
-                served
+                Ok(served
                     .into_iter()
                     .map(|sr| (arrival[&sr.request.id], sr))
-                    .collect()
+                    .collect())
             });
 
         // arrival-order output
         let mut slots: Vec<Option<ServedRequest>> = Vec::with_capacity(reqs.len());
         slots.resize_with(reqs.len(), || None);
         for tagged in per_shard {
-            for (i, sr) in tagged {
+            for (i, sr) in tagged? {
                 slots[i] = Some(sr);
             }
         }
         let out: Vec<ServedRequest> = slots
             .into_iter()
-            .map(|x| x.expect("every request served exactly once"))
-            .collect();
+            .enumerate()
+            .map(|(i, x)| {
+                x.ok_or_else(|| {
+                    Error::EngineFailure(format!(
+                        "request {:?} was placed but never served",
+                        reqs[i].id
+                    ))
+                })
+            })
+            .collect::<Result<_, _>>()?;
         // affinity attribution (no shard lock held: placement → shard order)
-        self.placement
-            .lock()
-            .expect("placement poisoned")
-            .record_served(&out);
-        out
-    }
-
-    /// Serve a single request against its owning shard (the streaming
-    /// path). Safe to call concurrently from many threads; per-shard
-    /// results stay deterministic as long as each session's requests are
-    /// submitted in order (sessions are pinned, so independent sessions
-    /// may race freely).
-    pub fn serve_one(&self, req: &Request, corpus: &Corpus) -> ServedRequest {
-        // placement: a streaming singleton is its own wave
-        let s = self.place_batch(std::slice::from_ref(req))[0];
-        let mut shard = self.shards[s].lock().expect("shard poisoned");
-        let (served, evicted) = shard.serve_one(req, corpus);
-        // map upkeep under the shard lock — see serve_batch for why
-        {
-            let mut map = self.req_shard.lock().expect("request map poisoned");
-            map.insert(req.id, s);
-            for r in &evicted {
-                map.remove(r);
-            }
-        }
-        drop(shard);
-        self.placement
-            .lock()
-            .expect("placement poisoned")
-            .record_served(std::slice::from_ref(&served));
-        served
+        shard_guard(&self.placement, "placement ledger")?.record_served(&out);
+        Ok(out)
     }
 
     /// External eviction callback (§4.1): route each request id to the
     /// shard that owns it and prune that shard's context index. Unknown
     /// ids (already evicted engine-side) are ignored.
-    pub fn on_evict(&self, reqs: &[RequestId]) {
+    pub fn on_evict(&self, reqs: &[RequestId]) -> Result<(), Error> {
         let mut by_shard: HashMap<usize, Vec<RequestId>> = HashMap::new();
         {
-            let mut map = self.req_shard.lock().expect("request map poisoned");
+            let mut map = shard_guard(&self.req_shard, "request map")?;
             for r in reqs {
                 if let Some(s) = map.remove(r) {
                     by_shard.entry(s).or_default().push(*r);
@@ -290,21 +287,22 @@ impl<E: InferenceEngine> ServingEngine<E> {
             }
         }
         for (s, ids) in by_shard {
-            let mut shard = self.shards[s].lock().expect("shard poisoned");
+            let mut shard = shard_guard(&self.shards[s], "shard")?;
             if let Some(p) = &mut shard.pilot {
                 p.on_evict(&ids);
             }
         }
+        Ok(())
     }
 
     /// Aggregate run metrics plus a per-shard telemetry snapshot. Shard
     /// rows carry the placement telemetry (sessions placed there and the
     /// cached tokens attributed to affinity placements); the aggregate's
     /// `total_affinity_hit_tokens` is their sum.
-    pub fn metrics(&self) -> (RunMetrics, Vec<ShardStats>) {
+    pub fn metrics(&self) -> Result<(RunMetrics, Vec<ShardStats>), Error> {
         // snapshot placement first, then release (placement → shard order)
         let (placed_sessions, affinity_hits) = {
-            let book = self.placement.lock().expect("placement poisoned");
+            let book = shard_guard(&self.placement, "placement ledger")?;
             (
                 book.placed_sessions().to_vec(),
                 book.affinity_hit_tokens().to_vec(),
@@ -313,7 +311,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
         let mut agg = RunMetrics::new();
         let mut per = Vec::with_capacity(self.shards.len());
         for (i, m) in self.shards.iter().enumerate() {
-            let mut shard = m.lock().expect("shard poisoned");
+            let mut shard = shard_guard(m, "shard")?;
             agg.merge(&shard.metrics);
             let mut stats = shard.stats();
             stats.placed_sessions = placed_sessions[i];
@@ -321,7 +319,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
             per.push(stats);
         }
         agg.total_affinity_hit_tokens = affinity_hits.iter().sum();
-        (agg, per)
+        Ok((agg, per))
     }
 }
 
@@ -332,6 +330,10 @@ mod tests {
     use crate::engine::costmodel::ModelSku;
     use crate::tokenizer::Tokenizer;
     use crate::types::{BlockId, QueryId};
+
+    fn sim_engine(cfg: ServeConfig) -> ServingEngine {
+        ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine)
+    }
 
     fn corpus() -> Corpus {
         Corpus::generate(
@@ -362,13 +364,27 @@ mod tests {
     }
 
     #[test]
+    fn shard_guard_reports_poison_as_typed_error() {
+        let m = std::sync::Arc::new(Mutex::new(0usize));
+        assert!(shard_guard(&m, "shard").is_ok());
+        let m2 = m.clone();
+        // poison the mutex by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison on purpose");
+        })
+        .join();
+        assert_eq!(shard_guard(&m, "shard").unwrap_err(), Error::ShardPoisoned("shard"));
+    }
+
+    #[test]
     fn batch_output_is_in_arrival_order() {
         let corpus = corpus();
-        let engine = ServingEngine::new(small_cfg(4, 4));
+        let engine = sim_engine(small_cfg(4, 4));
         let reqs: Vec<Request> = (0..24)
             .map(|i| req(i, i as u32 % 7, &[(i % 9) as u32 + 1, (i % 5) as u32 + 10]))
             .collect();
-        let served = engine.serve_batch(&reqs, &corpus);
+        let served = engine.serve_batch(&reqs, &corpus).unwrap();
         assert_eq!(served.len(), reqs.len());
         for (i, s) in served.iter().enumerate() {
             assert_eq!(s.request.id, reqs[i].id);
@@ -378,14 +394,22 @@ mod tests {
     #[test]
     fn sessions_are_pinned_to_one_shard() {
         let corpus = corpus();
-        let engine = ServingEngine::new(small_cfg(4, 2));
+        let engine = sim_engine(small_cfg(4, 2));
         let reqs: Vec<Request> = (0..16).map(|i| req(i, 5, &[1, 2, 3])).collect();
-        engine.serve_batch(&reqs, &corpus);
-        let (_, per) = engine.metrics();
+        engine.serve_batch(&reqs, &corpus).unwrap();
+        let (_, per) = engine.metrics().unwrap();
         let active: Vec<_> = per.iter().filter(|s| s.served > 0).collect();
         assert_eq!(active.len(), 1, "one session must live on one shard");
         assert_eq!(active[0].served, 16);
-        assert_eq!(active[0].shard, engine.shard_of_session(SessionId(5)));
+        assert_eq!(
+            active[0].shard,
+            engine.shard_of_session(SessionId(5)).unwrap()
+        );
+        assert_eq!(
+            engine.placed_shard(SessionId(5)).unwrap(),
+            Some(active[0].shard)
+        );
+        assert_eq!(engine.placed_shard(SessionId(99)).unwrap(), None);
     }
 
     #[test]
@@ -399,9 +423,9 @@ mod tests {
             .map(|i| req(i, i as u32, &[(i % 4) as u32 + 1, (i % 4) as u32 + 2, 9]))
             .collect();
         // sharded, offline
-        let engine = ServingEngine::new(small_cfg(3, 3));
-        engine.build_offline(&reqs);
-        let served = engine.serve_batch(&reqs, &corpus);
+        let engine = sim_engine(small_cfg(3, 3));
+        engine.build_offline(&reqs).unwrap();
+        let served = engine.serve_batch(&reqs, &corpus).unwrap();
         // ground truth per shard: a hand-rolled concrete-engine pipeline
         for shard in 0..3 {
             let mine: Vec<Request> = reqs
@@ -436,14 +460,14 @@ mod tests {
     #[test]
     fn external_eviction_prunes_owning_shard_only() {
         let corpus = corpus();
-        let engine = ServingEngine::new(small_cfg(4, 2));
+        let engine = sim_engine(small_cfg(4, 2));
         let reqs: Vec<Request> = (0..20)
             .map(|i| req(i, i as u32, &[1, 2, (i % 6) as u32 + 3]))
             .collect();
-        engine.serve_batch(&reqs, &corpus);
+        engine.serve_batch(&reqs, &corpus).unwrap();
         let ids: Vec<RequestId> = reqs.iter().map(|r| r.id).collect();
-        engine.on_evict(&ids);
-        let (_, per) = engine.metrics();
+        engine.on_evict(&ids).unwrap();
+        let (_, per) = engine.metrics().unwrap();
         for s in per {
             assert!(
                 s.index_nodes <= 1,
@@ -453,18 +477,18 @@ mod tests {
             );
         }
         // idempotent: evicting again is a no-op
-        engine.on_evict(&ids);
+        engine.on_evict(&ids).unwrap();
     }
 
     #[test]
     fn metrics_aggregate_equals_per_shard_sum() {
         let corpus = corpus();
-        let engine = ServingEngine::new(small_cfg(5, 4));
+        let engine = sim_engine(small_cfg(5, 4));
         let reqs: Vec<Request> = (0..40)
             .map(|i| req(i, i as u32 % 11, &[(i % 7) as u32 + 1, (i % 3) as u32 + 8]))
             .collect();
-        let served = engine.serve_batch(&reqs, &corpus);
-        let (agg, per) = engine.metrics();
+        let served = engine.serve_batch(&reqs, &corpus).unwrap();
+        let (agg, per) = engine.metrics().unwrap();
         assert_eq!(agg.len(), served.len());
         assert_eq!(per.iter().map(|s| s.served).sum::<usize>(), served.len());
         let cached: usize = served.iter().map(|s| s.cached_tokens).sum();
@@ -478,11 +502,11 @@ mod tests {
         let corpus = corpus();
         let mut cfg = small_cfg(4, 2);
         cfg.placement = PlacementKind::RoundRobin;
-        let engine = ServingEngine::new(cfg);
+        let engine = sim_engine(cfg);
         // 12 single-turn sessions over 4 shards: exactly 3 sessions each
         let reqs: Vec<Request> = (0..12).map(|i| req(i, i as u32, &[1, 2])).collect();
-        engine.serve_batch(&reqs, &corpus);
-        let (m, per) = engine.metrics();
+        engine.serve_batch(&reqs, &corpus).unwrap();
+        let (m, per) = engine.metrics().unwrap();
         for s in &per {
             assert_eq!(s.placed_sessions, 3, "shard {} not balanced", s.shard);
             assert_eq!(s.affinity_hit_tokens, 0, "rr never claims affinity");
@@ -502,7 +526,7 @@ mod tests {
         // is also the first served and the affinity attribution below is
         // exact rather than order-dependent
         cfg.pilot = Some(PilotConfig::with(true, true, true, false));
-        let engine = ServingEngine::new(cfg);
+        let engine = sim_engine(cfg);
         // two context groups, 4 sessions each, interleaved arrival
         let reqs: Vec<Request> = (0..8)
             .map(|i| {
@@ -510,13 +534,13 @@ mod tests {
                 req(i, i as u32, blocks)
             })
             .collect();
-        let served = engine.serve_batch(&reqs, &corpus);
-        let even = engine.shard_of_session(SessionId(0));
-        let odd = engine.shard_of_session(SessionId(1));
+        let served = engine.serve_batch(&reqs, &corpus).unwrap();
+        let even = engine.shard_of_session(SessionId(0)).unwrap();
+        let odd = engine.shard_of_session(SessionId(1)).unwrap();
         for i in 0..8u32 {
             let want = if i % 2 == 0 { even } else { odd };
             assert_eq!(
-                engine.shard_of_session(SessionId(i)),
+                engine.shard_of_session(SessionId(i)).unwrap(),
                 want,
                 "session {i} split from its context group"
             );
@@ -526,7 +550,7 @@ mod tests {
         // and that reuse is attributed to affinity placement
         let reused: usize = served.iter().map(|s| s.cached_tokens).sum();
         assert!(reused > 0, "co-placement produced no reuse");
-        let (m, per) = engine.metrics();
+        let (m, per) = engine.metrics().unwrap();
         assert_eq!(m.total_affinity_hit_tokens as usize, reused);
         assert_eq!(
             per.iter().map(|s| s.affinity_hit_tokens).sum::<u64>(),
@@ -541,7 +565,7 @@ mod tests {
         let corpus = corpus();
         let mut cfg = small_cfg(4, 1);
         cfg.placement = PlacementKind::ContextAware;
-        let engine = ServingEngine::new(cfg);
+        let engine = sim_engine(cfg);
         // wave 1: one session warms blocks {1,2,3}; spread filler sessions
         let w1: Vec<Request> = vec![
             req(1, 1, &[1, 2, 3]),
@@ -549,15 +573,15 @@ mod tests {
             req(3, 3, &[13, 14]),
             req(4, 4, &[15, 16]),
         ];
-        engine.serve_batch(&w1, &corpus);
+        engine.serve_batch(&w1, &corpus).unwrap();
         // wave 2: a NEW session with the recurring context must land on
         // session 1's shard via the real index probe (the wave-local
         // overlay was cleared between batches)
         let w2 = vec![req(9, 9, &[1, 2, 3])];
-        let served = engine.serve_batch(&w2, &corpus);
+        let served = engine.serve_batch(&w2, &corpus).unwrap();
         assert_eq!(
-            engine.shard_of_session(SessionId(9)),
-            engine.shard_of_session(SessionId(1)),
+            engine.shard_of_session(SessionId(9)).unwrap(),
+            engine.shard_of_session(SessionId(1)).unwrap(),
             "recurring blocks not routed home"
         );
         assert!(
@@ -569,14 +593,14 @@ mod tests {
     #[test]
     fn session_hash_placement_reproduces_shard_of() {
         let corpus = corpus();
-        let engine = ServingEngine::new(small_cfg(5, 2));
+        let engine = sim_engine(small_cfg(5, 2));
         let reqs: Vec<Request> = (0..30)
             .map(|i| req(i, (i % 13) as u32, &[(i % 9) as u32 + 1]))
             .collect();
-        engine.serve_batch(&reqs, &corpus);
+        engine.serve_batch(&reqs, &corpus).unwrap();
         for s in 0..13u32 {
             assert_eq!(
-                engine.shard_of_session(SessionId(s)),
+                engine.shard_of_session(SessionId(s)).unwrap(),
                 shard_of(SessionId(s), 5),
                 "session {s} diverged from the legacy hash"
             );
@@ -589,12 +613,12 @@ mod tests {
         let reqs: Vec<Request> = (0..30)
             .map(|i| req(i, i as u32 % 9, &[(i % 8) as u32 + 1, (i % 5) as u32 + 9, 20]))
             .collect();
-        let plain = ServingEngine::new(small_cfg(4, 2));
-        let a = plain.serve_batch(&reqs, &corpus);
+        let plain = sim_engine(small_cfg(4, 2));
+        let a = plain.serve_batch(&reqs, &corpus).unwrap();
         let mut cfg = small_cfg(4, 2);
         cfg.prefill_chunk = Some(96);
-        let chunked = ServingEngine::new(cfg);
-        let b = chunked.serve_batch(&reqs, &corpus);
+        let chunked = sim_engine(cfg);
+        let b = chunked.serve_batch(&reqs, &corpus).unwrap();
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.request.id, y.request.id);
             assert_eq!(x.prompt_tokens, y.prompt_tokens);

@@ -1,16 +1,19 @@
-//! Concurrent sharded serving layer — the production-scale front of the
-//! reproduction (ROADMAP north star; paper §4/Fig. 3 at serving scale).
+//! Concurrent sharded serving layer — the production-scale engine room of
+//! the reproduction (ROADMAP north star; paper §4/Fig. 3 at serving
+//! scale). Since the facade redesign it is **crate-private**: every
+//! caller reaches it through [`crate::api::Server`], which owns the
+//! session/ticket request lifecycle and the typed error surface; this
+//! module keeps the sharding, placement, admission and tiering machinery.
 //!
-//! Since the engine-generic refactor there is exactly **one** serving
-//! pipeline in the repo: the sequential experiment runner
-//! ([`crate::experiments::runner`]) is a single-shard, single-worker
-//! instance of this module, and every layer programs against the
-//! [`crate::engine::InferenceEngine`] trait rather than a concrete
-//! engine:
+//! There is exactly **one** serving pipeline in the repo: the sequential
+//! experiment runner ([`crate::experiments::runner`]) is a single-shard,
+//! single-worker instance of this module, and every layer programs
+//! against the [`crate::engine::InferenceEngine`] trait rather than a
+//! concrete engine:
 //!
 //! ```text
-//!   callers (CLI serve / experiment runner / benches / tests)
-//!        │ serve_batch / serve_one / build_offline / on_evict
+//!   api::Server (sessions / tickets / typed errors — the front door)
+//!        │ serve_batch / flush / build_offline / on_evict
 //!        ▼
 //!   ServingEngine<E>  ── lock-striped Vec<Mutex<Shard<E>>> + worker pool
 //!        │ placement::PlacementPolicy picks each session's first-turn
@@ -30,7 +33,7 @@
 //!        └──► MockEngine (tests)
 //! ```
 //!
-//! * **Sharding & placement** — each [`Shard`] owns a full pipeline
+//! * **Sharding & placement** — each shard owns a full pipeline
 //!   instance: a [`crate::pilot::ContextPilot`] (context index,
 //!   conversation records) and an engine `E`. A session's **first-turn**
 //!   shard is chosen by the configured [`placement::PlacementPolicy`]
@@ -44,9 +47,9 @@
 //!   so no cross-shard coordination is ever needed on the hot path.
 //!   Placement decisions happen at enqueue time, in arrival order, before
 //!   workers run, so they are invariant in `n_workers`.
-//! * **Lock striping** — the [`ServingEngine`] holds one mutex per shard;
+//! * **Lock striping** — the serving engine holds one mutex per shard;
 //!   concurrent callers contend only when they hit the same shard.
-//! * **Worker pool** — [`ServingEngine::serve_batch`] partitions a batch
+//! * **Worker pool** — `serve_batch` partitions a batch
 //!   into per-shard queues and drives them with
 //!   [`crate::util::threadpool::par_map_tasks`] workers. Each queue runs
 //!   the full pipeline (Alg.-1 search/insert, §5 alignment, §6 dedup,
@@ -93,9 +96,9 @@ mod engine;
 pub mod placement;
 mod shard;
 
-pub use engine::ServingEngine;
+pub(crate) use engine::{shard_guard, ServingEngine};
 pub use placement::{PlacementKind, PlacementPolicy, ShardProbe};
-pub use shard::{shard_of, Shard};
+pub use shard::shard_of;
 
 use std::collections::HashMap;
 
@@ -170,8 +173,9 @@ impl ServeConfig {
 
     /// The default engine for this config: a [`SimEngine`] built from the
     /// profile / reuse policy / per-shard KV budget (plus the tier store
-    /// when configured). Factory for [`ServingEngine::new`] and the one
-    /// place the serving layer names the concrete simulated engine.
+    /// when configured). The factory behind
+    /// [`crate::api::ServerBuilder::build`] and the one place the serving
+    /// layer names the concrete simulated engine.
     pub fn sim_engine(&self) -> SimEngine {
         match &self.tiers {
             Some(t) => SimEngine::with_tiers(self.profile, self.policy, self.capacity_tokens, t),

@@ -51,15 +51,18 @@ pub enum PlacementKind {
 }
 
 impl PlacementKind {
-    /// Parse the CLI shape: `session` | `rr` | `context`.
-    pub fn parse(s: &str) -> Result<PlacementKind, String> {
+    /// Parse the CLI shape: `session` | `rr` | `context`. Unknown names
+    /// are an [`crate::api::Error::InvalidConfig`], so CLI argument
+    /// errors flow through the same typed error surface as builder
+    /// validation.
+    pub fn parse(s: &str) -> Result<PlacementKind, crate::api::Error> {
         match s.to_ascii_lowercase().as_str() {
             "session" | "session-hash" | "hash" => Ok(PlacementKind::SessionHash),
             "rr" | "round-robin" | "roundrobin" => Ok(PlacementKind::RoundRobin),
             "context" | "context-aware" | "aware" => Ok(PlacementKind::ContextAware),
-            other => Err(format!(
+            other => Err(crate::api::Error::InvalidConfig(format!(
                 "unknown placement '{other}' (try session | rr | context)"
-            )),
+            ))),
         }
     }
 
@@ -260,7 +263,7 @@ struct Pin {
 
 /// The serving engine's placement ledger: the policy plus the session →
 /// shard pins and the per-shard placement/affinity telemetry. One per
-/// [`crate::serve::ServingEngine`], behind its own mutex, always locked
+/// serving engine, behind its own mutex, always locked
 /// *before* any shard mutex (strict placement → shard lock order).
 ///
 /// Pins (one entry per session) and the counted-request-id set (one per
@@ -417,7 +420,10 @@ mod tests {
             PlacementKind::parse("Context-Aware").unwrap(),
             PlacementKind::ContextAware
         );
-        assert!(PlacementKind::parse("nearest").is_err());
+        assert!(matches!(
+            PlacementKind::parse("nearest"),
+            Err(crate::api::Error::InvalidConfig(msg)) if msg.contains("nearest")
+        ));
     }
 
     #[test]

@@ -180,10 +180,13 @@ impl<E: InferenceEngine> Shard<E> {
         (out, all_evicted)
     }
 
-    /// Serve a single request (the streaming path). Identical pipeline to a
-    /// one-element queue: Alg.-5 scheduling of a singleton is the identity
-    /// and a singleton queue has nothing to interleave with, so
-    /// `queued_ttft == ttft`.
+    /// Serve a single request as a one-element queue. Alg.-5 scheduling
+    /// of a singleton is the identity and a singleton queue has nothing
+    /// to interleave with, so `queued_ttft == ttft`. The facade's
+    /// streaming path reaches the shard through `serve_queue` (a wait
+    /// flushes a whole admission wave), so this exists only to pin the
+    /// queue/singleton agreement property in the tests below.
+    #[cfg(test)]
     pub(crate) fn serve_one(
         &mut self,
         req: &Request,
@@ -240,7 +243,7 @@ impl<E: InferenceEngine> Shard<E> {
 
     /// Telemetry snapshot (sorts the latency samples for percentiles).
     /// Placement telemetry (`placed_sessions`, `affinity_hit_tokens`) is
-    /// engine-level state the shard cannot see; [`crate::serve::ServingEngine`]
+    /// engine-level state the shard cannot see; the serving engine
     /// fills those two fields from its placement ledger.
     pub(crate) fn stats(&mut self) -> ShardStats {
         let cache = self.engine.cache_stats();

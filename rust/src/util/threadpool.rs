@@ -93,6 +93,11 @@ pub fn par_map_tasks<R: Send, F: Fn(usize) -> R + Sync>(
                     local.push((i, f(i)));
                 }
                 if !local.is_empty() {
+                    // infallible lock ON PURPOSE (not `api::shard_guard`):
+                    // this mutex only poisons if a sibling worker panicked,
+                    // and that panic is about to resurface from the scope
+                    // join anyway — the facade converts it to a typed error
+                    // at its own boundary, one layer up.
                     done.lock().expect("worker poisoned").extend(local);
                 }
             });

@@ -9,9 +9,13 @@
 //! must improve the queue-aware tail latency of short requests stuck
 //! behind long prefills.
 
+use std::sync::Arc;
+
+use contextpilot::api::{Server, ServerBuilder};
+use contextpilot::corpus::Corpus;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::corpus_for;
-use contextpilot::serve::{ServeConfig, ServingEngine};
+use contextpilot::serve::ServeConfig;
 use contextpilot::types::{BlockId, QueryId, Request, RequestId, ServedRequest, SessionId};
 use contextpilot::util::prng::Rng;
 use contextpilot::util::prop::{
@@ -33,28 +37,36 @@ fn base_cfg(shards: usize) -> ServeConfig {
     cfg
 }
 
-/// Serve `reqs` through a recorded ServingEngine built by `factory`-per-
-/// shard engines, returning the proxy→engine interaction sequence.
-fn record_run<E, F>(cfg: ServeConfig, reqs: &[Request], corpus: &contextpilot::corpus::Corpus, mut factory: F) -> Vec<EngineCall>
+/// Serve `reqs` through a recorded server built by `factory`-per-shard
+/// engines, returning the proxy→engine interaction sequence.
+fn record_run<E, F>(
+    cfg: ServeConfig,
+    reqs: &[Request],
+    corpus: &Arc<Corpus>,
+    mut factory: F,
+) -> Vec<EngineCall>
 where
     E: contextpilot::engine::InferenceEngine,
     F: FnMut(&ServeConfig) -> E,
 {
     let log = EngineLog::default();
-    let engine = {
+    let server = {
         let log = log.clone();
         let mut tag = 0usize;
-        ServingEngine::with_engine_factory(cfg, move |c| {
-            let e = RecordingEngine {
-                inner: factory(c),
-                shard_tag: tag,
-                log: log.clone(),
-            };
-            tag += 1;
-            e
-        })
+        ServerBuilder::from_config(cfg)
+            .corpus(corpus.clone())
+            .build_with(move |c| {
+                let e = RecordingEngine {
+                    inner: factory(c),
+                    shard_tag: tag,
+                    log: log.clone(),
+                };
+                tag += 1;
+                e
+            })
+            .expect("recorded serve config is valid")
     };
-    engine.serve_batch(reqs, corpus);
+    server.serve_batch(reqs).expect("serve batch");
     let calls = log.lock().expect("log poisoned");
     calls.clone()
 }
@@ -67,7 +79,7 @@ fn mock_and_sim_issue_identical_engine_call_sequences() {
     // must issue the same (request, evict-callback) sequence to their
     // engines: partitioning, Alg.-5 scheduling and §4.1 plumbing live
     // above the trait and may not depend on the backend.
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     check(
         "serving layer is engine-agnostic",
         Config {
@@ -104,21 +116,23 @@ fn mock_and_sim_issue_identical_engine_call_sequences() {
 fn mock_engine_eviction_callbacks_prune_the_pilot_index() {
     // a tiny mock FIFO capacity forces per-serve evictions; the shard must
     // feed them into its pilot, keeping the context index bounded
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let mut rng = Rng::new(0xEE);
     let reqs = gen_requests(&mut rng, 60, 6, 6, corpus.len());
 
-    let mut roomy_cfg = base_cfg(1);
-    roomy_cfg.n_shards = 1;
-    let roomy = ServingEngine::with_engine_factory(roomy_cfg, |_c| MockEngine::new(16, 1 << 30));
-    roomy.serve_batch(&reqs, &corpus);
-    let (_, roomy_stats) = roomy.metrics();
+    let mock_server = |fifo_tokens: usize| {
+        ServerBuilder::from_config(base_cfg(1))
+            .corpus(corpus.clone())
+            .build_with(|_c| MockEngine::new(16, fifo_tokens))
+            .expect("mock serve config is valid")
+    };
+    let roomy = mock_server(1 << 30);
+    roomy.serve_batch(&reqs).expect("serve");
+    let (_, roomy_stats) = roomy.metrics().expect("metrics");
 
-    let mut tight_cfg = base_cfg(1);
-    tight_cfg.n_shards = 1;
-    let tight = ServingEngine::with_engine_factory(tight_cfg, |_c| MockEngine::new(16, 400));
-    tight.serve_batch(&reqs, &corpus);
-    let (_, tight_stats) = tight.metrics();
+    let tight = mock_server(400);
+    tight.serve_batch(&reqs).expect("serve");
+    let (_, tight_stats) = tight.metrics().expect("metrics");
 
     assert_eq!(roomy_stats[0].served, 60);
     assert_eq!(tight_stats[0].served, 60);
@@ -131,8 +145,8 @@ fn mock_engine_eviction_callbacks_prune_the_pilot_index() {
 
     // external §4.1 eviction of everything prunes each index to its root
     let ids: Vec<RequestId> = reqs.iter().map(|r| r.id).collect();
-    roomy.on_evict(&ids);
-    let (_, per) = roomy.metrics();
+    roomy.on_evict(&ids).expect("evict");
+    let (_, per) = roomy.metrics().expect("metrics");
     assert!(per[0].index_nodes <= 1, "kept {} nodes", per[0].index_nodes);
 }
 
@@ -141,14 +155,17 @@ fn mock_engine_eviction_callbacks_prune_the_pilot_index() {
 #[test]
 fn chunking_never_changes_cache_semantics() {
     let w = hybrid(Dataset::MtRag, 20, 3, 8, 0xC4A4);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let run = |chunk: Option<usize>| {
         let mut cfg = base_cfg(4);
         cfg.n_workers = 4;
         cfg.capacity_tokens = 40_000;
         cfg.prefill_chunk = chunk;
-        let engine = ServingEngine::new(cfg);
-        hit_miss_fingerprint(&engine.serve_batch(&w.requests, &corpus))
+        let server = ServerBuilder::from_config(cfg)
+            .corpus(corpus.clone())
+            .build()
+            .expect("chunked serve config is valid");
+        hit_miss_fingerprint(&server.serve_batch(&w.requests).expect("serve"))
     };
     let base = run(None);
     for chunk in [64usize, 300, 1_000, 10_000] {
@@ -161,7 +178,7 @@ fn chunking_improves_short_request_tail_latency() {
     // single shard, baseline mode, cold cache: a short request queued
     // behind a long prefill. Unchunked it waits out the whole prefill;
     // chunked it is admitted after one chunk.
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let req = |id: u64, session: u32, ids: &[u32]| Request {
         id: RequestId(id),
         session: SessionId(session),
@@ -177,8 +194,11 @@ fn chunking_improves_short_request_tail_latency() {
         let mut cfg = base_cfg(1);
         cfg.pilot = None;
         cfg.prefill_chunk = chunk;
-        let engine = ServingEngine::new(cfg);
-        engine.serve_batch(&batch, &corpus)
+        let server = ServerBuilder::from_config(cfg)
+            .corpus(corpus.clone())
+            .build()
+            .expect("baseline serve config is valid");
+        server.serve_batch(&batch).expect("serve")
     };
     let plain = run(None);
     let chunked = run(Some(64));
@@ -202,10 +222,13 @@ fn chunking_improves_short_request_tail_latency() {
 
 #[test]
 fn streaming_path_reports_singleton_admission() {
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let mut cfg = base_cfg(2);
     cfg.prefill_chunk = Some(64);
-    let engine = ServingEngine::new(cfg);
+    let server: Server = ServerBuilder::from_config(cfg)
+        .corpus(corpus)
+        .build()
+        .expect("serve config is valid");
     let r = Request {
         id: RequestId(5),
         session: SessionId(3),
@@ -213,9 +236,10 @@ fn streaming_path_reports_singleton_admission() {
         context: (1u32..=10).map(BlockId).collect(),
         query: QueryId(5),
     };
-    let served = engine.serve_one(&r, &corpus);
-    // a singleton has nothing to interleave with: queued == raw TTFT, but
-    // the chunk accounting still reflects the split
+    let served = server.serve_one(&r).expect("serve");
+    // a singleton wave has nothing to interleave with: queued == raw
+    // TTFT, but the chunk accounting still reflects the split — the
+    // ticket path must preserve both
     assert!((served.queued_ttft - served.ttft).abs() < 1e-12);
     assert!(served.prefill_chunks > 1);
 }

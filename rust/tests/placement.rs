@@ -11,10 +11,13 @@
 //! tokens (the same assertion `benches/bench_routing.rs` sweeps).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use contextpilot::api::{Server, ServerBuilder};
+use contextpilot::corpus::Corpus;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{corpus_for, turn_waves};
-use contextpilot::serve::{shard_of, PlacementKind, ServeConfig, ServingEngine};
+use contextpilot::serve::{shard_of, PlacementKind, ServeConfig};
 use contextpilot::types::{Request, SessionId};
 use contextpilot::util::prng::Rng;
 use contextpilot::util::prop::{
@@ -38,28 +41,36 @@ fn cfg_with(placement: PlacementKind, shards: usize, workers: usize) -> ServeCon
     cfg
 }
 
-/// Serve `reqs` through a recorded engine and return each request's shard.
-fn shard_log(
-    cfg: ServeConfig,
-    reqs: &[Request],
-    corpus: &contextpilot::corpus::Corpus,
-) -> Vec<EngineCall> {
+/// Facade server over the simulated backend for a preassembled config.
+fn sim_server(cfg: ServeConfig, corpus: &Arc<Corpus>) -> Server {
+    ServerBuilder::from_config(cfg)
+        .corpus(corpus.clone())
+        .build()
+        .expect("test serve config is valid")
+}
+
+/// Serve `reqs` through a recorded engine behind the facade and return
+/// each request's shard.
+fn shard_log(cfg: ServeConfig, reqs: &[Request], corpus: &Arc<Corpus>) -> Vec<EngineCall> {
     let log = EngineLog::default();
-    let engine = {
+    let server = {
         let log = log.clone();
         let mut tag = 0usize;
-        ServingEngine::with_engine_factory(cfg, move |c| {
-            let e = RecordingEngine {
-                inner: ServeConfig::sim_engine(c),
-                shard_tag: tag,
-                log: log.clone(),
-            };
-            tag += 1;
-            e
-        })
+        ServerBuilder::from_config(cfg)
+            .corpus(corpus.clone())
+            .build_with(move |c| {
+                let e = RecordingEngine {
+                    inner: ServeConfig::sim_engine(c),
+                    shard_tag: tag,
+                    log: log.clone(),
+                };
+                tag += 1;
+                e
+            })
+            .expect("recorded serve config is valid")
     };
     for (i, j) in turn_waves(reqs) {
-        engine.serve_batch(&reqs[i..j], corpus);
+        server.serve_batch(&reqs[i..j]).expect("serve wave");
     }
     let calls = log.lock().expect("log poisoned");
     calls.clone()
@@ -67,7 +78,7 @@ fn shard_log(
 
 #[test]
 fn every_policy_keeps_a_sessions_turns_on_one_shard() {
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     for policy in POLICIES {
         check(
             &format!("{policy}: sessions stick to one shard"),
@@ -103,16 +114,16 @@ fn every_policy_keeps_a_sessions_turns_on_one_shard() {
 
 #[test]
 fn placement_is_independent_of_worker_count() {
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let w = recurring(Dataset::MtRag, 18, 3, 5, 6, 0x9C4);
     for policy in POLICIES {
         let run = |workers: usize| {
-            let engine = ServingEngine::new(cfg_with(policy, 4, workers));
+            let server = sim_server(cfg_with(policy, 4, workers), &corpus);
             let mut served = Vec::new();
             for (i, j) in turn_waves(&w.requests) {
-                served.extend(engine.serve_batch(&w.requests[i..j], &corpus));
+                served.extend(server.serve_batch(&w.requests[i..j]).expect("serve wave"));
             }
-            let (m, per) = engine.metrics();
+            let (m, per) = server.metrics().expect("metrics");
             let placed: Vec<usize> = per.iter().map(|s| s.placed_sessions).collect();
             let by_shard: Vec<usize> = per.iter().map(|s| s.served).collect();
             (
@@ -135,7 +146,7 @@ fn placement_is_independent_of_worker_count() {
 
 #[test]
 fn session_hash_reproduces_shard_of_bit_for_bit() {
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     check(
         "session-hash placement == shard_of",
         Config {
@@ -174,14 +185,14 @@ fn context_aware_strictly_beats_session_hash_on_recurring_contexts() {
     // corpora. Blind hashing scatters each corpus group over the shards
     // and every shard re-prefills it; context-aware placement keeps each
     // group on one shard and shares the prefix.
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let w = recurring(Dataset::MtRag, 24, 2, 4, 6, 0x70C);
     let run = |placement: PlacementKind| {
-        let engine = ServingEngine::new(cfg_with(placement, 4, 2));
+        let server = sim_server(cfg_with(placement, 4, 2), &corpus);
         for (i, j) in turn_waves(&w.requests) {
-            engine.serve_batch(&w.requests[i..j], &corpus);
+            server.serve_batch(&w.requests[i..j]).expect("serve wave");
         }
-        let (m, _) = engine.metrics();
+        let (m, _) = server.metrics().expect("metrics");
         (m.total_cached_tokens, m.total_affinity_hit_tokens)
     };
     let (aware_cached, aware_affinity) = run(PlacementKind::ContextAware);

@@ -1,4 +1,8 @@
-//! Integration: the concurrent sharded serving layer (`serve`).
+//! Integration: the concurrent sharded serving stack behind
+//! `contextpilot::api` (the engine room itself is crate-private; every
+//! assertion here runs through the facade's session/ticket lifecycle,
+//! which is exactly the point — the facade must preserve the engine
+//! room's contracts bit for bit).
 //!
 //! Determinism contract under test: shard state is session-local and
 //! per-shard queues preserve arrival order, so (1) hit/miss results are
@@ -9,9 +13,11 @@
 //! multiset, and de-duplication is idempotent.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
+use contextpilot::api::{Server, ServerBuilder};
 use contextpilot::cache::TierConfig;
+use contextpilot::corpus::Corpus;
 use contextpilot::dedup::{dedup_context, DedupConfig};
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::engine::sim::{ReusePolicy, SimEngine};
@@ -19,7 +25,7 @@ use contextpilot::experiments::corpus_for;
 use contextpilot::index::tree::ContextIndex;
 use contextpilot::pilot::{ContextPilot, PilotConfig};
 use contextpilot::quality::{ModelEra, QualityModel};
-use contextpilot::serve::{shard_of, ServeConfig, ServingEngine};
+use contextpilot::serve::{shard_of, ServeConfig};
 use contextpilot::types::{Request, RequestId, Segment, ServedRequest, SessionId};
 use contextpilot::util::prng::Rng;
 use contextpilot::util::prop::{
@@ -36,6 +42,14 @@ fn serve_cfg(shards: usize, workers: usize) -> ServeConfig {
     cfg
 }
 
+/// Facade server over the simulated backend for a preassembled config.
+fn server(cfg: ServeConfig, corpus: &Arc<Corpus>) -> Server {
+    ServerBuilder::from_config(cfg)
+        .corpus(corpus.clone())
+        .build()
+        .expect("test serve config is valid")
+}
+
 /// (request id, prompt tokens, cached tokens) — the hit/miss fingerprint.
 fn fingerprint(served: &[ServedRequest]) -> Vec<(u64, usize, usize)> {
     served
@@ -47,10 +61,10 @@ fn fingerprint(served: &[ServedRequest]) -> Vec<(u64, usize, usize)> {
 #[test]
 fn worker_count_does_not_change_results() {
     let w = hybrid(Dataset::MtRag, 24, 3, 8, 0x57E55);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let run = |workers: usize| {
-        let engine = ServingEngine::new(serve_cfg(6, workers));
-        fingerprint(&engine.serve_batch(&w.requests, &corpus))
+        let server = server(serve_cfg(6, workers), &corpus);
+        fingerprint(&server.serve_batch(&w.requests).expect("serve"))
     };
     let base = run(1);
     assert_eq!(base.len(), w.requests.len());
@@ -70,9 +84,9 @@ fn sharded_cache_matches_single_shard_ground_truth() {
     // ground truth does not.
     let n_shards = 4;
     let w = hybrid(Dataset::MtRag, 20, 3, 8, 0x6D7);
-    let corpus = corpus_for(Dataset::MtRag);
-    let engine = ServingEngine::new(serve_cfg(n_shards, 4));
-    let served = engine.serve_batch(&w.requests, &corpus);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = server(serve_cfg(n_shards, 4), &corpus);
+    let served = server.serve_batch(&w.requests).expect("serve");
     let mut compared = 0usize;
     for shard in 0..n_shards {
         let mine: Vec<Request> = w
@@ -116,26 +130,25 @@ fn concurrent_streaming_matches_sequential() {
     // interleaving across shards is arbitrary, the results must not be.
     let n_shards = 4;
     let w = hybrid(Dataset::MtRag, 16, 3, 8, 0xC0C);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
 
-    let seq_engine = ServingEngine::new(serve_cfg(n_shards, 1));
+    let seq_server = server(serve_cfg(n_shards, 1), &corpus);
     let truth: Vec<ServedRequest> = w
         .requests
         .iter()
-        .map(|r| seq_engine.serve_one(r, &corpus))
+        .map(|r| seq_server.serve_one(r).expect("serve"))
         .collect();
     let truth_by_id: HashMap<u64, (usize, usize)> = truth
         .iter()
         .map(|s| (s.request.id.0, (s.prompt_tokens, s.cached_tokens)))
         .collect();
 
-    let engine = ServingEngine::new(serve_cfg(n_shards, 1));
+    let conc_server = server(serve_cfg(n_shards, 1), &corpus);
     let results: Vec<Mutex<Vec<ServedRequest>>> =
         (0..n_shards).map(|_| Mutex::new(Vec::new())).collect();
     std::thread::scope(|scope| {
         for shard in 0..n_shards {
-            let engine = &engine;
-            let corpus = &corpus;
+            let conc_server = &conc_server;
             let w = &w;
             let slot = &results[shard];
             scope.spawn(move || {
@@ -144,7 +157,9 @@ fn concurrent_streaming_matches_sequential() {
                     .iter()
                     .filter(|r| shard_of(r.session, n_shards) == shard)
                 {
-                    slot.lock().unwrap().push(engine.serve_one(r, corpus));
+                    slot.lock()
+                        .unwrap()
+                        .push(conc_server.serve_one(r).expect("serve"));
                 }
             });
         }
@@ -168,10 +183,10 @@ fn concurrent_streaming_matches_sequential() {
 #[test]
 fn shard_metrics_aggregate_consistently() {
     let w = hybrid(Dataset::MtRag, 24, 2, 8, 0x3E7);
-    let corpus = corpus_for(Dataset::MtRag);
-    let engine = ServingEngine::new(serve_cfg(5, 4));
-    let served = engine.serve_batch(&w.requests, &corpus);
-    let (agg, per) = engine.metrics();
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = server(serve_cfg(5, 4), &corpus);
+    let served = server.serve_batch(&w.requests).expect("serve");
+    let (agg, per) = server.metrics().expect("metrics");
     assert_eq!(agg.len(), served.len());
     assert_eq!(per.iter().map(|s| s.served).sum::<usize>(), served.len());
     for s in per.iter().filter(|s| s.served > 0) {
@@ -190,7 +205,7 @@ fn alignment_preserves_block_multiset_under_concurrent_access() {
     // 4 workers, alignment on, dedup off: every served prompt's full
     // blocks must be a permutation of the request's retrieval (so the
     // rendered token multiset of the context region is preserved).
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     check(
         "sharded alignment is a permutation",
         Config {
@@ -205,8 +220,8 @@ fn alignment_preserves_block_multiset_under_concurrent_access() {
                 dedup: None,
                 ..PilotConfig::default()
             });
-            let engine = ServingEngine::new(cfg);
-            let served = engine.serve_batch(&reqs, &corpus);
+            let srv = server(cfg, &corpus);
+            let served = srv.serve_batch(&reqs).expect("serve");
             for s in &served {
                 let mut got = s.prompt.full_blocks();
                 let mut want = s.request.context.clone();
@@ -274,15 +289,15 @@ fn tiered_accounting_is_worker_count_invariant() {
     // must be bit-identical for any worker count — the tier store is
     // shard-local state driven in shard serve order, like the radix cache.
     let w = hybrid(Dataset::MtRag, 24, 3, 8, 0x71E7);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let run = |workers: usize| {
         let mut cfg = serve_cfg(6, workers);
         cfg.capacity_tokens = 1_500;
         cfg.tiers = Some(TierConfig::new(16_000, 64_000));
-        let engine = ServingEngine::new(cfg);
-        let served = engine.serve_batch(&w.requests, &corpus);
+        let srv = server(cfg, &corpus);
+        let served = srv.serve_batch(&w.requests).expect("serve");
         let fp = reuse_fingerprint(&served);
-        let (m, per) = engine.metrics();
+        let (m, per) = srv.metrics().expect("metrics");
         let residency: Vec<(usize, usize, u64, u64)> = per
             .iter()
             .map(|s| {
@@ -332,14 +347,14 @@ fn index_pruning_fires_on_final_discard_only() {
     //  * tiny store: demotions overflow every tier, the discard ids
     //    surface through serve, and the index IS pruned.
     let w = hybrid(Dataset::MtRag, 10, 3, 8, 0xD15C);
-    let corpus = corpus_for(Dataset::MtRag);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
     let run = |capacity: usize, tiers: Option<TierConfig>| {
         let mut cfg = serve_cfg(1, 1);
         cfg.capacity_tokens = capacity;
         cfg.tiers = tiers;
-        let engine = ServingEngine::new(cfg);
-        engine.serve_batch(&w.requests, &corpus);
-        let (_, per) = engine.metrics();
+        let srv = server(cfg, &corpus);
+        srv.serve_batch(&w.requests).expect("serve");
+        let (_, per) = srv.metrics().expect("metrics");
         (
             per[0].index_nodes,
             per[0].dram_resident_tokens + per[0].ssd_resident_tokens,
@@ -372,13 +387,13 @@ fn external_eviction_keeps_indices_consistent() {
     // serve, then evict every engine request id through the ServingEngine:
     // every shard's context index must prune down to its root.
     let w = hybrid(Dataset::MtRag, 18, 2, 8, 0xE71C);
-    let corpus = corpus_for(Dataset::MtRag);
-    let engine = ServingEngine::new(serve_cfg(4, 4));
-    let served = engine.serve_batch(&w.requests, &corpus);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let srv = server(serve_cfg(4, 4), &corpus);
+    let served = srv.serve_batch(&w.requests).expect("serve");
     assert_eq!(served.len(), w.requests.len());
     let ids: Vec<RequestId> = w.requests.iter().map(|r| r.id).collect();
-    engine.on_evict(&ids);
-    let (_, per) = engine.metrics();
+    srv.on_evict(&ids).expect("evict");
+    let (_, per) = srv.metrics().expect("metrics");
     for s in per {
         assert!(
             s.index_nodes <= 1,
