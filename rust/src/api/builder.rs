@@ -11,10 +11,11 @@
 //! [`build`]: ServerBuilder::build
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::api::{Error, Server};
-use crate::cache::TierConfig;
+use crate::cache::{FileStorage, Storage, StorageError, TierConfig};
 use crate::corpus::Corpus;
 use crate::engine::costmodel::ModelSku;
 use crate::engine::iface::InferenceEngine;
@@ -23,6 +24,18 @@ use crate::pilot::PilotConfig;
 use crate::quality::ModelEra;
 use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
 use crate::types::RequestId;
+use crate::util::json::Json;
+
+/// Map a storage-backend failure onto the facade error surface: damaged
+/// persisted bytes are [`Error::CorruptSnapshot`], everything else (I/O)
+/// is [`Error::Storage`].
+fn storage_err(e: StorageError) -> Error {
+    if e.corrupt {
+        Error::CorruptSnapshot(e.to_string())
+    } else {
+        Error::Storage(e.to_string())
+    }
+}
 
 /// Fluent configuration for a [`Server`]. Obtained from
 /// [`Server::builder`]; consumed by [`ServerBuilder::build`] (simulated
@@ -40,6 +53,13 @@ pub struct ServerBuilder {
     /// time so a malformed string surfaces as `InvalidConfig`, not a
     /// panic inside a parser.
     raw_tiers: Option<String>,
+    /// Durable-state directory (per-shard cold segment files +
+    /// `snapshot.json`); `None` = ephemeral server.
+    state_dir: Option<PathBuf>,
+    /// With a state dir: `true` rehydrates cold KV and restores the warm
+    /// snapshot ([`ServerBuilder::resume_from`]); `false` truncates the
+    /// segments and starts fresh ([`ServerBuilder::state_dir`]).
+    resume: bool,
 }
 
 impl ServerBuilder {
@@ -48,6 +68,8 @@ impl ServerBuilder {
             cfg: ServeConfig::new(sku),
             corpus: None,
             raw_tiers: None,
+            state_dir: None,
+            resume: false,
         }
     }
 
@@ -61,6 +83,8 @@ impl ServerBuilder {
             cfg,
             corpus: None,
             raw_tiers: None,
+            state_dir: None,
+            resume: false,
         }
     }
 
@@ -161,14 +185,90 @@ impl ServerBuilder {
         self
     }
 
+    /// Persist durable state under `dir`, starting **fresh**: per-shard
+    /// cold segment files (`shard-<i>.cold.jsonl`) are created or
+    /// truncated, no snapshot is read, and [`Server::checkpoint`] writes
+    /// `snapshot.json` there. The directory is created if missing. With a
+    /// tier store configured ([`tiers`](ServerBuilder::tiers)), every SSD
+    /// demotion is mirrored into its shard's segment file as it happens;
+    /// without one, only the checkpoint-time warm snapshot is durable.
+    pub fn state_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.state_dir = Some(dir.into());
+        self.resume = false;
+        self
+    }
+
+    /// Resume from a previous run's state dir: rehydrate each shard's
+    /// cold (SSD) shelf from its segment file and restore the warm-state
+    /// snapshot (`snapshot.json` — context indices, session → shard pins,
+    /// request ownership). The configuration must be compatible (same
+    /// shard count). Build-time failures: a missing snapshot or any I/O
+    /// problem is [`Error::Storage`]; undecodable or structurally invalid
+    /// persisted state is [`Error::CorruptSnapshot`] — never a panic.
+    pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.state_dir = Some(dir.into());
+        self.resume = true;
+        self
+    }
+
     /// Validate the assembled configuration and build a server over the
-    /// default simulated backend.
+    /// default simulated backend. With a state dir configured this is the
+    /// durable path: cold segment files open (truncating or rehydrating
+    /// per [`state_dir`](ServerBuilder::state_dir) vs
+    /// [`resume_from`](ServerBuilder::resume_from)) before any engine is
+    /// built, and on resume the warm snapshot is restored before the
+    /// server is returned — a resumed server never serves from
+    /// half-restored state.
     pub fn build(self) -> Result<Server<SimEngine>, Error> {
+        let state = self.state_dir.clone().map(|d| (d, self.resume));
         let (cfg, corpus) = self.finish()?;
-        Ok(Server::from_engine(
-            ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine),
-            corpus,
-        ))
+        let Some((dir, resume)) = state else {
+            return Ok(Server::from_engine(
+                ServingEngine::with_engine_factory(cfg, ServeConfig::sim_engine),
+                corpus,
+                None,
+            ));
+        };
+        // resume reads the snapshot before anything opens, so a missing /
+        // damaged state dir fails without touching the segment files
+        let snap = if resume {
+            let path = dir.join("snapshot.json");
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| Error::Storage(format!("reading {}: {e}", path.display())))?;
+            Some(Json::parse(&text).map_err(|e| {
+                Error::CorruptSnapshot(format!("{}: {e}", path.display()))
+            })?)
+        } else {
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| Error::Storage(format!("creating {}: {e}", dir.display())))?;
+            None
+        };
+        let mut stores: Vec<Box<dyn Storage>> = Vec::with_capacity(cfg.n_shards);
+        for i in 0..cfg.n_shards {
+            let p = dir.join(format!("shard-{i}.cold.jsonl"));
+            stores.push(Box::new(FileStorage::open(&p, resume).map_err(storage_err)?));
+        }
+        // the factory contract is infallible, so rehydration failures are
+        // parked and surfaced right after construction
+        let mut stores = stores.into_iter();
+        let mut failure: Option<StorageError> = None;
+        let engine = ServingEngine::with_engine_factory(cfg, |c| {
+            let store = stores.next().expect("one cold segment per shard");
+            match c.sim_engine_with_storage(store, resume) {
+                Ok(e) => e,
+                Err(e) => {
+                    failure.get_or_insert(e);
+                    c.sim_engine()
+                }
+            }
+        });
+        if let Some(e) = failure {
+            return Err(storage_err(e));
+        }
+        if let Some(snap) = &snap {
+            engine.restore_snapshot(snap)?;
+        }
+        Ok(Server::from_engine(engine, corpus, Some(dir)))
     }
 
     /// Validate and build over an arbitrary backend: `factory` is called
@@ -176,15 +276,29 @@ impl ServerBuilder {
     /// construct that shard's engine instance — the CLI's `--engine real`
     /// path hands it a PJRT-backed factory, tests hand it mocks and
     /// recording wrappers.
+    ///
+    /// Custom factories own their engines' storage, so the durable path
+    /// is [`build`](ServerBuilder::build)-only: combining `build_with`
+    /// with [`state_dir`](ServerBuilder::state_dir) /
+    /// [`resume_from`](ServerBuilder::resume_from) is rejected as
+    /// [`Error::InvalidConfig`] rather than silently persisting nothing.
     pub fn build_with<E, F>(self, factory: F) -> Result<Server<E>, Error>
     where
         E: InferenceEngine,
         F: FnMut(&ServeConfig) -> E,
     {
+        if self.state_dir.is_some() {
+            return Err(Error::InvalidConfig(
+                "state_dir/resume_from require the simulated backend (build()); \
+                 custom engine factories own their engines' storage"
+                    .into(),
+            ));
+        }
         let (cfg, corpus) = self.finish()?;
         Ok(Server::from_engine(
             ServingEngine::with_engine_factory(cfg, factory),
             corpus,
+            None,
         ))
     }
 
@@ -195,6 +309,7 @@ impl ServerBuilder {
             mut cfg,
             corpus,
             raw_tiers,
+            ..
         } = self;
         if let Some(spec) = raw_tiers {
             let (hbm, tiers) = TierConfig::parse(&spec)?;
@@ -278,5 +393,91 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+
+    fn tempdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ctxpilot-api-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn durable_build_checkpoints_and_resumes() {
+        use crate::types::{BlockId, QueryId, Request, SessionId};
+        let dir = tempdir("resume");
+        let c = Arc::new(corpus());
+        let req = |id: u64, session: u32| Request {
+            id: RequestId(id),
+            session: SessionId(session),
+            turn: 0,
+            context: vec![BlockId(1), BlockId(2)],
+            query: QueryId(id),
+        };
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(1)
+            .decode_tokens(8)
+            .corpus(c.clone())
+            .state_dir(&dir)
+            .build()
+            .expect("durable build");
+        server.serve_batch(&[req(1, 5)]).expect("serve");
+        let pinned = server.session_shard(SessionId(5)).expect("pinned");
+        let path = server.checkpoint().expect("checkpoint");
+        assert!(path.ends_with("snapshot.json"));
+        assert_eq!(server.state_dir(), Some(dir.as_path()));
+        drop(server);
+        let resumed = Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(1)
+            .decode_tokens(8)
+            .corpus(c)
+            .resume_from(&dir)
+            .build()
+            .expect("resume");
+        assert_eq!(resumed.session_shard(SessionId(5)).unwrap(), pinned);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_from_missing_or_corrupt_state_is_typed() {
+        let dir = tempdir("missing");
+        let c = Arc::new(corpus());
+        let err = Server::builder(ModelSku::Qwen3_4B)
+            .corpus(c.clone())
+            .resume_from(&dir)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::Storage(_)), "{err:?}");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("snapshot.json"), "{not json").unwrap();
+        let err = Server::builder(ModelSku::Qwen3_4B)
+            .corpus(c)
+            .resume_from(&dir)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::CorruptSnapshot(_)), "{err:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_with_rejects_durable_state() {
+        let c = Arc::new(corpus());
+        let err = Server::builder(ModelSku::Qwen3_4B)
+            .corpus(c)
+            .state_dir(std::env::temp_dir().join("ctxpilot-never-created"))
+            .build_with(|cfg: &ServeConfig| cfg.sim_engine())
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn checkpoint_without_state_dir_is_invalid_config() {
+        let server = builder().build().unwrap();
+        let err = server.checkpoint().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err:?}");
     }
 }

@@ -39,6 +39,16 @@ pub enum Error {
     /// The backend engine violated its contract (e.g. dropped a request
     /// from a batch) or an engine backend is unavailable in this build.
     EngineFailure(String),
+    /// The durable storage layer failed on I/O: the state directory could
+    /// not be created, a cold-tier segment file or snapshot could not be
+    /// read or written. The payload names the path and the OS error.
+    Storage(String),
+    /// A snapshot or cold-tier segment file exists but does not decode:
+    /// truncated mid-record, malformed JSON, an unknown snapshot version,
+    /// or internally inconsistent state (e.g. a pin to a shard the
+    /// resumed server does not have). Never a panic — a damaged state
+    /// directory must fail [`crate::api::ServerBuilder::build`] cleanly.
+    CorruptSnapshot(String),
 }
 
 impl fmt::Display for Error {
@@ -58,6 +68,8 @@ impl fmt::Display for Error {
                 r.0
             ),
             Error::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
+            Error::Storage(msg) => write!(f, "storage failure: {msg}"),
+            Error::CorruptSnapshot(msg) => write!(f, "corrupt snapshot: {msg}"),
         }
     }
 }
@@ -90,6 +102,14 @@ mod tests {
             (
                 Error::EngineFailure("request 3 not served".into()),
                 "engine failure: request 3 not served",
+            ),
+            (
+                Error::Storage("create dir /tmp/x: permission denied".into()),
+                "storage failure: create dir /tmp/x: permission denied",
+            ),
+            (
+                Error::CorruptSnapshot("snapshot.json: trailing data".into()),
+                "corrupt snapshot: snapshot.json: trailing data",
             ),
         ];
         for (e, want) in cases {

@@ -92,8 +92,13 @@
 //! worker panic surfaces to concurrent waiters and every subsequent call
 //! as [`Error::ShardPoisoned`] instead of cascading panics (the call
 //! that drove the panicking worker itself still unwinds); duplicate
-//! submissions and unplaced-session lookups get their own variants. See
-//! [`Error`] for the full catalogue.
+//! submissions and unplaced-session lookups get their own variants; the
+//! durable path ([`ServerBuilder::state_dir`] /
+//! [`ServerBuilder::resume_from`] / [`Server::checkpoint`]) distinguishes
+//! I/O trouble ([`Error::Storage`]) from persisted state that exists but
+//! does not decode ([`Error::CorruptSnapshot`]) — a damaged state
+//! directory fails `build()` cleanly, never as a panic. See [`Error`]
+//! for the full catalogue.
 //!
 //! # Relation to the engine room
 //!

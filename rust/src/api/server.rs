@@ -20,6 +20,8 @@
 //! both.
 
 use std::collections::HashSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::api::{Error, ServerBuilder};
@@ -130,6 +132,9 @@ pub struct Server<E: InferenceEngine = SimEngine> {
     engine: ServingEngine<E>,
     corpus: Arc<Corpus>,
     wave: Mutex<Wave>,
+    /// Where [`Server::checkpoint`] writes `snapshot.json` (and where the
+    /// per-shard cold segment files live). `None` = ephemeral server.
+    state_dir: Option<PathBuf>,
 }
 
 impl Server<SimEngine> {
@@ -142,7 +147,11 @@ impl Server<SimEngine> {
 }
 
 impl<E: InferenceEngine> Server<E> {
-    pub(crate) fn from_engine(engine: ServingEngine<E>, corpus: Arc<Corpus>) -> Server<E> {
+    pub(crate) fn from_engine(
+        engine: ServingEngine<E>,
+        corpus: Arc<Corpus>,
+        state_dir: Option<PathBuf>,
+    ) -> Server<E> {
         Server {
             engine,
             corpus,
@@ -151,6 +160,7 @@ impl<E: InferenceEngine> Server<E> {
                 cells: Vec::new(),
                 seen: HashSet::new(),
             }),
+            state_dir,
         }
     }
 
@@ -303,6 +313,57 @@ impl<E: InferenceEngine> Server<E> {
     pub fn metrics(&self) -> Result<(RunMetrics, Vec<ShardStats>), Error> {
         self.engine.metrics()
     }
+
+    /// Where this server persists durable state, if anywhere (set by
+    /// [`ServerBuilder::state_dir`] / [`ServerBuilder::resume_from`]).
+    pub fn state_dir(&self) -> Option<&Path> {
+        self.state_dir.as_deref()
+    }
+
+    /// Durable checkpoint: flush the pending wave, spill every shard's
+    /// hot/warm KV into its cold-tier storage backend (pruning the
+    /// context indices with whatever finally overflowed, §4.1), and write
+    /// the versioned warm-state snapshot to `<state_dir>/snapshot.json`
+    /// atomically (temp file + rename). A later
+    /// [`ServerBuilder::resume_from`] on the same directory rebuilds the
+    /// warm routing state and cold KV of this server. Returns the
+    /// snapshot path.
+    ///
+    /// The server remains usable afterwards — a checkpoint is a spill,
+    /// not a shutdown — but its HBM tier starts cold again, exactly as a
+    /// restarted process would.
+    ///
+    /// Requires a state dir ([`Error::InvalidConfig`] otherwise); storage
+    /// backend failures surface as [`Error::Storage`].
+    pub fn checkpoint(&self) -> Result<PathBuf, Error> {
+        let dir = self.state_dir.as_ref().ok_or_else(|| {
+            Error::InvalidConfig(
+                "checkpoint requires a state dir: build with .state_dir(..) or .resume_from(..)"
+                    .into(),
+            )
+        })?;
+        self.flush()?;
+        let snap = self.engine.checkpoint_snapshot()?;
+        let path = dir.join("snapshot.json");
+        let tmp = dir.join("snapshot.json.tmp");
+        std::fs::write(&tmp, format!("{snap}\n"))
+            .and_then(|()| std::fs::rename(&tmp, &path))
+            .map_err(|e| Error::Storage(format!("writing {}: {e}", path.display())))?;
+        Ok(path)
+    }
+}
+
+/// Summary-only `Debug` (the engine room holds mutexes and engine state
+/// that neither derive nor want printing); mainly here so `Result<Server,
+/// Error>` / `Result<Ticket, Error>` work with `unwrap_err` in tests.
+impl<E: InferenceEngine> fmt::Debug for Server<E> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Server")
+            .field("shards", &self.engine.n_shards())
+            .field("workers", &self.engine.n_workers())
+            .field("state_dir", &self.state_dir)
+            .finish_non_exhaustive()
+    }
 }
 
 /// Submission scope for one session. The handle is the authority on the
@@ -386,6 +447,20 @@ impl<E: InferenceEngine> Ticket<'_, E> {
         // instead of blocking forever
         flushed?;
         self.cell.take_filled()
+    }
+}
+
+impl<E: InferenceEngine> fmt::Debug for SessionHandle<'_, E> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SessionHandle")
+            .field("id", &self.id)
+            .finish_non_exhaustive()
+    }
+}
+
+impl<E: InferenceEngine> fmt::Debug for Ticket<'_, E> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket").finish_non_exhaustive()
     }
 }
 

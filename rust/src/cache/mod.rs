@@ -3,11 +3,15 @@
 //! [`RadixCache`] is the GPU-resident (HBM) tier; [`TierStore`] adds the
 //! DRAM/SSD tiers behind it so capacity eviction demotes KV instead of
 //! discarding it, with cost-aware admission and promotion ([`policy`]).
+//! The SSD shelf is mirrored into a pluggable [`Storage`] backend
+//! ([`storage`]) so a durable run survives process restarts.
 
 pub mod policy;
 pub mod radix;
+pub mod storage;
 pub mod tier;
 
 pub use policy::{AdmissionPolicy, TierCosts};
 pub use radix::{EvictedEntry, PrefixMatch, RadixCache};
+pub use storage::{ColdPayload, FileStorage, MemStorage, Record, Storage, StorageError};
 pub use tier::{Promotion, Tier, TierConfig, TierStore};

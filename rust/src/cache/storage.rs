@@ -1,0 +1,477 @@
+//! Cold-tier storage backends: where the SSD shelf's records actually
+//! live.
+//!
+//! The PR-3 tier store kept its "SSD" shelf purely in memory, so a
+//! process restart silently discarded every cold-tier entry and every
+//! recurring session paid full prefill again. [`Storage`] is the
+//! durability seam that fixes that: the [`crate::cache::TierStore`]
+//! mirrors every SSD-shelf mutation into a `Box<dyn Storage>` —
+//! `put`/`get`/`delete`/`scan` over [`Record`]s keyed by the entry's
+//! root-anchored token sequence — and rebuilds the shelf from
+//! [`Storage::scan`] on resume.
+//!
+//! Two backends:
+//!  * [`MemStorage`] — the default; an in-memory map, so tier-1 stays
+//!    dependency-free and serving is bit-identical to the pre-durability
+//!    behaviour (the mirror never feeds back into a live run).
+//!  * [`FileStorage`] — one append-friendly segment file of JSON lines
+//!    (`{"op":"put",…}` / `{"op":"del",…}`, via [`crate::util::json`])
+//!    with the index rebuilt by replaying the log on open. A torn final
+//!    line (crash mid-append) is dropped; damage anywhere earlier is a
+//!    [`StorageError`] with `corrupt` set, which the facade surfaces as
+//!    [`crate::api::Error::CorruptSnapshot`]. [`Storage::flush`] compacts
+//!    the log (rewrite-and-rename), which the checkpoint path invokes.
+//!
+//! Payloads ride through the backend as JSON via [`ColdPayload`]; the
+//! simulated engine's `()` payload and the KV-bytes test payload both
+//! implement it.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// A cold-tier payload that can ride through a [`Storage`] backend.
+/// Encoding must round-trip exactly: `from_json(&v.to_json()) == Some(v)`.
+pub trait ColdPayload: Clone + Send {
+    fn to_json(&self) -> Json;
+    fn from_json(j: &Json) -> Option<Self>;
+}
+
+/// The simulated engine carries no KV bytes; a marker value records that
+/// a payload was present at all.
+impl ColdPayload for () {
+    fn to_json(&self) -> Json {
+        Json::Bool(true)
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        j.as_bool().map(|_| ())
+    }
+}
+
+/// Raw KV bytes (what a real engine's snapshot reduces to in tests).
+impl ColdPayload for Vec<u8> {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(|&b| Json::Num(b as f64)).collect())
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        j.as_arr()?
+            .iter()
+            .map(|x| {
+                let n = x.as_f64()?;
+                (n.fract() == 0.0 && (0.0..=255.0).contains(&n)).then_some(n as u8)
+            })
+            .collect()
+    }
+}
+
+/// One cold-tier record in wire form: the root-anchored token key, the
+/// §4.1 owner request ids, the LRU stamp (so a rebuilt shelf keeps its
+/// eviction order), and the payload serialized via [`ColdPayload`]
+/// (`Json::Null` when the entry carried none).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub tokens: Vec<u32>,
+    pub request_ids: Vec<u64>,
+    pub stamp: u64,
+    pub payload: Json,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("put")),
+            (
+                "tokens",
+                Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            (
+                "ids",
+                Json::Arr(self.request_ids.iter().map(|&r| Json::u64(r)).collect()),
+            ),
+            ("stamp", Json::u64(self.stamp)),
+            ("payload", self.payload.clone()),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Record> {
+        let tokens = parse_tokens(j.get("tokens"))?;
+        let request_ids = j
+            .get("ids")
+            .as_arr()?
+            .iter()
+            .map(Json::as_u64)
+            .collect::<Option<Vec<u64>>>()?;
+        Some(Record {
+            tokens,
+            request_ids,
+            stamp: j.get("stamp").as_u64()?,
+            payload: j.get("payload").clone(),
+        })
+    }
+}
+
+fn parse_tokens(j: &Json) -> Option<Vec<u32>> {
+    j.as_arr()?
+        .iter()
+        .map(|x| {
+            let n = x.as_f64()?;
+            (n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n)).then_some(n as u32)
+        })
+        .collect()
+}
+
+/// A storage failure. `corrupt` distinguishes "the bytes exist but do
+/// not decode" (surfaced as [`crate::api::Error::CorruptSnapshot`]) from
+/// plain I/O trouble ([`crate::api::Error::Storage`]).
+#[derive(Clone, Debug)]
+pub struct StorageError {
+    pub message: String,
+    pub corrupt: bool,
+}
+
+impl StorageError {
+    pub fn io(message: impl Into<String>) -> StorageError {
+        StorageError {
+            message: message.into(),
+            corrupt: false,
+        }
+    }
+
+    pub fn corrupt(message: impl Into<String>) -> StorageError {
+        StorageError {
+            message: message.into(),
+            corrupt: true,
+        }
+    }
+}
+
+impl fmt::Display for StorageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for StorageError {}
+
+/// A cold-tier record store keyed by root-anchored token sequence.
+///
+/// The tier store treats this as a write-through mirror of its SSD
+/// shelf: `put` upserts (a re-demoted or merged key overwrites its old
+/// record), `delete` is idempotent, and `scan` returns every live record
+/// in ascending stamp order — the canonical order a resumed shelf is
+/// rebuilt in.
+pub trait Storage: Send + fmt::Debug {
+    fn put(&mut self, rec: Record) -> Result<(), StorageError>;
+    fn get(&self, tokens: &[u32]) -> Result<Option<Record>, StorageError>;
+    fn delete(&mut self, tokens: &[u32]) -> Result<(), StorageError>;
+    /// Every live record, ascending by stamp.
+    fn scan(&self) -> Result<Vec<Record>, StorageError>;
+    /// Make everything written so far durable (and compact, for log-
+    /// structured backends). The checkpoint path calls this; in-memory
+    /// backends are a no-op.
+    fn flush(&mut self) -> Result<(), StorageError> {
+        Ok(())
+    }
+}
+
+fn sorted_by_stamp(mut records: Vec<Record>) -> Vec<Record> {
+    records.sort_by_key(|r| r.stamp);
+    records
+}
+
+/// The in-memory backend: keeps the tier store dependency-free and its
+/// serving results bit-identical to the pre-durability behaviour. A
+/// restart loses it, by definition — use [`FileStorage`] for durability.
+#[derive(Debug, Default)]
+pub struct MemStorage {
+    records: BTreeMap<Vec<u32>, Record>,
+}
+
+impl MemStorage {
+    pub fn new() -> MemStorage {
+        MemStorage::default()
+    }
+}
+
+impl Storage for MemStorage {
+    fn put(&mut self, rec: Record) -> Result<(), StorageError> {
+        self.records.insert(rec.tokens.clone(), rec);
+        Ok(())
+    }
+
+    fn get(&self, tokens: &[u32]) -> Result<Option<Record>, StorageError> {
+        Ok(self.records.get(tokens).cloned())
+    }
+
+    fn delete(&mut self, tokens: &[u32]) -> Result<(), StorageError> {
+        self.records.remove(tokens);
+        Ok(())
+    }
+
+    fn scan(&self) -> Result<Vec<Record>, StorageError> {
+        Ok(sorted_by_stamp(self.records.values().cloned().collect()))
+    }
+}
+
+/// The file-backed default for durable runs: one append-friendly segment
+/// file of JSON lines, index rebuilt by replaying the log on open.
+#[derive(Debug)]
+pub struct FileStorage {
+    path: PathBuf,
+    file: fs::File,
+    records: BTreeMap<Vec<u32>, Record>,
+    /// Log lines since the last compaction (delete tombstones and
+    /// overwritten puts accumulate until `flush` rewrites the segment).
+    dirty_ops: usize,
+}
+
+impl FileStorage {
+    /// Open (or create) the segment file at `path`.
+    ///
+    /// `resume` replays the existing log into the index — a torn final
+    /// line (crash mid-append) is dropped, damage anywhere earlier is a
+    /// corrupt-flagged error. Without `resume` the segment is truncated:
+    /// a fresh durable run starts from an empty cold tier.
+    pub fn open(path: &Path, resume: bool) -> Result<FileStorage, StorageError> {
+        let mut records = BTreeMap::new();
+        if resume && path.exists() {
+            let text = fs::read_to_string(path)
+                .map_err(|e| StorageError::io(format!("read {}: {e}", path.display())))?;
+            let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+            for (i, line) in lines.iter().enumerate() {
+                match Self::replay_line(line, &mut records) {
+                    Ok(()) => {}
+                    Err(e) if i + 1 == lines.len() => {
+                        // a torn tail is the one legal form of damage: the
+                        // process died mid-append and every complete record
+                        // before it is still good
+                        let _ = e;
+                        break;
+                    }
+                    Err(e) => {
+                        return Err(StorageError::corrupt(format!(
+                            "{} line {}: {e}",
+                            path.display(),
+                            i + 1
+                        )))
+                    }
+                }
+            }
+        }
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| StorageError::io(format!("open {}: {e}", path.display())))?;
+        if !resume {
+            file.set_len(0)
+                .map_err(|e| StorageError::io(format!("truncate {}: {e}", path.display())))?;
+        }
+        Ok(FileStorage {
+            path: path.to_path_buf(),
+            file,
+            records,
+            dirty_ops: 0,
+        })
+    }
+
+    fn replay_line(line: &str, records: &mut BTreeMap<Vec<u32>, Record>) -> Result<(), String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        match j.get("op").as_str() {
+            Some("put") => {
+                let rec = Record::from_json(&j).ok_or("malformed put record")?;
+                records.insert(rec.tokens.clone(), rec);
+                Ok(())
+            }
+            Some("del") => {
+                let tokens = parse_tokens(j.get("tokens")).ok_or("malformed del record")?;
+                records.remove(&tokens);
+                Ok(())
+            }
+            _ => Err("unknown op".to_string()),
+        }
+    }
+
+    fn append(&mut self, j: &Json) -> Result<(), StorageError> {
+        writeln!(self.file, "{j}")
+            .map_err(|e| StorageError::io(format!("append {}: {e}", self.path.display())))?;
+        self.dirty_ops += 1;
+        Ok(())
+    }
+}
+
+impl Storage for FileStorage {
+    fn put(&mut self, rec: Record) -> Result<(), StorageError> {
+        self.append(&rec.to_json())?;
+        self.records.insert(rec.tokens.clone(), rec);
+        Ok(())
+    }
+
+    fn get(&self, tokens: &[u32]) -> Result<Option<Record>, StorageError> {
+        Ok(self.records.get(tokens).cloned())
+    }
+
+    fn delete(&mut self, tokens: &[u32]) -> Result<(), StorageError> {
+        if self.records.remove(tokens).is_none() {
+            return Ok(());
+        }
+        self.append(&Json::obj(vec![
+            ("op", Json::str("del")),
+            (
+                "tokens",
+                Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+        ]))
+    }
+
+    fn scan(&self) -> Result<Vec<Record>, StorageError> {
+        Ok(sorted_by_stamp(self.records.values().cloned().collect()))
+    }
+
+    /// Compact: rewrite the segment as one put line per live record
+    /// (ascending stamp), rename over the old log, and fsync. Tombstones
+    /// and overwritten puts vanish; a crash during compaction leaves
+    /// either the old or the new segment intact, never a mix.
+    fn flush(&mut self) -> Result<(), StorageError> {
+        let tmp = self.path.with_extension("tmp");
+        let mut out = String::new();
+        for rec in sorted_by_stamp(self.records.values().cloned().collect()) {
+            out.push_str(&rec.to_json().to_string());
+            out.push('\n');
+        }
+        fs::write(&tmp, out)
+            .map_err(|e| StorageError::io(format!("write {}: {e}", tmp.display())))?;
+        fs::rename(&tmp, &self.path)
+            .map_err(|e| StorageError::io(format!("rename {}: {e}", self.path.display())))?;
+        self.file = fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .map_err(|e| StorageError::io(format!("reopen {}: {e}", self.path.display())))?;
+        self.file
+            .sync_all()
+            .map_err(|e| StorageError::io(format!("sync {}: {e}", self.path.display())))?;
+        self.dirty_ops = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tokens: &[u32], ids: &[u64], stamp: u64) -> Record {
+        Record {
+            tokens: tokens.to_vec(),
+            request_ids: ids.to_vec(),
+            stamp,
+            payload: vec![1u8, 2, 3].to_json(),
+        }
+    }
+
+    fn tempdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ctxpilot-storage-{name}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn cold_payload_roundtrips() {
+        let v: Vec<u8> = vec![0, 7, 255];
+        assert_eq!(Vec::<u8>::from_json(&v.to_json()), Some(v));
+        assert_eq!(<()>::from_json(&().to_json()), Some(()));
+        assert_eq!(Vec::<u8>::from_json(&Json::Null), None);
+        assert_eq!(<()>::from_json(&Json::Null), None);
+    }
+
+    #[test]
+    fn mem_storage_put_get_delete_scan() {
+        let mut s = MemStorage::new();
+        s.put(rec(&[1, 2], &[7], 2)).unwrap();
+        s.put(rec(&[3], &[8], 1)).unwrap();
+        assert_eq!(s.get(&[1, 2]).unwrap().unwrap().request_ids, vec![7]);
+        assert_eq!(s.get(&[9]).unwrap(), None);
+        // scan is ascending by stamp, not by key
+        let stamps: Vec<u64> = s.scan().unwrap().iter().map(|r| r.stamp).collect();
+        assert_eq!(stamps, vec![1, 2]);
+        // upsert replaces, delete is idempotent
+        s.put(rec(&[1, 2], &[9], 3)).unwrap();
+        assert_eq!(s.get(&[1, 2]).unwrap().unwrap().request_ids, vec![9]);
+        s.delete(&[1, 2]).unwrap();
+        s.delete(&[1, 2]).unwrap();
+        assert_eq!(s.scan().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn file_storage_survives_reopen() {
+        let dir = tempdir("reopen");
+        let path = dir.join("cold.jsonl");
+        {
+            let mut s = FileStorage::open(&path, false).unwrap();
+            s.put(rec(&[1, 2, 3], &[u64::MAX], 1)).unwrap();
+            s.put(rec(&[4], &[2], 2)).unwrap();
+            s.delete(&[4]).unwrap();
+        }
+        let s = FileStorage::open(&path, true).unwrap();
+        let scanned = s.scan().unwrap();
+        assert_eq!(scanned.len(), 1);
+        assert_eq!(scanned[0].tokens, vec![1, 2, 3]);
+        assert_eq!(scanned[0].request_ids, vec![u64::MAX], "u64 ids exact");
+        assert_eq!(
+            Vec::<u8>::from_json(&scanned[0].payload),
+            Some(vec![1, 2, 3])
+        );
+        // opening WITHOUT resume truncates: a fresh run starts cold
+        let s = FileStorage::open(&path, false).unwrap();
+        assert!(s.scan().unwrap().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_earlier_damage_is_corrupt() {
+        let dir = tempdir("torn");
+        let path = dir.join("cold.jsonl");
+        {
+            let mut s = FileStorage::open(&path, false).unwrap();
+            s.put(rec(&[1], &[1], 1)).unwrap();
+            s.put(rec(&[2], &[2], 2)).unwrap();
+        }
+        // crash mid-append: chop the file inside the last record
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &text[..text.len() - 10]).unwrap();
+        let s = FileStorage::open(&path, true).unwrap();
+        assert_eq!(s.scan().unwrap().len(), 1, "torn tail dropped, rest kept");
+        // damage in the MIDDLE is real corruption, not a crash artifact
+        fs::write(&path, "garbage\n{\"op\":\"del\",\"tokens\":[1]}\n").unwrap();
+        let err = FileStorage::open(&path, true).unwrap_err();
+        assert!(err.corrupt, "mid-log damage must flag corrupt: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_compacts_the_log() {
+        let dir = tempdir("compact");
+        let path = dir.join("cold.jsonl");
+        let mut s = FileStorage::open(&path, false).unwrap();
+        for i in 0..20u32 {
+            s.put(rec(&[i % 4], &[i as u64], i as u64 + 1)).unwrap();
+        }
+        let before = fs::metadata(&path).unwrap().len();
+        s.flush().unwrap();
+        let after = fs::metadata(&path).unwrap().len();
+        assert!(after < before, "compaction shrinks the segment");
+        drop(s);
+        let s = FileStorage::open(&path, true).unwrap();
+        assert_eq!(s.scan().unwrap().len(), 4, "live records survive compaction");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

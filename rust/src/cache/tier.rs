@@ -23,10 +23,22 @@
 //! counter — so serving results are bit-identical for any worker count,
 //! exactly like the radix cache itself (pinned by `tests/serve_stress.rs`
 //! and `benches/bench_tiering.rs`).
+//!
+//! Durability: the SSD shelf is write-through mirrored into a pluggable
+//! [`Storage`] backend ([`crate::cache::storage`]). The default
+//! ([`MemStorage`], via [`TierStore::new`]) keeps everything in memory —
+//! bit-identical to the pre-durability behaviour because the mirror never
+//! feeds back into a live run. A durable run passes a
+//! [`crate::cache::FileStorage`] to [`TierStore::with_storage`], which can
+//! also *rehydrate* the shelf from the backend on resume. Mirror I/O
+//! errors are sticky ([`TierStore::storage_flush`] surfaces the first one
+//! at checkpoint time) rather than perturbing the serve path.
 
 use crate::cache::policy::{AdmissionPolicy, TierCosts};
 use crate::cache::radix::EvictedEntry;
+use crate::cache::storage::{ColdPayload, MemStorage, Record, Storage, StorageError};
 use crate::types::RequestId;
+use crate::util::json::Json;
 
 /// Which tier served (or holds) a token span. `Hbm` is the radix cache;
 /// the store itself only holds `Dram` and `Ssd` entries.
@@ -103,25 +115,34 @@ impl TierConfig {
                 })
         }
         let mut hbm: Option<usize> = None;
-        let mut dram = 0usize;
-        let mut ssd = 0usize;
+        let mut dram: Option<usize> = None;
+        let mut ssd: Option<usize> = None;
         for part in spec.split(',').filter(|p| !p.is_empty()) {
             let (key, val) = part.split_once('=').ok_or_else(|| {
                 Error::InvalidConfig(format!("tier spec expects key=tokens, got '{part}'"))
             })?;
             let key = key.trim();
             let n = tokens(key, val)?;
-            match key {
-                "hbm" => hbm = Some(n),
-                "dram" => dram = n,
-                "ssd" => ssd = n,
+            // a repeated key is ambiguous (which budget did the caller
+            // mean?) — reject instead of silently letting the last one win
+            let slot = match key {
+                "hbm" => &mut hbm,
+                "dram" => &mut dram,
+                "ssd" => &mut ssd,
                 other => {
                     return Err(Error::InvalidConfig(format!(
                         "unknown tier '{other}' (try hbm/dram/ssd)"
                     )))
                 }
+            };
+            if slot.is_some() {
+                return Err(Error::InvalidConfig(format!(
+                    "tier '{key}' specified more than once"
+                )));
             }
+            *slot = Some(n);
         }
+        let (dram, ssd) = (dram.unwrap_or(0), ssd.unwrap_or(0));
         let hbm = hbm.ok_or_else(|| {
             Error::InvalidConfig("tier spec is missing hbm=<tokens> (sizes the radix cache)".into())
         })?;
@@ -280,6 +301,14 @@ impl<V> Shelf<V> {
 pub struct TierStore<V> {
     dram: Shelf<V>,
     ssd: Shelf<V>,
+    /// Durable write-through mirror of the SSD shelf (`MemStorage` by
+    /// default, so the mirror is invisible unless a file backend is
+    /// plugged in via [`TierStore::with_storage`]).
+    store: Box<dyn Storage>,
+    /// First mirror failure observed on the serve path. Serving must stay
+    /// deterministic regardless of disk health, so errors are remembered
+    /// here and surfaced by [`TierStore::storage_flush`] at checkpoint.
+    storage_error: Option<StorageError>,
     dram_costs: TierCosts,
     ssd_costs: TierCosts,
     admission: AdmissionPolicy,
@@ -300,6 +329,8 @@ impl<V> TierStore<V> {
         TierStore {
             dram: Shelf::new(cfg.dram_tokens),
             ssd: Shelf::new(cfg.ssd_tokens),
+            store: Box::new(MemStorage::new()),
+            storage_error: None,
             dram_costs: cfg.dram,
             ssd_costs: cfg.ssd,
             admission: cfg.admission,
@@ -337,6 +368,94 @@ impl<V> TierStore<V> {
         n > 0 && n <= capacity && self.admission.admits(costs, self.recompute_s_per_tok, n)
     }
 
+    /// The first mirror failure observed on the serve path, if any.
+    pub fn storage_error(&self) -> Option<&StorageError> {
+        self.storage_error.as_ref()
+    }
+
+    /// Checkpoint hook: surface the first sticky mirror failure, then
+    /// flush/compact the storage backend.
+    pub fn storage_flush(&mut self) -> Result<(), StorageError> {
+        if let Some(e) = self.storage_error.clone() {
+            return Err(e);
+        }
+        self.store.flush()
+    }
+
+    fn note_storage(&mut self, r: Result<(), StorageError>) {
+        if let Err(e) = r {
+            self.storage_error.get_or_insert(e);
+        }
+    }
+
+    /// Mirror: the key left the SSD shelf for good.
+    fn mirror_del(&mut self, key: &[u32]) {
+        let r = self.store.delete(key);
+        self.note_storage(r);
+    }
+}
+
+impl<V: ColdPayload> TierStore<V> {
+    /// Build a store whose SSD shelf is mirrored into `store`. With
+    /// `rehydrate`, the shelf is first seeded from [`Storage::scan`]
+    /// (records arrive in ascending stamp order, so the LRU ordering
+    /// survives the restart) and the clock resumes past the newest stamp.
+    /// Records over the configured SSD budget are shed oldest-first —
+    /// resuming with a smaller `ssd=` budget silently drops LRU cold
+    /// entries. A record whose payload does not decode is a
+    /// corrupt-flagged [`StorageError`], never a panic.
+    pub fn with_storage(
+        cfg: &TierConfig,
+        recompute_s_per_tok: f64,
+        store: Box<dyn Storage>,
+        rehydrate: bool,
+    ) -> Result<TierStore<V>, StorageError> {
+        let mut ts = TierStore::new(cfg, recompute_s_per_tok);
+        ts.store = store;
+        if rehydrate {
+            for rec in ts.store.scan()? {
+                if rec.tokens.is_empty() {
+                    return Err(StorageError::corrupt("cold-tier record with empty key"));
+                }
+                let payload = match &rec.payload {
+                    Json::Null => None,
+                    j => Some(V::from_json(j).ok_or_else(|| {
+                        StorageError::corrupt("cold-tier record payload does not decode")
+                    })?),
+                };
+                ts.clock = ts.clock.max(rec.stamp);
+                ts.ssd.insert(Entry {
+                    tokens: rec.tokens,
+                    request_ids: rec.request_ids.into_iter().map(RequestId).collect(),
+                    payload,
+                    stamp: rec.stamp,
+                });
+            }
+            while ts.ssd.resident > ts.ssd.capacity {
+                let victim = ts.ssd.pop_lru().expect("resident > 0 implies entries");
+                ts.store.delete(&victim.tokens)?;
+            }
+        }
+        Ok(ts)
+    }
+
+    /// Mirror: write-through the *current* shelf state of `key` (after a
+    /// `Shelf::insert`, which may have merged ids/payload into an
+    /// existing entry — the record must reflect the merge result).
+    fn mirror_put(&mut self, key: &[u32]) {
+        let rec = match self.ssd.entries.iter().find(|e| e.tokens == key) {
+            Some(e) => Record {
+                tokens: e.tokens.clone(),
+                request_ids: e.request_ids.iter().map(|r| r.0).collect(),
+                stamp: e.stamp,
+                payload: e.payload.as_ref().map_or(Json::Null, ColdPayload::to_json),
+            },
+            None => return,
+        };
+        let r = self.store.put(rec);
+        self.note_storage(r);
+    }
+
     /// Demote one evicted radix entry into the hierarchy (DRAM first, LRU
     /// spill to SSD, SSD overflow discards). Returns the request ids whose
     /// content left the hierarchy entirely — the caller feeds them to the
@@ -368,6 +487,9 @@ impl<V> TierStore<V> {
             if e.payload.is_none() {
                 e.payload = old.payload;
             }
+            // the merged entry may land in DRAM; until it re-enters the
+            // SSD shelf the key has no durable copy
+            self.mirror_del(&e.tokens);
         }
         // (entry, already counted as demoted?) — DRAM spills were counted
         // on their original admission; DRAM-refused entries were not
@@ -388,9 +510,12 @@ impl<V> TierStore<V> {
                 if !counted {
                     self.stat_demoted_tokens += n as u64;
                 }
+                let key = e.tokens.clone();
                 self.ssd.insert(e);
+                self.mirror_put(&key);
                 while self.ssd.resident > self.ssd.capacity {
                     let victim = self.ssd.pop_lru().expect("resident > 0 implies entries");
+                    self.mirror_del(&victim.tokens);
                     self.stat_discarded_tokens += victim.tokens.len() as u64;
                     discarded.extend(victim.request_ids);
                 }
@@ -468,6 +593,9 @@ impl<V> TierStore<V> {
         };
         let e = shelf.entries.remove(idx);
         shelf.resident -= e.tokens.len();
+        if tier == Tier::Ssd {
+            self.mirror_del(&e.tokens);
+        }
         debug_assert!(matched <= e.tokens.len());
         self.stat_promoted_tokens += (matched - min_len) as u64;
         let full = matched == e.tokens.len();
@@ -483,6 +611,63 @@ impl<V> TierStore<V> {
             payload: if full { e.payload } else { None },
             load_s,
         })
+    }
+
+    /// Checkpoint spill: move everything still warm — the (volatile)
+    /// DRAM shelf plus the radix cache's freshly evicted hot entries —
+    /// into the durable SSD shelf. The admission cost gate is bypassed
+    /// (this is a shutdown, not a steady-state demotion: content not
+    /// spilled now is simply gone after the restart); capacity is still
+    /// enforced. Returns the ids whose content left the hierarchy, for
+    /// §4.1 pruning, exactly like [`TierStore::demote`].
+    pub fn spill_for_checkpoint(&mut self, hot: Vec<EvictedEntry<V>>) -> Vec<RequestId> {
+        let mut discarded: Vec<RequestId> = Vec::new();
+        // DRAM first, oldest stamps first, keeping the stamps: the warm
+        // shelf's LRU order stays intact under the hot entries about to
+        // arrive with fresh (newer) stamps
+        let mut dram_entries = std::mem::take(&mut self.dram.entries);
+        self.dram.resident = 0;
+        dram_entries.sort_by_key(|e| e.stamp);
+        for e in dram_entries {
+            self.spill_into_ssd(e, false, &mut discarded);
+        }
+        for entry in hot {
+            let stamp = self.tick();
+            let e = Entry {
+                tokens: entry.tokens,
+                request_ids: entry.request_ids,
+                payload: entry.payload,
+                stamp,
+            };
+            self.spill_into_ssd(e, true, &mut discarded);
+        }
+        discarded.sort_unstable();
+        discarded.dedup();
+        discarded
+    }
+
+    fn spill_into_ssd(&mut self, e: Entry<V>, count_demoted: bool, discarded: &mut Vec<RequestId>) {
+        let n = e.tokens.len();
+        if n == 0 {
+            return;
+        }
+        if n > self.ssd.capacity {
+            self.stat_discarded_tokens += n as u64;
+            discarded.extend(e.request_ids);
+            return;
+        }
+        if count_demoted {
+            self.stat_demoted_tokens += n as u64;
+        }
+        let key = e.tokens.clone();
+        self.ssd.insert(e);
+        self.mirror_put(&key);
+        while self.ssd.resident > self.ssd.capacity {
+            let victim = self.ssd.pop_lru().expect("resident > 0 implies entries");
+            self.mirror_del(&victim.tokens);
+            self.stat_discarded_tokens += victim.tokens.len() as u64;
+            discarded.extend(victim.request_ids);
+        }
     }
 
     /// Structural invariants (tests / failure injection).
@@ -501,6 +686,31 @@ impl<V> TierStore<V> {
             for e in &shelf.entries {
                 if e.tokens.is_empty() {
                     return Err(format!("{name}: empty entry"));
+                }
+            }
+        }
+        // mirror coherence: unless a sticky I/O error already explains a
+        // divergence, the storage backend holds exactly the SSD shelf
+        if self.storage_error.is_none() {
+            let scanned = self.store.scan().map_err(|e| e.to_string())?;
+            if scanned.len() != self.ssd.entries.len() {
+                return Err(format!(
+                    "storage mirror holds {} records, ssd shelf {}",
+                    scanned.len(),
+                    self.ssd.entries.len()
+                ));
+            }
+            for rec in &scanned {
+                let e = self
+                    .ssd
+                    .entries
+                    .iter()
+                    .find(|e| e.tokens == rec.tokens)
+                    .ok_or("storage mirror holds a key missing from the ssd shelf")?;
+                let ids: Vec<u64> = e.request_ids.iter().map(|r| r.0).collect();
+                let payload = e.payload.as_ref().map_or(Json::Null, ColdPayload::to_json);
+                if rec.request_ids != ids || rec.stamp != e.stamp || rec.payload != payload {
+                    return Err(format!("storage mirror diverges on key {:?}", rec.tokens));
                 }
             }
         }
@@ -552,6 +762,10 @@ mod tests {
             "hbm",
             "hbm=4q",
             "hbm=18446744073709551615k",
+            // duplicate keys are ambiguous, not last-wins
+            "hbm=64k,hbm=1",
+            "hbm=1,dram=2,dram=3",
+            "hbm=1,ssd=2,ssd=2",
         ] {
             assert!(
                 matches!(
@@ -561,6 +775,11 @@ mod tests {
                 "spec '{bad}' must be rejected as InvalidConfig"
             );
         }
+        let msg = match TierConfig::parse("hbm=64k,hbm=1") {
+            Err(crate::api::Error::InvalidConfig(m)) => m,
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        };
+        assert!(msg.contains("more than once"), "got: {msg}");
     }
 
     #[test]
@@ -801,5 +1020,159 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Satellite: a zero-capacity cold tier must behave exactly like
+    /// discard mode — every demotion leaves the hierarchy immediately and
+    /// reports its ids for §4.1 pruning, with or without the cost gate.
+    #[test]
+    fn zero_capacity_cold_tier_discards_immediately() {
+        for admission in [AdmissionPolicy::Always, AdmissionPolicy::CostAware] {
+            let mut cfg = TierConfig::new(0, 0);
+            cfg.admission = admission;
+            let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+            let discarded = store.demote(entry(&[1, 2, 3, 4], 7));
+            assert_eq!(discarded, vec![RequestId(7)], "{admission:?}");
+            assert_eq!(store.entry_count(), 0);
+            assert_eq!(store.stat_demoted_tokens, 0);
+            assert_eq!(store.stat_discarded_tokens, 4);
+            assert_eq!(store.peek_longest(&[1, 2, 3, 4], 0), 0);
+            assert!(store.promote(&[1, 2, 3, 4], 0).is_none());
+            // the checkpoint spill likewise has nowhere durable to go
+            let spilled = store.spill_for_checkpoint(vec![entry(&[5, 6], 8)]);
+            assert_eq!(spilled, vec![RequestId(8)]);
+            assert_eq!(store.entry_count(), 0);
+            store.check_invariants().unwrap();
+        }
+    }
+
+    use crate::cache::storage::{FileStorage, MemStorage, Storage};
+
+    fn file_store(dir: &std::path::Path, resume: bool) -> Box<dyn Storage> {
+        Box::new(FileStorage::open(&dir.join("cold.jsonl"), resume).unwrap())
+    }
+
+    fn tempdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ctxpilot-tier-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Tentpole: a file-backed store serves bit-identically to the
+    /// in-memory default, and after a drop + rehydrate the SSD shelf
+    /// comes back verbatim — ids, payloads, and LRU order included.
+    #[test]
+    fn file_backed_store_matches_memory_and_rehydrates_verbatim() {
+        let dir = tempdir("rehydrate");
+        let mut cfg = TierConfig::new(6, 9);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut mem: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        let mut file: TierStore<Vec<u8>> =
+            TierStore::with_storage(&cfg, 5e-5, file_store(&dir, false), false).unwrap();
+        // a workload that exercises spill, overflow-discard, merge, promote
+        let keys: [&[u32]; 5] = [&[1, 2, 3], &[4, 5, 6], &[7, 8, 9], &[1, 2, 3], &[10, 11, 12]];
+        for (i, k) in keys.iter().enumerate() {
+            let a = mem.demote(entry(k, i as u64));
+            let b = file.demote(entry(k, i as u64));
+            assert_eq!(a, b, "demote {i} diverged");
+        }
+        let a = mem.promote(&[4, 5, 6, 7], 0);
+        let b = file.promote(&[4, 5, 6, 7], 0);
+        assert_eq!(a.is_some(), b.is_some());
+        if let (Some(a), Some(b)) = (a, b) {
+            assert_eq!((a.tier, a.matched, &a.tokens), (b.tier, b.matched, &b.tokens));
+            assert_eq!(a.request_ids, b.request_ids);
+            assert_eq!(a.payload, b.payload);
+        }
+        mem.check_invariants().unwrap();
+        file.check_invariants().unwrap();
+        assert!(file.storage_error().is_none());
+        file.storage_flush().unwrap();
+        let ssd_before: usize = file.ssd_resident_tokens();
+        let probe = |s: &TierStore<Vec<u8>>| {
+            (
+                s.peek_longest(&[1, 2, 3], 0),
+                s.peek_longest(&[7, 8, 9], 0),
+                s.peek_longest(&[10, 11, 12], 0),
+            )
+        };
+        let before = probe(&file);
+        drop(file);
+        // "restart": only the SSD shelf survives (DRAM is volatile)
+        let resumed: TierStore<Vec<u8>> =
+            TierStore::with_storage(&cfg, 5e-5, file_store(&dir, true), true).unwrap();
+        resumed.check_invariants().unwrap();
+        assert_eq!(resumed.ssd_resident_tokens(), ssd_before);
+        assert_eq!(resumed.dram_resident_tokens(), 0, "DRAM does not survive");
+        // every pre-restart probe answerable from SSD still answers
+        let after = probe(&resumed);
+        for (b, a) in [(before.0, after.0), (before.1, after.1), (before.2, after.2)] {
+            assert!(a == b || a == 0, "rehydrated shelf invented content");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The checkpoint spill drains DRAM and the hot entries into the
+    /// durable shelf, bypassing the cost gate (CostAware would refuse
+    /// these tiny spans in steady state) while still enforcing capacity.
+    #[test]
+    fn checkpoint_spill_bypasses_cost_gate_but_not_capacity() {
+        let cfg = TierConfig::new(8, 8); // CostAware default
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        // steady-state demotion refuses a 2-token span under CostAware…
+        assert_eq!(store.demote(entry(&[1, 2], 1)), vec![RequestId(1)]);
+        // …but the shutdown spill must keep it
+        let discarded = store.spill_for_checkpoint(vec![entry(&[1, 2], 2), entry(&[3, 4, 5], 3)]);
+        assert!(discarded.is_empty());
+        assert_eq!(store.ssd_resident_tokens(), 5);
+        assert_eq!(store.peek_longest(&[1, 2], 0), 2);
+        store.check_invariants().unwrap();
+        // capacity still binds: overflow sheds LRU and reports ids
+        let discarded = store.spill_for_checkpoint(vec![entry(&[6, 7, 8, 9], 4)]);
+        assert_eq!(discarded, vec![RequestId(2)], "LRU spill victim pruned");
+        store.check_invariants().unwrap();
+    }
+
+    /// The spill also drains the volatile DRAM shelf into SSD, preserving
+    /// relative LRU order (DRAM content is older than the hot entries).
+    #[test]
+    fn checkpoint_spill_drains_dram_before_hot() {
+        let mut cfg = TierConfig::new(16, 6);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut store: TierStore<Vec<u8>> = TierStore::new(&cfg, 5e-5);
+        store.demote(entry(&[1, 2, 3], 1)); // DRAM
+        store.demote(entry(&[4, 5, 6], 2)); // DRAM
+        let discarded = store.spill_for_checkpoint(vec![entry(&[7, 8, 9], 3)]);
+        // SSD holds 6 of the 9 spilled tokens: the OLDEST DRAM entry is
+        // the overflow victim, not the fresh hot entry
+        assert_eq!(discarded, vec![RequestId(1)]);
+        assert_eq!(store.dram_resident_tokens(), 0);
+        assert_eq!(store.ssd_resident_tokens(), 6);
+        assert_eq!(store.peek_longest(&[7, 8, 9], 0), 3);
+        assert_eq!(store.peek_longest(&[4, 5, 6], 0), 3);
+        store.check_invariants().unwrap();
+    }
+
+    /// Identical workloads against MemStorage-backed and FileStorage-backed
+    /// stores leave byte-identical storage scans (the wire form is the
+    /// backend contract, not an implementation detail).
+    #[test]
+    fn mem_and_file_backends_scan_identically() {
+        let dir = tempdir("scan");
+        let mut cfg = TierConfig::new(3, 64);
+        cfg.admission = AdmissionPolicy::Always;
+        let mut a: TierStore<Vec<u8>> =
+            TierStore::with_storage(&cfg, 5e-5, Box::new(MemStorage::new()), false).unwrap();
+        let mut b: TierStore<Vec<u8>> =
+            TierStore::with_storage(&cfg, 5e-5, file_store(&dir, false), false).unwrap();
+        for (i, k) in [&[1u32, 2, 3][..], &[9, 9][..], &[1, 2, 3][..]].iter().enumerate() {
+            a.demote(entry(k, i as u64));
+            b.demote(entry(k, i as u64));
+        }
+        a.spill_for_checkpoint(Vec::new());
+        b.spill_for_checkpoint(Vec::new());
+        assert_eq!(a.store.scan().unwrap(), b.store.scan().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

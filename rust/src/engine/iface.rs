@@ -130,6 +130,18 @@ pub trait InferenceEngine: Send {
         0
     }
 
+    /// Durable-shutdown hook: demote every resident hot/warm span into
+    /// the cold tier's storage backend and flush it. Returns the request
+    /// ids whose content finally left the hierarchy (capacity overflow) —
+    /// the caller must feed them to §4.1 pruning *before* snapshotting
+    /// its context index, exactly as it would serve-time evictions. An
+    /// `Err` carries the storage backend's failure message (the facade
+    /// maps it to [`crate::api::Error::Storage`]). Engines without a
+    /// durable cold tier have nothing to spill: the default is a no-op.
+    fn spill_for_checkpoint(&mut self) -> Result<Vec<RequestId>, String> {
+        Ok(Vec::new())
+    }
+
     /// Prefix-cache occupancy and cumulative hit/miss counters.
     fn cache_stats(&self) -> CacheStats;
 }

@@ -15,7 +15,7 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::cache::{RadixCache, Tier, TierConfig, TierStore};
+use crate::cache::{RadixCache, Storage, StorageError, Tier, TierConfig, TierStore};
 use crate::corpus::Corpus;
 use crate::engine::costmodel::CostProfile;
 use crate::engine::iface::{CacheStats, InferenceEngine};
@@ -105,10 +105,63 @@ impl SimEngine {
         engine
     }
 
+    /// Like [`SimEngine::with_tiers`], but the cold (SSD) shelf is
+    /// mirrored into a durable [`Storage`] backend. `rehydrate = true`
+    /// re-seeds the shelf from whatever the backend already holds (the
+    /// resume path); `false` starts cold over a fresh/truncated backend.
+    /// Non-radix policies have no tier store, so the backend is dropped —
+    /// durability, like tiering, is prefix-shaped only.
+    pub fn with_tiers_storage(
+        profile: CostProfile,
+        policy: ReusePolicy,
+        capacity_tokens: usize,
+        tier_cfg: &TierConfig,
+        store: Box<dyn Storage>,
+        rehydrate: bool,
+    ) -> Result<Self, StorageError> {
+        let mut engine = SimEngine::new(profile, policy, capacity_tokens);
+        if matches!(policy, ReusePolicy::RadixPrefix) {
+            engine.cache.enable_demotion();
+            engine.tiers = Some(TierStore::with_storage(
+                tier_cfg,
+                1.0 / profile.prefill_rate,
+                store,
+                rehydrate,
+            )?);
+        }
+        Ok(engine)
+    }
+
     /// Number of conversation sessions tracked by this engine — serving
     /// layer telemetry ([`crate::metrics::ShardStats`]).
     pub fn session_count(&self) -> usize {
         self.history.len()
+    }
+
+    /// Durable shutdown: evict every resident HBM span through the
+    /// demotion sink, spill it (and the whole DRAM shelf) into the SSD
+    /// tier, and flush the storage backend. Returns the request ids whose
+    /// content could not fit — the caller prunes the §4.1 index with them
+    /// before snapshotting it, exactly as for serve-time discards. The
+    /// spill bypasses the admission *cost* gate (this is shutdown, not
+    /// steady state) but never the SSD capacity. Without a tier store
+    /// there is nothing durable to spill: the call is a no-op.
+    ///
+    /// Per-session conversation history is deliberately NOT part of
+    /// durable state — a resumed engine starts fresh sessions over the
+    /// spilled context blocks (see `tests/recovery.rs`).
+    pub fn spill_for_checkpoint(&mut self) -> Result<Vec<RequestId>, String> {
+        let Some(tiers) = self.tiers.as_mut() else {
+            return Ok(Vec::new());
+        };
+        let resident = self.cache.resident_tokens();
+        let mut pruned = self.cache.evict_tokens(resident);
+        let hot = self.cache.take_demotions();
+        pruned.extend(tiers.spill_for_checkpoint(hot));
+        pruned.sort_unstable();
+        pruned.dedup();
+        tiers.storage_flush().map_err(|e| e.to_string())?;
+        Ok(pruned)
     }
 
     /// Peek how many leading tokens of this prompt would hit the cache
@@ -377,6 +430,10 @@ impl InferenceEngine for SimEngine {
 
     fn session_count(&self) -> usize {
         SimEngine::session_count(self)
+    }
+
+    fn spill_for_checkpoint(&mut self) -> Result<Vec<RequestId>, String> {
+        SimEngine::spill_for_checkpoint(self)
     }
 
     fn cache_stats(&self) -> CacheStats {
@@ -725,5 +782,115 @@ mod tests {
         let stats = InferenceEngine::cache_stats(&e);
         assert!(stats.discarded_tokens > 0);
         assert!(stats.demoted_tokens > 0);
+    }
+
+    #[test]
+    fn zero_capacity_cold_tier_is_bit_identical_to_discard_mode() {
+        // `dram=0,ssd=0` leaves demotion enabled but every demoted entry
+        // is refused and discarded on the spot — serving results and §4.1
+        // prune ids must match classic discard eviction exactly
+        let (mut discard, corpus, qm) = setup(ReusePolicy::RadixPrefix, 600);
+        let mut zero = SimEngine::with_tiers(
+            ModelSku::Qwen3_32B.profile(),
+            ReusePolicy::RadixPrefix,
+            600,
+            &TierConfig::new(0, 0),
+        );
+        for i in 0..8u64 {
+            let ids = [i as u32 * 4 + 1, i as u32 * 4 + 2, i as u32 * 4 + 3];
+            let r = req(i, i as u32, 0, &ids);
+            let p = Prompt::baseline(&r);
+            let (sz, mut ez) = zero.serve(&r, &p, &corpus, &qm, 4);
+            let (sd, mut ed) = discard.serve(&r, &p, &corpus, &qm, 4);
+            ez.sort_unstable();
+            ed.sort_unstable();
+            assert_eq!(ez, ed, "prune ids diverged at req {i}");
+            assert_eq!(sz.cached_tokens, sd.cached_tokens, "req {i}");
+            assert_eq!(sz.ttft, sd.ttft, "req {i}");
+            assert_eq!(sz.tier_hits, sd.tier_hits, "req {i}");
+        }
+        let z = InferenceEngine::cache_stats(&zero);
+        let d = InferenceEngine::cache_stats(&discard);
+        assert_eq!(z.matched_tokens, d.matched_tokens);
+        assert_eq!(z.resident_tokens, d.resident_tokens);
+        assert_eq!(z.dram_resident_tokens + z.ssd_resident_tokens, 0);
+        assert_eq!(z.promoted_tokens, 0);
+        // spill over a zero-capacity store likewise just discards
+        let pruned = zero.spill_for_checkpoint().expect("spill");
+        assert!(!pruned.is_empty());
+        assert_eq!(zero.cache.resident_tokens(), 0);
+    }
+
+    fn sim_tempdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ctxpilot-sim-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("tempdir");
+        dir
+    }
+
+    #[test]
+    fn spill_then_rehydrate_recovers_cold_hits_from_disk() {
+        use crate::cache::FileStorage;
+        let tok = Tokenizer::default();
+        let corpus = Corpus::generate(
+            &CorpusConfig {
+                n_docs: 40,
+                ..Default::default()
+            },
+            &tok,
+        );
+        let qm = QualityModel::new(ModelEra::Modern, false);
+        let dir = sim_tempdir("rehydrate");
+        let path = dir.join("cold.jsonl");
+        let cfg = TierConfig::new(1 << 20, 1 << 20);
+        let profile = ModelSku::Qwen3_32B.profile();
+
+        let mut first = SimEngine::with_tiers_storage(
+            profile,
+            ReusePolicy::RadixPrefix,
+            600,
+            &cfg,
+            Box::new(FileStorage::open(&path, false).expect("open fresh")),
+            false,
+        )
+        .expect("fresh engine");
+        for r in cycle_requests() {
+            let p = Prompt::baseline(&r);
+            first.serve(&r, &p, &corpus, &qm, 4);
+        }
+        let pruned = first.spill_for_checkpoint().expect("spill");
+        assert!(pruned.is_empty(), "roomy SSD must not discard: {pruned:?}");
+        assert_eq!(first.cache.resident_tokens(), 0, "HBM must be drained");
+        drop(first);
+
+        let mut resumed = SimEngine::with_tiers_storage(
+            profile,
+            ReusePolicy::RadixPrefix,
+            600,
+            &cfg,
+            Box::new(FileStorage::open(&path, true).expect("reopen")),
+            true,
+        )
+        .expect("resumed engine");
+        let stats = InferenceEngine::cache_stats(&resumed);
+        assert!(
+            stats.ssd_resident_tokens > 0,
+            "rehydration must repopulate the SSD shelf"
+        );
+        // a NEW session over a spilled context reloads from SSD instead of
+        // re-prefilling — the acceptance property of the recovery story
+        let probe = req(100, 100, 0, &[1, 2, 3]);
+        let p = Prompt::baseline(&probe);
+        let (s, _) = resumed.serve(&probe, &p, &corpus, &qm, 4);
+        assert!(
+            s.tier_hits.ssd > 0,
+            "resumed engine re-prefilled instead of reloading: {:?}",
+            s.tier_hits
+        );
+        assert_eq!(s.cached_tokens, s.tier_hits.total());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -17,6 +17,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::index::distance::{context_distance, overlap_count, sorted_intersection};
 use crate::types::{BlockId, Context, RequestId, SessionId};
+use crate::util::json::Json;
 
 pub type NodeId = usize;
 
@@ -400,6 +401,262 @@ impl ContextIndex {
     }
 
     // ---------------------------------------------------------------------
+    // snapshot / restore (durability)
+    // ---------------------------------------------------------------------
+
+    /// Serialize the full arena — alive *and* dead slots, the free list,
+    /// the request backlinks, and the §6 conversation records — so that
+    /// [`ContextIndex::from_snapshot`] reproduces the index
+    /// byte-identically: node ids, child order, and freq clocks all
+    /// survive, and re-snapshotting the restored index yields the exact
+    /// same string (hash-map iteration order is canonicalized by sorting;
+    /// `u64` counters ride as strings so values past 2^53 stay exact; the
+    /// root's infinite `cluster_dist` uses an `"inf"` sentinel because the
+    /// JSON codec cannot carry non-finite numbers).
+    pub fn to_snapshot(&self) -> Json {
+        fn dist(d: f64) -> Json {
+            if d == f64::INFINITY {
+                Json::str("inf")
+            } else {
+                Json::Num(d)
+            }
+        }
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    (
+                        "ctx",
+                        Json::Arr(n.context.iter().map(|b| Json::Num(b.0 as f64)).collect()),
+                    ),
+                    (
+                        "children",
+                        Json::Arr(n.children.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    ("parent", n.parent.map_or(Json::Null, |p| Json::Num(p as f64))),
+                    ("freq", Json::u64(n.freq)),
+                    ("dist", dist(n.cluster_dist)),
+                    (
+                        "reqs",
+                        Json::Arr(n.requests.iter().map(|r| Json::u64(r.0)).collect()),
+                    ),
+                    ("alive", Json::Bool(n.alive)),
+                ])
+            })
+            .collect();
+        let mut backlinks: Vec<(u64, usize)> =
+            self.req_to_leaf.iter().map(|(r, &l)| (r.0, l)).collect();
+        backlinks.sort_unstable();
+        let mut convs: Vec<(u32, &ConvRecord)> =
+            self.conversations.iter().map(|(s, c)| (s.0, c)).collect();
+        convs.sort_unstable_by_key(|(s, _)| *s);
+        Json::obj(vec![
+            ("alpha", Json::Num(self.alpha)),
+            ("root", Json::Num(self.root as f64)),
+            (
+                "free",
+                Json::Arr(self.free.iter().map(|&i| Json::Num(i as f64)).collect()),
+            ),
+            ("nodes", Json::Arr(nodes)),
+            (
+                "backlinks",
+                Json::Arr(
+                    backlinks
+                        .into_iter()
+                        .map(|(r, l)| Json::Arr(vec![Json::u64(r), Json::Num(l as f64)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "conversations",
+                Json::Arr(
+                    convs
+                        .into_iter()
+                        .map(|(s, c)| {
+                            let mut blocks: Vec<u32> = c.seen_blocks.iter().map(|b| b.0).collect();
+                            blocks.sort_unstable();
+                            let mut subs: Vec<(u64, u32)> =
+                                c.seen_subblocks.iter().map(|(&h, b)| (h, b.0)).collect();
+                            subs.sort_unstable();
+                            Json::obj(vec![
+                                ("session", Json::Num(s as f64)),
+                                (
+                                    "blocks",
+                                    Json::Arr(
+                                        blocks.into_iter().map(|b| Json::Num(b as f64)).collect(),
+                                    ),
+                                ),
+                                (
+                                    "subblocks",
+                                    Json::Arr(
+                                        subs.into_iter()
+                                            .map(|(h, b)| {
+                                                Json::Arr(vec![
+                                                    Json::u64(h),
+                                                    Json::Num(b as f64),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild an index from [`ContextIndex::to_snapshot`] output. Every
+    /// structural error — missing fields, out-of-range node ids, a dead
+    /// root, backlinks into dead leaves — is a `Err(String)`, never a
+    /// panic; the caller maps it to
+    /// [`crate::api::Error::CorruptSnapshot`]. A successfully decoded
+    /// index additionally passes [`ContextIndex::check_invariants`].
+    pub fn from_snapshot(j: &Json) -> Result<ContextIndex, String> {
+        fn node_id(j: &Json, bound: usize, what: &str) -> Result<NodeId, String> {
+            let id = j.as_usize().ok_or_else(|| format!("{what}: not a node id"))?;
+            if id >= bound {
+                return Err(format!("{what}: node id {id} out of range (< {bound})"));
+            }
+            Ok(id)
+        }
+        let alpha = j.get("alpha").as_f64().ok_or("alpha missing")?;
+        let nodes_j = j.get("nodes").as_arr().ok_or("nodes missing")?;
+        let bound = nodes_j.len();
+        if bound == 0 {
+            return Err("empty node arena".to_string());
+        }
+        let mut nodes: Vec<IndexNode> = Vec::with_capacity(bound);
+        for (i, nj) in nodes_j.iter().enumerate() {
+            let context = nj
+                .get("ctx")
+                .as_arr()
+                .ok_or_else(|| format!("node {i}: ctx missing"))?
+                .iter()
+                .map(|b| {
+                    b.as_f64()
+                        .filter(|n| n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(n))
+                        .map(|n| BlockId(n as u32))
+                })
+                .collect::<Option<Context>>()
+                .ok_or_else(|| format!("node {i}: bad block id"))?;
+            let children = nj
+                .get("children")
+                .as_arr()
+                .ok_or_else(|| format!("node {i}: children missing"))?
+                .iter()
+                .map(|c| node_id(c, bound, &format!("node {i} child")))
+                .collect::<Result<Vec<NodeId>, String>>()?;
+            let parent = match nj.get("parent") {
+                Json::Null => None,
+                p => Some(node_id(p, bound, &format!("node {i} parent"))?),
+            };
+            let cluster_dist = match nj.get("dist") {
+                Json::Str(s) if s == "inf" => f64::INFINITY,
+                d => d
+                    .as_f64()
+                    .filter(|x| x.is_finite())
+                    .ok_or_else(|| format!("node {i}: bad cluster_dist"))?,
+            };
+            let requests = nj
+                .get("reqs")
+                .as_arr()
+                .ok_or_else(|| format!("node {i}: reqs missing"))?
+                .iter()
+                .map(|r| r.as_u64().map(RequestId))
+                .collect::<Option<Vec<RequestId>>>()
+                .ok_or_else(|| format!("node {i}: bad request id"))?;
+            nodes.push(IndexNode {
+                context,
+                children,
+                parent,
+                freq: nj
+                    .get("freq")
+                    .as_u64()
+                    .ok_or_else(|| format!("node {i}: bad freq"))?,
+                cluster_dist,
+                requests,
+                alive: nj
+                    .get("alive")
+                    .as_bool()
+                    .ok_or_else(|| format!("node {i}: bad alive flag"))?,
+            });
+        }
+        let root = node_id(j.get("root"), bound, "root")?;
+        if !nodes[root].alive || nodes[root].parent.is_some() {
+            return Err("root must be an alive, parentless node".to_string());
+        }
+        let free = j
+            .get("free")
+            .as_arr()
+            .ok_or("free list missing")?
+            .iter()
+            .map(|f| node_id(f, bound, "free slot"))
+            .collect::<Result<Vec<NodeId>, String>>()?;
+        for &f in &free {
+            if nodes[f].alive {
+                return Err(format!("free list holds alive node {f}"));
+            }
+        }
+        let mut req_to_leaf: HashMap<RequestId, NodeId> = HashMap::new();
+        for pair in j.get("backlinks").as_arr().ok_or("backlinks missing")? {
+            let p = pair.as_arr().filter(|p| p.len() == 2).ok_or("bad backlink")?;
+            let r = p[0].as_u64().map(RequestId).ok_or("bad backlink request")?;
+            let leaf = node_id(&p[1], bound, "backlink leaf")?;
+            if req_to_leaf.insert(r, leaf).is_some() {
+                return Err(format!("request {} backlinked twice", r.0));
+            }
+        }
+        let mut conversations: HashMap<SessionId, ConvRecord> = HashMap::new();
+        for cj in j.get("conversations").as_arr().ok_or("conversations missing")? {
+            let session = cj
+                .get("session")
+                .as_usize()
+                .filter(|&s| s <= u32::MAX as usize)
+                .map(|s| SessionId(s as u32))
+                .ok_or("bad conversation session")?;
+            let mut rec = ConvRecord::default();
+            for b in cj.get("blocks").as_arr().ok_or("conversation blocks missing")? {
+                let b = b
+                    .as_usize()
+                    .filter(|&v| v <= u32::MAX as usize)
+                    .map(|v| BlockId(v as u32))
+                    .ok_or("bad conversation block")?;
+                rec.seen_blocks.insert(b);
+            }
+            for sb in cj
+                .get("subblocks")
+                .as_arr()
+                .ok_or("conversation subblocks missing")?
+            {
+                let p = sb.as_arr().filter(|p| p.len() == 2).ok_or("bad subblock")?;
+                let h = p[0].as_u64().ok_or("bad subblock hash")?;
+                let b = p[1]
+                    .as_usize()
+                    .filter(|&v| v <= u32::MAX as usize)
+                    .map(|v| BlockId(v as u32))
+                    .ok_or("bad subblock block")?;
+                rec.seen_subblocks.insert(h, b);
+            }
+            if conversations.insert(session, rec).is_some() {
+                return Err("conversation recorded twice".to_string());
+            }
+        }
+        let ix = ContextIndex {
+            nodes,
+            free,
+            root,
+            req_to_leaf,
+            alpha,
+            conversations,
+        };
+        ix.check_invariants()?;
+        Ok(ix)
+    }
+
+    // ---------------------------------------------------------------------
     // invariants (tests / failure injection)
     // ---------------------------------------------------------------------
 
@@ -647,5 +904,117 @@ mod tests {
         ix.search(&ctx(&[1, 4, 0]));
         ix.search(&ctx(&[1, 2, 3]));
         assert!(ix.node(c5).freq > f0);
+    }
+
+    // ---- snapshot / restore -----------------------------------------------
+
+    use crate::util::prng::Rng;
+    use crate::util::prop::{check, Config};
+
+    /// A realistic index: interleaved insert/evict so the arena has dead
+    /// slots and a non-empty free list, plus §6 conversation records with
+    /// a sub-block hash past 2^53 (the f64-precision trap).
+    fn seeded_index(rng: &mut Rng, ops: usize) -> ContextIndex {
+        let mut ix = ContextIndex::new(0.001);
+        let mut next_req = 0u64;
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..ops {
+            if rng.below(4) < 3 || live.is_empty() {
+                let len = 1 + rng.below(5);
+                let c: Context = (0..len).map(|_| BlockId(rng.below(30) as u32)).collect();
+                let f = ix.search(&c);
+                ix.insert_at(&f, c, RequestId(next_req));
+                live.push(next_req);
+                next_req += 1;
+            } else {
+                let i = rng.below(live.len());
+                ix.on_evict(&[RequestId(live.swap_remove(i))]);
+            }
+        }
+        ix.conversation(SessionId(1)).seen_blocks.insert(BlockId(3));
+        ix.conversation(SessionId(2))
+            .seen_subblocks
+            .insert(0xDEAD_BEEF_DEAD_BEEF, BlockId(7));
+        ix
+    }
+
+    /// Satellite: snapshot → restore round-trips the index byte-identically
+    /// on seeded workloads — invariants hold, `known_blocks` and `search`
+    /// agree, and re-snapshotting reproduces the exact same string.
+    #[test]
+    fn prop_snapshot_restore_roundtrips_byte_identically() {
+        check(
+            "index snapshot round-trip",
+            Config {
+                cases: 48,
+                base_seed: 0x55AA,
+                max_size: 40,
+            },
+            |rng: &mut Rng, size| {
+                let ix = seeded_index(rng, size.max(1));
+                let snap = ix.to_snapshot().to_string();
+                let parsed = Json::parse(&snap).map_err(|e| e.to_string())?;
+                let restored =
+                    ContextIndex::from_snapshot(&parsed).map_err(|e| format!("restore: {e}"))?;
+                restored.check_invariants()?;
+                if restored.to_snapshot().to_string() != snap {
+                    return Err("re-snapshot diverged from the original".to_string());
+                }
+                for probe in [&[1u32, 2, 3][..], &[5][..], &[9, 10, 11, 12][..]] {
+                    let c: Context = probe.iter().map(|&b| BlockId(b)).collect();
+                    if restored.known_blocks(&c) != ix.known_blocks(&c) {
+                        return Err("known_blocks diverged after restore".to_string());
+                    }
+                    // search mutates freq clocks: drive two clones in lockstep
+                    let (mut a, mut b) = (ix.clone(), restored.clone());
+                    if a.search(&c) != b.search(&c) {
+                        return Err("search diverged after restore".to_string());
+                    }
+                }
+                if restored.conversation_ref(SessionId(2)).map(|c| {
+                    c.seen_subblocks.get(&0xDEAD_BEEF_DEAD_BEEF).copied()
+                }) != Some(Some(BlockId(7)))
+                {
+                    return Err("sub-block hash lost precision".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Satellite: a damaged snapshot is an `Err`, never a panic.
+    #[test]
+    fn corrupt_snapshots_error_instead_of_panicking() {
+        let (ix, _, _) = fig4_index();
+        let good = ix.to_snapshot().to_string();
+        assert!(ContextIndex::from_snapshot(&Json::parse(&good).unwrap()).is_ok());
+        // truncation anywhere: either the JSON no longer parses, or the
+        // decoded value is structurally rejected — in no case a panic
+        for cut in 1..good.len() {
+            if let Ok(j) = Json::parse(&good[..cut]) {
+                assert!(ContextIndex::from_snapshot(&j).is_err(), "cut at {cut}");
+            }
+        }
+        let one_node = r#""nodes":[{"alive":true,"children":[],"ctx":[],"dist":"inf","freq":"0","parent":null,"reqs":[]}]"#;
+        for bad in [
+            "null".to_string(),
+            "{}".to_string(),
+            // root out of range / dead / parented
+            format!(r#"{{"alpha":0.001,"backlinks":[],"conversations":[],"free":[],{one_node},"root":5}}"#),
+            // child id out of range
+            format!(r#"{{"alpha":0.001,"backlinks":[],"conversations":[],"free":[],"nodes":[{{"alive":true,"children":[9],"ctx":[],"dist":"inf","freq":"0","parent":null,"reqs":[]}}],"root":0}}"#),
+            // free list holding an alive node
+            format!(r#"{{"alpha":0.001,"backlinks":[],"conversations":[],"free":[0],{one_node},"root":0}}"#),
+            // backlink to a node that does not list the request
+            format!(r#"{{"alpha":0.001,"backlinks":[["7",0]],"conversations":[],"free":[],{one_node},"root":0}}"#),
+            // freq that is not a u64
+            r#"{"alpha":0.001,"backlinks":[],"conversations":[],"free":[],"nodes":[{"alive":true,"children":[],"ctx":[],"dist":"inf","freq":-3,"parent":null,"reqs":[]}],"root":0}"#.to_string(),
+        ] {
+            let j = Json::parse(&bad).expect("test inputs are valid JSON");
+            assert!(
+                ContextIndex::from_snapshot(&j).is_err(),
+                "accepted corrupt snapshot: {bad}"
+            );
+        }
     }
 }

@@ -42,6 +42,9 @@
 //!        │ evict = demote ▼  ▲ promote @ reload cost
 //!   cache::TierStore (DRAM ⇄ SSD tiers behind the radix cache, `--tiers`;
 //!    cost-aware admission/promotion in [`cache::policy`])
+//!        │ SSD shelf write-through ▼  ▲ rebuilt on resume
+//!   cache::storage::Storage (durable cold-tier backend, `--state-dir`:
+//!    MemStorage default / FileStorage segment log + warm-state snapshot)
 //!   ```
 //!
 //!   Sessions are pinned to shards (each owning a context index, a prefix

@@ -241,6 +241,15 @@ fn cmd_serve(args: &Args) {
     let tiers = args
         .get("tiers")
         .map(|spec| check("--tiers", TierConfig::parse(spec)));
+    // --state-dir DIR — durable serving: cold KV segments + a warm-state
+    // snapshot live under DIR; a run against a DIR that already holds a
+    // snapshot resumes from it, otherwise it starts fresh. A checkpoint
+    // is written after the workload drains.
+    let state_dir = args.get("state-dir").map(std::path::PathBuf::from);
+    if state_dir.is_some() && engine_kind != "sim" {
+        eprintln!("--state-dir requires --engine sim (custom engines own their storage)");
+        std::process::exit(2);
+    }
 
     if shards > 1
         || workers > 1
@@ -248,6 +257,7 @@ fn cmd_serve(args: &Args) {
         || engine_kind != "sim"
         || tiers.is_some()
         || placement != PlacementKind::SessionHash
+        || state_dir.is_some()
     {
         // concurrent sharded serving path (trait-generic backend)
         let mut scfg = exp::serve_config(&system, &workload, &cfg);
@@ -279,10 +289,17 @@ fn cmd_serve(args: &Args) {
         }
         match engine_kind.as_str() {
             "sim" => {
-                let server = check(
-                    "serve config",
-                    ServerBuilder::from_config(scfg).corpus(corpus.clone()).build(),
-                );
+                let mut builder = ServerBuilder::from_config(scfg).corpus(corpus.clone());
+                if let Some(dir) = &state_dir {
+                    builder = if dir.join("snapshot.json").exists() {
+                        println!("state dir        : {} (resuming from snapshot)", dir.display());
+                        builder.resume_from(dir)
+                    } else {
+                        println!("state dir        : {} (fresh)", dir.display());
+                        builder.state_dir(dir)
+                    };
+                }
+                let server = check("serve config", builder.build());
                 drive_sharded(
                     &server,
                     system.name(),
@@ -291,6 +308,10 @@ fn cmd_serve(args: &Args) {
                     cfg.offline,
                     cfg.capacity_tokens,
                 );
+                if state_dir.is_some() {
+                    let path = check("checkpoint", server.checkpoint());
+                    println!("checkpoint       : {}", path.display());
+                }
             }
             "real" => {
                 #[cfg(feature = "pjrt")]
@@ -413,6 +434,8 @@ fn main() {
             println!("         --prefill-chunk TOKENS   (chunked-prefill admission)");
             println!("         --tiers hbm=N,dram=N,ssd=N (KV tier store: evict = demote, not discard)");
             println!("         --placement session|rr|context (first-turn session -> shard policy)");
+            println!("         --state-dir DIR          (durable cold KV + warm snapshot; resumes");
+            println!("                                   automatically when DIR holds a snapshot)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|capacity|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

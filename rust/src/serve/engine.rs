@@ -26,11 +26,13 @@ use crate::api::Error;
 use crate::corpus::Corpus;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
+use crate::index::tree::ContextIndex;
 use crate::metrics::{RunMetrics, ShardStats};
 use crate::serve::placement::{PlacementBook, ShardProbe};
 use crate::serve::shard::{shard_of, Shard};
-use crate::serve::ServeConfig;
+use crate::serve::{PlacementKind, ServeConfig};
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
+use crate::util::json::Json;
 use crate::util::threadpool::par_map_tasks;
 
 /// Lock a facade-boundary mutex, converting poison (a worker thread
@@ -293,6 +295,156 @@ impl<E: InferenceEngine> ServingEngine<E> {
             }
         }
         Ok(())
+    }
+
+    /// Durable checkpoint (behind [`crate::api::Server::checkpoint`]):
+    /// spill every shard's hot/warm KV into its cold-tier storage backend,
+    /// prune each context index with whatever the spill finally discarded
+    /// (§4.1 — a checkpoint discard is an eviction like any other), and
+    /// return the versioned warm-state snapshot: the placement book, the
+    /// request → shard ownership map, and the per-shard context indices.
+    /// The caller persists the returned value as one `snapshot.json`; the
+    /// cold KV payloads themselves already live in the per-shard storage
+    /// backends the spill flushed.
+    ///
+    /// Offline-build placements ([`crate::pilot::ContextPilot`]'s private
+    /// ledger) are wave-scoped and deliberately not part of durable state.
+    ///
+    /// Lock order: placement → shard → request map, same as serving.
+    pub fn checkpoint_snapshot(&self) -> Result<Json, Error> {
+        let placement = shard_guard(&self.placement, "placement ledger")?.to_snapshot();
+        let mut shard_rows = Vec::with_capacity(self.shards.len());
+        for (s, m) in self.shards.iter().enumerate() {
+            let mut shard = shard_guard(m, "shard")?;
+            let discards = shard
+                .engine
+                .spill_for_checkpoint()
+                .map_err(|e| Error::Storage(format!("shard {s}: {e}")))?;
+            if let Some(p) = &mut shard.pilot {
+                p.on_evict(&discards);
+            }
+            {
+                let mut map = shard_guard(&self.req_shard, "request map")?;
+                for r in &discards {
+                    map.remove(r);
+                }
+            }
+            let index = match &shard.pilot {
+                Some(p) => p.index.to_snapshot(),
+                None => Json::Null,
+            };
+            shard_rows.push(Json::obj(vec![("index", index)]));
+        }
+        let mut req_rows: Vec<(u64, usize)> = shard_guard(&self.req_shard, "request map")?
+            .iter()
+            .map(|(r, &s)| (r.0, s))
+            .collect();
+        req_rows.sort_unstable();
+        Ok(Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("n_shards", Json::num(self.shards.len() as f64)),
+            ("placement", placement),
+            (
+                "req_shard",
+                Json::arr(
+                    req_rows
+                        .into_iter()
+                        .map(|(r, s)| Json::arr(vec![Json::u64(r), Json::num(s as f64)]))
+                        .collect(),
+                ),
+            ),
+            ("shards", Json::arr(shard_rows)),
+        ]))
+    }
+
+    /// Rehydrate warm state from a [`ServingEngine::checkpoint_snapshot`]
+    /// value (behind [`crate::api::ServerBuilder::resume_from`]). The
+    /// engine must be freshly built with the same shard count; the cold KV
+    /// itself is rehydrated separately when each shard's engine opens its
+    /// storage backend. Validation is all-or-nothing: every structural
+    /// problem is found *before* any state is replaced, and surfaces as
+    /// [`Error::CorruptSnapshot`]. A snapshot index for a shard configured
+    /// without a pilot is dropped (placement pins are pilot-independent,
+    /// like restoring under a different placement policy).
+    pub fn restore_snapshot(&self, j: &Json) -> Result<(), Error> {
+        let (book, map, indices) =
+            Self::parse_snapshot(self.cfg.placement, self.shards.len(), j)
+                .map_err(Error::CorruptSnapshot)?;
+        *shard_guard(&self.placement, "placement ledger")? = book;
+        *shard_guard(&self.req_shard, "request map")? = map;
+        for (s, ix) in indices.into_iter().enumerate() {
+            if let Some(ix) = ix {
+                let mut shard = shard_guard(&self.shards[s], "shard")?;
+                if let Some(p) = &mut shard.pilot {
+                    p.index = ix;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode + validate a snapshot without touching live state.
+    fn parse_snapshot(
+        kind: PlacementKind,
+        n_shards: usize,
+        j: &Json,
+    ) -> Result<
+        (
+            PlacementBook,
+            HashMap<RequestId, usize>,
+            Vec<Option<ContextIndex>>,
+        ),
+        String,
+    > {
+        let version = j
+            .get("version")
+            .as_usize()
+            .ok_or("missing snapshot version")?;
+        if version != 1 {
+            return Err(format!("unsupported snapshot version {version}"));
+        }
+        let n = j.get("n_shards").as_usize().ok_or("missing n_shards")?;
+        if n != n_shards {
+            return Err(format!(
+                "snapshot taken with {n} shards, but the resumed server has {n_shards}"
+            ));
+        }
+        let book = PlacementBook::from_snapshot(kind, n, j.get("placement"))?;
+        let rows = j.get("req_shard").as_arr().ok_or("missing req_shard")?;
+        let mut map = HashMap::with_capacity(rows.len());
+        for row in rows {
+            let pair = row
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or("malformed req_shard row")?;
+            let r = pair[0].as_u64().ok_or("bad request id in req_shard")?;
+            let s = pair[1]
+                .as_usize()
+                .filter(|&s| s < n)
+                .ok_or("req_shard row points past the shard array")?;
+            if map.insert(RequestId(r), s).is_some() {
+                return Err(format!("request {r} owned by two shards"));
+            }
+        }
+        let shards = j.get("shards").as_arr().ok_or("missing shards array")?;
+        if shards.len() != n {
+            return Err(format!(
+                "shards array holds {} rows for {n} shards",
+                shards.len()
+            ));
+        }
+        let mut indices = Vec::with_capacity(n);
+        for (s, row) in shards.iter().enumerate() {
+            row.as_obj().ok_or_else(|| format!("shard {s} row is not an object"))?;
+            indices.push(match row.get("index") {
+                Json::Null => None,
+                idx => Some(
+                    ContextIndex::from_snapshot(idx)
+                        .map_err(|e| format!("shard {s} index: {e}"))?,
+                ),
+            });
+        }
+        Ok((book, map, indices))
     }
 
     /// Aggregate run metrics plus a per-shard telemetry snapshot. Shard
@@ -604,6 +756,50 @@ mod tests {
                 shard_of(SessionId(s), 5),
                 "session {s} diverged from the legacy hash"
             );
+        }
+    }
+
+    #[test]
+    fn checkpoint_snapshot_roundtrips_through_a_fresh_engine() {
+        let corpus = corpus();
+        let engine = sim_engine(small_cfg(3, 2));
+        let reqs: Vec<Request> = (0..18)
+            .map(|i| req(i, i as u32 % 6, &[(i % 7) as u32 + 1, 9]))
+            .collect();
+        engine.serve_batch(&reqs, &corpus).unwrap();
+        let snap = engine.checkpoint_snapshot().unwrap();
+        let fresh = sim_engine(small_cfg(3, 2));
+        fresh.restore_snapshot(&snap).unwrap();
+        // session pins survive verbatim
+        for s in 0..6u32 {
+            assert_eq!(
+                fresh.placed_shard(SessionId(s)).unwrap(),
+                engine.placed_shard(SessionId(s)).unwrap()
+            );
+        }
+        // re-checkpointing the restored engine reproduces the snapshot
+        // byte-for-byte (no tier store here, so the spill is a no-op and
+        // only warm state is in play)
+        let snap2 = fresh.checkpoint_snapshot().unwrap();
+        assert_eq!(snap.to_string(), snap2.to_string());
+    }
+
+    #[test]
+    fn restore_rejects_shard_count_mismatch_and_garbage() {
+        let corpus = corpus();
+        let engine = sim_engine(small_cfg(3, 2));
+        engine.serve_batch(&[req(1, 1, &[1, 2])], &corpus).unwrap();
+        let snap = engine.checkpoint_snapshot().unwrap();
+        let other = sim_engine(small_cfg(2, 2));
+        match other.restore_snapshot(&snap) {
+            Err(Error::CorruptSnapshot(msg)) => {
+                assert!(msg.contains("shards"), "unhelpful message: {msg}")
+            }
+            r => panic!("expected CorruptSnapshot, got {r:?}"),
+        }
+        match engine.restore_snapshot(&Json::Null) {
+            Err(Error::CorruptSnapshot(_)) => {}
+            r => panic!("expected CorruptSnapshot, got {r:?}"),
         }
     }
 

@@ -75,6 +75,15 @@
 //!   on *final* discard (content in a cold tier is still servable).
 //!   Per-request hit tokens split hot/warm/cold
 //!   ([`crate::types::TierHits`], [`crate::metrics::ShardStats`]).
+//! * **Durability** — on the durable path
+//!   ([`crate::api::ServerBuilder::state_dir`]) each shard's SSD shelf is
+//!   write-through mirrored into a [`crate::cache::Storage`] backend
+//!   ([`ServeConfig::sim_engine_with_storage`]), and
+//!   `ServingEngine::checkpoint_snapshot` spills every resident span cold
+//!   and captures the warm state (context indices, placement book,
+//!   request ownership) as one versioned JSON value that
+//!   `restore_snapshot` rehydrates all-or-nothing on resume. Pinned
+//!   end-to-end by `rust/tests/recovery.rs`.
 //! * **Determinism** — shard state (including the tier store) is
 //!   session-local and queues preserve arrival order, so hit/miss results
 //!   and the hot/warm/cold split are independent of `n_workers` (and of
@@ -102,7 +111,7 @@ pub use shard::shard_of;
 
 use std::collections::HashMap;
 
-use crate::cache::TierConfig;
+use crate::cache::{Storage, StorageError, TierConfig};
 use crate::engine::costmodel::{CostProfile, ModelSku};
 use crate::engine::sim::{ReusePolicy, SimEngine};
 use crate::pilot::PilotConfig;
@@ -180,6 +189,30 @@ impl ServeConfig {
         match &self.tiers {
             Some(t) => SimEngine::with_tiers(self.profile, self.policy, self.capacity_tokens, t),
             None => SimEngine::new(self.profile, self.policy, self.capacity_tokens),
+        }
+    }
+
+    /// Like [`ServeConfig::sim_engine`], but the cold (SSD) shelf is
+    /// mirrored into `store` — the durable path behind
+    /// [`crate::api::ServerBuilder::state_dir`]. `rehydrate` re-seeds the
+    /// shelf from whatever the backend already holds (resume). Without a
+    /// tier config there is no cold shelf to mirror: the store is dropped
+    /// and only the warm-state snapshot carries across restarts.
+    pub fn sim_engine_with_storage(
+        &self,
+        store: Box<dyn Storage>,
+        rehydrate: bool,
+    ) -> Result<SimEngine, StorageError> {
+        match &self.tiers {
+            Some(t) => SimEngine::with_tiers_storage(
+                self.profile,
+                self.policy,
+                self.capacity_tokens,
+                t,
+                store,
+                rehydrate,
+            ),
+            None => Ok(SimEngine::new(self.profile, self.policy, self.capacity_tokens)),
         }
     }
 }

@@ -36,6 +36,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::serve::shard::shard_of;
 use crate::types::{BlockId, Request, RequestId, ServedRequest, SessionId};
+use crate::util::json::Json;
 
 /// Which placement policy the serving layer runs (CLI `--placement`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -130,6 +131,20 @@ pub trait PlacementPolicy: Send {
     /// Wave boundary: the serving layer starts a new admission wave
     /// (batch) or a streaming singleton. Wave-local state resets here.
     fn begin_wave(&mut self) {}
+
+    /// Durable cross-wave state, for checkpoint/restore. Only
+    /// [`RoundRobin`] has any (its cursor); wave-local state like
+    /// [`ContextAware`]'s block-home overlay is cleared at every wave
+    /// boundary and must NOT be snapshotted.
+    fn snapshot_state(&self) -> u64 {
+        0
+    }
+
+    /// Restore [`PlacementPolicy::snapshot_state`]. Policies without
+    /// durable state ignore it, which also makes restoring a snapshot
+    /// taken under a *different* configured policy well-defined: the pins
+    /// are policy-independent, the foreign counter is dropped.
+    fn restore_state(&mut self, _state: u64) {}
 }
 
 /// Today's behaviour, verbatim: [`shard_of`] on the session id.
@@ -177,6 +192,14 @@ impl PlacementPolicy for RoundRobin {
             shard,
             affinity: false,
         }
+    }
+
+    fn snapshot_state(&self) -> u64 {
+        self.next as u64
+    }
+
+    fn restore_state(&mut self, state: u64) {
+        self.next = state as usize;
     }
 }
 
@@ -383,6 +406,135 @@ impl PlacementBook {
     pub(crate) fn affinity_hit_tokens(&self) -> &[u64] {
         &self.affinity_hit_tokens
     }
+
+    // ---------------------------------------------------------------------
+    // snapshot / restore (durability)
+    // ---------------------------------------------------------------------
+
+    /// Serialize every durable ledger: pins (with their affinity flag),
+    /// the counted-request set, the per-shard counters, and the policy's
+    /// cross-wave state. Hash-set iteration order is canonicalized by
+    /// sorting, so identical books snapshot to identical strings.
+    pub(crate) fn to_snapshot(&self) -> Json {
+        let mut pins: Vec<(u32, usize, bool)> = self
+            .pins
+            .iter()
+            .map(|(s, p)| (s.0, p.shard, p.affinity))
+            .collect();
+        pins.sort_unstable();
+        let mut counted: Vec<u64> = self.counted.iter().map(|r| r.0).collect();
+        counted.sort_unstable();
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.kind().name())),
+            ("policy_state", Json::u64(self.policy.snapshot_state())),
+            (
+                "pins",
+                Json::Arr(
+                    pins.into_iter()
+                        .map(|(s, shard, affinity)| {
+                            Json::Arr(vec![
+                                Json::Num(s as f64),
+                                Json::Num(shard as f64),
+                                Json::Bool(affinity),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "counted",
+                Json::Arr(counted.into_iter().map(Json::u64).collect()),
+            ),
+            (
+                "placed_requests",
+                Json::Arr(self.placed_requests.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "placed_sessions",
+                Json::Arr(self.placed_sessions.iter().map(|&n| Json::Num(n as f64)).collect()),
+            ),
+            (
+                "affinity_hit_tokens",
+                Json::Arr(self.affinity_hit_tokens.iter().map(|&n| Json::u64(n)).collect()),
+            ),
+        ])
+    }
+
+    /// Rebuild a book under the *configured* policy `kind` (which may
+    /// differ from the snapshot's — pins are policy-independent, and a
+    /// foreign policy counter is dropped by the default
+    /// [`PlacementPolicy::restore_state`]). Pins to shards the resumed
+    /// server does not have are a structural error, never a panic.
+    pub(crate) fn from_snapshot(
+        kind: PlacementKind,
+        n_shards: usize,
+        j: &Json,
+    ) -> Result<PlacementBook, String> {
+        let mut book = PlacementBook::new(kind, n_shards);
+        let snap_kind = j.get("policy").as_str().ok_or("placement policy missing")?;
+        let state = j
+            .get("policy_state")
+            .as_u64()
+            .ok_or("placement policy state missing")?;
+        if snap_kind == kind.name() {
+            book.policy.restore_state(state);
+        }
+        for pin in j.get("pins").as_arr().ok_or("pins missing")? {
+            let p = pin.as_arr().filter(|p| p.len() == 3).ok_or("bad pin")?;
+            let session = p[0]
+                .as_usize()
+                .filter(|&s| s <= u32::MAX as usize)
+                .map(|s| SessionId(s as u32))
+                .ok_or("bad pin session")?;
+            let shard = p[1].as_usize().ok_or("bad pin shard")?;
+            if shard >= n_shards {
+                return Err(format!(
+                    "pin to shard {shard}, but the resumed server has {n_shards}"
+                ));
+            }
+            let affinity = p[2].as_bool().ok_or("bad pin affinity flag")?;
+            if book.pins.insert(session, Pin { shard, affinity }).is_some() {
+                return Err(format!("session {} pinned twice", session.0));
+            }
+        }
+        for r in j.get("counted").as_arr().ok_or("counted set missing")? {
+            book.counted
+                .insert(RequestId(r.as_u64().ok_or("bad counted request id")?));
+        }
+        for (name, dst) in [
+            ("placed_requests", &mut book.placed_requests),
+            ("placed_sessions", &mut book.placed_sessions),
+        ] {
+            let arr = j.get(name).as_arr().ok_or_else(|| format!("{name} missing"))?;
+            if arr.len() != n_shards {
+                return Err(format!(
+                    "{name} has {} shards, the resumed server {n_shards}",
+                    arr.len()
+                ));
+            }
+            *dst = arr
+                .iter()
+                .map(Json::as_usize)
+                .collect::<Option<Vec<usize>>>()
+                .ok_or_else(|| format!("bad {name} counter"))?;
+        }
+        let hits = j
+            .get("affinity_hit_tokens")
+            .as_arr()
+            .ok_or("affinity_hit_tokens missing")?;
+        if hits.len() != n_shards {
+            return Err(format!(
+                "affinity_hit_tokens has {} shards, the resumed server {n_shards}",
+                hits.len()
+            ));
+        }
+        book.affinity_hit_tokens = hits
+            .iter()
+            .map(Json::as_u64)
+            .collect::<Option<Vec<u64>>>()
+            .ok_or("bad affinity_hit_tokens counter")?;
+        Ok(book)
+    }
 }
 
 #[cfg(test)]
@@ -543,5 +695,58 @@ mod tests {
         };
         book.record_served(std::slice::from_ref(&served));
         assert_eq!(book.affinity_hit_tokens(), &[40, 0]);
+    }
+
+    #[test]
+    fn book_snapshot_restores_pins_counters_and_rr_cursor() {
+        let mut book = PlacementBook::new(PlacementKind::RoundRobin, 3);
+        for i in 0..5u64 {
+            book.assign(&req(i, i as u32, &[1]), None);
+        }
+        let snap = book.to_snapshot();
+        let restored =
+            PlacementBook::from_snapshot(PlacementKind::RoundRobin, 3, &snap).unwrap();
+        // identical ledgers snapshot to identical strings (canonical order)
+        assert_eq!(restored.to_snapshot().to_string(), snap.to_string());
+        for s in 0..5u32 {
+            assert_eq!(restored.pins.get(&SessionId(s)).map(|p| p.shard),
+                       book.pins.get(&SessionId(s)).map(|p| p.shard));
+        }
+        // the round-robin cursor resumed where it left off: the next NEW
+        // session continues the cycle instead of restarting at shard 0
+        let mut a = book;
+        let mut b = restored;
+        assert_eq!(
+            a.assign(&req(90, 90, &[1]), None),
+            b.assign(&req(90, 90, &[1]), None)
+        );
+        // already-counted requests stay counted after restore
+        let before = b.placed_requests_on(0);
+        b.assign(&req(0, 0, &[1]), None);
+        assert_eq!(b.placed_requests_on(0), before, "request re-counted");
+    }
+
+    #[test]
+    fn book_snapshot_rejects_foreign_shard_counts() {
+        let mut book = PlacementBook::new(PlacementKind::SessionHash, 4);
+        book.assign(&req(1, 1, &[1]), None);
+        let snap = book.to_snapshot();
+        // shrinking the shard count orphans pins: structural error
+        let err = PlacementBook::from_snapshot(PlacementKind::SessionHash, 1, &snap);
+        assert!(err.is_err(), "orphaned pin accepted");
+        assert!(PlacementBook::from_snapshot(PlacementKind::SessionHash, 4, &Json::Null).is_err());
+    }
+
+    #[test]
+    fn book_snapshot_across_policies_keeps_pins_drops_state() {
+        let mut book = PlacementBook::new(PlacementKind::RoundRobin, 2);
+        book.assign(&req(1, 1, &[1]), None);
+        let pinned = book.pinned(SessionId(1)).unwrap();
+        let restored =
+            PlacementBook::from_snapshot(PlacementKind::SessionHash, 2, &book.to_snapshot())
+                .unwrap();
+        assert_eq!(restored.pinned(SessionId(1)), Some(pinned), "pin lost");
+        assert_eq!(restored.policy.kind(), PlacementKind::SessionHash);
+        assert_eq!(restored.policy.snapshot_state(), 0, "foreign state kept");
     }
 }

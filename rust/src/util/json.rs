@@ -73,6 +73,19 @@ impl Json {
         }
     }
 
+    /// Read a `u64` stored via [`Json::u64`] (a decimal string). Small
+    /// plain numbers are accepted too, as long as they survive the f64
+    /// round-trip exactly.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Str(s) => s.parse::<u64>().ok(),
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -109,6 +122,14 @@ impl Json {
 
     pub fn num(x: f64) -> Json {
         Json::Num(x)
+    }
+
+    /// Encode a `u64` losslessly. `Json::Num` is an f64, which silently
+    /// rounds integers above 2^53 — request ids, content hashes and
+    /// frequency clocks must survive a snapshot bit-exactly, so they ride
+    /// as decimal strings instead ([`Json::as_u64`] reads them back).
+    pub fn u64(x: u64) -> Json {
+        Json::Str(x.to_string())
     }
 
     pub fn str(s: impl Into<String>) -> Json {
@@ -418,5 +439,20 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string(), "42");
         assert_eq!(Json::Num(2.5).to_string(), "2.5");
+    }
+
+    #[test]
+    fn u64_roundtrips_above_f64_precision() {
+        for x in [0u64, 1, 1 << 53, u64::MAX, 0xDEAD_BEEF_DEAD_BEEF] {
+            let j = Json::u64(x);
+            assert_eq!(j.as_u64(), Some(x));
+            let reparsed = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(reparsed.as_u64(), Some(x));
+        }
+        // small plain numbers are accepted, imprecise/negative ones not
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(2.5).as_u64(), None);
+        assert_eq!(Json::Str("not a number".into()).as_u64(), None);
     }
 }

@@ -115,6 +115,17 @@ fn malformed_tier_specs_are_invalid_config() {
         );
         assert!(!msg.is_empty(), "spec '{bad}' must explain itself");
     }
+    // duplicate keys are ambiguous, not last-wins ("hbm=64k,hbm=1" used to
+    // silently mean hbm=1)
+    for dup in ["hbm=64k,hbm=1", "hbm=1,dram=2,dram=3", "hbm=1,ssd=2,ssd=2"] {
+        let msg = invalid_msg(
+            Server::builder(ModelSku::Qwen3_4B)
+                .tiers(dup)
+                .corpus(small_corpus())
+                .build(),
+        );
+        assert!(msg.contains("more than once"), "spec '{dup}': {msg}");
+    }
     // the k/m-suffixed shape from the docs parses
     let server = Server::builder(ModelSku::Qwen3_4B)
         .tiers("hbm=64k,dram=256k")
@@ -244,6 +255,13 @@ fn remaining_error_variants_display_and_box() {
     assert!(failed.to_string().contains("lost request"));
     let boxed: Box<dyn std::error::Error> = Box::new(failed);
     assert!(boxed.to_string().starts_with("engine failure"));
+    // the durable-path variants (provoked end-to-end in tests/recovery.rs)
+    let io = Error::Storage("disk on fire".into());
+    assert!(io.to_string().starts_with("storage failure"));
+    assert!(io.to_string().contains("disk on fire"));
+    let bad = Error::CorruptSnapshot("snapshot.json line 3".into());
+    assert!(bad.to_string().starts_with("corrupt snapshot"));
+    assert!(bad.to_string().contains("line 3"));
 }
 
 // ---- facade equivalence ----------------------------------------------------

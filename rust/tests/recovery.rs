@@ -1,0 +1,303 @@
+//! Crash-recovery acceptance pins for the durable serving path
+//! (`--state-dir` / `ServerBuilder::state_dir` / `resume_from`).
+//!
+//! What must hold across a restart:
+//!  * serve → checkpoint → drop → resume, then replaying recurring
+//!    contexts reports **cold-tier hits** (promotion at reload cost), not
+//!    a full re-prefill — the whole point of the durable cold tier;
+//!  * the resumed run's hit/miss results are **bit-identical** to a run
+//!    that checkpointed but never restarted (recovery is invisible to
+//!    serving semantics);
+//!  * session → shard pins survive the restart (warm-state snapshot);
+//!  * the in-memory and file-backed [`Storage`] backends serve
+//!    identically (the mirror never feeds back into a live run);
+//!  * a damaged state directory fails `build()` with a **typed error**
+//!    ([`Error::CorruptSnapshot`] / [`Error::Storage`]) — never a panic.
+//!
+//! Admission is pinned to [`AdmissionPolicy::Always`]: the cost-aware
+//! gate refuses short spans, and these workloads care about *where*
+//! content lands, not whether reloading it is profitable. Shelves are
+//! roomy so no run diverges through capacity-pressure pruning.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use contextpilot::api::{AdmissionPolicy, Error, ModelSku, Response, Server, TierConfig};
+use contextpilot::corpus::{Corpus, CorpusConfig};
+use contextpilot::engine::SimEngine;
+use contextpilot::tokenizer::Tokenizer;
+use contextpilot::types::{BlockId, QueryId, Request, RequestId, SessionId};
+
+fn corpus() -> Arc<Corpus> {
+    Arc::new(Corpus::generate(
+        &CorpusConfig {
+            n_docs: 24,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    ))
+}
+
+fn tiers() -> TierConfig {
+    let mut t = TierConfig::new(500_000, 2_000_000);
+    t.admission = AdmissionPolicy::Always;
+    t
+}
+
+fn tempdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ctxpilot-recovery-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn req(id: u64, session: u32, turn: u32, blocks: &[u32]) -> Request {
+    Request {
+        id: RequestId(id),
+        session: SessionId(session),
+        turn,
+        context: blocks.iter().map(|&b| BlockId(b)).collect(),
+        query: QueryId(id),
+    }
+}
+
+/// Recurring-session waves: 6 sessions, each with a fixed signature of
+/// overlapping context blocks, revisited over 3 turns. `id_base` /
+/// `session_base` shift ids so replays after a restart use fresh request
+/// ids and fresh sessions (engine conversation history is deliberately
+/// not durable — recovered KV serves *new* sessions over old content).
+fn waves(id_base: u64, session_base: u32) -> Vec<Vec<Request>> {
+    (0..3u32)
+        .map(|turn| {
+            (0..6u32)
+                .map(|s| {
+                    let blocks = [3 * s + 1, 3 * s + 2, 3 * s + 3, (s % 4) + 1];
+                    req(
+                        id_base + u64::from(turn) * 6 + u64::from(s) + 1,
+                        session_base + s + 1,
+                        turn,
+                        &blocks,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The serving-semantics fingerprint: per request, the token accounting
+/// and the hot/warm/cold split, with TTFT compared bit-for-bit.
+fn fingerprint(responses: &[Response]) -> Vec<(u64, usize, usize, usize, usize, usize, u64)> {
+    responses
+        .iter()
+        .map(|r| {
+            (
+                r.request.id.0,
+                r.prompt_tokens,
+                r.cached_tokens,
+                r.tier_hits.hbm,
+                r.tier_hits.dram,
+                r.tier_hits.ssd,
+                r.ttft.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn durable_server(c: &Arc<Corpus>, dir: &Path, resume: bool) -> Server<SimEngine> {
+    let b = Server::builder(ModelSku::Qwen3_4B)
+        .shards(1)
+        .workers(1)
+        .capacity(4_000)
+        .decode_tokens(8)
+        .tier_config(tiers())
+        .corpus(c.clone());
+    let b = if resume {
+        b.resume_from(dir)
+    } else {
+        b.state_dir(dir)
+    };
+    b.build().expect("durable build")
+}
+
+#[test]
+fn resume_serves_recurring_contexts_from_the_cold_tier() {
+    let dir = tempdir("resume");
+    let c = corpus();
+
+    // run 1: serve the recurring waves, checkpoint, "crash"
+    let server = durable_server(&c, &dir, false);
+    for wave in waves(0, 0) {
+        server.serve_batch(&wave).expect("serve");
+    }
+    server.checkpoint().expect("checkpoint");
+    drop(server);
+
+    // run 2: resume and replay the same contexts as brand-new sessions
+    let resumed = durable_server(&c, &dir, true);
+    let mut replay = Vec::new();
+    for wave in waves(1_000, 100) {
+        replay.extend(resumed.serve_batch(&wave).expect("serve resumed"));
+    }
+    let cold: usize = replay.iter().map(|r| r.tier_hits.dram + r.tier_hits.ssd).sum();
+    let cached: usize = replay.iter().map(|r| r.cached_tokens).sum();
+    assert!(
+        cold > 0,
+        "recurring contexts must promote from the recovered cold tier, not re-prefill"
+    );
+    assert!(cached >= cold);
+
+    // warm state survived: run-1 sessions are still pinned, a session the
+    // server never saw is a typed miss
+    assert_eq!(resumed.session_shard(SessionId(1)).expect("pin survives"), 0);
+    assert!(matches!(
+        resumed.session_shard(SessionId(999)),
+        Err(Error::UnknownSession(_))
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resumed_run_matches_a_never_restarted_run_bit_for_bit() {
+    let c = corpus();
+
+    // interrupted: serve → checkpoint → drop → resume → replay
+    let dir_a = tempdir("interrupted");
+    let server = durable_server(&c, &dir_a, false);
+    for wave in waves(0, 0) {
+        server.serve_batch(&wave).expect("serve");
+    }
+    server.checkpoint().expect("checkpoint");
+    drop(server);
+    let resumed = durable_server(&c, &dir_a, true);
+    let mut interrupted = Vec::new();
+    for wave in waves(1_000, 100) {
+        interrupted.extend(resumed.serve_batch(&wave).expect("serve resumed"));
+    }
+
+    // ground truth: same checkpoint (the spill is part of the semantics),
+    // but the process never dies
+    let dir_b = tempdir("uninterrupted");
+    let server = durable_server(&c, &dir_b, false);
+    for wave in waves(0, 0) {
+        server.serve_batch(&wave).expect("serve");
+    }
+    server.checkpoint().expect("checkpoint");
+    let mut uninterrupted = Vec::new();
+    for wave in waves(1_000, 100) {
+        uninterrupted.extend(server.serve_batch(&wave).expect("serve"));
+    }
+
+    assert_eq!(
+        fingerprint(&interrupted),
+        fingerprint(&uninterrupted),
+        "a restart must be invisible to hit/miss results and TTFT"
+    );
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn mem_and_file_backed_storage_serve_identically() {
+    let c = corpus();
+    let build_ephemeral = || {
+        Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(1)
+            .capacity(4_000)
+            .decode_tokens(8)
+            .tier_config(tiers())
+            .corpus(c.clone())
+            .build()
+            .expect("ephemeral build")
+    };
+    let dir = tempdir("mirror");
+    let durable = Server::builder(ModelSku::Qwen3_4B)
+        .shards(2)
+        .workers(1)
+        .capacity(4_000)
+        .decode_tokens(8)
+        .tier_config(tiers())
+        .corpus(c.clone())
+        .state_dir(&dir)
+        .build()
+        .expect("durable build");
+
+    let ephemeral = build_ephemeral();
+    let mut mem = Vec::new();
+    let mut file = Vec::new();
+    for wave in waves(0, 0) {
+        mem.extend(ephemeral.serve_batch(&wave).expect("serve mem"));
+        file.extend(durable.serve_batch(&wave).expect("serve file"));
+    }
+    assert_eq!(
+        fingerprint(&mem),
+        fingerprint(&file),
+        "the file mirror must never feed back into live serving"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn damaged_state_is_a_typed_error_never_a_panic() {
+    let dir = tempdir("damage");
+    let c = corpus();
+    let build_resume = |shards: usize| {
+        Server::builder(ModelSku::Qwen3_4B)
+            .shards(shards)
+            .workers(1)
+            .capacity(4_000)
+            .decode_tokens(8)
+            .tier_config(tiers())
+            .corpus(c.clone())
+            .resume_from(&dir)
+            .build()
+    };
+
+    // no state dir at all: an I/O problem, not corruption
+    assert!(matches!(build_resume(2).unwrap_err(), Error::Storage(_)));
+
+    // lay down a good checkpoint to damage
+    {
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(1)
+            .capacity(4_000)
+            .decode_tokens(8)
+            .tier_config(tiers())
+            .corpus(c.clone())
+            .state_dir(&dir)
+            .build()
+            .expect("durable build");
+        for wave in waves(0, 0) {
+            server.serve_batch(&wave).expect("serve");
+        }
+        server.checkpoint().expect("checkpoint");
+    }
+    let snapshot = dir.join("snapshot.json");
+    let good = std::fs::read_to_string(&snapshot).unwrap();
+
+    // truncated mid-record (crash while writing would be caught by the
+    // tmp+rename protocol, but a damaged disk is not)
+    std::fs::write(&snapshot, &good[..good.len() / 2]).unwrap();
+    assert!(matches!(build_resume(2).unwrap_err(), Error::CorruptSnapshot(_)));
+
+    // decodes, but the version is from the future
+    std::fs::write(&snapshot, "{\"version\": 99}\n").unwrap();
+    assert!(matches!(build_resume(2).unwrap_err(), Error::CorruptSnapshot(_)));
+
+    // a valid snapshot taken with a different shard count
+    std::fs::write(&snapshot, &good).unwrap();
+    assert!(matches!(build_resume(3).unwrap_err(), Error::CorruptSnapshot(_)));
+
+    // mid-log damage in a cold segment file
+    std::fs::write(
+        dir.join("shard-0.cold.jsonl"),
+        "garbage\n{\"op\":\"del\",\"tokens\":[1]}\n",
+    )
+    .unwrap();
+    assert!(matches!(build_resume(2).unwrap_err(), Error::CorruptSnapshot(_)));
+
+    // and the undamaged snapshot still resumes
+    std::fs::write(dir.join("shard-0.cold.jsonl"), "").unwrap();
+    build_resume(2).expect("clean state resumes");
+    let _ = std::fs::remove_dir_all(&dir);
+}
