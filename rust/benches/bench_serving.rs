@@ -6,13 +6,15 @@
 //! queue-aware TTFT of short requests. Quick sizes by default; paper-scale
 //! with CTXPILOT_FULL=1. Machine-readable results land in
 //! `BENCH_serving.json` so future PRs have a perf trajectory to compare
-//! against.
+//! against, plus `BENCH_serving_telemetry.json` — the probe cell's run
+//! telemetry in the exact `--metrics-out` schema, validated in-run.
 
 use std::sync::Arc;
 
 use contextpilot::api::Server;
 use contextpilot::engine::costmodel::ModelSku;
 use contextpilot::experiments::{corpus_for, full_mode};
+use contextpilot::obs::{run_telemetry, validate_telemetry};
 use contextpilot::pilot::PilotConfig;
 use contextpilot::types::ServedRequest;
 use contextpilot::util::histogram::Summary;
@@ -55,12 +57,15 @@ fn p99_queued_short(served: &[ServedRequest], short_uncached_max: usize) -> f64 
 
 /// One sweep cell; `p99_queued_short` is left at 0 for the caller to fill
 /// in once the chunk budget (and hence the short-request class) is known.
+/// Also emits the cell's run-telemetry document
+/// ([`contextpilot::obs::run_telemetry`]) so the bench exercises the same
+/// schema the CLI's `--metrics-out` writes.
 fn run_once(
     w: &contextpilot::workload::Workload,
     corpus: &Arc<contextpilot::corpus::Corpus>,
     workers: usize,
     prefill_chunk: Option<usize>,
-) -> (Row, Vec<ServedRequest>) {
+) -> (Row, Vec<ServedRequest>, Json) {
     let server = Server::builder(ModelSku::Qwen3_32B)
         .shards(N_SHARDS)
         .workers(workers)
@@ -74,7 +79,7 @@ fn run_once(
     let t0 = std::time::Instant::now();
     let served = server.serve_batch(&w.requests).expect("serve batch");
     let wall = t0.elapsed().as_secs_f64();
-    let (mut m, _) = server.metrics().expect("metrics");
+    let (mut m, per_shard) = server.metrics().expect("metrics");
     let row = Row {
         workers,
         prefill_chunk,
@@ -88,7 +93,16 @@ fn run_once(
         cached_tokens: m.total_cached_tokens,
         prefill_chunks: m.total_prefill_chunks,
     };
-    (row, served)
+    let telemetry = run_telemetry(
+        "pilot",
+        "mtrag-hybrid",
+        &mut m,
+        &per_shard,
+        &server.counters(),
+        0,
+    );
+    validate_telemetry(&telemetry).expect("bench telemetry matches the schema");
+    (row, served, telemetry)
 }
 
 fn main() {
@@ -146,15 +160,19 @@ fn main() {
         ],
     );
     let mut rows: Vec<Row> = Vec::new();
+    let mut telemetry_doc: Option<Json> = None;
     let mut baseline_fingerprint: Option<Vec<(u64, usize, usize)>> = None;
     let mut rps_1w = vec![0.0f64; 2];
     for (ci, prefill_chunk) in [None, Some(chunk)].into_iter().enumerate() {
         for workers in [1usize, 2, 4, 8] {
             // the (1 worker, unchunked) cell was already run as the probe
-            let (mut row, served) = match (workers, prefill_chunk) {
+            let (mut row, served, telemetry) = match (workers, prefill_chunk) {
                 (1, None) => probe_cell.take().expect("probe consumed once"),
                 _ => run_once(&w, &corpus, workers, prefill_chunk),
             };
+            if telemetry_doc.is_none() {
+                telemetry_doc = Some(telemetry);
+            }
             row.p99_queued_short = p99_queued_short(&served, chunk);
             // determinism pin: neither worker count nor chunking may change
             // hit/miss results
@@ -243,8 +261,14 @@ fn main() {
     ]);
     let json_path = "BENCH_serving.json";
     std::fs::write(json_path, format!("{doc}\n")).expect("write BENCH_serving.json");
+    // the probe cell's run-telemetry document (already validated), in the
+    // exact shape the CLI's --metrics-out writes
+    let telemetry = telemetry_doc.expect("probe cell ran");
+    let telemetry_path = "BENCH_serving_telemetry.json";
+    std::fs::write(telemetry_path, format!("{telemetry}\n"))
+        .expect("write BENCH_serving_telemetry.json");
     eprintln!(
-        "bench_serving done in {:.2}s (quick={quick}); wrote {json_path}",
+        "bench_serving done in {:.2}s (quick={quick}); wrote {json_path} and {telemetry_path}",
         t_start.elapsed().as_secs_f64()
     );
 }

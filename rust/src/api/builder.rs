@@ -20,6 +20,7 @@ use crate::corpus::Corpus;
 use crate::engine::costmodel::ModelSku;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::{ReusePolicy, SimEngine};
+use crate::obs::ObsConfig;
 use crate::pilot::PilotConfig;
 use crate::quality::ModelEra;
 use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
@@ -157,6 +158,16 @@ impl ServerBuilder {
     /// First-turn session → shard placement policy.
     pub fn placement(mut self, k: PlacementKind) -> Self {
         self.cfg.placement = k;
+        self
+    }
+
+    /// Observability configuration ([`crate::obs`]). The counter registry
+    /// is always on; this knob opts the server into per-shard lifecycle
+    /// tracing (`ObsConfig::tracing()`), read back via
+    /// [`Server::trace_events`]. Off by default — the disabled path emits
+    /// nothing and allocates nothing.
+    pub fn observability(mut self, o: ObsConfig) -> Self {
+        self.cfg.obs = o;
         self
     }
 
@@ -336,6 +347,11 @@ impl ServerBuilder {
                 "prefill chunk of 0 tokens admits nothing; use None to disable chunking".into(),
             ));
         }
+        if cfg.obs.trace && cfg.obs.trace_capacity == 0 {
+            return Err(Error::InvalidConfig(
+                "trace capacity of 0 events records nothing; disable tracing instead".into(),
+            ));
+        }
         let corpus = corpus.ok_or_else(|| {
             Error::InvalidConfig("a corpus is required: call .corpus(..) before build()".into())
         })?;
@@ -461,6 +477,26 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, Error::CorruptSnapshot(_)), "{err:?}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_trace_capacity_is_invalid_config() {
+        let err = builder()
+            .observability(ObsConfig {
+                trace: true,
+                trace_capacity: 0,
+            })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err:?}");
+        // capacity 0 with tracing off is harmless — nothing records anyway
+        builder()
+            .observability(ObsConfig {
+                trace: false,
+                trace_capacity: 0,
+            })
+            .build()
+            .expect("tracing off ignores capacity");
     }
 
     #[test]

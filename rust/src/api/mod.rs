@@ -122,5 +122,6 @@ pub use server::{Response, Server, SessionHandle, Ticket};
 pub use crate::cache::{AdmissionPolicy, TierConfig};
 pub use crate::engine::costmodel::ModelSku;
 pub use crate::engine::sim::ReusePolicy;
+pub use crate::obs::ObsConfig;
 pub use crate::pilot::PilotConfig;
 pub use crate::serve::{PlacementKind, ServeConfig};

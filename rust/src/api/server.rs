@@ -30,6 +30,7 @@ use crate::engine::costmodel::ModelSku;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
+use crate::obs::TraceEvent;
 use crate::serve::{shard_guard, ServeConfig, ServingEngine};
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
 
@@ -312,6 +313,22 @@ impl<E: InferenceEngine> Server<E> {
     /// Aggregate run metrics plus a per-shard telemetry snapshot.
     pub fn metrics(&self) -> Result<(RunMetrics, Vec<ShardStats>), Error> {
         self.engine.metrics()
+    }
+
+    /// Snapshot of the observability counter registry ([`crate::obs`]):
+    /// `(name, value)` per counter, in a fixed order. Always available —
+    /// the registry runs whether or not tracing is on.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        self.engine.counters()
+    }
+
+    /// The merged per-request lifecycle trace ([`crate::obs::trace`]),
+    /// ordered by virtual time (ties broken by shard, then emission
+    /// order). Empty unless the server was built with
+    /// [`ServerBuilder::observability`] and tracing on; the stream is
+    /// deterministic and worker-count invariant, like serving itself.
+    pub fn trace_events(&self) -> Result<Vec<TraceEvent>, Error> {
+        self.engine.trace_events()
     }
 
     /// Where this server persists durable state, if anywhere (set by

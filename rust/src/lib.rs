@@ -57,7 +57,12 @@
 //!   uncached prefill exceeds `--prefill-chunk` are split at radix-node
 //!   boundaries and interleaved across their shard queue so short
 //!   requests are not head-of-line blocked, with queue-aware TTFT
-//!   accounting in [`metrics`].
+//!   accounting in [`metrics`]. Alongside the pipeline, [`obs`] is the
+//!   observability layer: an always-on atomic counter registry, opt-in
+//!   per-shard tracers stamping request lifecycle events on the same
+//!   virtual clock (so traces are deterministic and worker-count
+//!   invariant), and Chrome-trace / run-telemetry JSON exporters behind
+//!   `--trace-out` / `--metrics-out`.
 //! - **Layer 2** — a JAX transformer (`python/compile/model.py`) AOT-lowered
 //!   to HLO text, executed from Rust via PJRT ([`runtime`]; gated on the
 //!   `pjrt` cargo feature, which needs the external `xla`/`anyhow` crates).
@@ -76,6 +81,7 @@ pub mod dedup;
 pub mod engine;
 pub mod experiments;
 pub mod index;
+pub mod obs;
 pub mod pilot;
 pub mod quality;
 pub mod runtime;

@@ -11,7 +11,8 @@
 //!                DRAM/SSD instead of discarding; --placement
 //!                session|rr|context picks the first-turn session →
 //!                shard policy, `context` being §7.2 reuse-aware
-//!                placement)
+//!                placement; --trace-out / --metrics-out export the
+//!                observability layer's Chrome trace and run telemetry)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
 //!                fig7, fig8, fig11, fig12, fig13, appendix_f,
 //!                appendix_g) or the capacity-pressure table (capacity)
@@ -173,8 +174,54 @@ fn drive_sharded<E: InferenceEngine>(
     }
 }
 
+/// `--trace-out` / `--metrics-out`: write the observability exports
+/// ([`contextpilot::obs`]) once the workload — and any checkpoint, whose
+/// storage-flush events belong in the trace — has drained.
+fn export_obs<E: InferenceEngine>(
+    server: &Server<E>,
+    system_name: &str,
+    dataset: Dataset,
+    trace_out: Option<&std::path::Path>,
+    metrics_out: Option<&std::path::Path>,
+) {
+    use contextpilot::obs::{chrome_trace, run_telemetry};
+    if trace_out.is_none() && metrics_out.is_none() {
+        return;
+    }
+    let events = check("trace", server.trace_events());
+    if let Some(path) = trace_out {
+        let doc = chrome_trace(&events);
+        if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+            eprintln!("writing {}: {e}", path.display());
+            std::process::exit(2);
+        }
+        println!(
+            "trace            : {} ({} events)",
+            path.display(),
+            events.len()
+        );
+    }
+    if let Some(path) = metrics_out {
+        let (mut m, per_shard) = check("metrics", server.metrics());
+        let doc = run_telemetry(
+            system_name,
+            dataset.name(),
+            &mut m,
+            &per_shard,
+            &server.counters(),
+            events.len(),
+        );
+        if let Err(e) = std::fs::write(path, format!("{doc}\n")) {
+            eprintln!("writing {}: {e}", path.display());
+            std::process::exit(2);
+        }
+        println!("telemetry        : {}", path.display());
+    }
+}
+
 /// `--engine real`: the PJRT-backed TinyLM engine behind the same trait.
 #[cfg(feature = "pjrt")]
+#[allow(clippy::too_many_arguments)]
 fn serve_real(
     scfg: contextpilot::serve::ServeConfig,
     system_name: &str,
@@ -183,6 +230,8 @@ fn serve_real(
     corpus: &contextpilot::corpus::Corpus,
     offline: bool,
     total_capacity_tokens: usize,
+    trace_out: Option<&std::path::Path>,
+    metrics_out: Option<&std::path::Path>,
 ) {
     use contextpilot::runtime::{RealEngine, TinyLmRuntime};
     let artifacts = std::env::var("CTXPILOT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -204,6 +253,7 @@ fn serve_real(
         offline,
         total_capacity_tokens,
     );
+    export_obs(&server, system_name, dataset, trace_out, metrics_out);
 }
 
 fn cmd_serve(args: &Args) {
@@ -250,6 +300,11 @@ fn cmd_serve(args: &Args) {
         eprintln!("--state-dir requires --engine sim (custom engines own their storage)");
         std::process::exit(2);
     }
+    // --trace-out FILE — Chrome-trace JSON of the per-request lifecycle
+    // (Perfetto-loadable); --metrics-out FILE — run-telemetry JSON. Both
+    // route through the sharded server (obs lives in the serving layer).
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
 
     if shards > 1
         || workers > 1
@@ -258,12 +313,15 @@ fn cmd_serve(args: &Args) {
         || tiers.is_some()
         || placement != PlacementKind::SessionHash
         || state_dir.is_some()
+        || trace_out.is_some()
+        || metrics_out.is_some()
     {
         // concurrent sharded serving path (trait-generic backend)
         let mut scfg = exp::serve_config(&system, &workload, &cfg);
         scfg.n_shards = shards.max(1);
         scfg.n_workers = workers.max(1);
         scfg.placement = placement;
+        scfg.obs.trace = trace_out.is_some();
         // --capacity is the TOTAL KV budget in both modes: divide it across
         // shards so sharded and unsharded runs are capacity-comparable
         scfg.capacity_tokens = (cfg.capacity_tokens / shards.max(1)).max(1);
@@ -312,6 +370,15 @@ fn cmd_serve(args: &Args) {
                     let path = check("checkpoint", server.checkpoint());
                     println!("checkpoint       : {}", path.display());
                 }
+                // after the checkpoint, so its storage-flush events land
+                // in the exported trace
+                export_obs(
+                    &server,
+                    system.name(),
+                    dataset,
+                    trace_out.as_deref(),
+                    metrics_out.as_deref(),
+                );
             }
             "real" => {
                 #[cfg(feature = "pjrt")]
@@ -324,6 +391,8 @@ fn cmd_serve(args: &Args) {
                         &corpus,
                         cfg.offline,
                         cfg.capacity_tokens,
+                        trace_out.as_deref(),
+                        metrics_out.as_deref(),
                     );
                 }
                 #[cfg(not(feature = "pjrt"))]
@@ -436,6 +505,9 @@ fn main() {
             println!("         --placement session|rr|context (first-turn session -> shard policy)");
             println!("         --state-dir DIR          (durable cold KV + warm snapshot; resumes");
             println!("                                   automatically when DIR holds a snapshot)");
+            println!("         --trace-out FILE         (Chrome-trace JSON of the request lifecycle;");
+            println!("                                   load in Perfetto / chrome://tracing)");
+            println!("         --metrics-out FILE       (machine-readable run telemetry JSON)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|capacity|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

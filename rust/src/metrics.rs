@@ -120,6 +120,26 @@ impl RunMetrics {
         self.queued_ttft.p99()
     }
 
+    /// The progress series with a final partial-stride sample appended.
+    ///
+    /// [`RunMetrics::record`] samples the series every `series_every`
+    /// requests, so a run whose length is not a stride multiple ends
+    /// mid-stride and its last `n % series_every` requests never appear.
+    /// Exporters want the curve to end at the run's final state, so this
+    /// returns clones of both series with an `(n, hit_ratio)` /
+    /// `(n, total_cached_tokens)` tail appended when the run ended
+    /// off-stride. The recorded series themselves are untouched (their
+    /// exact stride is pinned by `series_sampled_on_stride`).
+    pub fn series_with_tail(&self) -> (Vec<(f64, f64)>, Vec<(f64, u64)>) {
+        let mut hits = self.hit_series.clone();
+        let mut cached = self.cached_series.clone();
+        if self.n > 0 && self.n % self.series_every != 0 {
+            hits.push((self.n as f64, self.hit_ratio()));
+            cached.push((self.n as f64, self.total_cached_tokens));
+        }
+        (hits, cached)
+    }
+
     /// Fold another run's samples into this one (shard aggregation).
     ///
     /// Summaries and token totals combine exactly; the progress series are
@@ -240,6 +260,125 @@ mod tests {
         }
         assert_eq!(m.hit_series.len(), 5);
         assert_eq!(m.cached_series.last().unwrap().1, 50);
+    }
+
+    #[test]
+    fn series_with_tail_appends_final_partial_stride() {
+        let mut m = RunMetrics::with_series_stride(4);
+        for _ in 0..10 {
+            m.record(&served(10, 5, 0.1, 0.5));
+        }
+        // the recorded series stops at the last full stride (n = 8)...
+        assert_eq!(m.hit_series.len(), 2);
+        // ...but the exported view ends at the run's final state (n = 10)
+        let (hits, cached) = m.series_with_tail();
+        assert_eq!(hits.len(), 3);
+        assert_eq!(hits.last().unwrap().0, 10.0);
+        assert!((hits.last().unwrap().1 - m.hit_ratio()).abs() < 1e-12);
+        assert_eq!(cached.last().unwrap(), &(10.0, 50));
+        assert_eq!(m.hit_series.len(), 2, "recorded series must not grow");
+
+        // on-stride and empty runs gain no tail
+        let mut even = RunMetrics::with_series_stride(5);
+        for _ in 0..10 {
+            even.record(&served(10, 5, 0.1, 0.5));
+        }
+        assert_eq!(even.series_with_tail().0.len(), even.hit_series.len());
+        assert!(RunMetrics::new().series_with_tail().0.is_empty());
+    }
+
+    #[test]
+    fn merge_of_splits_equals_whole_run() {
+        use crate::util::prop::{self, CaseResult};
+
+        fn sorted(s: &Summary) -> Vec<f64> {
+            let mut v = s.samples().to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            v
+        }
+
+        prop::quickcheck("metrics: merge of splits == whole run", |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let samples: Vec<ServedRequest> = (0..n)
+                .map(|_| {
+                    let prompt = rng.range(1, 500);
+                    let cached = rng.below(prompt + 1);
+                    let dram = rng.below(cached + 1);
+                    let ssd = rng.below(cached - dram + 1);
+                    let mut s = served(prompt, cached, rng.f64(), rng.f64());
+                    s.prefill_chunks = rng.range(1, 4) as u32;
+                    s.tier_hits = TierHits {
+                        hbm: cached - dram - ssd,
+                        dram,
+                        ssd,
+                    };
+                    s
+                })
+                .collect();
+
+            let mut whole = RunMetrics::new();
+            for s in &samples {
+                whole.record(s);
+            }
+
+            // split the run at random points, record each part separately,
+            // then merge the parts back together
+            let mut merged = RunMetrics::new();
+            let mut rest: &[ServedRequest] = &samples;
+            while !rest.is_empty() {
+                let take = rng.range(1, rest.len() + 1);
+                let mut part = RunMetrics::new();
+                for s in &rest[..take] {
+                    part.record(s);
+                }
+                merged.merge(&part);
+                rest = &rest[take..];
+            }
+
+            if merged.len() != whole.len() {
+                return CaseResult::Fail(format!("len {} != {}", merged.len(), whole.len()));
+            }
+            let exact = [
+                (
+                    "prompt_tokens",
+                    merged.total_prompt_tokens,
+                    whole.total_prompt_tokens,
+                ),
+                (
+                    "cached_tokens",
+                    merged.total_cached_tokens,
+                    whole.total_cached_tokens,
+                ),
+                ("hot", merged.total_hot_hit_tokens, whole.total_hot_hit_tokens),
+                ("warm", merged.total_warm_hit_tokens, whole.total_warm_hit_tokens),
+                ("cold", merged.total_cold_hit_tokens, whole.total_cold_hit_tokens),
+                ("chunks", merged.total_prefill_chunks, whole.total_prefill_chunks),
+            ];
+            for (name, a, b) in exact {
+                if a != b {
+                    return CaseResult::Fail(format!("{name}: {a} != {b}"));
+                }
+            }
+            // float accumulation order differs between the two paths, so
+            // totals agree only to rounding
+            if (merged.total_prefill_seconds - whole.total_prefill_seconds).abs() > 1e-9 {
+                return CaseResult::Fail("prefill seconds diverged".into());
+            }
+            if (merged.hit_ratio() - whole.hit_ratio()).abs() > 1e-12 {
+                return CaseResult::Fail("hit ratio diverged".into());
+            }
+            // summaries hold the same sample multiset
+            for (name, a, b) in [
+                ("ttft", &merged.ttft, &whole.ttft),
+                ("queued_ttft", &merged.queued_ttft, &whole.queued_ttft),
+                ("prompt", &merged.prompt_tokens, &whole.prompt_tokens),
+            ] {
+                if sorted(a) != sorted(b) {
+                    return CaseResult::Fail(format!("{name} samples diverged"));
+                }
+            }
+            CaseResult::Pass
+        });
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Trace/telemetry exporters and the telemetry schema validator.
+//!
+//! Two machine-readable outputs ride on [`crate::util::json`]:
+//!
+//! * [`chrome_trace`] — Chrome trace-event JSON (the `traceEvents`
+//!   format), loadable in Perfetto / `chrome://tracing`. Virtual-clock
+//!   seconds become microsecond `ts` values; each shard renders as one
+//!   track (`tid`), prefill chunks as complete spans (`ph: "X"`) and
+//!   everything else as instant events (`ph: "i"`).
+//! * [`run_telemetry`] — a run-level summary document under the
+//!   [`TELEMETRY_SCHEMA`] id, emitted both by `ctxpilot serve
+//!   --metrics-out` and the serving bench, so every `BENCH_*.json` and
+//!   CLI run shares one schema. [`validate_telemetry`] is the checker
+//!   the tests, benches, and the CI `obs-smoke` job all call.
+
+use crate::metrics::{RunMetrics, ShardStats};
+use crate::util::json::Json;
+
+use super::registry::Counter;
+use super::trace::{EventKind, TraceEvent};
+
+/// Schema identifier stamped into every telemetry document.
+pub const TELEMETRY_SCHEMA: &str = "ctxpilot.telemetry.v1";
+
+/// Render a merged event stream as Chrome trace-event JSON.
+///
+/// `pid` is always 0; `tid` is the shard, so Perfetto shows one lane per
+/// shard on the shared virtual-clock timeline.
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let rows: Vec<Json> = events.iter().map(trace_row).collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(rows)),
+    ])
+}
+
+fn trace_row(e: &TraceEvent) -> Json {
+    let mut args: Vec<(&str, Json)> = vec![("seq", Json::num(e.seq as f64))];
+    if let Some(r) = e.request {
+        args.push(("request", Json::u64(r)));
+    }
+    if let Some(s) = e.session {
+        args.push(("session", Json::num(s as f64)));
+    }
+    match &e.kind {
+        EventKind::Admitted | EventKind::Queued | EventKind::Resolved => {}
+        EventKind::Placed { policy, affinity } => {
+            args.push(("policy", Json::str(*policy)));
+            args.push(("affinity", Json::Bool(*affinity)));
+        }
+        EventKind::PrefillChunk { index, of, tokens } => {
+            args.push(("i", Json::num(*index as f64)));
+            args.push(("n", Json::num(*of as f64)));
+            args.push(("tokens", Json::num(*tokens as f64)));
+        }
+        EventKind::Tier { op, tier, tokens } => {
+            args.push(("op", Json::str(op.name())));
+            args.push(("tier", Json::str(*tier)));
+            args.push(("tokens", Json::u64(*tokens)));
+        }
+        EventKind::Storage { op } => {
+            args.push(("op", Json::str(op.name())));
+        }
+    }
+    let mut row = vec![
+        ("name", Json::str(e.kind.name())),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(e.shard as f64)),
+        ("ts", Json::num(e.t * 1e6)),
+    ];
+    if matches!(e.kind, EventKind::PrefillChunk { .. }) {
+        row.push(("ph", Json::str("X")));
+        row.push(("dur", Json::num(e.dur * 1e6)));
+    } else {
+        row.push(("ph", Json::str("i")));
+        row.push(("s", Json::str("t")));
+    }
+    row.push(("args", Json::obj(args)));
+    Json::obj(row)
+}
+
+fn shard_row(s: &ShardStats) -> Json {
+    Json::obj(vec![
+        ("shard", Json::num(s.shard as f64)),
+        ("served", Json::num(s.served as f64)),
+        ("max_queue_depth", Json::num(s.max_queue_depth as f64)),
+        ("hit_ratio", Json::num(s.hit_ratio)),
+        ("p50_ttft_s", Json::num(s.p50_ttft)),
+        ("p99_ttft_s", Json::num(s.p99_ttft)),
+        ("p99_queued_ttft_s", Json::num(s.p99_queued_ttft)),
+        ("prefill_chunks", Json::u64(s.prefill_chunks)),
+        ("index_nodes", Json::num(s.index_nodes as f64)),
+        ("placed_sessions", Json::num(s.placed_sessions as f64)),
+        ("affinity_hit_tokens", Json::u64(s.affinity_hit_tokens)),
+        ("resident_tokens", Json::num(s.resident_tokens as f64)),
+        ("dram_resident_tokens", Json::num(s.dram_resident_tokens as f64)),
+        ("ssd_resident_tokens", Json::num(s.ssd_resident_tokens as f64)),
+        ("warm_hit_tokens", Json::u64(s.warm_hit_tokens)),
+        ("cold_hit_tokens", Json::u64(s.cold_hit_tokens)),
+        ("sessions", Json::num(s.sessions as f64)),
+    ])
+}
+
+/// Build the run-telemetry document ([`TELEMETRY_SCHEMA`]).
+///
+/// `metrics` is `&mut` because percentile queries sort the summaries
+/// in place; `counters` comes from `Registry::snapshot`; `trace_events`
+/// is the merged event count (0 with tracing off).
+pub fn run_telemetry(
+    system: &str,
+    dataset: &str,
+    metrics: &mut RunMetrics,
+    per_shard: &[ShardStats],
+    counters: &[(&'static str, u64)],
+    trace_events: usize,
+) -> Json {
+    let (hit_series, cached_series) = metrics.series_with_tail();
+    let hit_rows: Vec<Json> = hit_series
+        .iter()
+        .map(|(x, r)| Json::arr(vec![Json::num(*x), Json::num(*r)]))
+        .collect();
+    let cached_rows: Vec<Json> = cached_series
+        .iter()
+        .map(|(x, c)| Json::arr(vec![Json::num(*x), Json::u64(*c)]))
+        .collect();
+    let counter_obj: Vec<(&str, Json)> =
+        counters.iter().map(|(k, v)| (*k, Json::u64(*v))).collect();
+    let shard_rows: Vec<Json> = per_shard.iter().map(shard_row).collect();
+    Json::obj(vec![
+        ("schema", Json::str(TELEMETRY_SCHEMA)),
+        ("system", Json::str(system)),
+        ("dataset", Json::str(dataset)),
+        ("requests", Json::num(metrics.len() as f64)),
+        ("hit_ratio", Json::num(metrics.hit_ratio())),
+        ("prefill_tokens_per_s", Json::num(metrics.prefill_throughput())),
+        ("mean_ttft_s", Json::num(metrics.mean_ttft())),
+        ("p50_ttft_s", Json::num(metrics.ttft.p50())),
+        ("p95_ttft_s", Json::num(metrics.ttft.p95())),
+        ("p99_ttft_s", Json::num(metrics.ttft.p99())),
+        ("p99_queued_ttft_s", Json::num(metrics.p99_queued_ttft())),
+        ("prompt_tokens", Json::u64(metrics.total_prompt_tokens)),
+        ("cached_tokens", Json::u64(metrics.total_cached_tokens)),
+        ("hot_hit_tokens", Json::u64(metrics.total_hot_hit_tokens)),
+        ("warm_hit_tokens", Json::u64(metrics.total_warm_hit_tokens)),
+        ("cold_hit_tokens", Json::u64(metrics.total_cold_hit_tokens)),
+        (
+            "affinity_hit_tokens",
+            Json::u64(metrics.total_affinity_hit_tokens),
+        ),
+        ("prefill_chunks", Json::u64(metrics.total_prefill_chunks)),
+        ("hit_series", Json::arr(hit_rows)),
+        ("cached_series", Json::arr(cached_rows)),
+        ("counters", Json::obj(counter_obj)),
+        ("shards", Json::arr(shard_rows)),
+        ("trace_events", Json::num(trace_events as f64)),
+    ])
+}
+
+/// Check that `doc` is a well-formed [`TELEMETRY_SCHEMA`] document.
+///
+/// Shared by the unit tests, the serving bench and the CI smoke so the
+/// schema cannot silently fork between emitters.
+pub fn validate_telemetry(doc: &Json) -> Result<(), String> {
+    if doc.as_obj().is_none() {
+        return Err("telemetry document is not an object".to_string());
+    }
+    match doc.get("schema").as_str() {
+        Some(TELEMETRY_SCHEMA) => {}
+        Some(other) => return Err(format!("unknown schema {other:?}")),
+        None => return Err("missing schema field".to_string()),
+    }
+    for key in ["system", "dataset"] {
+        if doc.get(key).as_str().is_none() {
+            return Err(format!("missing string field {key:?}"));
+        }
+    }
+    for key in [
+        "requests",
+        "hit_ratio",
+        "prefill_tokens_per_s",
+        "mean_ttft_s",
+        "p50_ttft_s",
+        "p95_ttft_s",
+        "p99_ttft_s",
+        "p99_queued_ttft_s",
+        "trace_events",
+    ] {
+        if doc.get(key).as_f64().is_none() {
+            return Err(format!("missing numeric field {key:?}"));
+        }
+    }
+    for key in [
+        "prompt_tokens",
+        "cached_tokens",
+        "hot_hit_tokens",
+        "warm_hit_tokens",
+        "cold_hit_tokens",
+        "affinity_hit_tokens",
+        "prefill_chunks",
+    ] {
+        if doc.get(key).as_u64().is_none() {
+            return Err(format!("missing u64 field {key:?}"));
+        }
+    }
+    for key in ["hit_series", "cached_series", "shards"] {
+        if doc.get(key).as_arr().is_none() {
+            return Err(format!("missing array field {key:?}"));
+        }
+    }
+    let counters = doc.get("counters");
+    if counters.as_obj().is_none() {
+        return Err("missing counters object".to_string());
+    }
+    for c in Counter::ALL {
+        if counters.get(c.name()).as_u64().is_none() {
+            return Err(format!("counters missing {:?}", c.name()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+    use crate::obs::trace::{StorageOp, TierOp};
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                shard: 0,
+                seq: 0,
+                t: 0.0,
+                dur: 0.0,
+                request: Some(7),
+                session: Some(3),
+                kind: EventKind::Placed {
+                    policy: "context_aware",
+                    affinity: true,
+                },
+            },
+            TraceEvent {
+                shard: 0,
+                seq: 1,
+                t: 0.25,
+                dur: 0.5,
+                request: Some(7),
+                session: Some(3),
+                kind: EventKind::PrefillChunk {
+                    index: 0,
+                    of: 2,
+                    tokens: 512,
+                },
+            },
+            TraceEvent {
+                shard: 1,
+                seq: 0,
+                t: 1.0,
+                dur: 0.0,
+                request: None,
+                session: None,
+                kind: EventKind::Storage {
+                    op: StorageOp::Flush,
+                },
+            },
+            TraceEvent {
+                shard: 1,
+                seq: 1,
+                t: 1.5,
+                dur: 0.0,
+                request: Some(8),
+                session: None,
+                kind: EventKind::Tier {
+                    op: TierOp::Demote,
+                    tier: "dram",
+                    tokens: 4096,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_roundtrip() {
+        let doc = chrome_trace(&sample_events());
+        let rows = doc.get("traceEvents").as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        // prefill chunk is a complete span with µs ts/dur
+        let chunk = &rows[1];
+        assert_eq!(chunk.get("ph").as_str(), Some("X"));
+        assert_eq!(chunk.get("ts").as_f64(), Some(0.25e6));
+        assert_eq!(chunk.get("dur").as_f64(), Some(0.5e6));
+        assert_eq!(chunk.get("args").get("tokens").as_f64(), Some(512.0));
+        // instants carry the scope marker Perfetto expects
+        assert_eq!(rows[0].get("ph").as_str(), Some("i"));
+        assert_eq!(rows[0].get("s").as_str(), Some("t"));
+        assert_eq!(rows[0].get("args").get("affinity").as_bool(), Some(true));
+        assert_eq!(rows[3].get("args").get("tokens").as_u64(), Some(4096));
+        // whole document survives the util::json round-trip
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(reparsed, doc);
+    }
+
+    #[test]
+    fn telemetry_validates_and_roundtrips() {
+        let mut m = RunMetrics::new();
+        let reg = Registry::new();
+        reg.add(Counter::RequestsServed, 2);
+        let doc = run_telemetry("pilot", "mtrag", &mut m, &[], &reg.snapshot(), 4);
+        validate_telemetry(&doc).expect("fresh document validates");
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(reparsed, doc);
+        validate_telemetry(&reparsed).expect("reparsed document validates");
+        assert_eq!(
+            reparsed.get("counters").get("requests_served").as_u64(),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        assert!(validate_telemetry(&Json::Null).is_err());
+        assert!(validate_telemetry(&Json::obj(vec![])).is_err());
+        let wrong_schema = Json::obj(vec![("schema", Json::str("nope"))]);
+        assert!(validate_telemetry(&wrong_schema).is_err());
+        // drop one required counter and the validator notices
+        let mut m = RunMetrics::new();
+        let doc = run_telemetry("pilot", "mtrag", &mut m, &[], &Registry::new().snapshot(), 0);
+        let mut map = doc.as_obj().unwrap().clone();
+        let mut counters = map["counters"].as_obj().unwrap().clone();
+        counters.remove("queue_waves");
+        map.insert("counters".to_string(), Json::Obj(counters));
+        assert!(validate_telemetry(&Json::Obj(map)).is_err());
+    }
+}

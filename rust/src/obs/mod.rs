@@ -1,0 +1,94 @@
+//! Observability: deterministic tracing, counters, and run telemetry.
+//!
+//! The measurement substrate for every perf PR after it — three parts,
+//! all dependency-free:
+//!
+//! ```text
+//!                 ┌────────────────────────────────────────────┐
+//!                 │              serve::ServingEngine          │
+//!                 │  placement ──► shard queues ──► workers    │
+//!                 └───────┬───────────────┬────────────────────┘
+//!                         │               │
+//!              counters   │               │  span events on the
+//!              (always)   ▼               ▼  shard's virtual clock
+//!                 ┌──────────────┐  ┌──────────────┐
+//!                 │ obs::Registry │  │ obs::Tracer  │ (per shard,
+//!                 │ atomic slots  │  │ ring buffer  │  opt-in)
+//!                 └───────┬──────┘  └───────┬──────┘
+//!                         │                 │ merge_events
+//!                         ▼                 ▼
+//!                 ┌────────────────────────────────────┐
+//!                 │            obs::export             │
+//!                 │ run_telemetry (--metrics-out)      │
+//!                 │ chrome_trace  (--trace-out)        │
+//!                 └────────────────────────────────────┘
+//! ```
+//!
+//! * [`Registry`] — named atomic counters/gauges the hot paths bump
+//!   unconditionally; it mirrors (never replaces) the deterministic
+//!   [`RunMetrics`](crate::metrics::RunMetrics) accounting.
+//! * [`Tracer`] — per-shard, per-request lifecycle events
+//!   (`admitted → placed → queued → prefill_chunk* → tier* → resolved`,
+//!   plus `storage` flushes) stamped on the shard's **virtual clock**,
+//!   so traces are bit-identical across worker counts.
+//! * [`export`] — Chrome trace-event JSON (Perfetto-loadable) and the
+//!   [`TELEMETRY_SCHEMA`] run document shared by the CLI and benches.
+//!
+//! Tracing is **off by default** ([`ObsConfig::default`]); the disabled
+//! path allocates nothing and serving output is pinned bit-identical to
+//! the untraced build (`tests/obs.rs`).
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{chrome_trace, run_telemetry, validate_telemetry, TELEMETRY_SCHEMA};
+pub use registry::{Counter, Registry};
+pub use trace::{merge_events, EventKind, StorageOp, TierOp, TraceEvent, Tracer};
+
+/// Observability knobs, wired through
+/// [`api::ServerBuilder::observability`](crate::api::ServerBuilder::observability)
+/// and the `--trace-out` CLI flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Collect per-request trace events (default off — the disabled
+    /// path is zero-allocation).
+    pub trace: bool,
+    /// Ring-buffer capacity per shard; the oldest events are evicted
+    /// (and counted under `trace_events_dropped`) past this.
+    pub trace_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            trace: false,
+            trace_capacity: 65_536,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Convenience: tracing on with the default ring capacity.
+    pub fn tracing() -> ObsConfig {
+        ObsConfig {
+            trace: true,
+            ..ObsConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off_and_tracing_turns_on() {
+        let d = ObsConfig::default();
+        assert!(!d.trace);
+        assert!(d.trace_capacity > 0);
+        let t = ObsConfig::tracing();
+        assert!(t.trace);
+        assert_eq!(t.trace_capacity, d.trace_capacity);
+    }
+}

@@ -1,0 +1,186 @@
+//! Named counter/gauge registry.
+//!
+//! A fixed, enum-indexed table of atomic `u64` slots that the serving
+//! hot paths bump with relaxed `fetch_add`/`fetch_max`. The registry is
+//! *always on* — incrementing an atomic costs nothing measurable next to
+//! a prefill — and it deliberately **mirrors** rather than replaces the
+//! deterministic [`RunMetrics`](crate::metrics::RunMetrics)/
+//! [`ShardStats`](crate::metrics::ShardStats) accounting: the pinned
+//! bench/test numbers keep coming from the metrics structs, and a test
+//! asserts the two stay equal where they overlap.
+//!
+//! Wall-clock durations are deliberately **not** in here: every value a
+//! counter holds is a deterministic function of the workload, so counter
+//! snapshots are reproducible across machines and worker counts and can
+//! be pinned in tests like any other output.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Every counter/gauge the serving stack maintains. The discriminant is
+/// the slot index into [`Registry`]; [`Counter::name`] is the stable
+/// snake_case key used in telemetry exports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Requests fully served (one per [`ServedRequest`](crate::types::ServedRequest)).
+    RequestsServed,
+    /// Per-shard admission waves drained (one per non-empty `serve_queue`).
+    QueueWaves,
+    /// Placement waves begun (one per `serve_batch`/`build_offline` call).
+    PlacementWaves,
+    /// Shard-probe passes taken by load-aware placement (one per probed request).
+    PlacementProbes,
+    /// Gauge: deepest per-shard queue seen in any wave (`fetch_max`).
+    MaxQueueDepth,
+    /// Prefill chunks admitted across all requests.
+    PrefillChunks,
+    /// Prompt tokens presented for prefill.
+    PromptTokens,
+    /// Prompt tokens served from any cache tier.
+    CachedTokens,
+    /// Cached tokens resident in HBM at hit time.
+    HotHitTokens,
+    /// Cached tokens promoted from DRAM at hit time.
+    WarmHitTokens,
+    /// Cached tokens rehydrated from the cold (SSD) tier at hit time.
+    ColdHitTokens,
+    /// Tokens demoted out of HBM under capacity pressure.
+    DemotedTokens,
+    /// Tokens promoted back into HBM.
+    PromotedTokens,
+    /// Tokens evicted outright (no lower tier had room).
+    DiscardedTokens,
+    /// Durable snapshot flushes taken (one per shard per checkpoint).
+    StorageFlushes,
+    /// Trace events evicted from a full ring buffer (0 unless the
+    /// configured `trace_capacity` was exceeded).
+    TraceEventsDropped,
+}
+
+impl Counter {
+    /// All counters, in slot order.
+    pub const ALL: [Counter; 16] = [
+        Counter::RequestsServed,
+        Counter::QueueWaves,
+        Counter::PlacementWaves,
+        Counter::PlacementProbes,
+        Counter::MaxQueueDepth,
+        Counter::PrefillChunks,
+        Counter::PromptTokens,
+        Counter::CachedTokens,
+        Counter::HotHitTokens,
+        Counter::WarmHitTokens,
+        Counter::ColdHitTokens,
+        Counter::DemotedTokens,
+        Counter::PromotedTokens,
+        Counter::DiscardedTokens,
+        Counter::StorageFlushes,
+        Counter::TraceEventsDropped,
+    ];
+
+    /// Stable snake_case key for telemetry export.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::RequestsServed => "requests_served",
+            Counter::QueueWaves => "queue_waves",
+            Counter::PlacementWaves => "placement_waves",
+            Counter::PlacementProbes => "placement_probes",
+            Counter::MaxQueueDepth => "max_queue_depth",
+            Counter::PrefillChunks => "prefill_chunks",
+            Counter::PromptTokens => "prompt_tokens",
+            Counter::CachedTokens => "cached_tokens",
+            Counter::HotHitTokens => "hot_hit_tokens",
+            Counter::WarmHitTokens => "warm_hit_tokens",
+            Counter::ColdHitTokens => "cold_hit_tokens",
+            Counter::DemotedTokens => "demoted_tokens",
+            Counter::PromotedTokens => "promoted_tokens",
+            Counter::DiscardedTokens => "discarded_tokens",
+            Counter::StorageFlushes => "storage_flushes",
+            Counter::TraceEventsDropped => "trace_events_dropped",
+        }
+    }
+}
+
+/// Lock-free table of all [`Counter`] slots. One instance is shared
+/// (`Arc`) by the serving engine and every shard; increments are relaxed
+/// atomics, so the registry never serializes the worker pool.
+#[derive(Debug)]
+pub struct Registry {
+    slots: [AtomicU64; Counter::ALL.len()],
+}
+
+impl Registry {
+    /// Fresh registry with every slot at zero.
+    pub fn new() -> Registry {
+        Registry {
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Add `n` to counter `c`.
+    pub fn add(&self, c: Counter, n: u64) {
+        self.slots[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise gauge `c` to at least `n` (monotone high-water mark).
+    pub fn max(&self, c: Counter, n: u64) {
+        self.slots[c as usize].fetch_max(n, Ordering::Relaxed);
+    }
+
+    /// Current value of counter `c`.
+    pub fn get(&self, c: Counter) -> u64 {
+        self.slots[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// All `(name, value)` pairs in slot order.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        Counter::ALL.iter().map(|&c| (c.name(), self.get(c))).collect()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_snake_case() {
+        let mut seen = std::collections::HashSet::new();
+        for c in Counter::ALL {
+            let n = c.name();
+            assert!(seen.insert(n), "duplicate counter name {n}");
+            assert!(
+                n.chars().all(|ch| ch.is_ascii_lowercase() || ch == '_'),
+                "non-snake_case name {n}"
+            );
+        }
+        assert_eq!(seen.len(), Counter::ALL.len());
+    }
+
+    #[test]
+    fn add_get_and_snapshot() {
+        let r = Registry::new();
+        assert_eq!(r.get(Counter::RequestsServed), 0);
+        r.add(Counter::RequestsServed, 3);
+        r.add(Counter::RequestsServed, 4);
+        assert_eq!(r.get(Counter::RequestsServed), 7);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), Counter::ALL.len());
+        assert!(snap.contains(&("requests_served", 7)));
+        assert!(snap.contains(&("queue_waves", 0)));
+    }
+
+    #[test]
+    fn max_is_a_high_water_mark() {
+        let r = Registry::new();
+        r.max(Counter::MaxQueueDepth, 5);
+        r.max(Counter::MaxQueueDepth, 3);
+        assert_eq!(r.get(Counter::MaxQueueDepth), 5);
+        r.max(Counter::MaxQueueDepth, 9);
+        assert_eq!(r.get(Counter::MaxQueueDepth), 9);
+    }
+}

@@ -1,0 +1,309 @@
+//! Deterministic per-request lifecycle tracing.
+//!
+//! Every traced event is stamped on the **shard's virtual clock** — the
+//! same simulated-seconds timeline `admission::interleave` already runs
+//! requests on — never on wall time. Because placement happens in
+//! arrival order before any worker runs and all shard state is
+//! shard-local, the resulting event stream is a pure function of the
+//! workload: bit-identical across `--workers 1/2/4/8` and across
+//! machines (pinned by `tests/obs.rs`).
+//!
+//! Each shard owns one [`Tracer`] (a bounded ring buffer); the engine
+//! snapshots all shards and merges the streams with [`merge_events`]
+//! into a single timeline ordered by `(t, shard, seq)`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::registry::{Counter, Registry};
+
+/// Direction of a tier transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierOp {
+    /// Tokens moved up into HBM (from DRAM or SSD) to serve a hit.
+    Promote,
+    /// Tokens moved down out of HBM under capacity pressure.
+    Demote,
+}
+
+impl TierOp {
+    /// Stable lowercase label for export.
+    pub fn name(self) -> &'static str {
+        match self {
+            TierOp::Promote => "promote",
+            TierOp::Demote => "demote",
+        }
+    }
+}
+
+/// Kind of storage-layer event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageOp {
+    /// A durable snapshot flush (checkpoint) of shard state.
+    Flush,
+    /// Segment compaction in the cold-tier log.
+    Compact,
+}
+
+impl StorageOp {
+    /// Stable lowercase label for export.
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageOp::Flush => "flush",
+            StorageOp::Compact => "compact",
+        }
+    }
+}
+
+/// Typed payload of a trace event — one variant per lifecycle phase.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Request accepted into the serving engine.
+    Admitted,
+    /// Placement decided a shard for the request.
+    Placed {
+        /// Name of the placement policy that made the call.
+        policy: &'static str,
+        /// Whether the request landed on the shard its session's
+        /// context already lives on.
+        affinity: bool,
+    },
+    /// Request enqueued on its shard's admission queue.
+    Queued,
+    /// One admitted prefill chunk ran on the virtual timeline.
+    PrefillChunk {
+        /// Chunk index within the request's plan (0-based).
+        index: u32,
+        /// Total chunks in the plan.
+        of: u32,
+        /// Approximate uncached tokens this chunk prefilled.
+        tokens: u32,
+    },
+    /// Tokens crossed a tier boundary.
+    Tier {
+        /// Promote or demote.
+        op: TierOp,
+        /// The non-HBM side of the transition (`"dram"` or `"ssd"`).
+        tier: &'static str,
+        /// Token count that moved.
+        tokens: u64,
+    },
+    /// The storage layer flushed or compacted durable state.
+    Storage {
+        /// Flush or compact.
+        op: StorageOp,
+    },
+    /// Request finished: first token emitted, results recorded.
+    Resolved,
+}
+
+impl EventKind {
+    /// Stable event name shared by the exporters and the CI smoke.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Placed { .. } => "placed",
+            EventKind::Queued => "queued",
+            EventKind::PrefillChunk { .. } => "prefill_chunk",
+            EventKind::Tier { .. } => "tier",
+            EventKind::Storage { .. } => "storage",
+            EventKind::Resolved => "resolved",
+        }
+    }
+}
+
+/// One trace event, stamped on a shard's virtual clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Shard that emitted the event.
+    pub shard: usize,
+    /// Emission sequence number within the shard (ties on `t` keep
+    /// emission order after a merge).
+    pub seq: u64,
+    /// Virtual-clock timestamp in simulated seconds.
+    pub t: f64,
+    /// Span duration in simulated seconds (0 for instant events).
+    pub dur: f64,
+    /// Request id, when the event belongs to one request.
+    pub request: Option<u64>,
+    /// Session id, when known.
+    pub session: Option<u32>,
+    /// Typed payload.
+    pub kind: EventKind,
+}
+
+/// Per-shard bounded event buffer riding the shard's virtual clock.
+///
+/// The clock only moves via [`Tracer::advance`], which the shard calls
+/// with the span of each admission wave — so timestamps are cumulative
+/// simulated seconds from the start of the run, independent of how the
+/// worker pool interleaved the waves in wall time.
+#[derive(Debug)]
+pub struct Tracer {
+    shard: usize,
+    capacity: usize,
+    events: VecDeque<TraceEvent>,
+    clock: f64,
+    seq: u64,
+    registry: Arc<Registry>,
+}
+
+impl Tracer {
+    /// New tracer for `shard`, holding at most `capacity` events
+    /// (oldest evicted first; evictions are counted in the registry).
+    pub fn new(shard: usize, capacity: usize, registry: Arc<Registry>) -> Tracer {
+        Tracer {
+            shard,
+            capacity,
+            events: VecDeque::new(),
+            clock: 0.0,
+            seq: 0,
+            registry,
+        }
+    }
+
+    /// Current virtual-clock value (simulated seconds).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the virtual clock by `span` simulated seconds.
+    pub fn advance(&mut self, span: f64) {
+        self.clock += span;
+    }
+
+    /// Record an event at absolute virtual time `t`.
+    pub fn emit(
+        &mut self,
+        t: f64,
+        dur: f64,
+        request: Option<u64>,
+        session: Option<u32>,
+        kind: EventKind,
+    ) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push_back(TraceEvent {
+            shard: self.shard,
+            seq,
+            t,
+            dur,
+            request,
+            session,
+            kind,
+        });
+        if self.events.len() > self.capacity {
+            self.events.pop_front();
+            self.registry.add(Counter::TraceEventsDropped, 1);
+        }
+    }
+
+    /// Copy of the buffered events, in emission order.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.events.iter().cloned().collect()
+    }
+}
+
+/// Merge per-shard event streams into one timeline ordered by
+/// `(t, shard, seq)`. Each input stream is already seq-ordered, so the
+/// result is deterministic regardless of how many workers produced it.
+pub fn merge_events(streams: Vec<Vec<TraceEvent>>) -> Vec<TraceEvent> {
+    let mut all: Vec<TraceEvent> = streams.into_iter().flatten().collect();
+    all.sort_by(|a, b| {
+        a.t.partial_cmp(&b.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.shard.cmp(&b.shard))
+            .then(a.seq.cmp(&b.seq))
+    });
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(capacity: usize) -> Tracer {
+        Tracer::new(0, capacity, Arc::new(Registry::new()))
+    }
+
+    #[test]
+    fn clock_accumulates_across_waves() {
+        let mut t = tracer(16);
+        assert_eq!(t.clock(), 0.0);
+        t.advance(1.5);
+        t.advance(0.25);
+        assert_eq!(t.clock(), 1.75);
+    }
+
+    #[test]
+    fn ring_buffer_drops_oldest_and_counts() {
+        let reg = Arc::new(Registry::new());
+        let mut t = Tracer::new(3, 2, reg.clone());
+        for i in 0..5 {
+            t.emit(i as f64, 0.0, Some(i), None, EventKind::Admitted);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].request, Some(3));
+        assert_eq!(snap[1].request, Some(4));
+        assert_eq!(reg.get(Counter::TraceEventsDropped), 3);
+        assert_eq!(snap[0].shard, 3);
+    }
+
+    #[test]
+    fn merge_orders_by_time_then_shard_then_seq() {
+        let reg = Arc::new(Registry::new());
+        let mut a = Tracer::new(0, 16, reg.clone());
+        let mut b = Tracer::new(1, 16, reg);
+        a.emit(2.0, 0.0, Some(1), None, EventKind::Resolved);
+        a.emit(0.5, 0.0, Some(1), None, EventKind::Queued);
+        b.emit(0.5, 0.0, Some(2), None, EventKind::Queued);
+        b.emit(1.0, 0.0, Some(2), None, EventKind::Resolved);
+        let merged = merge_events(vec![a.snapshot(), b.snapshot()]);
+        let order: Vec<(usize, u64)> = merged.iter().map(|e| (e.shard, e.seq)).collect();
+        // t=0.5 ties broken by shard; seq keeps per-shard emission order.
+        assert_eq!(order, vec![(0, 1), (1, 0), (1, 1), (0, 0)]);
+    }
+
+    #[test]
+    fn event_names_cover_all_phases() {
+        let names = [
+            EventKind::Admitted.name(),
+            EventKind::Placed {
+                policy: "session_hash",
+                affinity: true,
+            }
+            .name(),
+            EventKind::Queued.name(),
+            EventKind::PrefillChunk {
+                index: 0,
+                of: 1,
+                tokens: 8,
+            }
+            .name(),
+            EventKind::Tier {
+                op: TierOp::Promote,
+                tier: "dram",
+                tokens: 8,
+            }
+            .name(),
+            EventKind::Storage {
+                op: StorageOp::Flush,
+            }
+            .name(),
+            EventKind::Resolved.name(),
+        ];
+        assert_eq!(
+            names,
+            [
+                "admitted",
+                "placed",
+                "queued",
+                "prefill_chunk",
+                "tier",
+                "storage",
+                "resolved"
+            ]
+        );
+    }
+}

@@ -80,6 +80,23 @@ pub fn chunk_plan(
     durations
 }
 
+/// One chunk's slot on the admission virtual clock, as reported by
+/// [`interleave_with`]: request `task` ran chunk `chunk` (of its
+/// `n_chunks`-chunk plan) over `[start, end)` virtual seconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChunkRun {
+    /// Index into `plans` (queue position of the request).
+    pub task: usize,
+    /// 0-based chunk index within the request's plan.
+    pub chunk: usize,
+    /// Total chunks in the request's plan.
+    pub n_chunks: usize,
+    /// Virtual-clock time the chunk started.
+    pub start: f64,
+    /// Virtual-clock time the chunk finished (`start` + duration).
+    pub end: f64,
+}
+
 /// Run one shard queue's chunk plans on a virtual clock with round-robin
 /// chunk admission: the queue is walked in execution order, each request
 /// runs one chunk per turn, and a request with chunks remaining rotates to
@@ -91,6 +108,15 @@ pub fn chunk_plan(
 /// Returns each request's completion time (its queue-aware TTFT), indexed
 /// like `plans`.
 pub fn interleave(plans: &[Vec<f64>]) -> Vec<f64> {
+    interleave_with(plans, |_| {})
+}
+
+/// [`interleave`] that also reports every executed chunk, in execution
+/// order, through `on_chunk` — the tracing hook behind
+/// [`crate::obs`]'s `prefill_chunk` span events. The schedule (and the
+/// returned completion times) is identical to [`interleave`]'s; the
+/// callback is pure observation.
+pub fn interleave_with(plans: &[Vec<f64>], mut on_chunk: impl FnMut(ChunkRun)) -> Vec<f64> {
     let mut queue: std::collections::VecDeque<usize> = (0..plans.len()).collect();
     let mut next_chunk = vec![0usize; plans.len()];
     let mut finish = vec![0f64; plans.len()];
@@ -98,7 +124,15 @@ pub fn interleave(plans: &[Vec<f64>]) -> Vec<f64> {
     while let Some(t) = queue.pop_front() {
         match plans[t].get(next_chunk[t]).copied() {
             Some(d) => {
+                let start = clock;
                 clock += d;
+                on_chunk(ChunkRun {
+                    task: t,
+                    chunk: next_chunk[t],
+                    n_chunks: plans[t].len(),
+                    start,
+                    end: clock,
+                });
                 next_chunk[t] += 1;
                 if next_chunk[t] < plans[t].len() {
                     queue.push_back(t);
@@ -199,6 +233,34 @@ mod tests {
         let span = finish.iter().cloned().fold(0.0f64, f64::max);
         let work: f64 = plans.iter().map(|p| total(p)).sum();
         assert!((span - work).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interleave_with_reports_every_chunk_and_agrees_with_interleave() {
+        let plans = vec![vec![1.0, 1.0], vec![0.5], vec![0.25, 0.25]];
+        let mut runs: Vec<ChunkRun> = Vec::new();
+        let finish = interleave_with(&plans, |r| runs.push(r));
+        assert_eq!(finish, interleave(&plans), "observation must not reschedule");
+        // every chunk of every plan is reported exactly once
+        assert_eq!(runs.len(), 5);
+        for (task, plan) in plans.iter().enumerate() {
+            for chunk in 0..plan.len() {
+                let r = runs
+                    .iter()
+                    .find(|r| r.task == task && r.chunk == chunk)
+                    .expect("chunk reported");
+                assert_eq!(r.n_chunks, plan.len());
+                assert!((r.end - r.start - plan[chunk]).abs() < 1e-9);
+            }
+        }
+        // execution order: contiguous, monotone slots starting at 0
+        assert_eq!(runs[0].start, 0.0);
+        for w in runs.windows(2) {
+            assert!((w[0].end - w[1].start).abs() < 1e-9, "no clock gaps");
+        }
+        // a request's finish time is its last chunk's end
+        let last_of_0 = runs.iter().rev().find(|r| r.task == 0).unwrap();
+        assert!((last_of_0.end - finish[0]).abs() < 1e-9);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! infallible: once a guard is held, the hot path runs lock-free.
 
 use std::collections::HashMap;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::api::Error;
 use crate::corpus::Corpus;
@@ -28,7 +28,8 @@ use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
 use crate::index::tree::ContextIndex;
 use crate::metrics::{RunMetrics, ShardStats};
-use crate::serve::placement::{PlacementBook, ShardProbe};
+use crate::obs::{merge_events, Counter, EventKind, Registry, StorageOp, TraceEvent};
+use crate::serve::placement::{Placement, PlacementBook, ShardProbe};
 use crate::serve::shard::{shard_of, Shard};
 use crate::serve::{PlacementKind, ServeConfig};
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
@@ -64,6 +65,9 @@ pub struct ServingEngine<E = SimEngine> {
     /// entry per request, but a retention bound is the first thing to add
     /// if this layer ever fronts an unbounded stream with such a policy.
     req_shard: Mutex<HashMap<RequestId, usize>>,
+    /// Engine-wide counter/gauge registry ([`crate::obs`]); shared with
+    /// every shard, always on, lock-free.
+    registry: Arc<Registry>,
 }
 
 impl<E: InferenceEngine> ServingEngine<E> {
@@ -79,8 +83,9 @@ impl<E: InferenceEngine> ServingEngine<E> {
     ) -> ServingEngine<E> {
         cfg.n_shards = cfg.n_shards.max(1);
         cfg.n_workers = cfg.n_workers.max(1);
+        let registry = Arc::new(Registry::new());
         let shards = (0..cfg.n_shards)
-            .map(|i| Mutex::new(Shard::new(i, &cfg, factory(&cfg))))
+            .map(|i| Mutex::new(Shard::new(i, &cfg, factory(&cfg), registry.clone())))
             .collect();
         let placement = Mutex::new(PlacementBook::new(cfg.placement, cfg.n_shards));
         ServingEngine {
@@ -88,6 +93,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
             cfg,
             placement,
             req_shard: Mutex::new(HashMap::new()),
+            registry,
         }
     }
 
@@ -145,29 +151,66 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// per request, decided in arrival order before any worker runs (so
     /// placement is invariant in `n_workers`). Pinned sessions reuse their
     /// first-turn shard; each batch is one placement wave.
-    fn place_batch(&self, reqs: &[Request]) -> Result<Vec<usize>, Error> {
+    fn place_batch(&self, reqs: &[Request]) -> Result<Vec<Placement>, Error> {
         let mut book = shard_guard(&self.placement, "placement ledger")?;
         book.begin_wave();
+        self.registry.add(Counter::PlacementWaves, 1);
         reqs.iter()
             .map(|r| {
                 if book.wants_probe(r.session) {
                     let probes = self.probe_shards(r, &book)?;
-                    Ok(book.assign(r, Some(&probes)))
+                    self.registry.add(Counter::PlacementProbes, 1);
+                    Ok(book.assign_placed(r, Some(&probes)))
                 } else {
-                    Ok(book.assign(r, None))
+                    Ok(book.assign_placed(r, None))
                 }
             })
             .collect()
     }
 
     /// Arrival indices per shard, preserving arrival order within a shard.
-    fn partition(&self, reqs: &[Request]) -> Result<Vec<Vec<usize>>, Error> {
-        let assignment = self.place_batch(reqs)?;
+    fn queues_for(&self, placements: &[Placement]) -> Vec<Vec<usize>> {
         let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
-        for (i, &s) in assignment.iter().enumerate() {
-            queues[s].push(i);
+        for (i, p) in placements.iter().enumerate() {
+            queues[p.shard].push(i);
         }
-        Ok(queues)
+        queues
+    }
+
+    /// Stamp `admitted` / `placed` / `queued` markers for one admission
+    /// wave. Runs after placement and before any worker touches a queue:
+    /// each shard's events are emitted in that shard's arrival order at
+    /// its current virtual clock, so the stream is worker-count
+    /// invariant. Only called when tracing is enabled.
+    fn emit_admission_events(
+        &self,
+        reqs: &[Request],
+        placements: &[Placement],
+        queues: &[Vec<usize>],
+    ) -> Result<(), Error> {
+        let policy = self.cfg.placement.name();
+        for (s, idxs) in queues.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let mut shard = shard_guard(&self.shards[s], "shard")?;
+            let Some(tracer) = &mut shard.tracer else {
+                continue;
+            };
+            let t = tracer.clock();
+            for &i in idxs {
+                let req = Some(reqs[i].id.0);
+                let sess = Some(reqs[i].session.0);
+                tracer.emit(t, 0.0, req, sess, EventKind::Admitted);
+                let placed = EventKind::Placed {
+                    policy,
+                    affinity: placements[i].affinity,
+                };
+                tracer.emit(t, 0.0, req, sess, placed);
+                tracer.emit(t, 0.0, req, sess, EventKind::Queued);
+            }
+        }
+        Ok(())
     }
 
     /// Offline mode (§5.1): cluster-build each shard's context index over
@@ -176,7 +219,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// so the subsequent serves land exactly where their index was built.
     /// No-op for shards without a pilot or without requests.
     pub fn build_offline(&self, reqs: &[Request]) -> Result<(), Error> {
-        let queues = self.partition(reqs)?;
+        let queues = self.queues_for(&self.place_batch(reqs)?);
         par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
             if queues[s].is_empty() {
                 return Ok(());
@@ -214,7 +257,11 @@ impl<E: InferenceEngine> ServingEngine<E> {
         reqs: &[Request],
         corpus: &Corpus,
     ) -> Result<Vec<ServedRequest>, Error> {
-        let queues = self.partition(reqs)?;
+        let placements = self.place_batch(reqs)?;
+        let queues = self.queues_for(&placements);
+        if self.cfg.obs.trace {
+            self.emit_admission_events(reqs, &placements, &queues)?;
+        }
         let per_shard: Vec<Result<Vec<(usize, ServedRequest)>, Error>> =
             par_map_tasks(self.shards.len(), self.cfg.n_workers, |s| {
                 let idxs = &queues[s];
@@ -328,6 +375,14 @@ impl<E: InferenceEngine> ServingEngine<E> {
                 for r in &discards {
                     map.remove(r);
                 }
+            }
+            self.registry.add(Counter::StorageFlushes, 1);
+            if let Some(tracer) = &mut shard.tracer {
+                let t = tracer.clock();
+                let kind = EventKind::Storage {
+                    op: StorageOp::Flush,
+                };
+                tracer.emit(t, 0.0, None, None, kind);
             }
             let index = match &shard.pilot {
                 Some(p) => p.index.to_snapshot(),
@@ -472,6 +527,23 @@ impl<E: InferenceEngine> ServingEngine<E> {
         }
         agg.total_affinity_hit_tokens = affinity_hits.iter().sum();
         Ok((agg, per))
+    }
+
+    /// Snapshot of the engine-wide counter registry, in slot order.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        self.registry.snapshot()
+    }
+
+    /// Merged trace-event stream across all shards, ordered by
+    /// `(virtual time, shard, seq)`. Empty when tracing is disabled
+    /// ([`crate::obs::ObsConfig::trace`]).
+    pub fn trace_events(&self) -> Result<Vec<TraceEvent>, Error> {
+        let mut streams = Vec::with_capacity(self.shards.len());
+        for m in &self.shards {
+            let shard = shard_guard(m, "shard")?;
+            streams.push(shard.tracer.as_ref().map_or_else(Vec::new, |t| t.snapshot()));
+        }
+        Ok(merge_events(streams))
     }
 }
 
@@ -801,6 +873,61 @@ mod tests {
             Err(Error::CorruptSnapshot(_)) => {}
             r => panic!("expected CorruptSnapshot, got {r:?}"),
         }
+    }
+
+    #[test]
+    fn trace_off_by_default_and_counters_always_on() {
+        let corpus = corpus();
+        let engine = sim_engine(small_cfg(3, 2));
+        let reqs: Vec<Request> = (0..9)
+            .map(|i| req(i, i as u32, &[(i % 4) as u32 + 1, 9]))
+            .collect();
+        engine.serve_batch(&reqs, &corpus).unwrap();
+        assert!(
+            engine.trace_events().unwrap().is_empty(),
+            "tracing must default off"
+        );
+        let counters = engine.counters();
+        assert!(counters.contains(&("requests_served", 9)));
+        assert!(counters.contains(&("placement_waves", 1)));
+        assert!(counters.contains(&("trace_events_dropped", 0)));
+    }
+
+    #[test]
+    fn traced_run_covers_the_request_lifecycle_in_order() {
+        use crate::obs::ObsConfig;
+        let corpus = corpus();
+        let mut cfg = small_cfg(3, 2);
+        cfg.obs = ObsConfig::tracing();
+        let engine = sim_engine(cfg);
+        let reqs: Vec<Request> = (0..9)
+            .map(|i| req(i, i as u32, &[(i % 4) as u32 + 1, 9]))
+            .collect();
+        engine.serve_batch(&reqs, &corpus).unwrap();
+        engine.checkpoint_snapshot().unwrap();
+        let events = engine.trace_events().unwrap();
+        for name in [
+            "admitted",
+            "placed",
+            "queued",
+            "prefill_chunk",
+            "storage",
+            "resolved",
+        ] {
+            assert!(
+                events.iter().any(|e| e.kind.name() == name),
+                "missing lifecycle phase {name}"
+            );
+        }
+        for w in events.windows(2) {
+            assert!(w[0].t <= w[1].t, "merged stream must be time-ordered");
+        }
+        let resolved = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Resolved)
+            .count();
+        assert_eq!(resolved, 9, "one resolved marker per request");
+        assert!(engine.counters().contains(&("storage_flushes", 3)));
     }
 
     #[test]

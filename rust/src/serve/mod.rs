@@ -90,6 +90,22 @@
 //!   `prefill_chunk`) and equal a single-shard ground-truth run of the
 //!   same queue (pinned by `rust/tests/serve_stress.rs` and
 //!   `rust/tests/engine_trait.rs`).
+//! * **Observability** — every shard shares an always-on
+//!   [`crate::obs::Registry`] of atomic counters, and with
+//!   [`ServeConfig::obs`]`.trace` set additionally owns a
+//!   [`crate::obs::Tracer`] that stamps per-request lifecycle events
+//!   (`admitted → placed → queued → prefill_chunk* → tier* → resolved`,
+//!   plus `storage` flushes) on the same virtual clock the admission
+//!   simulator runs on. Because placement and queue order are decided
+//!   before workers run, the merged trace is bit-identical across worker
+//!   counts (pinned by `rust/tests/obs.rs`); with tracing off the serving
+//!   hot path allocates nothing extra.
+//!
+//! ```text
+//!   ServingEngine ── obs::Registry (atomic counters, always on)
+//!        └─ Shard ── obs::Tracer (virtual-clock events, --trace-out)
+//!                      └─► obs::export (chrome_trace / run_telemetry)
+//! ```
 //!
 //! Per-shard hit rate, tier residency, placement/affinity counters, queue
 //! depth and latency percentiles surface through
@@ -112,6 +128,7 @@ pub use shard::shard_of;
 use std::collections::HashMap;
 
 use crate::cache::{Storage, StorageError, TierConfig};
+use crate::obs::ObsConfig;
 use crate::engine::costmodel::{CostProfile, ModelSku};
 use crate::engine::sim::{ReusePolicy, SimEngine};
 use crate::pilot::PilotConfig;
@@ -157,6 +174,11 @@ pub struct ServeConfig {
     /// round-robin, or context-aware block-overlap voting over the real
     /// per-shard index/cache state. See [`placement`].
     pub placement: PlacementKind,
+    /// Observability knobs ([`crate::obs`], CLI `--trace-out`): with
+    /// `obs.trace` set each shard records lifecycle events on its virtual
+    /// clock into a bounded ring buffer. Off by default — the disabled
+    /// path allocates nothing and serving output is bit-identical.
+    pub obs: ObsConfig,
 }
 
 impl ServeConfig {
@@ -177,6 +199,7 @@ impl ServeConfig {
             decode_override: None,
             tiers: None,
             placement: PlacementKind::SessionHash,
+            obs: ObsConfig::default(),
         }
     }
 
@@ -232,6 +255,7 @@ mod tests {
         assert!(cfg.decode_override.is_none());
         assert!(cfg.tiers.is_none());
         assert_eq!(cfg.placement, PlacementKind::SessionHash);
+        assert!(!cfg.obs.trace, "tracing must default off");
     }
 
     #[test]

@@ -336,12 +336,27 @@ impl PlacementBook {
     /// load-only synthetic probes when the policy does not need real
     /// ones) and are pinned to its choice.
     pub(crate) fn assign(&mut self, req: &Request, probes: Option<&[ShardProbe]>) -> usize {
+        self.assign_placed(req, probes).shard
+    }
+
+    /// [`PlacementBook::assign`] that also reports *how* the shard was
+    /// chosen: pinned sessions return their first-turn placement (shard +
+    /// affinity flag) so the tracing layer can stamp `placed` events with
+    /// the affinity attribution every turn.
+    pub(crate) fn assign_placed(
+        &mut self,
+        req: &Request,
+        probes: Option<&[ShardProbe]>,
+    ) -> Placement {
         if let Some(pin) = self.pins.get(&req.session) {
-            let shard = pin.shard;
+            let placed = Placement {
+                shard: pin.shard,
+                affinity: pin.affinity,
+            };
             if self.counted.insert(req.id) {
-                self.placed_requests[shard] += 1;
+                self.placed_requests[placed.shard] += 1;
             }
-            return shard;
+            return placed;
         }
         let owned: Vec<ShardProbe>;
         let probes = match probes {
@@ -364,7 +379,7 @@ impl PlacementBook {
         if self.counted.insert(req.id) {
             self.placed_requests[placed.shard] += 1;
         }
-        placed.shard
+        placed
     }
 
     /// Load-only probes (no shard locks) for policies that do not inspect
@@ -695,6 +710,21 @@ mod tests {
         };
         book.record_served(std::slice::from_ref(&served));
         assert_eq!(book.affinity_hit_tokens(), &[40, 0]);
+    }
+
+    #[test]
+    fn assign_placed_reports_affinity_on_every_turn() {
+        let mut book = PlacementBook::new(PlacementKind::ContextAware, 2);
+        book.assign(&req(1, 1, &[1, 2]), Some(&probes(2)));
+        let mut ps = probes(2);
+        ps[0].index_blocks = 2;
+        let first = book.assign_placed(&req(2, 2, &[1, 2]), Some(&ps));
+        assert!(first.affinity, "context vote should win");
+        // a later turn of the same session replays the pinned placement,
+        // affinity flag included, and agrees with plain assign
+        let later = book.assign_placed(&req(3, 2, &[1, 2]), Some(&probes(2)));
+        assert_eq!(later, first);
+        assert_eq!(book.assign(&req(4, 2, &[1]), None), first.shard);
     }
 
     #[test]

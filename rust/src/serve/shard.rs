@@ -6,10 +6,13 @@
 //! shards cannot change this shard's results — the determinism contract
 //! `rust/tests/serve_stress.rs` pins down.
 
+use std::sync::Arc;
+
 use crate::corpus::Corpus;
 use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
+use crate::obs::{Counter, EventKind, Registry, TierOp, Tracer};
 use crate::pilot::ContextPilot;
 use crate::quality::QualityModel;
 use crate::serve::{admission, ServeConfig};
@@ -65,10 +68,26 @@ pub struct Shard<E = SimEngine> {
     pub(crate) prefill_chunk: Option<usize>,
     pub(crate) metrics: RunMetrics,
     pub(crate) max_queue_depth: usize,
+    /// Engine-wide counter registry ([`crate::obs`]), shared by every
+    /// shard; always on.
+    pub(crate) registry: Arc<Registry>,
+    /// Per-shard lifecycle tracer; `Some` only when
+    /// [`crate::obs::ObsConfig::trace`] is set (the disabled path
+    /// allocates nothing on the hot path).
+    pub(crate) tracer: Option<Tracer>,
 }
 
 impl<E: InferenceEngine> Shard<E> {
-    pub(crate) fn new(id: usize, cfg: &ServeConfig, engine: E) -> Shard<E> {
+    pub(crate) fn new(
+        id: usize,
+        cfg: &ServeConfig,
+        engine: E,
+        registry: Arc<Registry>,
+    ) -> Shard<E> {
+        let tracer = cfg
+            .obs
+            .trace
+            .then(|| Tracer::new(id, cfg.obs.trace_capacity, registry.clone()));
         Shard {
             id,
             pilot: cfg.pilot.clone().map(ContextPilot::new),
@@ -79,6 +98,8 @@ impl<E: InferenceEngine> Shard<E> {
             prefill_chunk: cfg.prefill_chunk,
             metrics: RunMetrics::new(),
             max_queue_depth: 0,
+            registry,
+            tracer,
         }
     }
 
@@ -98,6 +119,7 @@ impl<E: InferenceEngine> Shard<E> {
         corpus: &Corpus,
     ) -> (Vec<ServedRequest>, Vec<RequestId>) {
         self.max_queue_depth = self.max_queue_depth.max(batch.len());
+        let cache_before = self.engine.cache_stats();
         let mut out = Vec::with_capacity(batch.len());
         let mut plans: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
         let mut all_evicted = Vec::new();
@@ -170,14 +192,123 @@ impl<E: InferenceEngine> Shard<E> {
                 }
             }
         }
-        // admission accounting: one virtual clock per queue wave
-        let finish = admission::interleave(&plans);
+        // admission accounting: one virtual clock per queue wave; with
+        // tracing on, the identical schedule also reports per-chunk slots
+        let mut runs: Vec<admission::ChunkRun> = Vec::new();
+        let finish = if self.tracer.is_some() {
+            admission::interleave_with(&plans, |r| runs.push(r))
+        } else {
+            admission::interleave(&plans)
+        };
         for (k, served) in out.iter_mut().enumerate() {
             served.queued_ttft = finish[k];
             served.prefill_chunks = plans[k].len() as u32;
             self.metrics.record(served);
+            self.record_request_counters(served);
         }
+        if !batch.is_empty() {
+            self.registry.add(Counter::QueueWaves, 1);
+            self.registry.max(Counter::MaxQueueDepth, batch.len() as u64);
+        }
+        let cache_after = self.engine.cache_stats();
+        let demoted = cache_after.demoted_tokens.saturating_sub(cache_before.demoted_tokens);
+        self.registry.add(Counter::DemotedTokens, demoted);
+        self.registry.add(
+            Counter::PromotedTokens,
+            cache_after.promoted_tokens.saturating_sub(cache_before.promoted_tokens),
+        );
+        self.registry.add(
+            Counter::DiscardedTokens,
+            cache_after.discarded_tokens.saturating_sub(cache_before.discarded_tokens),
+        );
+        self.trace_wave(&out, &runs, &finish, demoted);
         (out, all_evicted)
+    }
+
+    /// Bump the always-on per-request registry counters for one served
+    /// request (the registry mirrors [`RunMetrics`]; a test pins the two
+    /// equal where they overlap).
+    fn record_request_counters(&self, served: &ServedRequest) {
+        let r = &self.registry;
+        r.add(Counter::RequestsServed, 1);
+        r.add(Counter::PromptTokens, served.prompt_tokens as u64);
+        r.add(Counter::CachedTokens, served.cached_tokens as u64);
+        r.add(Counter::HotHitTokens, served.tier_hits.hbm as u64);
+        r.add(Counter::WarmHitTokens, served.tier_hits.dram as u64);
+        r.add(Counter::ColdHitTokens, served.tier_hits.ssd as u64);
+        r.add(Counter::PrefillChunks, served.prefill_chunks as u64);
+    }
+
+    /// Stamp one admission wave's events on the shard's virtual clock:
+    /// each executed chunk as a span, per-request tier promotions and the
+    /// `resolved` marker at the request's queue-aware completion, and the
+    /// wave's demotion total (if any) at the wave end. No-op unless
+    /// tracing is enabled. The clock advances by the wave's span — the
+    /// total work interleaved — so timestamps are cumulative simulated
+    /// seconds, independent of worker scheduling.
+    fn trace_wave(
+        &mut self,
+        out: &[ServedRequest],
+        runs: &[admission::ChunkRun],
+        finish: &[f64],
+        demoted_tokens: u64,
+    ) {
+        let Some(tracer) = &mut self.tracer else {
+            return;
+        };
+        let base = tracer.clock();
+        for run in runs {
+            let s = &out[run.task];
+            // reconstruct the chunk's token count from its share of the
+            // request's engine occupancy (uncached + promoted region)
+            let occupying = s.prompt_tokens.saturating_sub(s.tier_hits.hbm);
+            let tokens = if s.ttft > 0.0 {
+                ((run.end - run.start) / s.ttft * occupying as f64).round() as u32
+            } else {
+                0
+            };
+            tracer.emit(
+                base + run.start,
+                run.end - run.start,
+                Some(s.request.id.0),
+                Some(s.request.session.0),
+                EventKind::PrefillChunk {
+                    index: run.chunk as u32,
+                    of: run.n_chunks as u32,
+                    tokens,
+                },
+            );
+        }
+        for (k, s) in out.iter().enumerate() {
+            let (req, sess) = (Some(s.request.id.0), Some(s.request.session.0));
+            if s.tier_hits.dram > 0 {
+                let kind = EventKind::Tier {
+                    op: TierOp::Promote,
+                    tier: "dram",
+                    tokens: s.tier_hits.dram as u64,
+                };
+                tracer.emit(base + finish[k], 0.0, req, sess, kind);
+            }
+            if s.tier_hits.ssd > 0 {
+                let kind = EventKind::Tier {
+                    op: TierOp::Promote,
+                    tier: "ssd",
+                    tokens: s.tier_hits.ssd as u64,
+                };
+                tracer.emit(base + finish[k], 0.0, req, sess, kind);
+            }
+            tracer.emit(base + finish[k], 0.0, req, sess, EventKind::Resolved);
+        }
+        let span = finish.iter().copied().fold(0.0f64, f64::max);
+        if demoted_tokens > 0 {
+            let kind = EventKind::Tier {
+                op: TierOp::Demote,
+                tier: "dram",
+                tokens: demoted_tokens,
+            };
+            tracer.emit(base + span, 0.0, None, None, kind);
+        }
+        tracer.advance(span);
     }
 
     /// Serve a single request as a one-element queue. Alg.-5 scheduling
@@ -238,6 +369,9 @@ impl<E: InferenceEngine> Shard<E> {
         served.queued_ttft = served.ttft;
         served.prefill_chunks = plan.len() as u32;
         self.metrics.record(&served);
+        self.record_request_counters(&served);
+        self.registry.add(Counter::QueueWaves, 1);
+        self.registry.max(Counter::MaxQueueDepth, 1);
         (served, evicted)
     }
 
@@ -298,7 +432,7 @@ mod tests {
     }
 
     fn sim_shard(id: usize, cfg: &ServeConfig) -> Shard {
-        Shard::new(id, cfg, cfg.sim_engine())
+        Shard::new(id, cfg, cfg.sim_engine(), Arc::new(Registry::new()))
     }
 
     #[test]
@@ -378,6 +512,48 @@ mod tests {
         // unchunked: one prefill slot per request, FIFO accounting
         assert_eq!(st.prefill_chunks, 3);
         assert!(st.p99_queued_ttft >= st.p99_ttft);
+    }
+
+    #[test]
+    fn registry_and_tracer_observe_a_wave() {
+        let corpus = corpus();
+        let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        cfg.obs = crate::obs::ObsConfig::tracing();
+        let mut shard = sim_shard(0, &cfg);
+        let batch = vec![req(1, 1, &[1, 2, 3]), req(2, 2, &[1, 2, 9])];
+        let (out, _) = shard.serve_queue(&batch, &corpus);
+        assert_eq!(shard.registry.get(Counter::RequestsServed), 2);
+        assert_eq!(shard.registry.get(Counter::QueueWaves), 1);
+        assert_eq!(shard.registry.get(Counter::MaxQueueDepth), 2);
+        assert_eq!(
+            shard.registry.get(Counter::PromptTokens),
+            shard.metrics.total_prompt_tokens
+        );
+        let tracer = shard.tracer.as_ref().expect("tracing enabled");
+        let events = tracer.snapshot();
+        let resolved = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Resolved)
+            .count();
+        assert_eq!(resolved, 2, "one resolved marker per request");
+        let chunks = events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::PrefillChunk { .. }))
+            .count();
+        assert_eq!(chunks as u64, shard.registry.get(Counter::PrefillChunks));
+        // the virtual clock advanced by the wave span (max completion)
+        let span = out.iter().map(|s| s.queued_ttft).fold(0.0f64, f64::max);
+        assert!((tracer.clock() - span).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracing_off_means_no_tracer_but_counters_still_run() {
+        let corpus = corpus();
+        let cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+        let mut shard = sim_shard(0, &cfg);
+        shard.serve_queue(&[req(1, 1, &[1, 2])], &corpus);
+        assert!(shard.tracer.is_none(), "default config must not trace");
+        assert_eq!(shard.registry.get(Counter::RequestsServed), 1);
     }
 
     #[test]

@@ -96,6 +96,10 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
@@ -177,7 +181,20 @@ mod tests {
         assert!((s.p50() - 50.5).abs() < 1e-9);
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p95() - 95.05).abs() < 0.02);
         assert!((s.p99() - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_accessors_agree_and_are_monotone() {
+        let mut s = Summary::new();
+        for x in [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0] {
+            s.record(x);
+        }
+        assert_eq!(s.p50(), s.percentile(50.0));
+        assert_eq!(s.p95(), s.percentile(95.0));
+        assert_eq!(s.p99(), s.percentile(99.0));
+        assert!(s.p50() <= s.p95() && s.p95() <= s.p99());
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Integration: the observability layer (`contextpilot::obs`) through the
+//! facade. The contracts under test:
+//!
+//! 1. the merged lifecycle trace is deterministic and worker-count
+//!    invariant (events are stamped on the shards' virtual clocks, not
+//!    wall time);
+//! 2. with observability off — the default — serving output is
+//!    bit-identical to a server that never heard of the obs layer: same
+//!    hit/miss fingerprints, same TTFT bits, zero trace events;
+//! 3. the always-on counter registry mirrors `RunMetrics` exactly;
+//! 4. both exporters produce JSON that round-trips through `util::json`,
+//!    and the telemetry document passes its own validator.
+
+use std::sync::Arc;
+
+use contextpilot::api::{ObsConfig, Server, ServerBuilder};
+use contextpilot::corpus::Corpus;
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::corpus_for;
+use contextpilot::obs::{chrome_trace, run_telemetry, validate_telemetry, TraceEvent};
+use contextpilot::serve::ServeConfig;
+use contextpilot::types::ServedRequest;
+use contextpilot::util::json::Json;
+use contextpilot::util::prop::hit_miss_fingerprint;
+use contextpilot::workload::{hybrid, Dataset, Workload};
+
+fn serve_cfg(shards: usize, workers: usize, trace: bool) -> ServeConfig {
+    let mut cfg = ServeConfig::new(ModelSku::Qwen3_4B);
+    cfg.n_shards = shards;
+    cfg.n_workers = workers;
+    cfg.capacity_tokens = 40_000;
+    cfg.decode_tokens = 8;
+    cfg.prefill_chunk = Some(512);
+    if trace {
+        cfg.obs = ObsConfig::tracing();
+    }
+    cfg
+}
+
+fn server(cfg: ServeConfig, corpus: &Arc<Corpus>) -> Server {
+    ServerBuilder::from_config(cfg)
+        .corpus(corpus.clone())
+        .build()
+        .expect("test serve config is valid")
+}
+
+fn workload() -> Workload {
+    hybrid(Dataset::MtRag, 16, 3, 8, 0x0B5)
+}
+
+/// The exact bits of every latency output — any nondeterminism or
+/// obs-induced perturbation shows up here.
+fn ttft_bits(served: &[ServedRequest]) -> Vec<(u64, u64)> {
+    served
+        .iter()
+        .map(|s| (s.ttft.to_bits(), s.queued_ttft.to_bits()))
+        .collect()
+}
+
+fn counter(counters: &[(&'static str, u64)], name: &str) -> u64 {
+    counters
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|&(_, v)| v)
+        .unwrap_or_else(|| panic!("no counter named {name}"))
+}
+
+#[test]
+fn trace_stream_is_worker_count_invariant() {
+    let w = workload();
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |workers: usize| -> Vec<TraceEvent> {
+        let server = server(serve_cfg(4, workers, true), &corpus);
+        server.serve_batch(&w.requests).expect("serve");
+        server.trace_events().expect("trace")
+    };
+    let base = run(1);
+    assert!(!base.is_empty(), "traced run must emit events");
+    for name in ["admitted", "placed", "queued", "prefill_chunk", "resolved"] {
+        assert!(
+            base.iter().any(|e| e.kind.name() == name),
+            "missing lifecycle phase {name}"
+        );
+    }
+    for w2 in base.windows(2) {
+        assert!(w2[0].t <= w2[1].t, "merged stream must be time-ordered");
+    }
+    for workers in [2usize, 4, 8] {
+        assert_eq!(run(workers), base, "workers={workers} changed the trace");
+    }
+}
+
+#[test]
+fn disabled_observability_serves_bit_identically() {
+    let w = workload();
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |trace: bool| {
+        let server = server(serve_cfg(4, 2, trace), &corpus);
+        let served = server.serve_batch(&w.requests).expect("serve");
+        let events = server.trace_events().expect("trace");
+        (hit_miss_fingerprint(&served), ttft_bits(&served), events)
+    };
+    let (fp_off, bits_off, trace_off) = run(false);
+    let (fp_on, bits_on, trace_on) = run(true);
+    assert!(trace_off.is_empty(), "no tracer when observability is off");
+    assert!(!trace_on.is_empty(), "tracer on must record the run");
+    assert_eq!(fp_on, fp_off, "tracing changed hit/miss results");
+    assert_eq!(bits_on, bits_off, "tracing changed TTFT bits");
+}
+
+#[test]
+fn registry_mirrors_run_metrics() {
+    let w = workload();
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    // observability off: the registry runs regardless
+    let server = server(serve_cfg(4, 2, false), &corpus);
+    server.serve_batch(&w.requests).expect("serve");
+    let (m, per_shard) = server.metrics().expect("metrics");
+    let c = server.counters();
+    assert_eq!(counter(&c, "requests_served"), m.len() as u64);
+    assert_eq!(counter(&c, "prompt_tokens"), m.total_prompt_tokens);
+    assert_eq!(counter(&c, "cached_tokens"), m.total_cached_tokens);
+    assert_eq!(counter(&c, "hot_hit_tokens"), m.total_hot_hit_tokens);
+    assert_eq!(counter(&c, "warm_hit_tokens"), m.total_warm_hit_tokens);
+    assert_eq!(counter(&c, "cold_hit_tokens"), m.total_cold_hit_tokens);
+    assert_eq!(counter(&c, "prefill_chunks"), m.total_prefill_chunks);
+    let max_depth = per_shard.iter().map(|s| s.max_queue_depth).max();
+    assert_eq!(counter(&c, "max_queue_depth"), max_depth.unwrap_or(0) as u64);
+    assert!(counter(&c, "queue_waves") > 0, "waves must be counted");
+    assert!(counter(&c, "placement_waves") > 0);
+}
+
+#[test]
+fn exports_round_trip_and_validate() {
+    let w = workload();
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = server(serve_cfg(4, 2, true), &corpus);
+    server.serve_batch(&w.requests).expect("serve");
+    let events = server.trace_events().expect("trace");
+
+    let trace = chrome_trace(&events);
+    let parsed = Json::parse(&trace.to_string()).expect("chrome trace parses back");
+    let rows = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(rows.len(), events.len());
+
+    let (mut m, per_shard) = server.metrics().expect("metrics");
+    let telemetry = run_telemetry(
+        "pilot",
+        "mtrag",
+        &mut m,
+        &per_shard,
+        &server.counters(),
+        events.len(),
+    );
+    validate_telemetry(&telemetry).expect("telemetry validates");
+    let reparsed = Json::parse(&telemetry.to_string()).expect("telemetry parses back");
+    validate_telemetry(&reparsed).expect("round-tripped telemetry still validates");
+    assert_eq!(reparsed.get("requests").as_usize(), Some(w.requests.len()));
+    assert_eq!(
+        reparsed.get("counters").get("requests_served").as_u64(),
+        Some(w.requests.len() as u64)
+    );
+}
