@@ -50,6 +50,16 @@ fn main() {
     });
     println!("{}", r.report());
 
+    // placement probe: directory-backed known_blocks over a 2k-leaf index
+    // — O(context blocks) per call, no leaf scan, no allocation
+    let mut pi = 0usize;
+    let r = quick("known_blocks probe (2k-leaf index, k=15)", || {
+        let (_, c) = &queries[pi % queries.len()];
+        black_box(built.index.known_blocks(c));
+        pi += 1;
+    });
+    println!("{}", r.report());
+
     let dcfg = DedupConfig::default();
     let mut di = 0usize;
     let r = quick("dedup_context (block+CDC)", || {

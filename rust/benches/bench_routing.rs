@@ -14,7 +14,12 @@
 //!  * context-aware placement never loses to session hashing on cached
 //!    tokens, and strictly beats it whenever there is more than one shard
 //!    to get wrong;
-//!  * at one shard every policy is byte-identical (placement is inert).
+//!  * at one shard every policy is byte-identical (placement is inert);
+//!  * probe cost is O(request blocks), not O(alive index leaves):
+//!    `placement_probe_ops` equals shards × Σ(distinct blocks of each
+//!    probed first-turn request) exactly for context-aware placement (0
+//!    for the lock-free policies), and `placement_probe_shard_locks` —
+//!    shard mutexes taken from the probe path — is zero in every cell.
 //!
 //! Sizes: `--cheap` (CI smoke) < default quick < CTXPILOT_FULL=1.
 
@@ -49,6 +54,8 @@ struct Cell {
     affinity: u64,
     mean_ttft: f64,
     p99_ttft: f64,
+    probe_ops: u64,
+    probe_shard_locks: u64,
 }
 
 /// Deterministic result signature: per-request reuse fingerprint plus the
@@ -77,6 +84,16 @@ fn run_once(
         served.extend(server.serve_batch(&w.requests[i..j]).expect("serve wave"));
     }
     let wall = t0.elapsed().as_secs_f64();
+    let counter = |name: &str| {
+        server
+            .counters()
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("counter {name} missing"))
+    };
+    let probe_ops = counter("placement_probe_ops");
+    let probe_shard_locks = counter("placement_probe_shard_locks");
     let (mut m, _) = server.metrics().expect("metrics");
     let cell = Cell {
         placement,
@@ -89,8 +106,26 @@ fn run_once(
         affinity: m.total_affinity_hit_tokens,
         mean_ttft: m.mean_ttft(),
         p99_ttft: m.p99_ttft(),
+        probe_ops,
+        probe_shard_locks,
     };
     ((reuse_fingerprint(&served), m.mean_ttft().to_bits()), cell)
+}
+
+/// Ground-truth probe cost of one context-aware run: every first-turn
+/// (unpinned) request is probed once, and a probe performs one block
+/// lookup per *distinct* context block per shard — independent of how
+/// many leaves the shard indexes hold. Pinned later turns never probe.
+fn expected_probe_ops(w: &contextpilot::workload::Workload, shards: usize) -> u64 {
+    let mut seen_sessions = std::collections::HashSet::new();
+    let mut ops = 0u64;
+    for r in &w.requests {
+        if seen_sessions.insert(r.session) {
+            let distinct: std::collections::HashSet<_> = r.context.iter().collect();
+            ops += distinct.len() as u64;
+        }
+    }
+    ops * shards as u64
 }
 
 fn main() {
@@ -122,12 +157,14 @@ fn main() {
             "Cached tok",
             "Affinity tok",
             "Mean TTFT",
+            "Probe ops",
             "Req/s (1..4w)",
         ],
     );
 
     let mut cells: Vec<Cell> = Vec::new();
     for &shards in &SHARD_SWEEP {
+        let want_aware_ops = expected_probe_ops(&w, shards);
         let mut per_placement: Vec<(PlacementKind, Signature, Cell)> = Vec::new();
         for placement in PLACEMENTS {
             let mut sig: Option<Signature> = None;
@@ -142,6 +179,22 @@ fn main() {
                         "{placement} shards={shards} workers={workers} changed results"
                     ),
                 }
+                // probe-cost contract: O(request blocks), zero shard locks
+                let want_ops = if placement == PlacementKind::ContextAware {
+                    want_aware_ops
+                } else {
+                    0
+                };
+                assert_eq!(
+                    cell.probe_ops, want_ops,
+                    "{placement} shards={shards} workers={workers}: probe ops \
+                     not shards x distinct first-turn request blocks"
+                );
+                assert_eq!(
+                    cell.probe_shard_locks, 0,
+                    "{placement} shards={shards} workers={workers}: probe path \
+                     took a shard lock"
+                );
                 rps.push(cell.req_per_s);
                 if first_cell.is_none() {
                     first_cell = Some(cell);
@@ -157,6 +210,7 @@ fn main() {
                 format!("{}", cell.cached),
                 format!("{}", cell.affinity),
                 format!("{:.4}s", cell.mean_ttft),
+                format!("{}", cell.probe_ops),
                 rps.iter()
                     .map(|r| format!("{r:.0}"))
                     .collect::<Vec<_>>()
@@ -211,6 +265,8 @@ fn main() {
                 ("affinity_hit_tokens", Json::num(c.affinity as f64)),
                 ("mean_ttft_s", Json::num(c.mean_ttft)),
                 ("p99_ttft_s", Json::num(c.p99_ttft)),
+                ("probe_ops", Json::u64(c.probe_ops)),
+                ("probe_shard_locks", Json::u64(c.probe_shard_locks)),
             ])
         })
         .collect();

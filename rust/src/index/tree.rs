@@ -61,6 +61,15 @@ pub struct ContextIndex {
     req_to_leaf: HashMap<RequestId, NodeId>,
     pub alpha: f64,
     conversations: HashMap<SessionId, ConvRecord>,
+    /// Inverted block directory: `BlockId` → number of alive leaves whose
+    /// context contains it (counted once per leaf, however often the block
+    /// repeats inside one context). Kept write-through by `alloc`,
+    /// `release` and §4.1 pruning so [`ContextIndex::known_blocks`] is
+    /// O(context blocks) instead of a full leaf scan. Derived state:
+    /// rebuilt on snapshot restore, never serialized.
+    block_dir: HashMap<BlockId, u32>,
+    /// Incremental alive-slot count mirroring the arena filter-scan.
+    alive_count: usize,
 }
 
 /// Result of a context search (Algorithm 1).
@@ -89,6 +98,8 @@ impl ContextIndex {
             req_to_leaf: HashMap::new(),
             alpha,
             conversations: HashMap::new(),
+            block_dir: HashMap::new(),
+            alive_count: 1,
         }
     }
 
@@ -101,7 +112,12 @@ impl ContextIndex {
     }
 
     pub fn len_alive(&self) -> usize {
-        self.nodes.iter().filter(|n| n.alive).count()
+        debug_assert_eq!(
+            self.alive_count,
+            self.nodes.iter().filter(|n| n.alive).count(),
+            "alive counter drifted from the arena scan"
+        );
+        self.alive_count
     }
 
     /// Arena size (alive + dead slots) — for id iteration.
@@ -116,6 +132,12 @@ impl ContextIndex {
     /// Mark a node dead and recycle its slot (build-phase restructuring).
     pub(crate) fn release(&mut self, id: NodeId) {
         debug_assert!(id != self.root);
+        if self.nodes[id].alive {
+            if self.nodes[id].is_leaf() {
+                self.dir_remove_leaf(id);
+            }
+            self.alive_count -= 1;
+        }
         self.nodes[id].alive = false;
         self.nodes[id].children.clear();
         self.nodes[id].context.clear();
@@ -132,12 +154,31 @@ impl ContextIndex {
     /// Placement probe ([`crate::serve::placement`]): how many distinct
     /// blocks of `context` appear in any alive leaf. Side-effect-free
     /// (`&self` — no `freq` ticks, unlike [`ContextIndex::search`]), so
-    /// the serving layer can poll it per queued request. Leaves carry full
-    /// aligned contexts, so scanning them covers everything the index
-    /// knows; eviction pruning (§4.1) removes dead leaves from the count
-    /// automatically, which is exactly what keeps context-aware placement
-    /// honest about what is still cached.
+    /// the serving layer can poll it per queued request, and — since the
+    /// inverted block directory — O(context blocks) with zero allocation:
+    /// one directory lookup per distinct block, independent of how many
+    /// leaves are alive. Leaves carry full aligned contexts, so the
+    /// directory covers everything the index knows; eviction pruning
+    /// (§4.1) drops a pruned leaf's refcounts, which is exactly what keeps
+    /// context-aware placement honest about what is still cached.
     pub fn known_blocks(&self, context: &Context) -> usize {
+        let mut found = 0usize;
+        for (i, b) in context.iter().enumerate() {
+            if context[..i].contains(b) {
+                continue; // duplicate within the probe: already looked up
+            }
+            if self.block_dir.contains_key(b) {
+                found += 1;
+            }
+        }
+        found
+    }
+
+    /// The pre-directory probe — a full scan over alive leaves with two
+    /// scratch `HashSet`s. Kept only as the oracle that the property tests
+    /// pin [`ContextIndex::known_blocks`] against.
+    #[cfg(test)]
+    pub(crate) fn known_blocks_scan(&self, context: &Context) -> usize {
         if context.is_empty() {
             return 0;
         }
@@ -156,14 +197,88 @@ impl ContextIndex {
         found.len()
     }
 
+    /// Distinct blocks known to any alive leaf — the size of the inverted
+    /// directory (surfaced per shard as
+    /// [`ShardStats::index_blocks`](crate::metrics::ShardStats)).
+    pub fn distinct_blocks(&self) -> usize {
+        self.block_dir.len()
+    }
+
+    /// Copy the directory's key set into `out` (cleared first). The
+    /// serving layer's probe-snapshot publish path uses this to hand the
+    /// placement prober an owned block set it can read without taking the
+    /// shard lock.
+    pub fn copy_block_set_into(&self, out: &mut HashSet<BlockId>) {
+        out.clear();
+        out.extend(self.block_dir.keys().copied());
+    }
+
+    /// Count a (childless, alive) leaf's distinct blocks into the
+    /// directory.
+    fn dir_add_leaf(&mut self, id: NodeId) {
+        let ctx = &self.nodes[id].context;
+        for (i, b) in ctx.iter().enumerate() {
+            if ctx[..i].contains(b) {
+                continue;
+            }
+            *self.block_dir.entry(*b).or_insert(0) += 1;
+        }
+    }
+
+    /// Drop a leaf's distinct blocks from the directory (refcounts that
+    /// reach zero are removed, so `block_dir.len()` stays the distinct
+    /// known-block count).
+    fn dir_remove_leaf(&mut self, id: NodeId) {
+        let ctx = &self.nodes[id].context;
+        for (i, b) in ctx.iter().enumerate() {
+            if ctx[..i].contains(b) {
+                continue;
+            }
+            if let Some(n) = self.block_dir.get_mut(b) {
+                *n -= 1;
+                if *n == 0 {
+                    self.block_dir.remove(b);
+                }
+            } else {
+                debug_assert!(false, "directory missing a block of an alive leaf");
+            }
+        }
+    }
+
+    /// Recompute the derived state — the inverted block directory and the
+    /// incremental alive counter — from the arena. Used after snapshot
+    /// restore (derived maps are deliberately not serialized, keeping the
+    /// snapshot format byte-identical to the pre-directory codec) and by
+    /// test fixtures that hand-wire tree structure.
+    fn rebuild_derived(&mut self) {
+        self.alive_count = self.nodes.iter().filter(|n| n.alive).count();
+        self.block_dir.clear();
+        for id in 0..self.nodes.len() {
+            if self.nodes[id].alive && self.nodes[id].is_leaf() {
+                self.dir_add_leaf(id);
+            }
+        }
+    }
+
     pub(crate) fn alloc(&mut self, node: IndexNode) -> NodeId {
-        if let Some(id) = self.free.pop() {
+        let id = if let Some(id) = self.free.pop() {
             self.nodes[id] = node;
             id
         } else {
             self.nodes.push(node);
             self.nodes.len() - 1
+        };
+        if self.nodes[id].alive {
+            self.alive_count += 1;
+            // nodes allocated childless are leaves, and no production path
+            // ever gives a leaf children afterwards (splits create a fresh
+            // virtual parent), so counting here keeps the directory exact;
+            // virtual nodes arrive with children and never contribute
+            if self.nodes[id].is_leaf() {
+                self.dir_add_leaf(id);
+            }
         }
+        id
     }
 
     pub(crate) fn register_request(&mut self, req: RequestId, leaf: NodeId) {
@@ -335,6 +450,11 @@ impl ContextIndex {
                 if self.nodes[leaf].alive {
                     self.nodes[leaf].requests.retain(|&x| x != r);
                     if self.nodes[leaf].requests.is_empty() {
+                        // uncount the leaf here, not in `remove_node`: the
+                        // recursive prune also removes transiently childless
+                        // former-internal parents, which were never counted
+                        // into the directory
+                        self.dir_remove_leaf(leaf);
                         self.remove_node(leaf);
                     }
                 }
@@ -346,6 +466,7 @@ impl ContextIndex {
         debug_assert!(self.nodes[id].children.is_empty());
         let parent = self.nodes[id].parent;
         self.nodes[id].alive = false;
+        self.alive_count -= 1;
         self.nodes[id].context.clear();
         for r in std::mem::take(&mut self.nodes[id].requests) {
             self.req_to_leaf.remove(&r);
@@ -644,14 +765,17 @@ impl ContextIndex {
                 return Err("conversation recorded twice".to_string());
             }
         }
-        let ix = ContextIndex {
+        let mut ix = ContextIndex {
             nodes,
             free,
             root,
             req_to_leaf,
             alpha,
             conversations,
+            block_dir: HashMap::new(),
+            alive_count: 0,
         };
+        ix.rebuild_derived();
         ix.check_invariants()?;
         Ok(ix)
     }
@@ -703,6 +827,30 @@ impl ContextIndex {
             if !self.nodes[leaf].requests.contains(&r) {
                 return Err(format!("request {r:?} leaf backlink mismatch"));
             }
+        }
+        // derived state mirrors the arena exactly
+        let alive_scan = self.nodes.iter().filter(|n| n.alive).count();
+        if self.alive_count != alive_scan {
+            return Err(format!(
+                "alive counter {} != arena scan {alive_scan}",
+                self.alive_count
+            ));
+        }
+        let mut expect: HashMap<BlockId, u32> = HashMap::new();
+        for n in self.nodes.iter().filter(|n| n.alive && n.is_leaf()) {
+            for (i, b) in n.context.iter().enumerate() {
+                if !n.context[..i].contains(b) {
+                    *expect.entry(*b).or_insert(0) += 1;
+                }
+            }
+        }
+        if expect != self.block_dir {
+            return Err(format!(
+                "inverted block directory drifted from the leaf scan \
+                 ({} entries vs {} expected)",
+                self.block_dir.len(),
+                expect.len()
+            ));
         }
         Ok(())
     }
@@ -773,6 +921,10 @@ mod tests {
         ix.req_to_leaf.insert(RequestId(1), c1);
         ix.req_to_leaf.insert(RequestId(2), c2);
         ix.req_to_leaf.insert(RequestId(3), c3);
+        // the fixture allocs C5/C4 childless and wires their children by
+        // hand, which no production path does — recompute the directory
+        // and alive counter from the finished shape
+        ix.rebuild_derived();
         ix.check_invariants().unwrap();
         (ix, c5, c4)
     }
@@ -978,6 +1130,67 @@ mod tests {
                     return Err("sub-block hash lost precision".to_string());
                 }
                 Ok(())
+            },
+        );
+    }
+
+    /// Tentpole oracle: the directory-backed [`ContextIndex::known_blocks`]
+    /// equals the pre-directory full leaf scan after every step of
+    /// randomized insert / evict / snapshot-restore sequences, and the
+    /// derived state (directory + alive counter) never drifts from the
+    /// arena (`check_invariants` recomputes both).
+    #[test]
+    fn prop_directory_matches_leaf_scan() {
+        check(
+            "inverted directory == leaf scan",
+            Config {
+                cases: 48,
+                base_seed: 0xB10C,
+                max_size: 60,
+            },
+            |rng: &mut Rng, size| {
+                let mut ix = ContextIndex::new(0.001);
+                let mut next_req = 0u64;
+                let mut live: Vec<u64> = Vec::new();
+                for step in 0..size.max(1) {
+                    let op = rng.below(8);
+                    if op < 5 || live.is_empty() {
+                        // insert (contexts may repeat blocks: the directory
+                        // must count a leaf's block once, however often it
+                        // appears in one context)
+                        let len = 1 + rng.below(6);
+                        let c: Context =
+                            (0..len).map(|_| BlockId(rng.below(24) as u32)).collect();
+                        let f = ix.search(&c);
+                        ix.insert_at(&f, c, RequestId(next_req));
+                        live.push(next_req);
+                        next_req += 1;
+                    } else if op < 7 {
+                        // §4.1 eviction prune
+                        let i = rng.below(live.len());
+                        ix.on_evict(&[RequestId(live.swap_remove(i))]);
+                    } else {
+                        // snapshot → restore, then keep mutating the restored
+                        // copy (its rebuilt directory must be seamless)
+                        let snap = ix.to_snapshot().to_string();
+                        let parsed = Json::parse(&snap).map_err(|e| e.to_string())?;
+                        ix = ContextIndex::from_snapshot(&parsed)
+                            .map_err(|e| format!("restore: {e}"))?;
+                    }
+                    for _ in 0..3 {
+                        let len = rng.below(6);
+                        let probe: Context =
+                            (0..len).map(|_| BlockId(rng.below(30) as u32)).collect();
+                        let (dir, scan) = (ix.known_blocks(&probe), ix.known_blocks_scan(&probe));
+                        if dir != scan {
+                            return Err(format!(
+                                "step {step}: directory probe {dir} != leaf scan {scan} \
+                                 for {probe:?}"
+                            ));
+                        }
+                    }
+                }
+                ix.check_invariants()
             },
         );
     }

@@ -53,7 +53,10 @@
 //!   ([`serve::placement`], CLI `--placement session|rr|context`): the
 //!   context-aware policy votes by each shard's real index/cache state so
 //!   users sharing a corpus land where its KV already lives (§7.2 /
-//!   Table 6 routing, folded into the serving layer). Prompts whose
+//!   Table 6 routing, folded into the serving layer). Votes read
+//!   published per-shard probe snapshots backed by the index's inverted
+//!   block directory — O(request blocks) per probe, zero shard-lock
+//!   acquisitions on the probe path. Prompts whose
 //!   uncached prefill exceeds `--prefill-chunk` are split at radix-node
 //!   boundaries and interleaved across their shard queue so short
 //!   requests are not head-of-line blocked, with queue-aware TTFT

@@ -128,6 +128,18 @@ fn drive_sharded<E: InferenceEngine>(
             "affinity reuse   : {} of {} cached tokens on affinity-placed sessions",
             m.total_affinity_hit_tokens, m.total_cached_tokens
         );
+        let counter = |name: &str| {
+            server
+                .counters()
+                .iter()
+                .find(|(k, _)| *k == name)
+                .map_or(0, |&(_, v)| v)
+        };
+        println!(
+            "placement probes : {} block lookups, {} probe-path shard locks",
+            counter("placement_probe_ops"),
+            counter("placement_probe_shard_locks")
+        );
     }
     if cfg.tiers.is_some() {
         println!(
@@ -155,7 +167,7 @@ fn drive_sharded<E: InferenceEngine>(
             String::new()
         };
         println!(
-            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes, {} sessions ({} placed), {} resident tok{}{}",
+            "  shard {:>2}: {:>5} reqs, hit {:>5.1}%, p50 {:.4}s, p99 {:.4}s, p99q {:.4}s, queue<={}, {} chunks, {} index nodes ({} blocks), {} sessions ({} placed), {} resident tok{}{}",
             s.shard,
             s.served,
             s.hit_ratio * 100.0,
@@ -165,6 +177,7 @@ fn drive_sharded<E: InferenceEngine>(
             s.max_queue_depth,
             s.prefill_chunks,
             s.index_nodes,
+            s.index_blocks,
             s.sessions,
             s.placed_sessions,
             s.resident_tokens,

@@ -187,6 +187,11 @@ pub struct ShardStats {
     /// Alive nodes in the shard's context index (0 when serving baseline
     /// prompts without a pilot).
     pub index_nodes: usize,
+    /// Distinct context blocks in the shard index's inverted block
+    /// directory ([`crate::index::tree::ContextIndex::distinct_blocks`])
+    /// — the published probe set placement votes against; 0 without a
+    /// pilot.
+    pub index_blocks: usize,
     /// Sessions the placement layer pinned to this shard
     /// ([`crate::serve::placement`]) — counts placement decisions, unlike
     /// `sessions` which counts conversations the engine has served.

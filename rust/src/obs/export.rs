@@ -90,6 +90,7 @@ fn shard_row(s: &ShardStats) -> Json {
         ("p99_queued_ttft_s", Json::num(s.p99_queued_ttft)),
         ("prefill_chunks", Json::u64(s.prefill_chunks)),
         ("index_nodes", Json::num(s.index_nodes as f64)),
+        ("index_blocks", Json::num(s.index_blocks as f64)),
         ("placed_sessions", Json::num(s.placed_sessions as f64)),
         ("affinity_hit_tokens", Json::u64(s.affinity_hit_tokens)),
         ("resident_tokens", Json::num(s.resident_tokens as f64)),

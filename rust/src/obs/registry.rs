@@ -29,6 +29,17 @@ pub enum Counter {
     PlacementWaves,
     /// Shard-probe passes taken by load-aware placement (one per probed request).
     PlacementProbes,
+    /// Block lookups performed by placement probes against the published
+    /// probe directory (one per distinct request block per shard) — the
+    /// deterministic cost of context-aware routing, O(request blocks),
+    /// not O(alive index leaves). See [`crate::serve`]'s probe fast path.
+    PlacementProbeOps,
+    /// Shard-mutex acquisitions taken from the placement probe path.
+    /// **Tripwire, pinned at zero**: probes read published snapshots and
+    /// never lock shards; any future fallback that must lock a shard
+    /// while probing must bump this, and `bench_routing` + CI assert it
+    /// stays 0.
+    PlacementProbeShardLocks,
     /// Gauge: deepest per-shard queue seen in any wave (`fetch_max`).
     MaxQueueDepth,
     /// Prefill chunks admitted across all requests.
@@ -58,11 +69,13 @@ pub enum Counter {
 
 impl Counter {
     /// All counters, in slot order.
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 18] = [
         Counter::RequestsServed,
         Counter::QueueWaves,
         Counter::PlacementWaves,
         Counter::PlacementProbes,
+        Counter::PlacementProbeOps,
+        Counter::PlacementProbeShardLocks,
         Counter::MaxQueueDepth,
         Counter::PrefillChunks,
         Counter::PromptTokens,
@@ -84,6 +97,8 @@ impl Counter {
             Counter::QueueWaves => "queue_waves",
             Counter::PlacementWaves => "placement_waves",
             Counter::PlacementProbes => "placement_probes",
+            Counter::PlacementProbeOps => "placement_probe_ops",
+            Counter::PlacementProbeShardLocks => "placement_probe_shard_locks",
             Counter::MaxQueueDepth => "max_queue_depth",
             Counter::PrefillChunks => "prefill_chunks",
             Counter::PromptTokens => "prompt_tokens",

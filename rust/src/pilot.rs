@@ -135,7 +135,9 @@ impl ContextPilot {
     /// Side-effect-free placement probe ([`crate::serve::placement`]): how
     /// many of `context`'s blocks this pilot's index already knows —
     /// i.e. how much of the request the shard behind this pilot could
-    /// reuse. Delegates to [`ContextIndex::known_blocks`].
+    /// reuse. Delegates to [`ContextIndex::known_blocks`], which answers
+    /// from the index's inverted block directory in O(context blocks)
+    /// (no leaf scan, no allocation).
     pub fn known_blocks(&self, context: &Context) -> usize {
         self.index.known_blocks(context)
     }

@@ -30,6 +30,7 @@ use crate::index::tree::ContextIndex;
 use crate::metrics::{RunMetrics, ShardStats};
 use crate::obs::{merge_events, Counter, EventKind, Registry, StorageOp, TraceEvent};
 use crate::serve::placement::{Placement, PlacementBook, ShardProbe};
+use crate::serve::probe::ProbeDirectory;
 use crate::serve::shard::{shard_of, Shard};
 use crate::serve::{PlacementKind, ServeConfig};
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
@@ -54,9 +55,15 @@ pub struct ServingEngine<E = SimEngine> {
     shards: Vec<Mutex<Shard<E>>>,
     /// Session placement ledger: the policy, the session → shard pins and
     /// the per-shard placement/affinity telemetry. Lock order is strictly
-    /// placement → shard (probing locks shards while holding this; no
-    /// path takes this while holding a shard).
+    /// placement → shard (no path takes this while holding a shard).
+    /// Placement probes taken while holding this never lock shards: they
+    /// read `probes`, whose entry mutexes are strict leaves.
     placement: Mutex<PlacementBook>,
+    /// Published per-shard probe snapshots ([`crate::serve::probe`]):
+    /// refreshed under each shard's lock at every state mutation, read
+    /// under the placement lock by `probe_shards` — the lock-light probe
+    /// fast path.
+    probes: ProbeDirectory,
     /// Engine request id → owning shard, so external eviction notifications
     /// (§4.1) can be routed without broadcasting to every shard. Entries
     /// are pruned by engine-reported and external evictions; under an
@@ -88,10 +95,14 @@ impl<E: InferenceEngine> ServingEngine<E> {
             .map(|i| Mutex::new(Shard::new(i, &cfg, factory(&cfg), registry.clone())))
             .collect();
         let placement = Mutex::new(PlacementBook::new(cfg.placement, cfg.n_shards));
+        // fresh directory entries (empty block set, zero residency) are
+        // exactly the fresh shards' state — no construction-time publish
+        let probes = ProbeDirectory::new(cfg.n_shards);
         ServingEngine {
             shards,
             cfg,
             placement,
+            probes,
             req_shard: Mutex::new(HashMap::new()),
             registry,
         }
@@ -126,25 +137,16 @@ impl<E: InferenceEngine> ServingEngine<E> {
             .unwrap_or_else(|| shard_of(session, self.shards.len())))
     }
 
-    /// Probe every shard's live state for one placement decision: the
-    /// request's block overlap with the shard's context index (0 without a
-    /// pilot) and the engine's prefix-cache residency. Called while the
-    /// placement lock is held (strict placement → shard lock order).
+    /// Probe every shard for one placement decision: the request's block
+    /// overlap with the shard's context index (0 without a pilot) and the
+    /// engine's prefix-cache residency. Called while the placement lock
+    /// is held, but reads the published [`ProbeDirectory`] instead of
+    /// locking shards — O(distinct request blocks) per shard, zero
+    /// shard-lock acquisitions. Identical to probing the live shards:
+    /// waves publish at their end, and probes run before the next wave's
+    /// workers start.
     fn probe_shards(&self, req: &Request, book: &PlacementBook) -> Result<Vec<ShardProbe>, Error> {
-        (0..self.shards.len())
-            .map(|s| {
-                let shard = shard_guard(&self.shards[s], "shard")?;
-                Ok(ShardProbe {
-                    shard: s,
-                    index_blocks: shard
-                        .pilot
-                        .as_ref()
-                        .map_or(0, |p| p.known_blocks(&req.context)),
-                    resident_tokens: shard.engine.cache_stats().resident_tokens,
-                    placed_requests: book.placed_requests_on(s),
-                })
-            })
-            .collect()
+        self.probes.probe(&req.context, book, &self.registry)
     }
 
     /// Place a batch through the policy at enqueue time: one shard index
@@ -229,6 +231,9 @@ impl<E: InferenceEngine> ServingEngine<E> {
             if let Some(p) = &mut shard.pilot {
                 p.build_offline(&mine);
             }
+            // the build replaced the index wholesale: republish its probe
+            // snapshot while the shard lock is still held
+            self.probes.publish(&shard)?;
             Ok(())
         })
         .into_iter()
@@ -288,6 +293,10 @@ impl<E: InferenceEngine> ServingEngine<E> {
                         map.remove(r);
                     }
                 }
+                // republish this shard's probe snapshot before releasing
+                // the lock: the next wave's placement probes read the
+                // directory instead of locking shards
+                self.probes.publish(&shard)?;
                 drop(shard);
                 let arrival: HashMap<RequestId, usize> =
                     idxs.iter().map(|&i| (reqs[i].id, i)).collect();
@@ -340,6 +349,8 @@ impl<E: InferenceEngine> ServingEngine<E> {
             if let Some(p) = &mut shard.pilot {
                 p.on_evict(&ids);
             }
+            // §4.1 pruning shrank the index: republish under the lock
+            self.probes.publish(&shard)?;
         }
         Ok(())
     }
@@ -384,6 +395,9 @@ impl<E: InferenceEngine> ServingEngine<E> {
                 };
                 tracer.emit(t, 0.0, None, None, kind);
             }
+            // the spill moved residency and the discard pruned the index:
+            // republish this shard's probe snapshot under its lock
+            self.probes.publish(&shard)?;
             let index = match &shard.pilot {
                 Some(p) => p.index.to_snapshot(),
                 None => Json::Null,
@@ -428,12 +442,15 @@ impl<E: InferenceEngine> ServingEngine<E> {
         *shard_guard(&self.placement, "placement ledger")? = book;
         *shard_guard(&self.req_shard, "request map")? = map;
         for (s, ix) in indices.into_iter().enumerate() {
+            let mut shard = shard_guard(&self.shards[s], "shard")?;
             if let Some(ix) = ix {
-                let mut shard = shard_guard(&self.shards[s], "shard")?;
                 if let Some(p) = &mut shard.pilot {
                     p.index = ix;
                 }
             }
+            // every shard republishes (restored index + rehydrated engine
+            // residency), so the first post-resume probes see warm state
+            self.probes.publish(&shard)?;
         }
         Ok(())
     }

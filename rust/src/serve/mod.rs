@@ -17,9 +17,10 @@
 //!        ▼
 //!   ServingEngine<E>  ── lock-striped Vec<Mutex<Shard<E>>> + worker pool
 //!        │ placement::PlacementPolicy picks each session's first-turn
-//!        │ shard (session-hash / round-robin / context-aware votes over
-//!        │ the real per-shard index + cache probes); later turns reuse
-//!        │ the pin; per-shard queues preserve arrival order
+//!        │ shard (session-hash / round-robin / context-aware votes read
+//!        │ from probe::ProbeDirectory — per-shard snapshots published at
+//!        │ wave boundaries, zero shard locks on the probe path); later
+//!        │ turns reuse the pin; queues preserve arrival order
 //!        ▼
 //!   Shard<E>          ── ContextPilot proxy + chunked-prefill admission
 //!        │ serve(request, rewritten prompt)   ▲ evicted RequestIds (§4.1,
@@ -47,6 +48,17 @@
 //!   so no cross-shard coordination is ever needed on the hot path.
 //!   Placement decisions happen at enqueue time, in arrival order, before
 //!   workers run, so they are invariant in `n_workers`.
+//! * **Probe fast path** — context-aware votes never lock shards: each
+//!   shard publishes a probe snapshot (its index's distinct block set +
+//!   cache residency) into the [`probe`] directory whenever its state
+//!   mutates (end of a serve wave, offline build, eviction, checkpoint,
+//!   restore), while already holding the shard lock. `probe_shards` then
+//!   reads the directory under the placement lock — O(request blocks)
+//!   lookups per shard (counted by `placement_probe_ops`), zero
+//!   shard-lock acquisitions (`placement_probe_shard_locks` is a
+//!   tripwire pinned at 0) — and decisions stay bit-identical because
+//!   probes run at wave boundaries, where live state equals published
+//!   state.
 //! * **Lock striping** — the serving engine holds one mutex per shard;
 //!   concurrent callers contend only when they hit the same shard.
 //! * **Worker pool** — `serve_batch` partitions a batch
@@ -119,6 +131,7 @@
 pub mod admission;
 mod engine;
 pub mod placement;
+mod probe;
 mod shard;
 
 pub(crate) use engine::{shard_guard, ServingEngine};

@@ -1,0 +1,124 @@
+//! Lock-light placement probes: the `ProbeDirectory`.
+//!
+//! Context-aware placement (§7.2) votes with each shard's live state —
+//! how many of the request's blocks the shard's context index knows, and
+//! how full its prefix cache is. Reading that state used to mean taking
+//! **every shard mutex in sequence while holding the global placement
+//! lock**: correct (strict placement → shard order) but a whole-system
+//! serialization point that scales with the fleet.
+//!
+//! The directory breaks that coupling with published snapshots:
+//!
+//! * [`ProbeDirectory::publish`] — called at every point a shard's index
+//!   or cache mutates (end of a serve wave, offline build, eviction,
+//!   checkpoint spill, snapshot restore), **while the shard lock is
+//!   already held**, copying the index's inverted block directory
+//!   ([`ContextIndex::copy_block_set_into`](crate::index::tree::ContextIndex::copy_block_set_into))
+//!   and the engine's resident-token gauge into a per-shard entry.
+//! * [`ProbeDirectory::probe`] — called under the placement lock, reads
+//!   the entries instead of the shards: one directory lookup per distinct
+//!   request block per shard, **zero shard-lock acquisitions**.
+//!
+//! Placement decisions stay bit-identical to probing the live shards:
+//! probes run in `place_batch` before any worker touches a queue, so the
+//! live state a lock-taking probe would observe is exactly the state the
+//! last mutation published. Entry mutexes are strict leaves — publish
+//! nests shard → entry, probe nests placement → entry, and no path holds
+//! an entry lock while taking anything else — so the existing
+//! placement → shard order is preserved trivially: the probe path no
+//! longer touches shard locks at all.
+//!
+//! Probe work is counted deterministically in the [`crate::obs`]
+//! registry: `placement_probe_ops` counts block lookups (proportional to
+//! Σ request blocks × shards, *not* alive leaves), and
+//! `placement_probe_shard_locks` is a tripwire pinned at zero by
+//! `bench_routing` and CI — any future fallback that must lock a shard
+//! from the probe path must bump it, making the regression measurable.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::api::Error;
+use crate::engine::iface::InferenceEngine;
+use crate::obs::{Counter, Registry};
+use crate::serve::engine::shard_guard;
+use crate::serve::placement::{PlacementBook, ShardProbe};
+use crate::serve::shard::Shard;
+use crate::types::{BlockId, Context};
+
+/// One shard's published probe state. `Default` — an empty block set and
+/// zero resident tokens — is exactly a freshly built shard, so entries
+/// need no construction-time publish.
+#[derive(Default)]
+struct ProbeSnapshot {
+    /// The shard index's distinct known blocks at publish time.
+    blocks: HashSet<BlockId>,
+    /// The engine's HBM-resident token count at publish time.
+    resident_tokens: usize,
+}
+
+/// Per-shard probe snapshots behind leaf mutexes (one per shard, locked
+/// only for the duration of one copy or one read — never while holding
+/// another entry).
+pub(crate) struct ProbeDirectory {
+    entries: Vec<Mutex<ProbeSnapshot>>,
+}
+
+impl ProbeDirectory {
+    pub(crate) fn new(n_shards: usize) -> ProbeDirectory {
+        ProbeDirectory {
+            entries: (0..n_shards).map(|_| Mutex::default()).collect(),
+        }
+    }
+
+    /// Refresh `shard`'s entry from its live state. The caller holds the
+    /// shard lock (every call site mutated the shard just before), so the
+    /// snapshot can never be newer or older than the state a lock-taking
+    /// probe would have seen.
+    pub(crate) fn publish<E: InferenceEngine>(&self, shard: &Shard<E>) -> Result<(), Error> {
+        let mut snap = shard_guard(&self.entries[shard.id], "probe directory")?;
+        snap.resident_tokens = shard.engine.cache_stats().resident_tokens;
+        match &shard.pilot {
+            Some(p) => p.index.copy_block_set_into(&mut snap.blocks),
+            None => snap.blocks.clear(),
+        }
+        Ok(())
+    }
+
+    /// One placement decision's worth of probes: `context`'s distinct
+    /// blocks against every shard's published block set, plus the
+    /// published residency and the book's load telemetry. O(shards ×
+    /// distinct context blocks); every lookup is counted under
+    /// `placement_probe_ops`, and no shard lock is taken (the
+    /// `placement_probe_shard_locks` tripwire stays zero).
+    pub(crate) fn probe(
+        &self,
+        context: &Context,
+        book: &PlacementBook,
+        registry: &Registry,
+    ) -> Result<Vec<ShardProbe>, Error> {
+        let mut out = Vec::with_capacity(self.entries.len());
+        for (s, entry) in self.entries.iter().enumerate() {
+            let snap = shard_guard(entry, "probe directory")?;
+            let mut ops = 0u64;
+            let mut found = 0usize;
+            for (i, b) in context.iter().enumerate() {
+                if context[..i].contains(b) {
+                    continue; // duplicate within the request: one lookup
+                }
+                ops += 1;
+                if snap.blocks.contains(b) {
+                    found += 1;
+                }
+            }
+            registry.add(Counter::PlacementProbeOps, ops);
+            out.push(ShardProbe {
+                shard: s,
+                index_blocks: found,
+                resident_tokens: snap.resident_tokens,
+                placed_requests: book.placed_requests_on(s),
+            });
+        }
+        Ok(out)
+    }
+}

@@ -393,6 +393,7 @@ impl<E: InferenceEngine> Shard<E> {
             p99_queued_ttft: self.metrics.queued_ttft.p99(),
             prefill_chunks: self.metrics.total_prefill_chunks,
             index_nodes: self.pilot.as_ref().map_or(0, |p| p.index_size()),
+            index_blocks: self.pilot.as_ref().map_or(0, |p| p.index.distinct_blocks()),
             resident_tokens: cache.resident_tokens,
             dram_resident_tokens: cache.dram_resident_tokens,
             ssd_resident_tokens: cache.ssd_resident_tokens,
