@@ -1,0 +1,362 @@
+//! Open-loop load bench: offered QPS × shard count × worker count through
+//! the continuous-batching scheduler (`BENCH_load.json`).
+//!
+//! One seeded multi-session workload per arrival process, submitted via
+//! `Server::submit_at` at Poisson (and one diurnal) virtual arrival times
+//! — no flush barrier anywhere: the per-shard scheduler loops admit each
+//! request as its arrival time passes the determinism frontier, chunked
+//! prefills interleave, and tickets resolve as their requests complete.
+//! Each (arrival, qps, shards) cell runs at every worker count.
+//!
+//! Pinned invariants (the scheduler acceptance contract):
+//!  * results are bit-identical across worker counts for every cell —
+//!    per-request hit/miss AND the `queued_ttft` sojourn bit patterns;
+//!  * goodput never exceeds offered QPS (served ≤ offered requests and
+//!    the makespan covers the arrival span, so this holds exactly);
+//!  * backpressure accounting is exact: the `backpressure_shed` counter
+//!    equals the number of tickets that resolved to `Error::Overloaded`,
+//!    unbounded cells shed/delay nothing, and the delay policy serves
+//!    every request (`shed == 0`) while still counting delays.
+//!
+//! Sizes: `--cheap` (CI smoke) < default quick < CTXPILOT_FULL=1.
+
+use std::sync::Arc;
+
+use contextpilot::api::{Error, Server};
+use contextpilot::corpus::Corpus;
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::{corpus_for, full_mode};
+use contextpilot::serve::OverloadPolicy;
+use contextpilot::util::cli::Args;
+use contextpilot::util::histogram::Summary;
+use contextpilot::util::json::Json;
+use contextpilot::util::table::{reset_result_file, Table};
+use contextpilot::workload::{open_loop, open_loop_diurnal, Dataset, TimedWorkload};
+
+/// Per-request outcome signature: (id, prompt, cached, queued_ttft bits,
+/// served?). Must be bit-identical across worker counts.
+type Signature = Vec<(u64, usize, usize, u64, bool)>;
+
+struct Cell {
+    arrival: &'static str,
+    policy: &'static str,
+    qps_nominal: f64,
+    qps_offered: f64,
+    shards: usize,
+    workers: usize,
+    requests: usize,
+    served: usize,
+    shed: u64,
+    delayed: u64,
+    p50_ttft: f64,
+    p99_ttft: f64,
+    goodput: f64,
+    makespan: f64,
+    wall_s: f64,
+}
+
+struct Knobs {
+    policy: OverloadPolicy,
+    queue_bound: Option<usize>,
+    deadline: Option<f64>,
+}
+
+impl Knobs {
+    fn unbounded() -> Self {
+        Knobs {
+            policy: OverloadPolicy::Shed,
+            queue_bound: None,
+            deadline: None,
+        }
+    }
+
+    fn bounded(&self) -> bool {
+        self.queue_bound.is_some() || self.deadline.is_some()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_once(
+    tw: &TimedWorkload,
+    corpus: &Arc<Corpus>,
+    arrival: &'static str,
+    qps_nominal: f64,
+    shards: usize,
+    workers: usize,
+    knobs: &Knobs,
+) -> (Signature, Cell) {
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(shards)
+        .workers(workers)
+        .capacity(1 << 20) // roomy: the sweep isolates scheduling
+        .decode_tokens(16)
+        .prefill_chunk(2048)
+        .queue_bound(knobs.queue_bound)
+        .deadline(knobs.deadline)
+        .overload(knobs.policy)
+        .corpus(corpus.clone())
+        .build()
+        .expect("bench load config is valid");
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = tw
+        .workload
+        .requests
+        .iter()
+        .zip(&tw.arrivals)
+        .map(|(req, &at)| server.submit_at(req.clone(), at).expect("submit arrival"))
+        .collect();
+    server.seal_arrivals().expect("seal arrivals");
+    server.drain().expect("drain scheduler");
+    let mut sig: Signature = Vec::with_capacity(tickets.len());
+    let mut ttfts = Summary::new();
+    let mut served = 0usize;
+    let mut shed_tickets = 0u64;
+    let mut completion_max = 0.0f64;
+    for (ticket, (req, &at)) in tickets
+        .into_iter()
+        .zip(tw.workload.requests.iter().zip(&tw.arrivals))
+    {
+        match ticket.wait() {
+            Ok(s) => {
+                served += 1;
+                ttfts.record(s.queued_ttft);
+                completion_max = completion_max.max(at + s.queued_ttft);
+                sig.push((
+                    s.request.id.0,
+                    s.prompt_tokens,
+                    s.cached_tokens,
+                    s.queued_ttft.to_bits(),
+                    true,
+                ));
+            }
+            Err(Error::Overloaded(id)) => {
+                assert_eq!(id, req.id, "shed ticket reports the wrong request");
+                shed_tickets += 1;
+                sig.push((req.id.0, 0, 0, 0, false));
+            }
+            Err(e) => panic!("open-loop ticket failed: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let counter = |name: &str| {
+        server
+            .counters()
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or_else(|| panic!("counter {name} missing"))
+    };
+    let shed = counter("backpressure_shed");
+    let delayed = counter("backpressure_delayed");
+    // backpressure accounting is exact, not approximate
+    assert_eq!(
+        shed, shed_tickets,
+        "backpressure_shed disagrees with Overloaded tickets"
+    );
+    assert_eq!(served as u64 + shed, tw.len() as u64, "tickets lost");
+    if !knobs.bounded() {
+        assert_eq!(shed, 0, "unbounded cell shed load");
+        assert_eq!(delayed, 0, "unbounded cell delayed load");
+    }
+    if matches!(knobs.policy, OverloadPolicy::Delay) {
+        assert_eq!(shed, 0, "delay policy must never shed");
+        assert_eq!(served, tw.len(), "delay policy must serve everything");
+    }
+    // goodput vs offered: makespan covers the arrival span, so
+    // served/makespan ≤ n/span holds exactly.
+    let makespan = completion_max.max(tw.span());
+    let qps_offered = tw.len() as f64 / tw.span().max(1e-9);
+    let goodput = served as f64 / makespan.max(1e-9);
+    assert!(
+        goodput <= qps_offered + 1e-9,
+        "goodput {goodput} exceeds offered {qps_offered}"
+    );
+    let cell = Cell {
+        arrival,
+        policy: knobs.policy.name(),
+        qps_nominal,
+        qps_offered,
+        shards,
+        workers,
+        requests: tw.len(),
+        served,
+        shed,
+        delayed,
+        p50_ttft: ttfts.p50(),
+        p99_ttft: ttfts.p99(),
+        goodput,
+        makespan,
+        wall_s: wall,
+    };
+    (sig, cell)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let cheap = args.flag("cheap");
+    let quick = !full_mode();
+    reset_result_file("load");
+    let (sessions, k, qps_sweep, shard_sweep, worker_sweep): (
+        usize,
+        usize,
+        Vec<f64>,
+        Vec<usize>,
+        Vec<usize>,
+    ) = if cheap {
+        (24, 6, vec![8.0, 64.0], vec![1, 2], vec![1, 2, 4])
+    } else if quick {
+        (48, 8, vec![4.0, 16.0, 64.0], vec![1, 4], vec![1, 2, 4, 8])
+    } else {
+        (160, 8, vec![2.0, 8.0, 32.0, 128.0], vec![1, 4, 8], vec![1, 2, 4, 8])
+    };
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let t_start = std::time::Instant::now();
+
+    let mut t = Table::new(
+        &format!(
+            "Open-loop load — {sessions} sessions x {k} blocks, MT-RAG corpus, \
+             continuous batching (no flush barrier)"
+        ),
+        &[
+            "Arrival",
+            "QPS",
+            "Shards",
+            "Policy",
+            "p50 TTFT",
+            "p99 TTFT",
+            "Goodput",
+            "Shed/Delay",
+            "Wall s (1..w)",
+        ],
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut sweep = |tw: &TimedWorkload, arrival: &'static str, qps: f64, knobs: &Knobs| {
+        for &shards in &shard_sweep {
+            let mut sig: Option<Signature> = None;
+            let mut walls = Vec::new();
+            let mut first: Option<Cell> = None;
+            for &workers in &worker_sweep {
+                let (s, cell) = run_once(tw, &corpus, arrival, qps, shards, workers, knobs);
+                match &sig {
+                    None => sig = Some(s),
+                    Some(base) => assert_eq!(
+                        *base, s,
+                        "{arrival} qps={qps} shards={shards} workers={workers} \
+                         changed results"
+                    ),
+                }
+                walls.push(cell.wall_s);
+                if first.is_none() {
+                    first = Some(cell);
+                } else {
+                    cells.push(cell);
+                }
+            }
+            let cell = first.expect("worker sweep ran");
+            t.row(vec![
+                arrival.to_string(),
+                format!("{:.1}", cell.qps_offered),
+                format!("{shards}"),
+                if knobs.bounded() {
+                    cell.policy.to_string()
+                } else {
+                    "open".to_string()
+                },
+                format!("{:.4}s", cell.p50_ttft),
+                format!("{:.4}s", cell.p99_ttft),
+                format!("{:.1}/s", cell.goodput),
+                format!("{}/{}", cell.shed, cell.delayed),
+                walls
+                    .iter()
+                    .map(|w| format!("{w:.2}"))
+                    .collect::<Vec<_>>()
+                    .join("/"),
+            ]);
+            cells.push(cell);
+        }
+    };
+
+    // Poisson sweep, unbounded: the base QPS ladder.
+    for &qps in &qps_sweep {
+        let tw = open_loop(Dataset::MtRag, sessions, k, qps, 0x10AD);
+        sweep(&tw, "poisson", qps, &Knobs::unbounded());
+    }
+    // Diurnal swing at the middle rate.
+    let mid = qps_sweep[qps_sweep.len() / 2];
+    let diurnal = open_loop_diurnal(Dataset::MtRag, sessions, k, mid, 0.8, 4.0, 0x10AD);
+    sweep(&diurnal, "diurnal", mid, &Knobs::unbounded());
+    // Backpressure at the top rate: a tight queue bound under both
+    // overload policies, and a deadline-based shed.
+    let top = *qps_sweep.last().expect("qps sweep nonempty");
+    let hot = open_loop(Dataset::MtRag, sessions, k, top, 0x10AD);
+    sweep(
+        &hot,
+        "poisson",
+        top,
+        &Knobs {
+            policy: OverloadPolicy::Shed,
+            queue_bound: Some(1),
+            deadline: None,
+        },
+    );
+    sweep(
+        &hot,
+        "poisson",
+        top,
+        &Knobs {
+            policy: OverloadPolicy::Delay,
+            queue_bound: Some(1),
+            deadline: None,
+        },
+    );
+    sweep(
+        &hot,
+        "poisson",
+        top,
+        &Knobs {
+            policy: OverloadPolicy::Shed,
+            queue_bound: None,
+            deadline: Some(0.05),
+        },
+    );
+    t.emit("load");
+
+    let json_rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("arrival", Json::str(c.arrival)),
+                ("policy", Json::str(c.policy)),
+                ("qps_nominal", Json::num(c.qps_nominal)),
+                ("qps_offered", Json::num(c.qps_offered)),
+                ("shards", Json::num(c.shards as f64)),
+                ("workers", Json::num(c.workers as f64)),
+                ("requests", Json::num(c.requests as f64)),
+                ("served", Json::num(c.served as f64)),
+                ("shed", Json::u64(c.shed)),
+                ("delayed", Json::u64(c.delayed)),
+                ("p50_ttft_s", Json::num(c.p50_ttft)),
+                ("p99_ttft_s", Json::num(c.p99_ttft)),
+                ("goodput_qps", Json::num(c.goodput)),
+                ("makespan_s", Json::num(c.makespan)),
+                ("wall_s", Json::num(c.wall_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("load")),
+        ("dataset", Json::str("mtrag-multisession")),
+        ("sessions", Json::num(sessions as f64)),
+        ("k", Json::num(k as f64)),
+        ("cheap", Json::Bool(cheap)),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::arr(json_rows)),
+    ]);
+    let json_path = "BENCH_load.json";
+    std::fs::write(json_path, format!("{doc}\n")).expect("write BENCH_load.json");
+    eprintln!(
+        "bench_load done in {:.2}s (cheap={cheap} quick={quick}); wrote {json_path}",
+        t_start.elapsed().as_secs_f64()
+    );
+}

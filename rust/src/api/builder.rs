@@ -23,7 +23,7 @@ use crate::engine::sim::{ReusePolicy, SimEngine};
 use crate::obs::ObsConfig;
 use crate::pilot::PilotConfig;
 use crate::quality::ModelEra;
-use crate::serve::{PlacementKind, ServeConfig, ServingEngine};
+use crate::serve::{OverloadPolicy, PlacementKind, ServeConfig, ServingEngine};
 use crate::types::RequestId;
 use crate::util::json::Json;
 
@@ -158,6 +158,36 @@ impl ServerBuilder {
     /// First-turn session → shard placement policy.
     pub fn placement(mut self, k: PlacementKind) -> Self {
         self.cfg.placement = k;
+        self
+    }
+
+    /// Bound on a shard's open-loop run queue: an arrival finding this
+    /// many requests already mid-prefill is shed or delayed per
+    /// [`overload`](ServerBuilder::overload). `None` (the default)
+    /// admits without bound. `Some(0)` is rejected at build time
+    /// (it would admit nothing).
+    pub fn queue_bound(mut self, bound: impl Into<Option<usize>>) -> Self {
+        self.cfg.queue_bound = bound.into();
+        self
+    }
+
+    /// Admission deadline for open-loop arrivals, in virtual seconds: a
+    /// request still unadmitted more than this long past its arrival
+    /// time is shed (whatever the overload policy — a blown deadline is
+    /// unservable by definition). `None` disables. Must be finite and
+    /// > 0 at build time.
+    pub fn deadline(mut self, seconds: impl Into<Option<f64>>) -> Self {
+        self.cfg.deadline = seconds.into();
+        self
+    }
+
+    /// What to do with arrivals over the
+    /// [`queue_bound`](ServerBuilder::queue_bound):
+    /// [`OverloadPolicy::Shed`] rejects them
+    /// ([`Error::Overloaded`]), [`OverloadPolicy::Delay`] keeps them
+    /// queued until the shard drains.
+    pub fn overload(mut self, p: OverloadPolicy) -> Self {
+        self.cfg.on_overload = p;
         self
     }
 
@@ -347,6 +377,18 @@ impl ServerBuilder {
                 "prefill chunk of 0 tokens admits nothing; use None to disable chunking".into(),
             ));
         }
+        if cfg.queue_bound == Some(0) {
+            return Err(Error::InvalidConfig(
+                "a queue bound of 0 admits nothing; use None for unbounded".into(),
+            ));
+        }
+        if let Some(dl) = cfg.deadline {
+            if !dl.is_finite() || dl <= 0.0 {
+                return Err(Error::InvalidConfig(format!(
+                    "deadline must be finite and > 0 virtual seconds, got {dl}"
+                )));
+            }
+        }
         if cfg.obs.trace && cfg.obs.trace_capacity == 0 {
             return Err(Error::InvalidConfig(
                 "trace capacity of 0 events records nothing; disable tracing instead".into(),
@@ -497,6 +539,26 @@ mod tests {
             })
             .build()
             .expect("tracing off ignores capacity");
+    }
+
+    #[test]
+    fn backpressure_knobs_validate_at_build_time() {
+        let err = builder().queue_bound(0).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err:?}");
+        let err = builder().deadline(0.0).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err:?}");
+        let err = builder().deadline(f64::NAN).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err:?}");
+        let server = builder()
+            .queue_bound(4)
+            .deadline(2.5)
+            .overload(OverloadPolicy::Delay)
+            .build()
+            .expect("valid backpressure config");
+        let cfg = server.config();
+        assert_eq!(cfg.queue_bound, Some(4));
+        assert_eq!(cfg.deadline, Some(2.5));
+        assert_eq!(cfg.on_overload, OverloadPolicy::Delay);
     }
 
     #[test]

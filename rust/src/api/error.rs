@@ -43,6 +43,14 @@ pub enum Error {
     /// not be created, a cold-tier segment file or snapshot could not be
     /// read or written. The payload names the path and the OS error.
     Storage(String),
+    /// The scheduler's backpressure policy shed this request: its shard's
+    /// run queue was at the configured bound (or its admission deadline
+    /// had passed) under [`OverloadPolicy::Shed`](crate::serve::OverloadPolicy),
+    /// so the arrival was rejected instead of queued. Deterministic — a
+    /// replay of the same arrival sequence sheds the same requests. Only
+    /// open-loop ([`Server::submit_at`](crate::api::Server::submit_at))
+    /// arrivals can be shed; wave submissions never are.
+    Overloaded(RequestId),
     /// A snapshot or cold-tier segment file exists but does not decode:
     /// truncated mid-record, malformed JSON, an unknown snapshot version,
     /// or internally inconsistent state (e.g. a pin to a shard the
@@ -69,6 +77,11 @@ impl fmt::Display for Error {
             ),
             Error::EngineFailure(msg) => write!(f, "engine failure: {msg}"),
             Error::Storage(msg) => write!(f, "storage failure: {msg}"),
+            Error::Overloaded(r) => write!(
+                f,
+                "overloaded: request {} shed by scheduler backpressure",
+                r.0
+            ),
             Error::CorruptSnapshot(msg) => write!(f, "corrupt snapshot: {msg}"),
         }
     }
@@ -106,6 +119,10 @@ mod tests {
             (
                 Error::Storage("create dir /tmp/x: permission denied".into()),
                 "storage failure: create dir /tmp/x: permission denied",
+            ),
+            (
+                Error::Overloaded(RequestId(9)),
+                "overloaded: request 9 shed by scheduler backpressure",
             ),
             (
                 Error::CorruptSnapshot("snapshot.json: trailing data".into()),

@@ -25,6 +25,11 @@
 //!   server.serve_batch(&reqs)? / server.serve_one(&req)?
 //!                                        thin shims over the same
 //!                                        submit → flush → wait lifecycle
+//!
+//!   server.submit_at(request, t)?        open-loop arrival at virtual time
+//!   server.seal_arrivals()?              t — continuous batching through
+//!   server.drain()?                      the per-shard scheduler loops,
+//!                                        no flush barrier (see Server)
 //! ```
 //!
 //! # End-to-end example
@@ -92,8 +97,10 @@
 //! worker panic surfaces to concurrent waiters and every subsequent call
 //! as [`Error::ShardPoisoned`] instead of cascading panics (the call
 //! that drove the panicking worker itself still unwinds); duplicate
-//! submissions and unplaced-session lookups get their own variants; the
-//! durable path ([`ServerBuilder::state_dir`] /
+//! submissions and unplaced-session lookups get their own variants;
+//! open-loop arrivals shed by scheduler backpressure resolve their
+//! tickets to [`Error::Overloaded`] (deterministically — see
+//! [`Server::submit_at`]); the durable path ([`ServerBuilder::state_dir`] /
 //! [`ServerBuilder::resume_from`] / [`Server::checkpoint`]) distinguishes
 //! I/O trouble ([`Error::Storage`]) from persisted state that exists but
 //! does not decode ([`Error::CorruptSnapshot`]) — a damaged state
@@ -124,4 +131,4 @@ pub use crate::engine::costmodel::ModelSku;
 pub use crate::engine::sim::ReusePolicy;
 pub use crate::obs::ObsConfig;
 pub use crate::pilot::PilotConfig;
-pub use crate::serve::{PlacementKind, ServeConfig};
+pub use crate::serve::{OverloadPolicy, PlacementKind, ServeConfig};

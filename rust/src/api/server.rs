@@ -7,22 +7,39 @@
 //! [`SessionHandle::submit`] appends to the server's **pending wave** (in
 //! arrival order, whatever session it came from) and returns a [`Ticket`];
 //! [`Server::flush`] — called explicitly or implicitly by the first
-//! [`Ticket::wait`] — drains the wave through the sharded engine as one
-//! admission wave and resolves every ticket it contained. Requests from
-//! different sessions therefore share waves exactly the way a batch
-//! endpoint's callers would, while each caller only ever touches its own
-//! ticket.
+//! [`Ticket::wait`] — drains the wave through the per-shard scheduler
+//! loops ([`crate::serve::sched`]) as one admission wave and resolves
+//! every ticket it contained. Requests from different sessions therefore
+//! share waves exactly the way a batch endpoint's callers would, while
+//! each caller only ever touches its own ticket.
 //!
 //! [`Server::serve_batch`] and [`Server::serve_one`] are thin shims over
 //! this lifecycle (submit → flush → wait), so the batch path and the
 //! streaming path are literally the same code — which is what keeps the
 //! worker-count-invariance and placement pins of the test suite valid for
 //! both.
+//!
+//! # Continuous batching (open-loop arrivals)
+//!
+//! Waves are a *closed-loop* interface: the caller decides when a batch
+//! is complete. [`Server::submit_at`] is the *open-loop* one — each
+//! request carries a virtual arrival time (seconds, nondecreasing) and
+//! is admitted mid-flight into its shard's run queue the moment the
+//! shard's virtual clock reaches it, chunked prefills interleaving
+//! round-robin. There is no flush barrier on this path: a short request
+//! arriving behind a long prefill overtakes it chunk by chunk.
+//! [`Server::seal_arrivals`] (or [`Server::advance_arrivals`]) releases
+//! the determinism frontier so the queues can run dry;
+//! [`Server::drain`] blocks until they have. Backpressure
+//! ([`crate::serve::ServeConfig::queue_bound`],
+//! [`crate::serve::ServeConfig::deadline`],
+//! [`crate::serve::OverloadPolicy`]) sheds or delays overload
+//! deterministically on the same virtual clock.
 
 use std::collections::HashSet;
 use std::fmt;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 
 use crate::api::{Error, ServerBuilder};
 use crate::corpus::Corpus;
@@ -31,6 +48,7 @@ use crate::engine::iface::InferenceEngine;
 use crate::engine::sim::SimEngine;
 use crate::metrics::{RunMetrics, ShardStats};
 use crate::obs::TraceEvent;
+use crate::serve::sched::{ResultCell, Scheduler};
 use crate::serve::{shard_guard, ServeConfig, ServingEngine};
 use crate::types::{Request, RequestId, ServedRequest, SessionId};
 
@@ -38,83 +56,28 @@ use crate::types::{Request, RequestId, ServedRequest, SessionId};
 /// token accounting, latency model outputs, tier split).
 pub type Response = ServedRequest;
 
-/// One submission's result slot, shared between its [`Ticket`] and the
-/// flush that resolves it.
-struct TicketCell {
-    slot: Mutex<Option<Result<Response, Error>>>,
-    ready: Condvar,
-}
-
-impl TicketCell {
-    fn new() -> TicketCell {
-        TicketCell {
-            slot: Mutex::new(None),
-            ready: Condvar::new(),
-        }
-    }
-
-    /// Resolve the cell (first write wins). Runs on the flushing thread;
-    /// recovers the inner value even from a poisoned slot so a waiter is
-    /// never stranded.
-    fn fill(&self, r: Result<Response, Error>) {
-        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
-        if slot.is_none() {
-            *slot = Some(r);
-            self.ready.notify_all();
-        }
-    }
-
-    /// Non-blocking peek (clones; for the non-consuming
-    /// [`Ticket::try_result`]).
-    fn peek(&self) -> Result<Option<Result<Response, Error>>, Error> {
-        Ok(shard_guard(&self.slot, "ticket slot")?.clone())
-    }
-
-    /// Non-blocking take. Only the consuming [`Ticket::wait`] path calls
-    /// this: a cell has exactly one ticket, so moving the response out
-    /// (instead of cloning it) is safe and saves a full `ServedRequest`
-    /// copy per request.
-    fn take_now(&self) -> Result<Option<Result<Response, Error>>, Error> {
-        Ok(shard_guard(&self.slot, "ticket slot")?.take())
-    }
-
-    /// Block until a flush fills the cell (the wave holding this request
-    /// was drained by another thread, which will resolve it), then move
-    /// the result out.
-    fn take_filled(&self) -> Result<Response, Error> {
-        let mut slot = shard_guard(&self.slot, "ticket slot")?;
-        loop {
-            if let Some(r) = slot.take() {
-                return r;
-            }
-            slot = self
-                .ready
-                .wait(slot)
-                .map_err(|_| Error::ShardPoisoned("ticket slot"))?;
-        }
-    }
-}
-
 /// The pending admission wave: submissions (in arrival order) that have
 /// not been flushed through the engine yet, plus the all-time request-id
 /// ledger that rejects duplicate submissions. The ledger is never pruned
 /// — one `RequestId` per served request, the same retention trade-off as
-/// the engine room's request → shard eviction map.
+/// the engine room's request → shard eviction map. Open-loop submissions
+/// share the ledger (ids are unique across both paths) but bypass the
+/// pending wave entirely.
 struct Wave {
     reqs: Vec<Request>,
-    cells: Vec<Arc<TicketCell>>,
+    cells: Vec<Arc<ResultCell>>,
     seen: HashSet<RequestId>,
 }
 
 /// Fills every still-unresolved cell of a drained wave with an error when
 /// dropped. Armed by [`Server::flush`] the moment it takes ownership of a
 /// wave: if the flushing thread panics mid-serve (a worker panic
-/// resurfacing through the thread-scope join), unwinding resolves the
+/// resurfacing through the scheduler's seal), unwinding resolves the
 /// cells instead of stranding concurrent [`Ticket::wait`] callers on the
 /// condvar forever. On the normal paths every cell is already filled, so
 /// the drop is a no-op (cells are first-write-wins).
 struct ResolveOnDrop {
-    cells: Vec<Arc<TicketCell>>,
+    cells: Vec<Arc<ResultCell>>,
 }
 
 impl Drop for ResolveOnDrop {
@@ -126,16 +89,19 @@ impl Drop for ResolveOnDrop {
 }
 
 /// A running ContextPilot serving stack: sharded engine, placement
-/// ledger, KV tiers and the ticket front, behind one handle. Built by
-/// [`Server::builder`]; safe to share across threads (`&Server` is all
-/// any caller needs).
+/// ledger, KV tiers, the per-shard scheduler loops and the ticket front,
+/// behind one handle. Built by [`Server::builder`]; safe to share across
+/// threads (`&Server` is all any caller needs).
 pub struct Server<E: InferenceEngine = SimEngine> {
-    engine: ServingEngine<E>,
+    engine: Arc<ServingEngine<E>>,
     corpus: Arc<Corpus>,
     wave: Mutex<Wave>,
     /// Where [`Server::checkpoint`] writes `snapshot.json` (and where the
     /// per-shard cold segment files live). `None` = ephemeral server.
     state_dir: Option<PathBuf>,
+    /// The continuous-batching scheduler: one long-lived loop per shard,
+    /// lazily spawned on first admission, joined on drop.
+    sched: Scheduler<E>,
 }
 
 impl Server<SimEngine> {
@@ -153,6 +119,8 @@ impl<E: InferenceEngine> Server<E> {
         corpus: Arc<Corpus>,
         state_dir: Option<PathBuf>,
     ) -> Server<E> {
+        let engine = Arc::new(engine);
+        let sched = Scheduler::new(Arc::clone(&engine), Arc::clone(&corpus));
         Server {
             engine,
             corpus,
@@ -162,6 +130,7 @@ impl<E: InferenceEngine> Server<E> {
                 seen: HashSet::new(),
             }),
             state_dir,
+            sched,
         }
     }
 
@@ -206,11 +175,11 @@ impl<E: InferenceEngine> Server<E> {
         self.engine.shard_of_session(id)
     }
 
-    /// Drain the pending wave through the sharded engine as one admission
-    /// wave, resolving every ticket it contained. Returns how many
-    /// requests were served. A no-op (`Ok(0)`) when nothing is pending —
-    /// including when a concurrent caller drained the wave first; their
-    /// flush resolves the tickets.
+    /// Drain the pending wave through the per-shard scheduler loops as
+    /// one admission wave, resolving every ticket it contained. Returns
+    /// how many requests were served. A no-op (`Ok(0)`) when nothing is
+    /// pending — including when a concurrent caller drained the wave
+    /// first; their flush resolves the tickets.
     pub fn flush(&self) -> Result<usize, Error> {
         let (reqs, cells) = {
             let mut wave = shard_guard(&self.wave, "ticket wave")?;
@@ -226,11 +195,11 @@ impl<E: InferenceEngine> Server<E> {
         // if the serve below panics, unwinding resolves them (waiters get
         // ShardPoisoned instead of blocking forever)
         let guard = ResolveOnDrop { cells };
-        match self.engine.serve_batch(&reqs, &self.corpus) {
+        match self.sched.serve_wave(&reqs) {
             Ok(served) => {
-                // the engine fails with EngineFailure rather than return a
-                // partial batch, so Ok is always complete — and output is
-                // in arrival order == submission order
+                // the scheduler fails with EngineFailure rather than
+                // return a partial wave, so Ok is always complete — and
+                // output is in arrival order == submission order
                 debug_assert_eq!(served.len(), reqs.len());
                 for (cell, sr) in guard.cells.iter().zip(served) {
                     cell.fill(Ok(sr));
@@ -244,6 +213,78 @@ impl<E: InferenceEngine> Server<E> {
                 Err(e)
             }
         }
+    }
+
+    /// Submit one **open-loop** arrival at virtual time `at` (seconds,
+    /// nondecreasing across calls — [`Error::InvalidConfig`] otherwise).
+    /// The request is placed and queued on its shard immediately; the
+    /// shard's scheduler loop admits it when its virtual clock reaches
+    /// `at`, and its chunked prefill interleaves with whatever is
+    /// already running — no flush barrier. The returned ticket resolves
+    /// when the request completes on the virtual timeline, which
+    /// requires the arrival frontier to move past it: keep submitting,
+    /// call [`Server::advance_arrivals`], or finish with
+    /// [`Server::seal_arrivals`] before waiting on the last tickets.
+    ///
+    /// Under backpressure the ticket may instead resolve to
+    /// [`Error::Overloaded`] (see
+    /// [`crate::serve::ServeConfig::queue_bound`] /
+    /// [`crate::serve::ServeConfig::deadline`]) — deterministically: a
+    /// replay of the same arrival sequence sheds the same requests.
+    pub fn submit_at(&self, req: Request, at: f64) -> Result<Ticket<'_, E>, Error> {
+        {
+            let mut wave = shard_guard(&self.wave, "ticket wave")?;
+            if !wave.seen.insert(req.id) {
+                return Err(Error::DuplicateRequest(req.id));
+            }
+        }
+        let id = req.id;
+        match self.sched.submit_at(req, at) {
+            Ok(cell) => Ok(Ticket { server: self, cell }),
+            Err(e) => {
+                // the arrival was rejected before it was queued: release
+                // its id so the caller can resubmit (e.g. at a valid time)
+                if let Ok(mut wave) = shard_guard(&self.wave, "ticket wave") {
+                    wave.seen.remove(&id);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Declare the open-loop arrival sequence finished: the scheduler
+    /// loops run their queues to completion (the determinism frontier
+    /// stops gating execution). Permanent for this server; subsequent
+    /// [`Server::submit_at`] calls fail. Wave submissions are unaffected.
+    pub fn seal_arrivals(&self) -> Result<(), Error> {
+        self.sched.seal_arrivals()
+    }
+
+    /// Promise that no open-loop arrival earlier than `upto` will come,
+    /// letting the shards run their virtual clocks up to it without a
+    /// submission. Useful for driving a live system "to now" without
+    /// sealing.
+    pub fn advance_arrivals(&self, upto: f64) -> Result<(), Error> {
+        self.sched.advance_arrivals(upto)
+    }
+
+    /// Block until no scheduler loop has runnable work: every admitted
+    /// request ran as far as the arrival frontier allows, and every
+    /// queued wave was served. With [`Server::seal_arrivals`] called
+    /// first, this means *everything submitted has resolved*.
+    pub fn drain(&self) -> Result<(), Error> {
+        self.sched.drain()
+    }
+
+    /// Pause every scheduler loop at its next step boundary. Submissions
+    /// keep queueing; nothing is lost. Idempotent.
+    pub fn pause(&self) -> Result<(), Error> {
+        self.sched.pause()
+    }
+
+    /// Resume paused scheduler loops. Idempotent.
+    pub fn resume(&self) -> Result<(), Error> {
+        self.sched.resume()
     }
 
     /// Queue a whole slice atomically: validated first (duplicate ids —
@@ -261,7 +302,7 @@ impl<E: InferenceEngine> Server<E> {
         }
         let mut tickets = Vec::with_capacity(reqs.len());
         for r in reqs {
-            let cell = Arc::new(TicketCell::new());
+            let cell = Arc::new(ResultCell::new());
             wave.seen.insert(r.id);
             wave.reqs.push(r.clone());
             wave.cells.push(cell.clone());
@@ -273,8 +314,8 @@ impl<E: InferenceEngine> Server<E> {
     /// Serve a whole batch through the session/ticket lifecycle: admit
     /// every request atomically (arrival order = slice order), flush
     /// once, collect in the original order. With no concurrent submitters
-    /// this hands the engine exactly this slice as one wave — bit-for-bit
-    /// the pre-facade `serve_batch` semantics.
+    /// this hands the scheduler exactly this slice as one wave — bit-for-
+    /// bit the pre-facade `serve_batch` semantics.
     pub fn serve_batch(&self, reqs: &[Request]) -> Result<Vec<Response>, Error> {
         let tickets = self.submit_all(reqs)?;
         self.flush()?;
@@ -337,14 +378,15 @@ impl<E: InferenceEngine> Server<E> {
         self.state_dir.as_deref()
     }
 
-    /// Durable checkpoint: flush the pending wave, spill every shard's
-    /// hot/warm KV into its cold-tier storage backend (pruning the
-    /// context indices with whatever finally overflowed, §4.1), and write
-    /// the versioned warm-state snapshot to `<state_dir>/snapshot.json`
-    /// atomically (temp file + rename). A later
-    /// [`ServerBuilder::resume_from`] on the same directory rebuilds the
-    /// warm routing state and cold KV of this server. Returns the
-    /// snapshot path.
+    /// Durable checkpoint: flush the pending wave, drain the scheduler
+    /// loops (so no in-flight open-loop request is mid-prefill), spill
+    /// every shard's hot/warm KV into its cold-tier storage backend
+    /// (pruning the context indices with whatever finally overflowed,
+    /// §4.1), and write the versioned warm-state snapshot to
+    /// `<state_dir>/snapshot.json` atomically (temp file + rename). A
+    /// later [`ServerBuilder::resume_from`] on the same directory
+    /// rebuilds the warm routing state and cold KV of this server.
+    /// Returns the snapshot path.
     ///
     /// The server remains usable afterwards — a checkpoint is a spill,
     /// not a shutdown — but its HBM tier starts cold again, exactly as a
@@ -360,6 +402,7 @@ impl<E: InferenceEngine> Server<E> {
             )
         })?;
         self.flush()?;
+        self.sched.drain()?;
         let snap = self.engine.checkpoint_snapshot()?;
         let path = dir.join("snapshot.json");
         let tmp = dir.join("snapshot.json.tmp");
@@ -408,7 +451,7 @@ impl<'a, E: InferenceEngine> SessionHandle<'a, E> {
     /// queued in that case.
     pub fn submit(&self, mut req: Request) -> Result<Ticket<'a, E>, Error> {
         req.session = self.id;
-        let cell = Arc::new(TicketCell::new());
+        let cell = Arc::new(ResultCell::new());
         let mut wave = shard_guard(&self.server.wave, "ticket wave")?;
         if !wave.seen.insert(req.id) {
             return Err(Error::DuplicateRequest(req.id));
@@ -420,22 +463,30 @@ impl<'a, E: InferenceEngine> SessionHandle<'a, E> {
             cell,
         })
     }
+
+    /// Open-loop submission under this session: stamp the session id and
+    /// forward to [`Server::submit_at`].
+    pub fn submit_at(&self, mut req: Request, at: f64) -> Result<Ticket<'a, E>, Error> {
+        req.session = self.id;
+        self.server.submit_at(req, at)
+    }
 }
 
 /// A claim on one submitted request's result. [`Ticket::wait`] drives the
 /// server if needed (flushing the pending wave) and returns this
 /// request's record; dropping a ticket without waiting is allowed — the
-/// request is still served by whichever flush drains its wave.
+/// request is still served by whichever flush (or scheduler loop, for
+/// open-loop submissions) resolves its wave.
 #[must_use = "a ticket does nothing until waited on (or the server is flushed)"]
 pub struct Ticket<'a, E: InferenceEngine> {
     server: &'a Server<E>,
-    cell: Arc<TicketCell>,
+    cell: Arc<ResultCell>,
 }
 
 impl<E: InferenceEngine> Ticket<'_, E> {
     /// Non-blocking probe: `Ok(None)` while the request's wave has not
-    /// been flushed, `Ok(Some(response))` once it served, `Err` if the
-    /// wave was flushed and failed.
+    /// been flushed (or its open-loop admission is still in flight),
+    /// `Ok(Some(response))` once it served, `Err` if it failed.
     pub fn try_result(&self) -> Result<Option<Response>, Error> {
         match self.cell.peek()? {
             None => Ok(None),
@@ -446,8 +497,12 @@ impl<E: InferenceEngine> Ticket<'_, E> {
 
     /// Resolve the ticket: if its wave is still pending this flushes it
     /// (serving every pending submission, whatever session they belong
-    /// to); if a concurrent caller drained the wave first, this blocks
-    /// until that flush resolves the cell.
+    /// to); if a concurrent caller drained the wave first — or this is an
+    /// open-loop submission the scheduler is still running — this blocks
+    /// until the cell resolves. For open-loop tickets make sure the
+    /// arrival frontier can pass the request
+    /// ([`Server::seal_arrivals`] / [`Server::advance_arrivals`]) before
+    /// blocking, or the wait never returns.
     pub fn wait(self) -> Result<Response, Error> {
         if let Some(r) = self.cell.take_now()? {
             return r;
@@ -556,6 +611,31 @@ mod tests {
             server.session_shard(SessionId(9)).unwrap_err(),
             Error::UnknownSession(SessionId(9))
         );
+    }
+
+    #[test]
+    fn submit_at_rejects_regressing_and_sealed_arrivals() {
+        let server = server();
+        let t1 = server.submit_at(req(1, 1, &[1]), 0.5).unwrap();
+        let err = server.submit_at(req(2, 2, &[2]), 0.25).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "regressing time");
+        server.seal_arrivals().expect("seal");
+        let err = server.submit_at(req(3, 3, &[3]), 1.0).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "sealed arrivals");
+        t1.wait().expect("the valid arrival still serves");
+        server.drain().expect("drain");
+        // a rejected id is released for resubmission through the wave path
+        server.session(SessionId(2)).submit(req(2, 2, &[2])).unwrap().wait().expect("resubmit");
+    }
+
+    #[test]
+    fn open_loop_duplicate_id_is_rejected() {
+        let server = server();
+        let t = server.submit_at(req(4, 1, &[1]), 0.0).unwrap();
+        let err = server.submit_at(req(4, 2, &[2]), 1.0).unwrap_err();
+        assert_eq!(err, Error::DuplicateRequest(RequestId(4)));
+        server.seal_arrivals().expect("seal");
+        t.wait().expect("original arrival unaffected");
     }
 
     #[test]

@@ -27,9 +27,11 @@
 //! `chunk_boundaries` exposes the prefix-shareable token offsets the
 //! chunked-prefill admission layer splits long prefills at.
 //!
-//! `Send` is a supertrait because the sharded serving engine behind
-//! [`crate::api::Server`] moves one engine instance behind each shard
-//! mutex and drives shards from a worker pool.
+//! `Send + 'static` are supertraits because the sharded serving engine
+//! behind [`crate::api::Server`] moves one engine instance behind each
+//! shard mutex and drives shards both from a worker pool and from the
+//! long-lived per-shard scheduler threads ([`crate::serve`]'s sched
+//! layer), which outlive any single call frame.
 
 use crate::corpus::Corpus;
 use crate::quality::QualityModel;
@@ -78,7 +80,7 @@ pub struct CacheStats {
 /// model, always available), [`crate::runtime::RealEngine`] (PJRT-backed
 /// TinyLM, behind the `pjrt` feature) and
 /// [`crate::util::prop::MockEngine`] (scripted, for serving-layer tests).
-pub trait InferenceEngine: Send {
+pub trait InferenceEngine: Send + 'static {
     /// Serve one request: prefill `prompt` (reusing whatever prefix the
     /// cache holds), decode, and return the served record plus the engine
     /// request ids evicted to make room — the caller must feed those to

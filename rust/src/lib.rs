@@ -16,13 +16,20 @@
 //!   ```text
 //!   CLI / experiment runner / benches / library users
 //!        │  Server::builder(sku)…build()?; session(id).submit(req)?
-//!        │  → Ticket::wait()?; serve_batch / serve_one shims
+//!        │  → Ticket::wait()?; serve_batch / serve_one shims;
+//!        │  submit_at(req, t) → seal_arrivals / drain (open-loop)
 //!        ▼
 //!   api::Server                  the facade: pending-wave tickets, typed
 //!        │                       errors, corpus ownership
 //!        ▼
+//!   serve::sched                 continuous batching: long-lived per-shard
+//!        │                       scheduler loops (spawn/pause/drain/stop),
+//!        │                       waves + virtual-time arrivals in one run
+//!        │                       queue, no flush barrier; SLO backpressure
+//!        │                       (queue bound / deadline, shed or delay)
+//!        ▼
 //!   serving engine (crate-private, [`serve`])
-//!        │                       lock-striped shards + worker pool
+//!        │                       lock-striped shards
 //!        │                       (the sequential runner is this at n = 1);
 //!        │                       serve::placement picks each session's
 //!        │                       first-turn shard (session-hash / round-
@@ -48,7 +55,11 @@
 //!   ```
 //!
 //!   Sessions are pinned to shards (each owning a context index, a prefix
-//!   cache and an engine instance) and a worker pool drives shard queues.
+//!   cache and an engine instance) and long-lived per-shard scheduler
+//!   loops ([`serve::sched`]) drive the run queues — admission waves and
+//!   open-loop virtual-time arrivals ([`workload::poisson_arrivals`] /
+//!   [`workload::diurnal_arrivals`], CLI `--qps`) interleave with no
+//!   flush barrier, under deterministic SLO backpressure.
 //!   *Which* shard a session is pinned to is the placement layer's call
 //!   ([`serve::placement`], CLI `--placement session|rr|context`): the
 //!   context-aware policy votes by each shard's real index/cache state so

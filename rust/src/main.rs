@@ -12,7 +12,12 @@
 //!                session|rr|context picks the first-turn session →
 //!                shard policy, `context` being §7.2 reuse-aware
 //!                placement; --trace-out / --metrics-out export the
-//!                observability layer's Chrome trace and run telemetry)
+//!                observability layer's Chrome trace and run telemetry;
+//!                --qps F drives the workload open-loop through the
+//!                continuous-batching scheduler — seeded --arrival
+//!                poisson|diurnal virtual arrival times, no flush
+//!                barrier — with --queue-bound / --deadline / --overload
+//!                shed|delay SLO backpressure)
 //!   bench <id>   regenerate one paper table/figure (table1..table8,
 //!                fig7, fig8, fig11, fig12, fig13, appendix_f,
 //!                appendix_g) or the capacity-pressure table (capacity)
@@ -25,9 +30,11 @@ use contextpilot::engine::{InferenceEngine, ModelSku};
 use contextpilot::experiments as exp;
 use contextpilot::experiments::{corpus_for, run_f1, run_system, RunConfig, SystemKind};
 use contextpilot::pilot::PilotConfig;
-use contextpilot::serve::PlacementKind;
+use contextpilot::serve::{OverloadPolicy, PlacementKind};
 use contextpilot::util::cli::Args;
-use contextpilot::workload::{hybrid, mem0, multi_session, multi_turn, Dataset, Workload};
+use contextpilot::workload::{
+    diurnal_arrivals, hybrid, mem0, multi_session, multi_turn, poisson_arrivals, Dataset, Workload,
+};
 
 /// CLI error boundary: every facade [`Error`] (bad flag values at parse
 /// time, poisoned shards at run time) prints once and exits 2.
@@ -187,6 +194,97 @@ fn drive_sharded<E: InferenceEngine>(
     }
 }
 
+/// Drive the server open-loop (`--qps`): submit every request at its
+/// seeded virtual arrival time through the continuous-batching scheduler
+/// — no flush barrier — then seal the arrival process, drain the
+/// per-shard loops, wait out the tickets and print load statistics.
+/// Sojourn TTFT is completion minus arrival on the shard virtual clocks;
+/// goodput excludes shed requests.
+fn drive_open_loop<E: InferenceEngine>(
+    server: &Server<E>,
+    system_name: &str,
+    dataset: Dataset,
+    workload: &Workload,
+    arrivals: &[f64],
+    arrival_name: &str,
+    offline: bool,
+) {
+    use contextpilot::util::histogram::Summary;
+    if offline {
+        check("offline build", server.build_offline(&workload.requests));
+    }
+    let span = arrivals.last().copied().unwrap_or(0.0);
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = workload
+        .requests
+        .iter()
+        .zip(arrivals)
+        .map(|(r, &at)| check("submit arrival", server.submit_at(r.clone(), at)))
+        .collect();
+    check("seal arrivals", server.seal_arrivals());
+    check("drain", server.drain());
+    let mut sojourns = Summary::new();
+    let mut served = 0usize;
+    let mut shed = 0usize;
+    let mut completion = 0.0f64;
+    for (t, &at) in tickets.into_iter().zip(arrivals) {
+        match t.wait() {
+            Ok(s) => {
+                served += 1;
+                sojourns.record(s.queued_ttft);
+                completion = completion.max(at + s.queued_ttft);
+            }
+            Err(Error::Overloaded(_)) => shed += 1,
+            Err(e) => fail("open-loop ticket", e),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let makespan = completion.max(span);
+    let cfg = server.config();
+    let counter = |name: &str| {
+        server
+            .counters()
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map_or(0, |&(_, v)| v)
+    };
+    println!("system           : {system_name} (open-loop)");
+    println!("dataset          : {}", dataset.name());
+    println!(
+        "arrivals         : {arrival_name}, {:.1} offered req/s ({} requests over {:.2}s)",
+        workload.len() as f64 / span.max(1e-9),
+        workload.len(),
+        span
+    );
+    println!(
+        "shards x workers : {} x {}",
+        server.n_shards(),
+        server.n_workers()
+    );
+    match cfg.queue_bound {
+        Some(b) => println!(
+            "queue bound      : {b} per shard (overload = {})",
+            cfg.on_overload.name()
+        ),
+        None => println!("queue bound      : off (unbounded admission)"),
+    }
+    match cfg.deadline {
+        Some(d) => println!("deadline         : {d}s admission SLO (miss = shed)"),
+        None => println!("deadline         : off"),
+    }
+    println!(
+        "served / shed    : {served} / {shed} ({} delayed admissions)",
+        counter("backpressure_delayed")
+    );
+    println!("p50 sojourn TTFT : {:.4}s", sojourns.p50());
+    println!("p99 sojourn TTFT : {:.4}s", sojourns.p99());
+    println!(
+        "goodput          : {:.1} req/s over {makespan:.2}s virtual makespan",
+        served as f64 / makespan.max(1e-9)
+    );
+    println!("batch wall       : {wall:.3}s");
+}
+
 /// `--trace-out` / `--metrics-out`: write the observability exports
 /// ([`contextpilot::obs`]) once the workload — and any checkpoint, whose
 /// storage-flush events belong in the trace — has drained.
@@ -318,8 +416,29 @@ fn cmd_serve(args: &Args) {
     // route through the sharded server (obs lives in the serving layer).
     let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
     let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    // --qps F — open-loop load: requests arrive on the shard virtual
+    // clocks per a seeded --arrival process instead of as flush waves;
+    // --queue-bound / --deadline / --overload configure the scheduler's
+    // SLO backpressure (0 = off for the numeric knobs).
+    let qps = args.get_f64("qps", 0.0);
+    let arrival = args.get_or("arrival", "poisson").to_string();
+    let queue_bound = {
+        let b = args.get_usize("queue-bound", 0);
+        (b > 0).then_some(b)
+    };
+    let deadline = {
+        let d = args.get_f64("deadline", 0.0);
+        (d > 0.0).then_some(d)
+    };
+    let overload = check(
+        "--overload",
+        OverloadPolicy::parse(args.get_or("overload", "shed")),
+    );
 
-    if shards > 1
+    if qps > 0.0
+        || queue_bound.is_some()
+        || deadline.is_some()
+        || shards > 1
         || workers > 1
         || prefill_chunk > 0
         || engine_kind != "sim"
@@ -334,6 +453,9 @@ fn cmd_serve(args: &Args) {
         scfg.n_shards = shards.max(1);
         scfg.n_workers = workers.max(1);
         scfg.placement = placement;
+        scfg.queue_bound = queue_bound;
+        scfg.deadline = deadline;
+        scfg.on_overload = overload;
         scfg.obs.trace = trace_out.is_some();
         // --capacity is the TOTAL KV budget in both modes: divide it across
         // shards so sharded and unsharded runs are capacity-comparable
@@ -371,14 +493,40 @@ fn cmd_serve(args: &Args) {
                     };
                 }
                 let server = check("serve config", builder.build());
-                drive_sharded(
-                    &server,
-                    system.name(),
-                    dataset,
-                    &workload,
-                    cfg.offline,
-                    cfg.capacity_tokens,
-                );
+                if qps > 0.0 {
+                    let arrivals = match arrival.as_str() {
+                        "poisson" => poisson_arrivals(workload.len(), qps, seed),
+                        "diurnal" => diurnal_arrivals(
+                            workload.len(),
+                            qps,
+                            0.8,
+                            args.get_f64("period", 60.0),
+                            seed,
+                        ),
+                        other => {
+                            eprintln!("unknown arrival process '{other}' — try: poisson | diurnal");
+                            std::process::exit(2);
+                        }
+                    };
+                    drive_open_loop(
+                        &server,
+                        system.name(),
+                        dataset,
+                        &workload,
+                        &arrivals,
+                        &arrival,
+                        cfg.offline,
+                    );
+                } else {
+                    drive_sharded(
+                        &server,
+                        system.name(),
+                        dataset,
+                        &workload,
+                        cfg.offline,
+                        cfg.capacity_tokens,
+                    );
+                }
                 if state_dir.is_some() {
                     let path = check("checkpoint", server.checkpoint());
                     println!("checkpoint       : {}", path.display());
@@ -394,6 +542,10 @@ fn cmd_serve(args: &Args) {
                 );
             }
             "real" => {
+                if qps > 0.0 {
+                    eprintln!("--qps (open-loop load) supports --engine sim only for now");
+                    std::process::exit(2);
+                }
                 #[cfg(feature = "pjrt")]
                 {
                     serve_real(
@@ -521,6 +673,12 @@ fn main() {
             println!("         --trace-out FILE         (Chrome-trace JSON of the request lifecycle;");
             println!("                                   load in Perfetto / chrome://tracing)");
             println!("         --metrics-out FILE       (machine-readable run telemetry JSON)");
+            println!("         --qps F --arrival poisson|diurnal (open-loop load: seeded virtual");
+            println!("                                   arrivals through the continuous-batching");
+            println!("                                   scheduler — no flush barrier)");
+            println!("         --queue-bound N --deadline S --overload shed|delay");
+            println!("                                   (SLO backpressure: bounded per-shard run");
+            println!("                                   queues, deadline-aware admission)");
             println!("  bench  <table1..table8|fig7|fig8|fig11|fig12|fig13|appendix_f|appendix_g|capacity|all> [--full]");
             println!("  index  --n 2000 --k 15");
         }

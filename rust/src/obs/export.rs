@@ -61,6 +61,13 @@ fn trace_row(e: &TraceEvent) -> Json {
         EventKind::Storage { op } => {
             args.push(("op", Json::str(op.name())));
         }
+        EventKind::SchedStarted
+        | EventKind::SchedPaused
+        | EventKind::SchedResumed
+        | EventKind::SchedDrained => {}
+        EventKind::Backpressure { action } => {
+            args.push(("action", Json::str(*action)));
+        }
     }
     let mut row = vec![
         ("name", Json::str(e.kind.name())),

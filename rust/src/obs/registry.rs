@@ -65,11 +65,21 @@ pub enum Counter {
     /// Trace events evicted from a full ring buffer (0 unless the
     /// configured `trace_capacity` was exceeded).
     TraceEventsDropped,
+    /// Open-loop arrivals rejected by scheduler backpressure (queue bound
+    /// exceeded under [`OverloadPolicy::Shed`](crate::serve::OverloadPolicy)
+    /// or admission deadline blown): the ticket resolves with
+    /// [`Error::Overloaded`](crate::api::Error::Overloaded). 0 on the
+    /// batch path — wave entries are never shed.
+    BackpressureShed,
+    /// Open-loop arrivals held back at least once because the queue bound
+    /// was hit under [`OverloadPolicy::Delay`](crate::serve::OverloadPolicy)
+    /// (counted once per delayed request, not per re-check).
+    BackpressureDelayed,
 }
 
 impl Counter {
     /// All counters, in slot order.
-    pub const ALL: [Counter; 18] = [
+    pub const ALL: [Counter; 20] = [
         Counter::RequestsServed,
         Counter::QueueWaves,
         Counter::PlacementWaves,
@@ -88,6 +98,8 @@ impl Counter {
         Counter::DiscardedTokens,
         Counter::StorageFlushes,
         Counter::TraceEventsDropped,
+        Counter::BackpressureShed,
+        Counter::BackpressureDelayed,
     ];
 
     /// Stable snake_case key for telemetry export.
@@ -111,6 +123,8 @@ impl Counter {
             Counter::DiscardedTokens => "discarded_tokens",
             Counter::StorageFlushes => "storage_flushes",
             Counter::TraceEventsDropped => "trace_events_dropped",
+            Counter::BackpressureShed => "backpressure_shed",
+            Counter::BackpressureDelayed => "backpressure_delayed",
         }
     }
 }

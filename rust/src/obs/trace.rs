@@ -95,6 +95,25 @@ pub enum EventKind {
     },
     /// Request finished: first token emitted, results recorded.
     Resolved,
+    /// A per-shard scheduler loop came up ([`crate::serve`]'s sched
+    /// layer). Emitted once per shard when the loops spawn.
+    SchedStarted,
+    /// The scheduler was paused: loops park and admit nothing until
+    /// resumed. Emitted per shard from the control call, never from
+    /// worker timing.
+    SchedPaused,
+    /// The scheduler resumed from a pause.
+    SchedResumed,
+    /// A drain completed: every admitted request on this shard had
+    /// resolved when the control call returned.
+    SchedDrained,
+    /// Backpressure acted on an open-loop arrival.
+    Backpressure {
+        /// What happened: `"shed"` (rejected, ticket resolves
+        /// [`Overloaded`](crate::api::Error::Overloaded)) or `"delayed"`
+        /// (held in the arrival queue past its virtual arrival time).
+        action: &'static str,
+    },
 }
 
 impl EventKind {
@@ -108,6 +127,11 @@ impl EventKind {
             EventKind::Tier { .. } => "tier",
             EventKind::Storage { .. } => "storage",
             EventKind::Resolved => "resolved",
+            EventKind::SchedStarted => "sched_started",
+            EventKind::SchedPaused => "sched_paused",
+            EventKind::SchedResumed => "sched_resumed",
+            EventKind::SchedDrained => "sched_drained",
+            EventKind::Backpressure { .. } => "backpressure",
         }
     }
 }
@@ -292,6 +316,11 @@ mod tests {
             }
             .name(),
             EventKind::Resolved.name(),
+            EventKind::SchedStarted.name(),
+            EventKind::SchedPaused.name(),
+            EventKind::SchedResumed.name(),
+            EventKind::SchedDrained.name(),
+            EventKind::Backpressure { action: "shed" }.name(),
         ];
         assert_eq!(
             names,
@@ -302,7 +331,12 @@ mod tests {
                 "prefill_chunk",
                 "tier",
                 "storage",
-                "resolved"
+                "resolved",
+                "sched_started",
+                "sched_paused",
+                "sched_resumed",
+                "sched_drained",
+                "backpressure"
             ]
         );
     }

@@ -153,7 +153,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// per request, decided in arrival order before any worker runs (so
     /// placement is invariant in `n_workers`). Pinned sessions reuse their
     /// first-turn shard; each batch is one placement wave.
-    fn place_batch(&self, reqs: &[Request]) -> Result<Vec<Placement>, Error> {
+    pub(crate) fn place_batch(&self, reqs: &[Request]) -> Result<Vec<Placement>, Error> {
         let mut book = shard_guard(&self.placement, "placement ledger")?;
         book.begin_wave();
         self.registry.add(Counter::PlacementWaves, 1);
@@ -171,7 +171,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
     }
 
     /// Arrival indices per shard, preserving arrival order within a shard.
-    fn queues_for(&self, placements: &[Placement]) -> Vec<Vec<usize>> {
+    pub(crate) fn queues_for(&self, placements: &[Placement]) -> Vec<Vec<usize>> {
         let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, p) in placements.iter().enumerate() {
             queues[p.shard].push(i);
@@ -184,7 +184,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
     /// each shard's events are emitted in that shard's arrival order at
     /// its current virtual clock, so the stream is worker-count
     /// invariant. Only called when tracing is enabled.
-    fn emit_admission_events(
+    pub(crate) fn emit_admission_events(
         &self,
         reqs: &[Request],
         placements: &[Placement],
@@ -278,26 +278,7 @@ impl<E: InferenceEngine> ServingEngine<E> {
                 // vs. the thousands of tokens rendered per serve, so
                 // borrowing is not worth rippling the pilot API.
                 let batch: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
-                let mut shard = shard_guard(&self.shards[s], "shard")?;
-                let (served, evicted) = shard.serve_queue(&batch, corpus);
-                // ownership-map upkeep while still holding the shard lock:
-                // a concurrent serve on this shard cannot interleave its
-                // eviction removals with these inserts (shard → map nesting
-                // is safe: no path holds the map lock while taking a shard)
-                {
-                    let mut map = shard_guard(&self.req_shard, "request map")?;
-                    for sr in &served {
-                        map.insert(sr.request.id, s);
-                    }
-                    for r in &evicted {
-                        map.remove(r);
-                    }
-                }
-                // republish this shard's probe snapshot before releasing
-                // the lock: the next wave's placement probes read the
-                // directory instead of locking shards
-                self.probes.publish(&shard)?;
-                drop(shard);
+                let served = self.serve_shard_queue(s, &batch, corpus)?;
                 let arrival: HashMap<RequestId, usize> =
                     idxs.iter().map(|&i| (reqs[i].id, i)).collect();
                 Ok(served
@@ -327,8 +308,101 @@ impl<E: InferenceEngine> ServingEngine<E> {
             })
             .collect::<Result<_, _>>()?;
         // affinity attribution (no shard lock held: placement → shard order)
-        shard_guard(&self.placement, "placement ledger")?.record_served(&out);
+        self.record_served(&out)?;
         Ok(out)
+    }
+
+    /// One shard's slice of an admission wave: lock the shard, drive its
+    /// queue through [`Shard::serve_queue`], keep the request → shard
+    /// ownership map current under the shard lock, and republish the
+    /// shard's probe snapshot before releasing it. This is the per-shard
+    /// wave body shared — by construction, so results are bit-identical —
+    /// between the worker-pool path ([`ServingEngine::serve_batch`]) and
+    /// the continuous-batching scheduler's wave jobs
+    /// ([`crate::serve::sched`]). Returns records in execution order
+    /// (Alg.-5 may reorder within the queue).
+    pub(crate) fn serve_shard_queue(
+        &self,
+        s: usize,
+        batch: &[Request],
+        corpus: &Corpus,
+    ) -> Result<Vec<ServedRequest>, Error> {
+        let mut shard = shard_guard(&self.shards[s], "shard")?;
+        let (served, evicted) = shard.serve_queue(batch, corpus);
+        // ownership-map upkeep while still holding the shard lock:
+        // a concurrent serve on this shard cannot interleave its
+        // eviction removals with these inserts (shard → map nesting
+        // is safe: no path holds the map lock while taking a shard)
+        self.track_ownership(s, &served, &evicted)?;
+        // republish this shard's probe snapshot before releasing
+        // the lock: the next wave's placement probes read the
+        // directory instead of locking shards
+        self.probes.publish(&shard)?;
+        Ok(served)
+    }
+
+    /// Lock shard `s` (scheduler slices hold the guard across several
+    /// chunk steps; every other path should prefer the higher-level
+    /// helpers).
+    pub(crate) fn lock_shard(&self, s: usize) -> Result<MutexGuard<'_, Shard<E>>, Error> {
+        shard_guard(&self.shards[s], "shard")
+    }
+
+    /// Record request → shard ownership for `served` and drop entries for
+    /// `evicted`. Caller must hold shard `s`'s lock (shard → map nesting).
+    pub(crate) fn track_ownership(
+        &self,
+        s: usize,
+        served: &[ServedRequest],
+        evicted: &[RequestId],
+    ) -> Result<(), Error> {
+        let mut map = shard_guard(&self.req_shard, "request map")?;
+        for sr in served {
+            map.insert(sr.request.id, s);
+        }
+        for r in evicted {
+            map.remove(r);
+        }
+        Ok(())
+    }
+
+    /// Republish one shard's probe snapshot (caller holds the shard lock).
+    pub(crate) fn publish_probes(&self, shard: &Shard<E>) -> Result<(), Error> {
+        self.probes.publish(shard)
+    }
+
+    /// Attribute affinity reuse for served requests in the placement
+    /// ledger. Must be called with **no shard lock held** (placement →
+    /// shard order).
+    pub(crate) fn record_served(&self, out: &[ServedRequest]) -> Result<(), Error> {
+        shard_guard(&self.placement, "placement ledger")?.record_served(out);
+        Ok(())
+    }
+
+    /// The engine-wide counter registry (shared with every shard).
+    pub(crate) fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Stamp one scheduler-lifecycle marker (started/paused/resumed/
+    /// drained) on every shard's tracer at that shard's current virtual
+    /// clock. Emitted from the *control* thread — never from worker
+    /// timing — so the markers land at deterministic clocks. No-op when
+    /// tracing is off. Takes only shard locks (never the dispatch or
+    /// placement locks), so it is safe from any scheduler control path
+    /// that holds neither.
+    pub(crate) fn emit_sched_event(&self, kind: EventKind) -> Result<(), Error> {
+        if !self.cfg.obs.trace {
+            return Ok(());
+        }
+        for m in &self.shards {
+            let mut shard = shard_guard(m, "shard")?;
+            if let Some(tracer) = &mut shard.tracer {
+                let t = tracer.clock();
+                tracer.emit(t, 0.0, None, None, kind.clone());
+            }
+        }
+        Ok(())
     }
 
     /// External eviction callback (§4.1): route each request id to the

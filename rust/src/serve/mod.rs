@@ -13,7 +13,14 @@
 //!
 //! ```text
 //!   api::Server (sessions / tickets / typed errors — the front door)
-//!        │ serve_batch / flush / build_offline / on_evict
+//!        │ serve_batch / flush / submit_at / build_offline / on_evict
+//!        ▼
+//!   sched::Scheduler<E> ── long-lived per-shard scheduler loops
+//!        │ waves become per-shard WaveJobs (bit-identical to the worker
+//!        │ pool by construction); open-loop arrivals (submit_at) step
+//!        │ chunk-by-chunk on each shard's run-queue clock with SLO-aware
+//!        │ backpressure (queue_bound / deadline / OverloadPolicy);
+//!        │ lifecycle: spawn / pause / resume / drain / shutdown
 //!        ▼
 //!   ServingEngine<E>  ── lock-striped Vec<Mutex<Shard<E>>> + worker pool
 //!        │ placement::PlacementPolicy picks each session's first-turn
@@ -67,6 +74,17 @@
 //!   the full pipeline (Alg.-1 search/insert, §5 alignment, §6 dedup,
 //!   §5.3 annotation, Alg.-5 scheduling, engine serve, §4.1 eviction sync)
 //!   in arrival order.
+//! * **Continuous batching** — the facade no longer runs a flush
+//!   barrier: [`sched`] keeps one long-lived scheduler loop per shard.
+//!   Wave submissions arrive as per-shard jobs executed through the same
+//!   per-shard wave body the worker pool uses
+//!   (`ServingEngine::serve_shard_queue`), so batch results are
+//!   bit-identical to the pre-scheduler path; open-loop arrivals
+//!   ([`crate::api::Server::submit_at`]) are admitted mid-flight into
+//!   per-shard run queues and their chunked prefills interleave with
+//!   whatever is already active. Backpressure
+//!   ([`ServeConfig::queue_bound`], [`ServeConfig::deadline`],
+//!   [`OverloadPolicy`]) sheds or delays overload deterministically.
 //! * **Chunked-prefill admission** — with [`ServeConfig::prefill_chunk`]
 //!   set, a request whose uncached prefill exceeds the budget is split at
 //!   radix-node boundaries and round-robined across its shard queue, so
@@ -132,10 +150,12 @@ pub mod admission;
 mod engine;
 pub mod placement;
 mod probe;
+pub mod sched;
 mod shard;
 
 pub(crate) use engine::{shard_guard, ServingEngine};
 pub use placement::{PlacementKind, PlacementPolicy, ShardProbe};
+pub use sched::OverloadPolicy;
 pub use shard::shard_of;
 
 use std::collections::HashMap;
@@ -192,6 +212,22 @@ pub struct ServeConfig {
     /// clock into a bounded ring buffer. Off by default — the disabled
     /// path allocates nothing and serving output is bit-identical.
     pub obs: ObsConfig,
+    /// Backpressure: per-shard run-queue bound for open-loop arrivals
+    /// (CLI `--queue-bound`). An arrival that would push a shard's active
+    /// queue past the bound is handled per [`ServeConfig::on_overload`].
+    /// `None` (default) = unbounded. Wave submissions
+    /// ([`crate::api::Server::serve_batch`]) are never bounded.
+    pub queue_bound: Option<usize>,
+    /// Backpressure: admission deadline in simulated seconds (CLI
+    /// `--deadline`). An open-loop arrival whose queueing delay (shard
+    /// clock minus virtual arrival time) already exceeds this at
+    /// admission is shed regardless of [`ServeConfig::on_overload`] —
+    /// its SLO is unrecoverable. `None` (default) = no deadline.
+    pub deadline: Option<f64>,
+    /// What the scheduler does with an arrival that hits
+    /// [`ServeConfig::queue_bound`] (CLI `--overload shed|delay`). See
+    /// [`OverloadPolicy`]. Inert unless a bound is set.
+    pub on_overload: OverloadPolicy,
 }
 
 impl ServeConfig {
@@ -213,6 +249,9 @@ impl ServeConfig {
             tiers: None,
             placement: PlacementKind::SessionHash,
             obs: ObsConfig::default(),
+            queue_bound: None,
+            deadline: None,
+            on_overload: OverloadPolicy::Shed,
         }
     }
 
@@ -269,6 +308,9 @@ mod tests {
         assert!(cfg.tiers.is_none());
         assert_eq!(cfg.placement, PlacementKind::SessionHash);
         assert!(!cfg.obs.trace, "tracing must default off");
+        assert!(cfg.queue_bound.is_none(), "backpressure must default off");
+        assert!(cfg.deadline.is_none());
+        assert_eq!(cfg.on_overload, OverloadPolicy::Shed);
     }
 
     #[test]

@@ -1,0 +1,699 @@
+//! Continuous-batching scheduler: long-lived per-shard scheduler loops.
+//!
+//! Before this subsystem existed the serving layer was **wave-batched**:
+//! every admission wave ran behind a flush barrier — all requests of a
+//! wave were placed, served and resolved before the next wave could
+//! start, so a short request admitted behind a long prefill waited for
+//! the *entire* wave, not just for its own shard time. The scheduler
+//! replaces the barrier with one long-lived loop per shard:
+//!
+//! ```text
+//!   api::Server ── serve_wave ──▶ Scheduler ──▶ per-shard WaveJob queue
+//!              └── submit_at ───▶     │    ──▶ per-shard timed queue
+//!                                     ▼
+//!                      "cp-sched-{s}" worker threads
+//!              admit → chunked-prefill slices → resolve ResultCells
+//! ```
+//!
+//! Two admission paths feed the same loops:
+//!
+//! * **Waves** ([`Scheduler::serve_wave`]) keep the facade's batch
+//!   semantics bit-identical: one [`WaveJob`] per shard, served through
+//!   the exact same `serve_queue` pipeline the barrier used, results
+//!   collected through a [`SealState`] rendezvous. No barrier across
+//!   *shards* remains — a shard that finishes its slice of a wave can
+//!   start the next wave's slice immediately.
+//! * **Open-loop arrivals** ([`Scheduler::submit_at`]) carry a virtual
+//!   arrival time. They are admitted mid-flight into the shard's run
+//!   queue when the shard's clock reaches them, and their chunked
+//!   prefills interleave with whatever is already active — a short
+//!   request admitted behind a long prefill overtakes it chunk by chunk
+//!   instead of waiting for the long request's wave.
+//!
+//! **Determinism.** Progress is a pure function of the arrival sequence,
+//! never of worker speed. The *frontier* — the largest arrival time
+//! submitted so far — gates chunk execution: a shard may run a chunk only
+//! while its clock is strictly below the frontier (or after
+//! [`Scheduler::seal_arrivals`]), because an arrival might still land at
+//! exactly the frontier. Admissions (arrival time ≤ shard clock) always
+//! take priority over chunks. The result is bit-identical across worker
+//! counts and across runs.
+//!
+//! **Backpressure** ([`OverloadPolicy`], [`ServeConfig::queue_bound`],
+//! [`ServeConfig::deadline`]) is applied at admission time on the shard's
+//! virtual clock, so shedding and delaying are exactly as deterministic
+//! as serving: a replay of the same arrival sequence sheds the same
+//! requests ([`Error::Overloaded`]).
+//!
+//! [`ServeConfig::queue_bound`]: crate::serve::ServeConfig::queue_bound
+//! [`ServeConfig::deadline`]: crate::serve::ServeConfig::deadline
+//! [`Error::Overloaded`]: crate::api::Error::Overloaded
+
+mod worker;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::api::Error;
+use crate::corpus::Corpus;
+use crate::engine::iface::InferenceEngine;
+use crate::obs::EventKind;
+use crate::serve::engine::{shard_guard, ServingEngine};
+use crate::types::{Request, ServedRequest};
+
+/// What the scheduler does with an open-loop arrival whose shard is
+/// over its [`queue_bound`](crate::serve::ServeConfig::queue_bound)
+/// (deadline misses always shed, whatever the policy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Reject the arrival: its ticket resolves to
+    /// [`Error::Overloaded`](crate::api::Error::Overloaded) and the
+    /// shard never sees it. Bounds queue depth *and* admission latency.
+    Shed,
+    /// Keep the arrival queued until the shard drains below the bound.
+    /// Nothing is lost, but tail admission latency grows with overload
+    /// (the request may then still blow its deadline and be shed).
+    Delay,
+}
+
+impl OverloadPolicy {
+    /// CLI / telemetry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::Shed => "shed",
+            OverloadPolicy::Delay => "delay",
+        }
+    }
+
+    /// Parse a `--overload` CLI value.
+    pub fn parse(s: &str) -> Result<OverloadPolicy, Error> {
+        match s {
+            "shed" => Ok(OverloadPolicy::Shed),
+            "delay" => Ok(OverloadPolicy::Delay),
+            other => Err(Error::InvalidConfig(format!(
+                "unknown overload policy '{other}' (expected shed|delay)"
+            ))),
+        }
+    }
+}
+
+/// One submission's result slot, shared between its ticket and the
+/// scheduler thread that resolves it. First write wins; recovers the
+/// inner value even from a poisoned slot so a waiter is never stranded.
+pub(crate) struct ResultCell {
+    slot: Mutex<Option<Result<ServedRequest, Error>>>,
+    ready: Condvar,
+}
+
+impl ResultCell {
+    pub(crate) fn new() -> ResultCell {
+        ResultCell {
+            slot: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Resolve the cell (first write wins). Runs on a scheduler (or
+    /// flushing) thread.
+    pub(crate) fn fill(&self, r: Result<ServedRequest, Error>) {
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(r);
+            self.ready.notify_all();
+        }
+    }
+
+    /// Non-blocking peek (clones; for the non-consuming `try_result`).
+    pub(crate) fn peek(&self) -> Result<Option<Result<ServedRequest, Error>>, Error> {
+        Ok(shard_guard(&self.slot, "ticket slot")?.clone())
+    }
+
+    /// Non-blocking take. Only consuming waiters call this: a cell has
+    /// exactly one ticket, so moving the response out is safe.
+    pub(crate) fn take_now(&self) -> Result<Option<Result<ServedRequest, Error>>, Error> {
+        Ok(shard_guard(&self.slot, "ticket slot")?.take())
+    }
+
+    /// Block until the scheduler fills the cell, then move the result out.
+    pub(crate) fn take_filled(&self) -> Result<ServedRequest, Error> {
+        let mut slot = shard_guard(&self.slot, "ticket slot")?;
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self
+                .ready
+                .wait(slot)
+                .map_err(|_| Error::ShardPoisoned("ticket slot"))?;
+        }
+    }
+}
+
+/// Rendezvous for one wave: per-arrival result slots plus a count of
+/// shard jobs still outstanding. The submitting thread waits until every
+/// shard's slice of the wave completed (or failed), *without* blocking
+/// any scheduler loop — shards post their slice and move on.
+pub(crate) struct SealState {
+    out: Mutex<SealOut>,
+    done: Condvar,
+}
+
+struct SealOut {
+    slots: Vec<Option<ServedRequest>>,
+    /// Arrivals not yet accounted for. Decremented by the *expected*
+    /// per-job count (not by how many records the engine returned), so a
+    /// contract-violating engine that drops a request surfaces as a
+    /// missing slot instead of a hang.
+    remaining: usize,
+    /// First failure wins; later shard slices still run and are counted.
+    err: Option<Error>,
+}
+
+impl SealState {
+    fn new(n: usize) -> SealState {
+        SealState {
+            out: Mutex::new(SealOut {
+                slots: (0..n).map(|_| None).collect(),
+                remaining: n,
+                err: None,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Poison-recovering lock: a seal is write-once per slot and the
+    /// waiter re-validates (missing slots fail), so torn state from a
+    /// panicked filler cannot corrupt a result.
+    fn lock(&self) -> MutexGuard<'_, SealOut> {
+        self.out.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Post one shard job's results: `expected` arrivals accounted for,
+    /// `pairs` of (arrival index, record) actually served.
+    fn complete(&self, expected: usize, pairs: Vec<(usize, ServedRequest)>) {
+        let mut out = self.lock();
+        for (i, sr) in pairs {
+            if out.slots[i].is_none() {
+                out.slots[i] = Some(sr);
+            }
+        }
+        out.remaining = out.remaining.saturating_sub(expected);
+        if out.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Post one shard job's failure, accounting for its `expected`
+    /// arrivals so the waiter still unblocks.
+    fn fail(&self, e: Error, expected: usize) {
+        let mut out = self.lock();
+        if out.err.is_none() {
+            out.err = Some(e);
+        }
+        out.remaining = out.remaining.saturating_sub(expected);
+        if out.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Wait until every shard job posted, then take the slots and the
+    /// first error (if any). Waits for *all* shards even after an error,
+    /// so no job is left running against freed expectations.
+    fn wait(&self) -> (Vec<Option<ServedRequest>>, Option<Error>) {
+        let mut out = self.lock();
+        while out.remaining > 0 {
+            out = self
+                .done
+                .wait(out)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+        (std::mem::take(&mut out.slots), out.err.take())
+    }
+}
+
+/// One shard's slice of an admission wave: the requests (in the wave's
+/// arrival order) plus their arrival indices, and the seal to post
+/// results into.
+pub(super) struct WaveJob {
+    pub(super) batch: Vec<Request>,
+    pub(super) idxs: Vec<usize>,
+    pub(super) seal: Arc<SealState>,
+}
+
+/// An open-loop arrival waiting (on the shard's virtual clock) to be
+/// admitted.
+pub(super) struct TimedEntry {
+    /// Virtual arrival time.
+    pub(super) vt: f64,
+    pub(super) req: Request,
+    /// Whether placement chose the shard by context affinity.
+    pub(super) affinity: bool,
+    pub(super) cell: Arc<ResultCell>,
+    /// Whether a `Backpressure { action: "delayed" }` marker was already
+    /// emitted for this entry (emitted once, on first deferral).
+    pub(super) delayed: bool,
+}
+
+/// An admitted open-loop request whose chunked prefill is in flight.
+pub(super) struct ActiveReq {
+    /// The served record (engine work is done; the scheduler replays its
+    /// chunk plan on the run-queue clock and stamps the sojourn TTFT).
+    pub(super) served: ServedRequest,
+    /// Per-chunk durations from the chunked-prefill admission plan.
+    pub(super) plan: Vec<f64>,
+    /// Next chunk index to run.
+    pub(super) next: usize,
+    /// Virtual arrival time (sojourn = completion clock − this).
+    pub(super) vt: f64,
+    pub(super) cell: Arc<ResultCell>,
+}
+
+/// One shard's run state, owned by the dispatch lock.
+pub(super) struct ShardQueue {
+    /// Pending wave slices, FIFO.
+    pub(super) waves: VecDeque<WaveJob>,
+    /// Open-loop arrivals, FIFO in arrival order (arrival times are
+    /// globally nondecreasing, so FIFO == time order).
+    pub(super) timed: VecDeque<TimedEntry>,
+    /// Admitted open-loop requests with chunks left to run, round-robin.
+    pub(super) active: VecDeque<ActiveReq>,
+    /// The shard's run-queue virtual clock (seconds). Distinct from the
+    /// tracer clock, which is synced forward to this one lazily.
+    pub(super) clock: f64,
+    /// A worker is currently running this shard's work.
+    pub(super) busy: bool,
+    /// A slice on this shard failed or panicked; everything queued is
+    /// swept with an error and new work is refused.
+    pub(super) dead: bool,
+}
+
+impl ShardQueue {
+    fn new() -> ShardQueue {
+        ShardQueue {
+            waves: VecDeque::new(),
+            timed: VecDeque::new(),
+            active: VecDeque::new(),
+            clock: 0.0,
+            busy: false,
+            dead: false,
+        }
+    }
+}
+
+/// Scheduler control state.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(super) enum Ctl {
+    Running,
+    /// Loops park; queues keep accepting work.
+    Paused,
+    /// Loops exit at the next claim.
+    Stopping,
+}
+
+/// Everything the worker loops share, behind one dispatch mutex.
+pub(super) struct Dispatch {
+    pub(super) queues: Vec<ShardQueue>,
+    /// Largest arrival time submitted so far. Chunks may run only while
+    /// the shard clock is *strictly* below this (an arrival may still
+    /// land at exactly the frontier), or after sealing.
+    pub(super) frontier: f64,
+    /// No further open-loop arrivals will come; shards may run to
+    /// completion.
+    pub(super) sealed: bool,
+    pub(super) ctl: Ctl,
+}
+
+pub(super) struct Shared<E: InferenceEngine> {
+    pub(super) engine: Arc<ServingEngine<E>>,
+    pub(super) corpus: Arc<Corpus>,
+    pub(super) state: Mutex<Dispatch>,
+    /// Signaled when work arrives or control state changes.
+    pub(super) work: Condvar,
+    /// Signaled when a worker finishes a slice (drain waits on this).
+    pub(super) idle: Condvar,
+}
+
+/// Lock the dispatch state, converting poison into the typed error.
+pub(super) fn lock_dispatch<E: InferenceEngine>(
+    shared: &Shared<E>,
+) -> Result<MutexGuard<'_, Dispatch>, Error> {
+    shard_guard(&shared.state, "scheduler dispatch")
+}
+
+/// The per-shard scheduler: spawns one long-lived loop per shard on
+/// first use, owns their lifecycle (pause / resume / drain / shutdown on
+/// drop), and fronts both admission paths. One instance lives inside
+/// each [`crate::api::Server`].
+pub(crate) struct Scheduler<E: InferenceEngine> {
+    shared: Arc<Shared<E>>,
+    /// Worker join handles; empty until the first admission
+    /// (lazy spawn keeps servers that only ever use the wave path from
+    /// paying thread startup — they still go through the loops, which
+    /// spawn on the first wave).
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl<E: InferenceEngine> Scheduler<E> {
+    pub(crate) fn new(engine: Arc<ServingEngine<E>>, corpus: Arc<Corpus>) -> Scheduler<E> {
+        let n = engine.n_shards();
+        Scheduler {
+            shared: Arc::new(Shared {
+                engine,
+                corpus,
+                state: Mutex::new(Dispatch {
+                    queues: (0..n).map(|_| ShardQueue::new()).collect(),
+                    frontier: 0.0,
+                    sealed: false,
+                    ctl: Ctl::Running,
+                }),
+                work: Condvar::new(),
+                idle: Condvar::new(),
+            }),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Spawn the per-shard loops if they are not running yet. Emits the
+    /// `sched_started` lifecycle marker from the control thread *before*
+    /// the loops exist, so the marker's clock is deterministic.
+    fn ensure_started(&self) -> Result<(), Error> {
+        let mut threads = shard_guard(&self.threads, "scheduler threads")?;
+        if !threads.is_empty() {
+            return Ok(());
+        }
+        self.shared.engine.emit_sched_event(EventKind::SchedStarted)?;
+        let n = self.shared.engine.n_shards();
+        for s in 0..n {
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("cp-sched-{s}"))
+                .spawn(move || worker::run(shared, s))
+                .map_err(|e| Error::EngineFailure(format!("spawning scheduler loop: {e}")))?;
+            threads.push(handle);
+        }
+        Ok(())
+    }
+
+    /// Serve one admission wave through the per-shard loops: place the
+    /// batch, fan one [`WaveJob`] out per shard, wait on the seal and
+    /// return records in arrival order. Semantically identical to the
+    /// old flush barrier for the requests *within* the wave — but no
+    /// cross-wave barrier exists: a shard finishing its slice picks up
+    /// the next queued job immediately.
+    pub(crate) fn serve_wave(&self, reqs: &[Request]) -> Result<Vec<ServedRequest>, Error> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.ensure_started()?;
+        let engine = &self.shared.engine;
+        let placements = engine.place_batch(reqs)?;
+        let queues = engine.queues_for(&placements);
+        if engine.config().obs.trace {
+            engine.emit_admission_events(reqs, &placements, &queues)?;
+        }
+        let seal = Arc::new(SealState::new(reqs.len()));
+        {
+            let mut d = lock_dispatch(&self.shared)?;
+            for (s, idxs) in queues.iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                if d.queues[s].dead {
+                    seal.fail(Error::ShardPoisoned("shard"), idxs.len());
+                    continue;
+                }
+                let batch: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
+                d.queues[s].waves.push_back(WaveJob {
+                    batch,
+                    idxs: idxs.clone(),
+                    seal: Arc::clone(&seal),
+                });
+            }
+            self.shared.work.notify_all();
+        }
+        let (slots, err) = seal.wait();
+        if let Some(e) = err {
+            return Err(e);
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(sr) => out.push(sr),
+                None => {
+                    return Err(Error::EngineFailure(format!(
+                        "request {:?} was placed but never served",
+                        reqs[i].id
+                    )))
+                }
+            }
+        }
+        engine.record_served(&out)?;
+        Ok(out)
+    }
+
+    /// Submit one open-loop arrival at virtual time `at` (seconds,
+    /// nondecreasing across calls). Places the request, enqueues it on
+    /// its shard's timed queue and returns the result cell immediately;
+    /// the shard's loop admits it when its clock reaches `at`.
+    pub(crate) fn submit_at(&self, req: Request, at: f64) -> Result<Arc<ResultCell>, Error> {
+        if !at.is_finite() || at < 0.0 {
+            return Err(Error::InvalidConfig(format!(
+                "arrival time must be finite and >= 0, got {at}"
+            )));
+        }
+        self.ensure_started()?;
+        {
+            // cheap pre-check before paying for placement
+            let d = lock_dispatch(&self.shared)?;
+            Self::check_admissible(&d, at)?;
+        }
+        let placement = {
+            let mut ps = self.shared.engine.place_batch(std::slice::from_ref(&req))?;
+            ps.pop().ok_or_else(|| {
+                Error::EngineFailure("placement returned no shard for arrival".into())
+            })?
+        };
+        let cell = Arc::new(ResultCell::new());
+        let entry = TimedEntry {
+            vt: at,
+            req,
+            affinity: placement.affinity,
+            cell: Arc::clone(&cell),
+            delayed: false,
+        };
+        {
+            let mut d = lock_dispatch(&self.shared)?;
+            // re-check: a seal or later arrival may have raced the
+            // placement above
+            Self::check_admissible(&d, at)?;
+            if d.queues[placement.shard].dead {
+                return Err(Error::ShardPoisoned("shard"));
+            }
+            d.frontier = at;
+            d.queues[placement.shard].timed.push_back(entry);
+            self.shared.work.notify_all();
+        }
+        Ok(cell)
+    }
+
+    fn check_admissible(d: &Dispatch, at: f64) -> Result<(), Error> {
+        if d.sealed {
+            return Err(Error::InvalidConfig(
+                "arrivals are sealed: no submit_at after seal_arrivals".into(),
+            ));
+        }
+        if at < d.frontier {
+            return Err(Error::InvalidConfig(format!(
+                "arrival times must be nondecreasing: got {at} after {}",
+                d.frontier
+            )));
+        }
+        Ok(())
+    }
+
+    /// Declare the open-loop arrival sequence finished: shards may run
+    /// their queues to completion (the frontier stops gating chunks).
+    /// Permanent for this server.
+    pub(crate) fn seal_arrivals(&self) -> Result<(), Error> {
+        let mut d = lock_dispatch(&self.shared)?;
+        d.sealed = true;
+        d.frontier = f64::INFINITY;
+        self.shared.work.notify_all();
+        Ok(())
+    }
+
+    /// Advance the arrival frontier to at least `upto` without
+    /// submitting: a promise that no arrival earlier than `upto` will
+    /// come, letting shards run chunks up to (strictly below) it.
+    pub(crate) fn advance_arrivals(&self, upto: f64) -> Result<(), Error> {
+        if !upto.is_finite() || upto < 0.0 {
+            return Err(Error::InvalidConfig(format!(
+                "arrival frontier must be finite and >= 0, got {upto}"
+            )));
+        }
+        let mut d = lock_dispatch(&self.shared)?;
+        if upto > d.frontier {
+            d.frontier = upto;
+        }
+        self.shared.work.notify_all();
+        Ok(())
+    }
+
+    /// Pause every loop at its next step boundary (queued work keeps
+    /// accumulating; nothing is lost).
+    pub(crate) fn pause(&self) -> Result<(), Error> {
+        {
+            let mut d = lock_dispatch(&self.shared)?;
+            if d.ctl == Ctl::Running {
+                d.ctl = Ctl::Paused;
+            }
+        }
+        self.shared.engine.emit_sched_event(EventKind::SchedPaused)
+    }
+
+    /// Resume paused loops.
+    pub(crate) fn resume(&self) -> Result<(), Error> {
+        {
+            let mut d = lock_dispatch(&self.shared)?;
+            if d.ctl == Ctl::Paused {
+                d.ctl = Ctl::Running;
+            }
+            self.shared.work.notify_all();
+        }
+        self.shared.engine.emit_sched_event(EventKind::SchedResumed)
+    }
+
+    /// Block until no shard has runnable work (all queues empty or
+    /// parked behind the frontier / a pause), then emit the
+    /// `sched_drained` marker. With the loops never started this is just
+    /// the marker — there is nothing to wait for.
+    pub(crate) fn drain(&self) -> Result<(), Error> {
+        let started = !shard_guard(&self.threads, "scheduler threads")?.is_empty();
+        if started {
+            let mut d = lock_dispatch(&self.shared)?;
+            while d.queues.iter().any(|q| Self::runnable(&d, q)) {
+                d = self
+                    .shared
+                    .idle
+                    .wait(d)
+                    .map_err(|_| Error::ShardPoisoned("scheduler dispatch"))?;
+            }
+        }
+        self.shared.engine.emit_sched_event(EventKind::SchedDrained)
+    }
+
+    /// Whether a shard queue has work a loop will still pick up (or is
+    /// mid-slice). Mirrors the worker's claim conditions.
+    fn runnable(d: &Dispatch, q: &ShardQueue) -> bool {
+        if q.dead {
+            return false;
+        }
+        if q.busy {
+            return true;
+        }
+        if matches!(d.ctl, Ctl::Paused | Ctl::Stopping) {
+            return false;
+        }
+        if q.active.is_empty() {
+            return !q.waves.is_empty() || !q.timed.is_empty();
+        }
+        q.timed.front().is_some_and(|e| e.vt <= q.clock) || d.sealed || q.clock < d.frontier
+    }
+}
+
+impl<E: InferenceEngine> Drop for Scheduler<E> {
+    fn drop(&mut self) {
+        {
+            let mut d = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            d.ctl = Ctl::Stopping;
+            self.shared.work.notify_all();
+        }
+        let threads = {
+            let mut t = self
+                .threads
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *t)
+        };
+        for t in threads {
+            // a panicked loop already swept its queue; nothing to do here
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overload_policy_parses_both_names_and_rejects_unknown() {
+        assert_eq!(OverloadPolicy::parse("shed").unwrap(), OverloadPolicy::Shed);
+        assert_eq!(
+            OverloadPolicy::parse("delay").unwrap(),
+            OverloadPolicy::Delay
+        );
+        assert_eq!(OverloadPolicy::Shed.name(), "shed");
+        assert_eq!(OverloadPolicy::Delay.name(), "delay");
+        let err = OverloadPolicy::parse("drop").unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+        assert!(err.to_string().contains("drop"));
+    }
+
+    #[test]
+    fn result_cell_is_first_write_wins() {
+        use crate::types::{Prompt, Request, RequestId, SessionId};
+        let cell = ResultCell::new();
+        assert!(cell.peek().unwrap().is_none());
+        cell.fill(Err(Error::ShardPoisoned("shard")));
+        let req = Request {
+            id: RequestId(1),
+            session: SessionId(1),
+            turn: 0,
+            context: Vec::new(),
+            query: crate::types::QueryId(0),
+        };
+        let sr = ServedRequest {
+            prompt: Prompt::baseline(&req),
+            request: req,
+            prompt_tokens: 0,
+            cached_tokens: 0,
+            ttft: 0.0,
+            wall: 0.0,
+            quality: 0.0,
+            queued_ttft: 0.0,
+            prefill_chunks: 1,
+            tier_hits: Default::default(),
+        };
+        cell.fill(Ok(sr));
+        assert_eq!(
+            cell.take_now().unwrap().unwrap().unwrap_err(),
+            Error::ShardPoisoned("shard")
+        );
+    }
+
+    #[test]
+    fn seal_state_accounts_expected_not_returned() {
+        // an engine that drops a request must surface as a missing slot,
+        // not hang the waiter
+        let seal = SealState::new(2);
+        seal.complete(2, Vec::new());
+        let (slots, err) = seal.wait();
+        assert!(err.is_none());
+        assert!(slots.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn seal_state_first_error_wins_but_waits_for_all_jobs() {
+        let seal = SealState::new(3);
+        seal.fail(Error::ShardPoisoned("shard"), 1);
+        seal.fail(Error::EngineFailure("later".into()), 2);
+        let (_, err) = seal.wait();
+        assert_eq!(err, Some(Error::ShardPoisoned("shard")));
+    }
+}

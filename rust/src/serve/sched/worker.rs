@@ -1,0 +1,569 @@
+//! The per-shard scheduler loop: claim → run → account.
+//!
+//! Each shard has exactly one of these loops (thread `cp-sched-{s}`), so
+//! everything a loop does to its shard is single-writer: the loop takes
+//! the shard lock once per *slice* (a bounded burst of admission and
+//! chunk steps) and the dispatch lock only at step boundaries, which
+//! keeps the hot path lock-light while letting `metrics()` /
+//! `trace_events()` / new submissions interleave between slices.
+//!
+//! Determinism: every decision in this file is a function of the
+//! dispatch state (queues, frontier, seal) and the shard's run-queue
+//! clock — never of wall time or of which thread got scheduled first.
+//! Open-loop admission is deliberately one request per step: batching
+//! simultaneous arrivals would let in-batch reordering (baseline LPM
+//! order, pilot batch rewrites) depend on how many arrivals a racing
+//! worker happened to see at once.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use crate::api::Error;
+use crate::engine::iface::InferenceEngine;
+use crate::obs::{Counter, EventKind, TierOp};
+use crate::serve::shard::Shard;
+use crate::types::{Request, RequestId, ServedRequest};
+
+use super::{
+    lock_dispatch, ActiveReq, Ctl, Dispatch, OverloadPolicy, ResultCell, ShardQueue, Shared,
+    TimedEntry, WaveJob,
+};
+
+/// Upper bound on steps per slice: the shard lock is released (and the
+/// dispatch re-examined) at least this often, so observers and control
+/// operations are never starved by a long open-loop run.
+const MAX_SLICE_STEPS: usize = 256;
+
+/// What the loop decided to do after examining the dispatch state.
+enum Claim {
+    /// Control said stop: exit the loop.
+    Stop,
+    /// Nothing runnable: wait on the work condvar.
+    Park,
+    /// Serve one wave slice through the classic queue pipeline.
+    Wave(WaveJob),
+    /// Run a slice of open-loop admission / chunk steps.
+    Slice,
+}
+
+/// One scheduling decision inside a slice.
+enum Step {
+    /// Admit the open-loop arrival that is due at the shard clock.
+    Admit { entry: TimedEntry, clock: f64 },
+    /// Run one chunk of the front active request.
+    Chunk { entry: ActiveReq, start: f64, dur: f64 },
+    /// Nothing runnable right now: end the slice.
+    Idle,
+}
+
+/// Fills every touched-but-unresolved cell with [`Error::ShardPoisoned`]
+/// if the slice panics (unwinding through the worker's `catch_unwind`).
+/// Disarmed on every orderly exit — error returns resolve their cells
+/// explicitly, queued entries are swept by the worker's dead-shard
+/// sweep. Fills are first-write-wins, so covering already-resolved
+/// cells is harmless.
+struct SliceGuard {
+    cells: Vec<Arc<ResultCell>>,
+    armed: bool,
+}
+
+impl Drop for SliceGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            for c in &self.cells {
+                c.fill(Err(Error::ShardPoisoned("shard")));
+            }
+        }
+    }
+}
+
+/// The loop body for shard `s`. Runs until control says stop.
+pub(super) fn run<E: InferenceEngine>(shared: Arc<Shared<E>>, s: usize) {
+    loop {
+        let claim = {
+            let mut d = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                match claim_work(&mut d, s) {
+                    Claim::Stop => return,
+                    Claim::Park => {
+                        d = shared.work.wait(d).unwrap_or_else(|p| p.into_inner());
+                    }
+                    c => break c,
+                }
+            }
+        };
+        let failed = match claim {
+            Claim::Wave(job) => run_wave(&shared, s, job),
+            Claim::Slice => match catch_unwind(AssertUnwindSafe(|| run_slice(&shared, s))) {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(e),
+                Err(_) => Some(Error::ShardPoisoned("shard")),
+            },
+            Claim::Stop | Claim::Park => unreachable!("parked claims never escape the inner loop"),
+        };
+        let mut d = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        d.queues[s].busy = false;
+        if let Some(e) = failed {
+            d.queues[s].dead = true;
+            sweep_dead(&mut d.queues[s], e);
+        }
+        shared.idle.notify_all();
+    }
+}
+
+/// Decide what shard `s`'s loop should do next. Marks the queue busy
+/// when it hands out work. Waves are claimed only while no open-loop
+/// request is mid-prefill (a wave is an atomic batch on the queue
+/// pipeline's own clock; interleaving the two clocks is undefined).
+fn claim_work(d: &mut Dispatch, s: usize) -> Claim {
+    if d.ctl == Ctl::Stopping {
+        return Claim::Stop;
+    }
+    let sealed = d.sealed;
+    let frontier = d.frontier;
+    let paused = d.ctl == Ctl::Paused;
+    let q = &mut d.queues[s];
+    if q.dead || paused {
+        return Claim::Park;
+    }
+    if q.active.is_empty() {
+        if let Some(job) = q.waves.pop_front() {
+            q.busy = true;
+            return Claim::Wave(job);
+        }
+        if !q.timed.is_empty() {
+            q.busy = true;
+            return Claim::Slice;
+        }
+        return Claim::Park;
+    }
+    let due = q.timed.front().is_some_and(|e| e.vt <= q.clock);
+    if due || sealed || q.clock < frontier {
+        q.busy = true;
+        return Claim::Slice;
+    }
+    Claim::Park
+}
+
+/// Serve one wave slice through the shard's classic queue pipeline and
+/// post the results into the wave's seal. Returns the error (for the
+/// dead-shard sweep) if the slice failed or panicked; the seal is
+/// always accounted either way, so the wave's submitter never hangs.
+fn run_wave<E: InferenceEngine>(shared: &Shared<E>, s: usize, job: WaveJob) -> Option<Error> {
+    let WaveJob { batch, idxs, seal } = job;
+    let served = catch_unwind(AssertUnwindSafe(|| {
+        shared.engine.serve_shard_queue(s, &batch, &shared.corpus)
+    }))
+    .unwrap_or_else(|_| Err(Error::ShardPoisoned("shard")));
+    match served {
+        Ok(served) => {
+            let idx_of: HashMap<RequestId, usize> =
+                batch.iter().zip(&idxs).map(|(r, &i)| (r.id, i)).collect();
+            // filter_map instead of index: an engine that returns an
+            // unknown id must not panic the loop — the missing slot
+            // surfaces as EngineFailure at the seal's waiter
+            let pairs: Vec<(usize, ServedRequest)> = served
+                .into_iter()
+                .filter_map(|sr| idx_of.get(&sr.request.id).map(|&i| (i, sr)))
+                .collect();
+            seal.complete(idxs.len(), pairs);
+            None
+        }
+        Err(e) => {
+            seal.fail(e.clone(), idxs.len());
+            Some(e)
+        }
+    }
+}
+
+/// Run up to [`MAX_SLICE_STEPS`] open-loop steps on shard `s`: admit
+/// due arrivals (one per step), run prefill chunks round-robin, resolve
+/// completed requests. The shard lock is held for the whole slice; the
+/// dispatch lock is taken briefly per step.
+fn run_slice<E: InferenceEngine>(shared: &Shared<E>, s: usize) -> Result<(), Error> {
+    let mut completed: Vec<(ServedRequest, Arc<ResultCell>)> = Vec::new();
+    let mut guard = SliceGuard {
+        cells: Vec::new(),
+        armed: true,
+    };
+    let mut shard = shared.engine.lock_shard(s)?;
+    let mut worked = false;
+    let mut failed: Option<Error> = None;
+    for _ in 0..MAX_SLICE_STEPS {
+        let step = match next_step(shared, s, &mut shard) {
+            Ok(st) => st,
+            Err(e) => {
+                failed = Some(e);
+                break;
+            }
+        };
+        match step {
+            Step::Idle => break,
+            Step::Admit { entry, clock } => {
+                worked = true;
+                guard.cells.push(Arc::clone(&entry.cell));
+                if let Err(e) = admit(shared, s, &mut shard, entry, clock) {
+                    failed = Some(e);
+                    break;
+                }
+            }
+            Step::Chunk { entry, start, dur } => {
+                worked = true;
+                guard.cells.push(Arc::clone(&entry.cell));
+                match run_chunk(shared, s, &mut shard, entry, start, dur) {
+                    Ok(Some(done)) => completed.push(done),
+                    Ok(None) => {}
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if failed.is_none() && worked {
+        if let Err(e) = shared.engine.publish_probes(&shard) {
+            failed = Some(e);
+        }
+    }
+    drop(shard);
+    guard.armed = false;
+    if let Some(e) = failed {
+        for (_, cell) in &completed {
+            cell.fill(Err(e.clone()));
+        }
+        return Err(e);
+    }
+    if completed.is_empty() {
+        return Ok(());
+    }
+    // affinity attribution takes the placement ledger, so it must run
+    // with the shard lock released (placement → shard order)
+    let (serveds, cells): (Vec<ServedRequest>, Vec<Arc<ResultCell>>) =
+        completed.into_iter().unzip();
+    match shared.engine.record_served(&serveds) {
+        Ok(()) => {
+            for (sr, cell) in serveds.into_iter().zip(cells) {
+                cell.fill(Ok(sr));
+            }
+            Ok(())
+        }
+        Err(e) => {
+            for cell in &cells {
+                cell.fill(Err(e.clone()));
+            }
+            Err(e)
+        }
+    }
+}
+
+/// One scheduling decision for shard `s`, on its run-queue clock.
+///
+/// Priority order: (1) admit the front arrival if due — applying
+/// deadline and queue-bound backpressure, (2) run a chunk, but only
+/// while the clock is **strictly** below the arrival frontier (or the
+/// arrivals are sealed) — at `clock == frontier` an arrival may still
+/// land at exactly the frontier, so running ahead would make progress
+/// depend on worker timing, (3) idle.
+fn next_step<E: InferenceEngine>(
+    shared: &Shared<E>,
+    s: usize,
+    shard: &mut Shard<E>,
+) -> Result<Step, Error> {
+    let cfg = shared.engine.config();
+    let mut d = lock_dispatch(shared)?;
+    if d.ctl != Ctl::Running {
+        return Ok(Step::Idle);
+    }
+    let sealed = d.sealed;
+    let frontier = d.frontier;
+    let q = &mut d.queues[s];
+    // idle jump: with nothing mid-prefill, virtual time skips to the
+    // next arrival instead of crawling there chunk by chunk
+    if q.active.is_empty() {
+        if let Some(front) = q.timed.front() {
+            if front.vt > q.clock {
+                q.clock = front.vt;
+            }
+        }
+    }
+    loop {
+        let Some(front) = q.timed.front_mut() else { break };
+        if front.vt > q.clock {
+            break;
+        }
+        let lateness = q.clock - front.vt;
+        let blown = cfg.deadline.is_some_and(|dl| lateness > dl);
+        let over = cfg.queue_bound.is_some_and(|b| q.active.len() >= b);
+        if blown || (over && cfg.on_overload == OverloadPolicy::Shed) {
+            if let Some(entry) = q.timed.pop_front() {
+                let clock = q.clock;
+                shed(shard, clock, &entry);
+            }
+            continue;
+        }
+        if over {
+            // Delay: the arrival stays queued until the shard drains
+            // below the bound; marked (counter + trace event) once
+            if !front.delayed {
+                front.delayed = true;
+                let (rid, sess) = (front.req.id.0, front.req.session.0);
+                let clock = q.clock;
+                shard.registry.add(Counter::BackpressureDelayed, 1);
+                sync_tracer(shard, clock);
+                if let Some(tracer) = &mut shard.tracer {
+                    tracer.emit(
+                        clock,
+                        0.0,
+                        Some(rid),
+                        Some(sess),
+                        EventKind::Backpressure { action: "delayed" },
+                    );
+                }
+            }
+            break;
+        }
+        if let Some(entry) = q.timed.pop_front() {
+            let clock = q.clock;
+            return Ok(Step::Admit { entry, clock });
+        }
+    }
+    if sealed || q.clock < frontier {
+        if let Some(entry) = q.active.pop_front() {
+            let start = q.clock;
+            let dur = entry.plan.get(entry.next).copied().unwrap_or(0.0);
+            q.clock += dur;
+            return Ok(Step::Chunk { entry, start, dur });
+        }
+    }
+    Ok(Step::Idle)
+}
+
+/// Shed one arrival: counter, trace marker, and an
+/// [`Error::Overloaded`] resolution on its cell. Deterministic — the
+/// decision was made on the shard's virtual clock.
+fn shed<E: InferenceEngine>(shard: &mut Shard<E>, clock: f64, entry: &TimedEntry) {
+    shard.registry.add(Counter::BackpressureShed, 1);
+    sync_tracer(shard, clock);
+    if let Some(tracer) = &mut shard.tracer {
+        tracer.emit(
+            clock,
+            0.0,
+            Some(entry.req.id.0),
+            Some(entry.req.session.0),
+            EventKind::Backpressure { action: "shed" },
+        );
+    }
+    entry.cell.fill(Err(Error::Overloaded(entry.req.id)));
+}
+
+/// Admit one open-loop arrival at `clock`: run the cache/engine half of
+/// the pipeline now (engine work is atomic per request, exactly as on
+/// the wave path) and queue the request's chunk plan on the run queue;
+/// the clock-visible prefill then elapses chunk by chunk.
+fn admit<E: InferenceEngine>(
+    shared: &Shared<E>,
+    s: usize,
+    shard: &mut Shard<E>,
+    entry: TimedEntry,
+    clock: f64,
+) -> Result<(), Error> {
+    let cfg = shared.engine.config();
+    if cfg.obs.trace {
+        sync_tracer(shard, clock);
+        if let Some(tracer) = &mut shard.tracer {
+            let (rid, sess) = (Some(entry.req.id.0), Some(entry.req.session.0));
+            tracer.emit(clock, 0.0, rid, sess, EventKind::Admitted);
+            tracer.emit(
+                clock,
+                0.0,
+                rid,
+                sess,
+                EventKind::Placed {
+                    policy: cfg.placement.name(),
+                    affinity: entry.affinity,
+                },
+            );
+            tracer.emit(clock, 0.0, rid, sess, EventKind::Queued);
+        }
+    }
+    let reqs: Vec<Request> = vec![entry.req.clone()];
+    let (served, plans, evicted, demoted) = shard.serve_pipeline(&reqs, &shared.corpus);
+    if let Err(e) = shared.engine.track_ownership(s, &served, &evicted) {
+        entry.cell.fill(Err(e.clone()));
+        return Err(e);
+    }
+    if demoted > 0 {
+        if let Some(tracer) = &mut shard.tracer {
+            tracer.emit(
+                clock,
+                0.0,
+                None,
+                None,
+                EventKind::Tier {
+                    op: TierOp::Demote,
+                    tier: "dram",
+                    tokens: demoted,
+                },
+            );
+        }
+    }
+    let (mut sr, plan) = match served.into_iter().zip(plans).next() {
+        Some(pair) => pair,
+        None => {
+            let e = Error::EngineFailure(format!(
+                "request {:?} was admitted but the engine returned nothing",
+                entry.req.id
+            ));
+            entry.cell.fill(Err(e.clone()));
+            return Err(e);
+        }
+    };
+    if sr.request.id != entry.req.id {
+        let e = Error::EngineFailure(format!(
+            "engine served {:?} for admitted request {:?}",
+            sr.request.id, entry.req.id
+        ));
+        entry.cell.fill(Err(e.clone()));
+        return Err(e);
+    }
+    sr.prefill_chunks = plan.len() as u32;
+    let active = ActiveReq {
+        served: sr,
+        plan,
+        next: 0,
+        vt: entry.vt,
+        cell: entry.cell,
+    };
+    let depth = {
+        let mut d = match lock_dispatch(shared) {
+            Ok(d) => d,
+            Err(e) => {
+                active.cell.fill(Err(e.clone()));
+                return Err(e);
+            }
+        };
+        let q = &mut d.queues[s];
+        q.active.push_back(active);
+        q.active.len()
+    };
+    shard.max_queue_depth = shard.max_queue_depth.max(depth);
+    shard.registry.add(Counter::QueueWaves, 1);
+    shard.registry.max(Counter::MaxQueueDepth, depth as u64);
+    Ok(())
+}
+
+/// Run one chunk of an active request on the virtual timeline. Returns
+/// the finished `(record, cell)` when this was the last chunk, `None`
+/// when the request went back to the run queue (round-robin — this is
+/// what lets a short arrival overtake a long prefill).
+fn run_chunk<E: InferenceEngine>(
+    shared: &Shared<E>,
+    s: usize,
+    shard: &mut Shard<E>,
+    mut entry: ActiveReq,
+    start: f64,
+    dur: f64,
+) -> Result<Option<(ServedRequest, Arc<ResultCell>)>, Error> {
+    let end = start + dur;
+    if let Some(tracer) = &mut shard.tracer {
+        let sr = &entry.served;
+        // reconstruct the chunk's token count from its share of the
+        // request's engine occupancy (uncached + promoted region)
+        let occupying = sr.prompt_tokens.saturating_sub(sr.tier_hits.hbm);
+        let tokens = if sr.ttft > 0.0 {
+            (dur / sr.ttft * occupying as f64).round() as u32
+        } else {
+            0
+        };
+        tracer.emit(
+            start,
+            dur,
+            Some(sr.request.id.0),
+            Some(sr.request.session.0),
+            EventKind::PrefillChunk {
+                index: entry.next as u32,
+                of: entry.plan.len() as u32,
+                tokens,
+            },
+        );
+    }
+    sync_tracer(shard, end);
+    entry.next += 1;
+    if entry.next < entry.plan.len() {
+        let mut d = match lock_dispatch(shared) {
+            Ok(d) => d,
+            Err(e) => {
+                entry.cell.fill(Err(e.clone()));
+                return Err(e);
+            }
+        };
+        d.queues[s].active.push_back(entry);
+        return Ok(None);
+    }
+    let ActiveReq { mut served, cell, vt, .. } = entry;
+    // sojourn semantics: TTFT as the arrival saw it — completion on the
+    // shard clock minus the virtual arrival time (queueing + chunked
+    // prefill + backpressure delay all included)
+    served.queued_ttft = end - vt;
+    shard.metrics.record(&served);
+    shard.record_request_counters(&served);
+    if let Some(tracer) = &mut shard.tracer {
+        let (rid, sess) = (Some(served.request.id.0), Some(served.request.session.0));
+        if served.tier_hits.dram > 0 {
+            tracer.emit(
+                end,
+                0.0,
+                rid,
+                sess,
+                EventKind::Tier {
+                    op: TierOp::Promote,
+                    tier: "dram",
+                    tokens: served.tier_hits.dram as u64,
+                },
+            );
+        }
+        if served.tier_hits.ssd > 0 {
+            tracer.emit(
+                end,
+                0.0,
+                rid,
+                sess,
+                EventKind::Tier {
+                    op: TierOp::Promote,
+                    tier: "ssd",
+                    tokens: served.tier_hits.ssd as u64,
+                },
+            );
+        }
+        tracer.emit(end, 0.0, rid, sess, EventKind::Resolved);
+    }
+    Ok(Some((served, cell)))
+}
+
+/// Advance the shard's tracer clock forward to the run-queue time `t`
+/// (never backwards — tracer time is monotone).
+fn sync_tracer<E: InferenceEngine>(shard: &mut Shard<E>, t: f64) {
+    if let Some(tracer) = &mut shard.tracer {
+        let c = tracer.clock();
+        if t > c {
+            tracer.advance(t - c);
+        }
+    }
+}
+
+/// Fail everything queued on a dead shard: wave seals are accounted
+/// (their submitters unblock with the error), timed and active cells
+/// resolve to the error.
+pub(super) fn sweep_dead(q: &mut ShardQueue, e: Error) {
+    for job in q.waves.drain(..) {
+        job.seal.fail(e.clone(), job.idxs.len());
+    }
+    for t in q.timed.drain(..) {
+        t.cell.fill(Err(e.clone()));
+    }
+    for a in q.active.drain(..) {
+        a.cell.fill(Err(e.clone()));
+    }
+}

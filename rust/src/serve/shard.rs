@@ -119,6 +119,47 @@ impl<E: InferenceEngine> Shard<E> {
         corpus: &Corpus,
     ) -> (Vec<ServedRequest>, Vec<RequestId>) {
         self.max_queue_depth = self.max_queue_depth.max(batch.len());
+        let (mut out, plans, all_evicted, demoted) = self.serve_pipeline(batch, corpus);
+        // admission accounting: one virtual clock per queue wave; with
+        // tracing on, the identical schedule also reports per-chunk slots
+        let mut runs: Vec<admission::ChunkRun> = Vec::new();
+        let finish = if self.tracer.is_some() {
+            admission::interleave_with(&plans, |r| runs.push(r))
+        } else {
+            admission::interleave(&plans)
+        };
+        for (k, served) in out.iter_mut().enumerate() {
+            served.queued_ttft = finish[k];
+            served.prefill_chunks = plans[k].len() as u32;
+            self.metrics.record(served);
+            self.record_request_counters(served);
+        }
+        if !batch.is_empty() {
+            self.registry.add(Counter::QueueWaves, 1);
+            self.registry.max(Counter::MaxQueueDepth, batch.len() as u64);
+        }
+        self.trace_wave(&out, &runs, &finish, demoted);
+        (out, all_evicted)
+    }
+
+    /// The cache/engine half of [`Shard::serve_queue`]: run `batch` in
+    /// execution order through the pilot rewrite (or baseline LPM
+    /// ordering) and the engine, feed evictions back into the context
+    /// index, and build each request's chunked-prefill plan. Returns
+    /// `(served, plans, evicted, demoted_tokens)` with **no** admission
+    /// accounting applied: `queued_ttft`/`prefill_chunks` are unset and
+    /// nothing is recorded in [`RunMetrics`]. The wave path finishes the
+    /// job by interleaving the plans on the wave's virtual clock
+    /// (`serve_queue`); the continuous-batching scheduler instead steps
+    /// the plans chunk-by-chunk on the shard's run-queue clock
+    /// ([`crate::serve::sched`]), which is exactly why the split exists.
+    /// Tier-delta counters are bumped here (they are a pure function of
+    /// the engine calls, not of the admission overlay).
+    pub(crate) fn serve_pipeline(
+        &mut self,
+        batch: &[Request],
+        corpus: &Corpus,
+    ) -> (Vec<ServedRequest>, Vec<Vec<f64>>, Vec<RequestId>, u64) {
         let cache_before = self.engine.cache_stats();
         let mut out = Vec::with_capacity(batch.len());
         let mut plans: Vec<Vec<f64>> = Vec::with_capacity(batch.len());
@@ -192,24 +233,6 @@ impl<E: InferenceEngine> Shard<E> {
                 }
             }
         }
-        // admission accounting: one virtual clock per queue wave; with
-        // tracing on, the identical schedule also reports per-chunk slots
-        let mut runs: Vec<admission::ChunkRun> = Vec::new();
-        let finish = if self.tracer.is_some() {
-            admission::interleave_with(&plans, |r| runs.push(r))
-        } else {
-            admission::interleave(&plans)
-        };
-        for (k, served) in out.iter_mut().enumerate() {
-            served.queued_ttft = finish[k];
-            served.prefill_chunks = plans[k].len() as u32;
-            self.metrics.record(served);
-            self.record_request_counters(served);
-        }
-        if !batch.is_empty() {
-            self.registry.add(Counter::QueueWaves, 1);
-            self.registry.max(Counter::MaxQueueDepth, batch.len() as u64);
-        }
         let cache_after = self.engine.cache_stats();
         let demoted = cache_after.demoted_tokens.saturating_sub(cache_before.demoted_tokens);
         self.registry.add(Counter::DemotedTokens, demoted);
@@ -221,14 +244,13 @@ impl<E: InferenceEngine> Shard<E> {
             Counter::DiscardedTokens,
             cache_after.discarded_tokens.saturating_sub(cache_before.discarded_tokens),
         );
-        self.trace_wave(&out, &runs, &finish, demoted);
-        (out, all_evicted)
+        (out, plans, all_evicted, demoted)
     }
 
     /// Bump the always-on per-request registry counters for one served
     /// request (the registry mirrors [`RunMetrics`]; a test pins the two
     /// equal where they overlap).
-    fn record_request_counters(&self, served: &ServedRequest) {
+    pub(crate) fn record_request_counters(&self, served: &ServedRequest) {
         let r = &self.registry;
         r.add(Counter::RequestsServed, 1);
         r.add(Counter::PromptTokens, served.prompt_tokens as u64);

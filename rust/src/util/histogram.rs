@@ -172,6 +172,19 @@ mod tests {
         assert_eq!(s.max(), 4.0);
     }
 
+    /// An empty summary reports 0.0 for every percentile instead of
+    /// panicking — load reports lean on this when a cell serves nothing
+    /// (e.g. a fully shed backpressure run still emits p50/p99 rows).
+    #[test]
+    fn empty_summary_percentile_is_zero() {
+        let mut s = Summary::new();
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.percentile(100.0), 0.0);
+        assert!(s.is_empty());
+    }
+
     #[test]
     fn percentiles_exact_on_known_data() {
         let mut s = Summary::new();

@@ -25,6 +25,106 @@ impl Workload {
     }
 }
 
+/// A workload plus an open-loop arrival schedule: `arrivals[i]` is the
+/// virtual arrival time (seconds) of `workload.requests[i]`. Times are
+/// nondecreasing — exactly what [`crate::api::Server::submit_at`]
+/// requires — and are generated on the *virtual* clock from a seeded
+/// generator, so the schedule is bit-identical across runs, machines and
+/// worker counts (it never reads wall time).
+#[derive(Clone, Debug)]
+pub struct TimedWorkload {
+    pub workload: Workload,
+    pub arrivals: Vec<f64>,
+}
+
+impl TimedWorkload {
+    pub fn len(&self) -> usize {
+        self.workload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workload.is_empty()
+    }
+
+    /// The schedule's makespan: last arrival time (0 when empty).
+    pub fn span(&self) -> f64 {
+        self.arrivals.last().copied().unwrap_or(0.0)
+    }
+}
+
+/// Poisson arrival process at a constant `qps`: seeded exponential
+/// inter-arrival gaps `-ln(1-u)/qps`, starting at t=0's first gap.
+/// Deterministic in `(n, qps, seed)`.
+pub fn poisson_arrivals(n: usize, qps: f64, seed: u64) -> Vec<f64> {
+    assert!(qps > 0.0 && qps.is_finite(), "offered qps must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += -(1.0 - rng.f64()).ln() / qps;
+            t
+        })
+        .collect()
+}
+
+/// Diurnal (time-varying) Poisson arrivals via thinning: the
+/// instantaneous rate swings sinusoidally between `(1 - depth)` and
+/// `(1 + depth)` times `mean_qps` with the given `period` (virtual
+/// seconds). Candidate events are drawn at the peak rate and accepted
+/// with probability `rate(t) / peak` — the standard Lewis–Shedler
+/// construction, here fully seeded and deterministic.
+pub fn diurnal_arrivals(n: usize, mean_qps: f64, depth: f64, period: f64, seed: u64) -> Vec<f64> {
+    assert!(
+        mean_qps > 0.0 && mean_qps.is_finite(),
+        "offered qps must be positive"
+    );
+    assert!((0.0..1.0).contains(&depth), "depth must be in [0, 1)");
+    assert!(period > 0.0 && period.is_finite(), "period must be positive");
+    let peak = mean_qps * (1.0 + depth);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += -(1.0 - rng.f64()).ln() / peak;
+        let rate = mean_qps * (1.0 + depth * (2.0 * std::f64::consts::PI * t / period).sin());
+        if rng.f64() < rate / peak {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Open-loop load: `sessions` single-turn requests arriving as a
+/// constant-rate Poisson stream at `qps`. The request sequence and the
+/// schedule are forked from one seed, so the pair is reproducible as a
+/// unit.
+pub fn open_loop(dataset: Dataset, sessions: usize, k: usize, qps: f64, seed: u64) -> TimedWorkload {
+    let workload = multi_session(dataset, sessions, k, seed);
+    let arrivals = poisson_arrivals(workload.len(), qps, seed ^ 0x9E37_79B9_7F4A_7C15);
+    TimedWorkload { workload, arrivals }
+}
+
+/// Open-loop load with a diurnal rate swing (see [`diurnal_arrivals`]).
+pub fn open_loop_diurnal(
+    dataset: Dataset,
+    sessions: usize,
+    k: usize,
+    mean_qps: f64,
+    depth: f64,
+    period: f64,
+    seed: u64,
+) -> TimedWorkload {
+    let workload = multi_session(dataset, sessions, k, seed);
+    let arrivals = diurnal_arrivals(
+        workload.len(),
+        mean_qps,
+        depth,
+        period,
+        seed ^ 0x9E37_79B9_7F4A_7C15,
+    );
+    TimedWorkload { workload, arrivals }
+}
+
 fn qid(session: u32, turn: u32) -> QueryId {
     QueryId(((session as u64) << 32) | turn as u64)
 }
@@ -510,6 +610,54 @@ mod tests {
             for b in &r.context {
                 assert!(seen.insert(*b), "block {b} repeated");
             }
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_nondecreasing_and_near_rate() {
+        let a = poisson_arrivals(2000, 8.0, 0xA11);
+        assert_eq!(a.len(), 2000);
+        assert!(a[0] > 0.0);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0], "arrival times regressed: {w:?}");
+        }
+        // 2000 samples at 8 qps should span ~250s; allow generous slack
+        let rate = a.len() as f64 / a.last().unwrap();
+        assert!((rate - 8.0).abs() < 1.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_arrivals_swing_the_rate() {
+        let period = 100.0;
+        let a = diurnal_arrivals(4000, 10.0, 0.8, period, 0xD1u64);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // count arrivals in the rising half-period vs the falling one:
+        // with depth 0.8 the first half ([0, 50)) must see far more
+        let hi = a.iter().filter(|&&t| (t % period) < period / 2.0).count();
+        let lo = a.len() - hi;
+        assert!(
+            hi as f64 > 1.3 * lo as f64,
+            "no diurnal swing: {hi} peak vs {lo} trough"
+        );
+    }
+
+    #[test]
+    fn arrival_schedules_are_deterministic() {
+        let a = poisson_arrivals(256, 4.0, 7);
+        let b = poisson_arrivals(256, 4.0, 7);
+        assert_eq!(a, b, "poisson schedule must be bit-identical");
+        let c = diurnal_arrivals(256, 4.0, 0.5, 60.0, 7);
+        let d = diurnal_arrivals(256, 4.0, 0.5, 60.0, 7);
+        assert_eq!(c, d, "diurnal schedule must be bit-identical");
+        let w1 = open_loop(Dataset::MultihopRag, 32, 10, 4.0, 11);
+        let w2 = open_loop(Dataset::MultihopRag, 32, 10, 4.0, 11);
+        assert_eq!(w1.arrivals, w2.arrivals);
+        assert_eq!(w1.len(), 32);
+        assert!(w1.span() > 0.0);
+        for (x, y) in w1.workload.requests.iter().zip(&w2.workload.requests) {
+            assert_eq!(x.context, y.context);
         }
     }
 

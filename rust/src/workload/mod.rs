@@ -8,7 +8,8 @@ pub mod profiles;
 pub mod retrieval;
 
 pub use generators::{
-    chain_of_agents, hybrid, mem0, multi_session, multi_turn, openclaw, recurring, zero_overlap,
+    chain_of_agents, diurnal_arrivals, hybrid, mem0, multi_session, multi_turn, open_loop,
+    open_loop_diurnal, openclaw, poisson_arrivals, recurring, zero_overlap, TimedWorkload,
     Workload,
 };
 pub use profiles::{Dataset, DatasetProfile};

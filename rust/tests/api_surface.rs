@@ -262,6 +262,13 @@ fn remaining_error_variants_display_and_box() {
     let bad = Error::CorruptSnapshot("snapshot.json line 3".into());
     assert!(bad.to_string().starts_with("corrupt snapshot"));
     assert!(bad.to_string().contains("line 3"));
+    // the backpressure variant (provoked end-to-end in tests/sched.rs):
+    // callers match on the id to decide what to resubmit, so it must
+    // survive Display round-trips too
+    let shed = Error::Overloaded(RequestId(41));
+    assert!(shed.to_string().starts_with("overloaded"));
+    assert!(shed.to_string().contains("41"));
+    assert!(shed.to_string().contains("backpressure"));
 }
 
 // ---- facade equivalence ----------------------------------------------------

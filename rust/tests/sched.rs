@@ -1,0 +1,386 @@
+//! Integration: the continuous-batching scheduler (`serve::sched`)
+//! through the facade's open-loop lifecycle — `Server::submit_at` →
+//! `seal_arrivals` → `drain` → ticket waits. The contracts under test:
+//!
+//! 1. the flush barrier is gone: a short request admitted behind a long
+//!    chunked prefill completes *before* the long request, instead of
+//!    waiting for its wave to drain;
+//! 2. scheduling is deterministic: per-request results — hit/miss AND
+//!    the `queued_ttft` sojourn bit patterns — are identical across
+//!    worker counts and across re-runs, because progress is a pure
+//!    function of the (virtual-time) arrival sequence;
+//! 3. SLO backpressure is part of that pure function: which arrivals a
+//!    queue bound sheds (or delays) and which a deadline drops is exact,
+//!    counted, and replayable;
+//! 4. scheduler lifecycle (`sched_started` / `sched_paused` /
+//!    `sched_resumed` / `sched_drained`, `backpressure`) lands in the
+//!    trace catalogue, worker-count invariant;
+//! 5. the always-on registry keeps mirroring `RunMetrics` under
+//!    continuous admission, including the `max_queue_depth` gauge;
+//! 6. the wave path (`serve_batch`) still works on the same server.
+
+use std::sync::Arc;
+
+use contextpilot::api::{Error, ObsConfig, Server};
+use contextpilot::corpus::{Corpus, CorpusConfig};
+use contextpilot::engine::costmodel::ModelSku;
+use contextpilot::experiments::corpus_for;
+use contextpilot::serve::OverloadPolicy;
+use contextpilot::tokenizer::Tokenizer;
+use contextpilot::types::{BlockId, QueryId, Request, RequestId, ServedRequest, SessionId};
+use contextpilot::workload::{open_loop, Dataset, TimedWorkload};
+
+fn req(id: u64, session: u32, blocks: &[u32]) -> Request {
+    Request {
+        id: RequestId(id),
+        session: SessionId(session),
+        turn: 0,
+        context: blocks.iter().map(|&b| BlockId(b)).collect(),
+        query: QueryId(id),
+    }
+}
+
+/// Open-loop outcome per arrival, in arrival order: `Ok(served)` or the
+/// shed request's id. Any other ticket error is a test failure.
+fn run_open_loop(server: &Server, tw: &TimedWorkload) -> Vec<Result<ServedRequest, u64>> {
+    let tickets: Vec<_> = tw
+        .workload
+        .requests
+        .iter()
+        .zip(&tw.arrivals)
+        .map(|(r, &at)| server.submit_at(r.clone(), at).expect("submit arrival"))
+        .collect();
+    server.seal_arrivals().expect("seal");
+    server.drain().expect("drain");
+    tickets
+        .into_iter()
+        .map(|t| match t.wait() {
+            Ok(s) => Ok(s),
+            Err(Error::Overloaded(id)) => Err(id.0),
+            Err(e) => panic!("open-loop ticket failed: {e}"),
+        })
+        .collect()
+}
+
+/// Deterministic outcome signature: reuse results plus the sojourn bits.
+fn signature(outcomes: &[Result<ServedRequest, u64>]) -> Vec<(u64, usize, usize, u64, bool)> {
+    outcomes
+        .iter()
+        .map(|o| match o {
+            Ok(s) => (
+                s.request.id.0,
+                s.prompt_tokens,
+                s.cached_tokens,
+                s.queued_ttft.to_bits(),
+                true,
+            ),
+            Err(id) => (*id, 0, 0, 0, false),
+        })
+        .collect()
+}
+
+fn counter(counters: &[(&'static str, u64)], name: &str) -> u64 {
+    counters
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|&(_, v)| v)
+        .unwrap_or_else(|| panic!("no counter named {name}"))
+}
+
+/// The flush-barrier removal, pinned. One shard, chunked prefill: a long
+/// request arrives at t=0, a short one a millisecond later. Under the old
+/// wave barrier the short request could not complete before the wave —
+/// i.e. before the long prefill — drained. Under the scheduler loops the
+/// short request is admitted mid-prefill, its chunks interleave with the
+/// long request's, and it finishes first.
+#[test]
+fn short_request_overtakes_long_prefill() {
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 24,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    );
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(1)
+        .workers(1)
+        .capacity(1 << 20)
+        .prefill_chunk(256)
+        .corpus(corpus)
+        .build()
+        .expect("config is valid");
+    let long = req(1, 1, &(1u32..=16).collect::<Vec<_>>());
+    let short = req(2, 2, &[20]);
+    let t_long = server.submit_at(long, 0.0).expect("submit long");
+    let t_short = server.submit_at(short, 0.001).expect("submit short");
+    server.seal_arrivals().expect("seal");
+    server.drain().expect("drain");
+    let long = t_long.wait().expect("long serves");
+    let short = t_short.wait().expect("short serves");
+    assert!(
+        long.prefill_chunks >= 2,
+        "long prefill must be chunked for interleaving to mean anything \
+         (got {} chunks)",
+        long.prefill_chunks
+    );
+    let done_long = 0.0 + long.queued_ttft;
+    let done_short = 0.001 + short.queued_ttft;
+    assert!(
+        done_short < done_long,
+        "short request ({done_short:.4}s) must overtake the long prefill \
+         ({done_long:.4}s): the flush barrier is gone"
+    );
+    assert!(
+        short.queued_ttft < long.queued_ttft,
+        "short sojourn must undercut the long one"
+    );
+}
+
+#[test]
+fn open_loop_results_are_bit_identical_across_worker_counts() {
+    let tw = open_loop(Dataset::MtRag, 32, 8, 16.0, 0x5EED);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |workers: usize| {
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(workers)
+            .capacity(1 << 20)
+            .prefill_chunk(1024)
+            .corpus(corpus.clone())
+            .build()
+            .expect("config is valid");
+        let sig = signature(&run_open_loop(&server, &tw));
+        (sig, server.counters())
+    };
+    let (base, counters) = run(1);
+    assert_eq!(base.len(), tw.len());
+    assert!(base.iter().all(|&(.., ok)| ok), "unbounded run sheds nothing");
+    assert!(
+        base.iter().any(|&(_, _, cached, _, _)| cached > 0),
+        "workload should produce cache hits"
+    );
+    for workers in [2usize, 4, 8] {
+        assert_eq!(
+            run(workers),
+            (base.clone(), counters.clone()),
+            "workers={workers} changed open-loop results or counters"
+        );
+    }
+    // and the whole thing replays bit-identically
+    assert_eq!(run(4), run(4), "re-run diverged");
+}
+
+#[test]
+fn queue_bound_shed_is_deterministic_and_exact() {
+    // 200 offered QPS into one shard with a queue bound of 1: heavy
+    // overload, most arrivals shed. Which ones is a pure function of the
+    // arrival sequence.
+    let tw = open_loop(Dataset::MtRag, 24, 6, 200.0, 0x0C0FFEE);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |workers: usize| {
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(1)
+            .workers(workers)
+            .capacity(1 << 20)
+            .prefill_chunk(1024)
+            .queue_bound(1)
+            .overload(OverloadPolicy::Shed)
+            .corpus(corpus.clone())
+            .build()
+            .expect("config is valid");
+        let outcomes = run_open_loop(&server, &tw);
+        let shed: Vec<u64> = outcomes.iter().filter_map(|o| o.as_ref().err().copied()).collect();
+        let c = server.counters();
+        assert_eq!(
+            counter(&c, "backpressure_shed"),
+            shed.len() as u64,
+            "shed counter must equal Overloaded tickets"
+        );
+        assert_eq!(counter(&c, "backpressure_delayed"), 0);
+        (signature(&outcomes), shed)
+    };
+    let (base, shed) = run(1);
+    assert!(!shed.is_empty(), "overload must shed at this rate");
+    assert!(
+        shed.len() < tw.len(),
+        "the shard must still serve something"
+    );
+    for workers in [2usize, 4] {
+        assert_eq!(run(workers), (base.clone(), shed.clone()), "workers={workers}");
+    }
+    assert_eq!(run(1), (base, shed), "re-run diverged");
+}
+
+#[test]
+fn delay_policy_serves_everything() {
+    let tw = open_loop(Dataset::MtRag, 24, 6, 200.0, 0x0C0FFEE);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(1)
+        .workers(2)
+        .capacity(1 << 20)
+        .prefill_chunk(1024)
+        .queue_bound(1)
+        .overload(OverloadPolicy::Delay)
+        .corpus(corpus.clone())
+        .build()
+        .expect("config is valid");
+    let outcomes = run_open_loop(&server, &tw);
+    assert!(
+        outcomes.iter().all(|o| o.is_ok()),
+        "delay policy must never shed on queue depth"
+    );
+    let c = server.counters();
+    assert_eq!(counter(&c, "backpressure_shed"), 0);
+    assert!(
+        counter(&c, "backpressure_delayed") >= 1,
+        "this overload must have delayed admissions"
+    );
+    // the price of delay: sojourns grow with queue position
+    let last = outcomes.last().unwrap().as_ref().unwrap();
+    let first = outcomes.first().unwrap().as_ref().unwrap();
+    assert!(
+        last.queued_ttft > first.queued_ttft,
+        "overloaded tail must wait longer than the head"
+    );
+}
+
+#[test]
+fn deadline_misses_are_shed_whatever_the_policy() {
+    let tw = open_loop(Dataset::MtRag, 24, 6, 200.0, 0x0C0FFEE);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    // Delay policy on purpose: deadline misses shed regardless.
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(1)
+        .workers(1)
+        .capacity(1 << 20)
+        .prefill_chunk(1024)
+        .deadline(0.001)
+        .overload(OverloadPolicy::Delay)
+        .corpus(corpus.clone())
+        .build()
+        .expect("config is valid");
+    let outcomes = run_open_loop(&server, &tw);
+    let shed = outcomes.iter().filter(|o| o.is_err()).count();
+    let served = outcomes.iter().filter(|o| o.is_ok()).count();
+    assert!(shed >= 1, "a 1ms admission deadline must shed under overload");
+    assert!(served >= 1, "an idle shard admits at zero lateness");
+    let c = server.counters();
+    assert_eq!(counter(&c, "backpressure_shed"), shed as u64);
+}
+
+#[test]
+fn scheduler_lifecycle_is_traced_and_worker_invariant() {
+    let tw = open_loop(Dataset::MtRag, 16, 6, 100.0, 0xBEE);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |workers: usize| {
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(2)
+            .workers(workers)
+            .capacity(1 << 20)
+            .prefill_chunk(1024)
+            .queue_bound(1)
+            .overload(OverloadPolicy::Shed)
+            .observability(ObsConfig::tracing())
+            .corpus(corpus.clone())
+            .build()
+            .expect("config is valid");
+        // Scripted while nothing is in flight, so the pause/resume stamps
+        // sit at deterministic points of the virtual clocks.
+        server.pause().expect("pause");
+        server.resume().expect("resume");
+        run_open_loop(&server, &tw);
+        let mut events = server.trace_events().expect("trace");
+        events.sort_by_key(|e| (e.shard, e.seq));
+        events
+    };
+    let base = run(1);
+    for name in [
+        "sched_started",
+        "sched_paused",
+        "sched_resumed",
+        "sched_drained",
+        "backpressure",
+        "admitted",
+        "placed",
+        "queued",
+        "prefill_chunk",
+        "resolved",
+    ] {
+        assert!(
+            base.iter().any(|e| e.kind.name() == name),
+            "missing lifecycle event {name}"
+        );
+    }
+    for workers in [2usize, 4] {
+        assert_eq!(run(workers), base, "workers={workers} changed the trace");
+    }
+}
+
+/// Satellite pin: the always-on registry keeps mirroring `RunMetrics`
+/// exactly under continuous admission — no wave flush ever reconciles
+/// them, so every open-loop completion must count at source.
+#[test]
+fn registry_mirrors_metrics_under_continuous_admission() {
+    let tw = open_loop(Dataset::MtRag, 32, 8, 16.0, 0x5EED);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(2)
+        .workers(2)
+        .capacity(1 << 20)
+        .prefill_chunk(1024)
+        .corpus(corpus.clone())
+        .build()
+        .expect("config is valid");
+    run_open_loop(&server, &tw);
+    let (m, per_shard) = server.metrics().expect("metrics");
+    let c = server.counters();
+    assert_eq!(counter(&c, "requests_served"), m.len() as u64);
+    assert_eq!(counter(&c, "prompt_tokens"), m.total_prompt_tokens);
+    assert_eq!(counter(&c, "cached_tokens"), m.total_cached_tokens);
+    assert_eq!(counter(&c, "hot_hit_tokens"), m.total_hot_hit_tokens);
+    assert_eq!(counter(&c, "warm_hit_tokens"), m.total_warm_hit_tokens);
+    assert_eq!(counter(&c, "cold_hit_tokens"), m.total_cold_hit_tokens);
+    assert_eq!(counter(&c, "prefill_chunks"), m.total_prefill_chunks);
+    let max_depth = per_shard.iter().map(|s| s.max_queue_depth).max();
+    assert_eq!(counter(&c, "max_queue_depth"), max_depth.unwrap_or(0) as u64);
+    assert!(
+        counter(&c, "max_queue_depth") >= 1,
+        "continuous admission must register queue depth"
+    );
+    assert_eq!(counter(&c, "requests_served"), tw.len() as u64);
+}
+
+#[test]
+fn wave_path_composes_with_open_loop() {
+    let tw = open_loop(Dataset::MtRag, 16, 6, 16.0, 0xAB);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(2)
+        .workers(2)
+        .capacity(1 << 20)
+        .prefill_chunk(1024)
+        .corpus(corpus.clone())
+        .build()
+        .expect("config is valid");
+    // a wave before any open-loop traffic…
+    let wave = server
+        .serve_batch(&[req(9001, 901, &[1, 2, 3])])
+        .expect("wave serves");
+    assert_eq!(wave.len(), 1);
+    // …then the open-loop run…
+    let outcomes = run_open_loop(&server, &tw);
+    assert!(outcomes.iter().all(|o| o.is_ok()));
+    // …and waves still flow after the arrival process is sealed.
+    let after = server
+        .serve_batch(&[req(9002, 901, &[1, 2, 3])])
+        .expect("wave serves after seal");
+    assert_eq!(after.len(), 1);
+    assert!(
+        after[0].cached_tokens > 0,
+        "the sealed scheduler still serves reuse from shard state"
+    );
+    let (m, _) = server.metrics().expect("metrics");
+    assert_eq!(m.len(), tw.len() + 2, "every path lands in RunMetrics");
+}
