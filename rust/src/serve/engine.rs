@@ -170,6 +170,14 @@ impl<E: InferenceEngine> ServingEngine<E> {
             .collect()
     }
 
+    /// Whether placing a request of `session` would read the published
+    /// probe snapshots: the policy wants probes and the session has no
+    /// pin yet. The open-loop scheduler quiesces its loops before such
+    /// placements so the snapshots are deterministic.
+    pub(crate) fn placement_wants_probe(&self, session: SessionId) -> Result<bool, Error> {
+        Ok(shard_guard(&self.placement, "placement ledger")?.wants_probe(session))
+    }
+
     /// Arrival indices per shard, preserving arrival order within a shard.
     pub(crate) fn queues_for(&self, placements: &[Placement]) -> Vec<Vec<usize>> {
         let mut queues: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];

@@ -30,14 +30,26 @@
 //!   request admitted behind a long prefill overtakes it chunk by chunk
 //!   instead of waiting for the long request's wave.
 //!
+//! The two paths compose on one shard without blocking each other: a
+//! loop prefers open-loop slices while any are runnable under the
+//! frontier, then claims queued waves — *including* while open-loop
+//! work sits frontier-gated, since waves run on the queue-pipeline
+//! clock and leave the run-queue clock untouched. A wave submitted
+//! behind an unsealed, gated shard therefore completes without anyone
+//! advancing the frontier (the submitting thread is typically the one
+//! that would).
+//!
 //! **Determinism.** Progress is a pure function of the arrival sequence,
 //! never of worker speed. The *frontier* — the largest arrival time
 //! submitted so far — gates chunk execution: a shard may run a chunk only
 //! while its clock is strictly below the frontier (or after
 //! [`Scheduler::seal_arrivals`]), because an arrival might still land at
 //! exactly the frontier. Admissions (arrival time ≤ shard clock) always
-//! take priority over chunks. The result is bit-identical across worker
-//! counts and across runs.
+//! take priority over chunks. Probe-reading placement
+//! ([`crate::serve::PlacementKind::ContextAware`]) quiesces the loops
+//! before each unpinned placement (see [`Scheduler::submit_at`]), so
+//! even the shard *choice* is a function of the arrival prefix. The
+//! result is bit-identical across worker counts and across runs.
 //!
 //! **Backpressure** ([`OverloadPolicy`], [`ServeConfig::queue_bound`],
 //! [`ServeConfig::deadline`]) is applied at admission time on the shard's
@@ -60,6 +72,7 @@ use crate::corpus::Corpus;
 use crate::engine::iface::InferenceEngine;
 use crate::obs::EventKind;
 use crate::serve::engine::{shard_guard, ServingEngine};
+use crate::serve::ServeConfig;
 use crate::types::{Request, ServedRequest};
 
 /// What the scheduler does with an open-loop arrival whose shard is
@@ -301,6 +314,33 @@ impl ShardQueue {
     }
 }
 
+/// Whether the front of `q.timed` can make progress right now under the
+/// backpressure config: it will be admitted, shed (deadline blown or
+/// over the bound under [`OverloadPolicy::Shed`]), or is still owed its
+/// one-time `delayed` marker. A Delay-blocked arrival — due, over the
+/// bound, already marked — makes no progress until the shard drains
+/// below the bound, so it must *not* count as runnable: the worker
+/// would spin claiming no-op slices, and `drain`/the placement quiesce
+/// would wait on a state only a later frontier advance can change.
+/// Shared by the worker's claim and the scheduler's `runnable` so the
+/// two can never disagree.
+pub(super) fn timed_front_progress(cfg: &ServeConfig, q: &ShardQueue) -> bool {
+    let Some(front) = q.timed.front() else {
+        return false;
+    };
+    if front.vt > q.clock {
+        return false;
+    }
+    if cfg.deadline.is_some_and(|dl| q.clock - front.vt > dl) {
+        return true; // will be shed
+    }
+    let over = cfg.queue_bound.is_some_and(|b| q.active.len() >= b);
+    if !over || cfg.on_overload == OverloadPolicy::Shed {
+        return true;
+    }
+    !front.delayed
+}
+
 /// Scheduler control state.
 #[derive(Clone, Copy, PartialEq, Eq)]
 pub(super) enum Ctl {
@@ -352,6 +392,13 @@ pub(crate) struct Scheduler<E: InferenceEngine> {
     /// paying thread startup — they still go through the loops, which
     /// spawn on the first wave).
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes every arrival-sequence mutation ([`Scheduler::submit_at`],
+    /// [`Scheduler::advance_arrivals`], [`Scheduler::seal_arrivals`]): the
+    /// frontier/seal state a submission checks cannot change before it
+    /// commits, so an arrival is rejected *before* placement runs (no
+    /// ledger side effects for never-admitted requests), and the
+    /// probe-quiesce below observes a stable frontier.
+    submit: Mutex<()>,
 }
 
 impl<E: InferenceEngine> Scheduler<E> {
@@ -371,6 +418,7 @@ impl<E: InferenceEngine> Scheduler<E> {
                 idle: Condvar::new(),
             }),
             threads: Mutex::new(Vec::new()),
+            submit: Mutex::new(()),
         }
     }
 
@@ -407,6 +455,29 @@ impl<E: InferenceEngine> Scheduler<E> {
         }
         self.ensure_started()?;
         let engine = &self.shared.engine;
+        let mut wants_probe = false;
+        for r in reqs {
+            if engine.placement_wants_probe(r.session)? {
+                wants_probe = true;
+                break;
+            }
+        }
+        if wants_probe {
+            // same probe quiesce as submit_at: the snapshots this wave's
+            // placement reads must be the engine state after every prior
+            // arrival's admission, not wherever the loops happened to be.
+            // The submit lock holds the frontier still while we wait.
+            let _submit = shard_guard(&self.submit, "arrival submission")?;
+            let cfg = engine.config();
+            let mut d = lock_dispatch(&self.shared)?;
+            while d.queues.iter().any(|q| Self::runnable(cfg, &d, q)) {
+                d = self
+                    .shared
+                    .idle
+                    .wait(d)
+                    .map_err(|_| Error::ShardPoisoned("scheduler dispatch"))?;
+            }
+        }
         let placements = engine.place_batch(reqs)?;
         let queues = engine.queues_for(&placements);
         if engine.config().obs.trace {
@@ -456,6 +527,15 @@ impl<E: InferenceEngine> Scheduler<E> {
     /// nondecreasing across calls). Places the request, enqueues it on
     /// its shard's timed queue and returns the result cell immediately;
     /// the shard's loop admits it when its clock reaches `at`.
+    ///
+    /// Placement is deterministic for every policy. Probe-reading
+    /// policies ([`crate::serve::PlacementKind::ContextAware`]) get it
+    /// by *quiescing*: before an unpinned session is placed, the
+    /// scheduler waits until no shard has work runnable under the
+    /// current frontier, so the probe snapshots the decision reads are
+    /// exactly the engine state after every prior arrival's admission —
+    /// a pure function of the arrival sequence, never of how far the
+    /// worker loops happened to progress in wall time.
     pub(crate) fn submit_at(&self, req: Request, at: f64) -> Result<Arc<ResultCell>, Error> {
         if !at.is_finite() || at < 0.0 {
             return Err(Error::InvalidConfig(format!(
@@ -463,10 +543,23 @@ impl<E: InferenceEngine> Scheduler<E> {
             )));
         }
         self.ensure_started()?;
+        let _submit = shard_guard(&self.submit, "arrival submission")?;
+        let wants_probe = self.shared.engine.placement_wants_probe(req.session)?;
         {
-            // cheap pre-check before paying for placement
-            let d = lock_dispatch(&self.shared)?;
+            let mut d = lock_dispatch(&self.shared)?;
             Self::check_admissible(&d, at)?;
+            if wants_probe {
+                // probe quiesce (see the doc comment above); the submit
+                // lock keeps the frontier stable while we wait
+                let cfg = self.shared.engine.config();
+                while d.queues.iter().any(|q| Self::runnable(cfg, &d, q)) {
+                    d = self
+                        .shared
+                        .idle
+                        .wait(d)
+                        .map_err(|_| Error::ShardPoisoned("scheduler dispatch"))?;
+                }
+            }
         }
         let placement = {
             let mut ps = self.shared.engine.place_batch(std::slice::from_ref(&req))?;
@@ -484,10 +577,17 @@ impl<E: InferenceEngine> Scheduler<E> {
         };
         {
             let mut d = lock_dispatch(&self.shared)?;
-            // re-check: a seal or later arrival may have raced the
-            // placement above
-            Self::check_admissible(&d, at)?;
+            // the submit lock makes the pre-check final: nothing else can
+            // seal or advance the frontier before this commit
+            debug_assert!(
+                Self::check_admissible(&d, at).is_ok(),
+                "frontier/seal mutated outside the submit lock"
+            );
             if d.queues[placement.shard].dead {
+                // placed, then refused — the session pin persists, exactly
+                // as on the wave path where a dead shard fails the seal
+                // after placement; later turns of the session fail the
+                // same way instead of silently migrating
                 return Err(Error::ShardPoisoned("shard"));
             }
             d.frontier = at;
@@ -516,6 +616,7 @@ impl<E: InferenceEngine> Scheduler<E> {
     /// their queues to completion (the frontier stops gating chunks).
     /// Permanent for this server.
     pub(crate) fn seal_arrivals(&self) -> Result<(), Error> {
+        let _submit = shard_guard(&self.submit, "arrival submission")?;
         let mut d = lock_dispatch(&self.shared)?;
         d.sealed = true;
         d.frontier = f64::INFINITY;
@@ -532,6 +633,7 @@ impl<E: InferenceEngine> Scheduler<E> {
                 "arrival frontier must be finite and >= 0, got {upto}"
             )));
         }
+        let _submit = shard_guard(&self.submit, "arrival submission")?;
         let mut d = lock_dispatch(&self.shared)?;
         if upto > d.frontier {
             d.frontier = upto;
@@ -571,8 +673,9 @@ impl<E: InferenceEngine> Scheduler<E> {
     pub(crate) fn drain(&self) -> Result<(), Error> {
         let started = !shard_guard(&self.threads, "scheduler threads")?.is_empty();
         if started {
+            let cfg = self.shared.engine.config();
             let mut d = lock_dispatch(&self.shared)?;
-            while d.queues.iter().any(|q| Self::runnable(&d, q)) {
+            while d.queues.iter().any(|q| Self::runnable(cfg, &d, q)) {
                 d = self
                     .shared
                     .idle
@@ -584,8 +687,13 @@ impl<E: InferenceEngine> Scheduler<E> {
     }
 
     /// Whether a shard queue has work a loop will still pick up (or is
-    /// mid-slice). Mirrors the worker's claim conditions.
-    fn runnable(d: &Dispatch, q: &ShardQueue) -> bool {
+    /// mid-slice). Mirrors the worker's claim conditions: a queued wave
+    /// is always claimable (even behind frontier-gated active work), so
+    /// drain never returns with a wave pending; a Delay-blocked front
+    /// arrival is *not* runnable (see [`timed_front_progress`]), so
+    /// drain and the placement quiesce don't hang on backpressure only
+    /// a later arrival can release.
+    fn runnable(cfg: &ServeConfig, d: &Dispatch, q: &ShardQueue) -> bool {
         if q.dead {
             return false;
         }
@@ -595,10 +703,13 @@ impl<E: InferenceEngine> Scheduler<E> {
         if matches!(d.ctl, Ctl::Paused | Ctl::Stopping) {
             return false;
         }
-        if q.active.is_empty() {
-            return !q.waves.is_empty() || !q.timed.is_empty();
+        if !q.waves.is_empty() {
+            return true;
         }
-        q.timed.front().is_some_and(|e| e.vt <= q.clock) || d.sealed || q.clock < d.frontier
+        if q.active.is_empty() {
+            return !q.timed.is_empty();
+        }
+        timed_front_progress(cfg, q) || d.sealed || q.clock < d.frontier
     }
 }
 

@@ -23,6 +23,7 @@ use crate::api::Error;
 use crate::engine::iface::InferenceEngine;
 use crate::obs::{Counter, EventKind, TierOp};
 use crate::serve::shard::Shard;
+use crate::serve::ServeConfig;
 use crate::types::{Request, RequestId, ServedRequest};
 
 use super::{
@@ -59,10 +60,12 @@ enum Step {
 
 /// Fills every touched-but-unresolved cell with [`Error::ShardPoisoned`]
 /// if the slice panics (unwinding through the worker's `catch_unwind`).
-/// Disarmed on every orderly exit — error returns resolve their cells
-/// explicitly, queued entries are swept by the worker's dead-shard
-/// sweep. Fills are first-write-wins, so covering already-resolved
-/// cells is harmless.
+/// Armed for the whole slice *including* the final `record_served` —
+/// completed requests are in no queue by then, so only the guard can
+/// resolve their cells on a panic. Disarmed on every orderly exit —
+/// error returns resolve their cells explicitly, queued entries are
+/// swept by the worker's dead-shard sweep. Fills are first-write-wins,
+/// so covering already-resolved cells is harmless.
 struct SliceGuard {
     cells: Vec<Arc<ResultCell>>,
     armed: bool,
@@ -84,7 +87,7 @@ pub(super) fn run<E: InferenceEngine>(shared: Arc<Shared<E>>, s: usize) {
         let claim = {
             let mut d = shared.state.lock().unwrap_or_else(|p| p.into_inner());
             loop {
-                match claim_work(&mut d, s) {
+                match claim_work(shared.engine.config(), &mut d, s) {
                     Claim::Stop => return,
                     Claim::Park => {
                         d = shared.work.wait(d).unwrap_or_else(|p| p.into_inner());
@@ -113,10 +116,25 @@ pub(super) fn run<E: InferenceEngine>(shared: Arc<Shared<E>>, s: usize) {
 }
 
 /// Decide what shard `s`'s loop should do next. Marks the queue busy
-/// when it hands out work. Waves are claimed only while no open-loop
-/// request is mid-prefill (a wave is an atomic batch on the queue
-/// pipeline's own clock; interleaving the two clocks is undefined).
-fn claim_work(d: &mut Dispatch, s: usize) -> Claim {
+/// when it hands out work.
+///
+/// Open-loop slices take priority over waves: every admission runnable
+/// under the current frontier lands before a wave queued while it was
+/// pending, whether or not the worker had already run it — so the
+/// engine-visible order is a function of the dispatch state, not of
+/// worker progress. Once no slice is runnable, a queued wave *is*
+/// claimed even while open-loop work sits frontier-gated: waves run on
+/// the queue-pipeline clock and never touch the run-queue clock, and
+/// gated [`ActiveReq`]s carry already-served records whose remaining
+/// chunks are pure virtual-time replay. Without this, a caller blocking
+/// on a wave behind a gated shard would deadlock — it is the very
+/// thread that would advance the frontier.
+///
+/// A due-but-Delay-blocked front arrival does not make a slice runnable
+/// (see [`super::timed_front_progress`]): a slice on it would be a
+/// no-op, and claiming it anyway would spin this loop until the
+/// frontier moves.
+fn claim_work(cfg: &ServeConfig, d: &mut Dispatch, s: usize) -> Claim {
     if d.ctl == Ctl::Stopping {
         return Claim::Stop;
     }
@@ -127,21 +145,20 @@ fn claim_work(d: &mut Dispatch, s: usize) -> Claim {
     if q.dead || paused {
         return Claim::Park;
     }
-    if q.active.is_empty() {
-        if let Some(job) = q.waves.pop_front() {
-            q.busy = true;
-            return Claim::Wave(job);
-        }
-        if !q.timed.is_empty() {
-            q.busy = true;
-            return Claim::Slice;
-        }
-        return Claim::Park;
-    }
-    let due = q.timed.front().is_some_and(|e| e.vt <= q.clock);
-    if due || sealed || q.clock < frontier {
+    let slice_runnable = if q.active.is_empty() {
+        // an idle shard jumps its clock to the next arrival, so any
+        // queued arrival is admissible
+        !q.timed.is_empty()
+    } else {
+        super::timed_front_progress(cfg, q) || sealed || q.clock < frontier
+    };
+    if slice_runnable {
         q.busy = true;
         return Claim::Slice;
+    }
+    if let Some(job) = q.waves.pop_front() {
+        q.busy = true;
+        return Claim::Wave(job);
     }
     Claim::Park
 }
@@ -228,18 +245,22 @@ fn run_slice<E: InferenceEngine>(shared: &Shared<E>, s: usize) -> Result<(), Err
         }
     }
     drop(shard);
-    guard.armed = false;
     if let Some(e) = failed {
+        guard.armed = false;
         for (_, cell) in &completed {
             cell.fill(Err(e.clone()));
         }
         return Err(e);
     }
     if completed.is_empty() {
+        guard.armed = false;
         return Ok(());
     }
     // affinity attribution takes the placement ledger, so it must run
-    // with the shard lock released (placement → shard order)
+    // with the shard lock released (placement → shard order). The guard
+    // stays armed across it: completed requests are in no queue anymore,
+    // so if record_served panics only the guard can resolve their cells
+    // (the dead-shard sweep never sees them).
     let (serveds, cells): (Vec<ServedRequest>, Vec<Arc<ResultCell>>) =
         completed.into_iter().unzip();
     match shared.engine.record_served(&serveds) {
@@ -247,9 +268,11 @@ fn run_slice<E: InferenceEngine>(shared: &Shared<E>, s: usize) -> Result<(), Err
             for (sr, cell) in serveds.into_iter().zip(cells) {
                 cell.fill(Ok(sr));
             }
+            guard.armed = false;
             Ok(())
         }
         Err(e) => {
+            guard.armed = false;
             for cell in &cells {
                 cell.fill(Err(e.clone()));
             }

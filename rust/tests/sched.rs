@@ -17,7 +17,11 @@
 //!    trace catalogue, worker-count invariant;
 //! 5. the always-on registry keeps mirroring `RunMetrics` under
 //!    continuous admission, including the `max_queue_depth` gauge;
-//! 6. the wave path (`serve_batch`) still works on the same server.
+//! 6. the wave path (`serve_batch`) still works on the same server —
+//!    including while open-loop work sits frontier-gated (a wave behind
+//!    a gated shard must complete, not deadlock), and context-aware
+//!    placement stays bit-identical on the open-loop path (the
+//!    scheduler quiesces before probe-reading placements).
 
 use std::sync::Arc;
 
@@ -350,6 +354,95 @@ fn registry_mirrors_metrics_under_continuous_admission() {
         "continuous admission must register queue depth"
     );
     assert_eq!(counter(&c, "requests_served"), tw.len() as u64);
+}
+
+/// Deadlock regression: a wave submitted while an *unsealed* open-loop
+/// request sits frontier-gated (clock == frontier, chunks not yet
+/// runnable) must complete without anyone advancing the frontier — the
+/// submitting thread is the very thread that would. The scheduler used
+/// to refuse to claim waves while any open-loop request was mid-prefill,
+/// deadlocking this exact single-threaded sequence forever.
+#[test]
+fn wave_completes_behind_frontier_gated_open_loop_work() {
+    let corpus = Corpus::generate(
+        &CorpusConfig {
+            n_docs: 24,
+            ..Default::default()
+        },
+        &Tokenizer::default(),
+    );
+    let server = Server::builder(ModelSku::Qwen3_4B)
+        .shards(1)
+        .workers(1)
+        .capacity(1 << 20)
+        .prefill_chunk(256)
+        .corpus(corpus)
+        .build()
+        .expect("config is valid");
+    // Admitted at t=0 and then gated: its chunks may not run while
+    // clock == frontier and arrivals are unsealed.
+    let gated = server
+        .submit_at(req(1, 1, &(1u32..=16).collect::<Vec<_>>()), 0.0)
+        .expect("submit gated arrival");
+    server.drain().expect("drain parks at the frontier");
+    // One shard, so the wave necessarily queues behind the gated work.
+    let wave = server
+        .serve_batch(&[req(2, 2, &[20])])
+        .expect("wave must serve while the shard is frontier-gated");
+    assert_eq!(wave.len(), 1);
+    // The gated arrival is untouched by the wave: seal and finish it.
+    server.seal_arrivals().expect("seal");
+    let served = gated.wait().expect("gated arrival serves after seal");
+    assert!(served.prefill_chunks >= 1);
+    server.drain().expect("drain runs dry");
+    let (m, _) = server.metrics().expect("metrics");
+    assert_eq!(m.len(), 2, "both paths landed in RunMetrics");
+}
+
+/// Context-aware placement stays deterministic on the open-loop path:
+/// the shard each session lands on — decided from published probe
+/// snapshots — and the full outcome signature are identical across
+/// worker counts and across re-runs. (Regression: placement used to
+/// read probe snapshots wherever the loops happened to be in wall
+/// time; the scheduler now quiesces before each unpinned placement.)
+#[test]
+fn context_aware_open_loop_placement_is_deterministic() {
+    use contextpilot::api::PlacementKind;
+    let tw = open_loop(Dataset::MtRag, 32, 8, 16.0, 0x5EED);
+    let corpus = Arc::new(corpus_for(Dataset::MtRag));
+    let run = |workers: usize| {
+        let server = Server::builder(ModelSku::Qwen3_4B)
+            .shards(4)
+            .workers(workers)
+            .capacity(1 << 20)
+            .prefill_chunk(1024)
+            .placement(PlacementKind::ContextAware)
+            .corpus(corpus.clone())
+            .build()
+            .expect("config is valid");
+        let sig = signature(&run_open_loop(&server, &tw));
+        // pin the shard choices themselves, not just the outcomes
+        let shards: Vec<usize> = tw
+            .workload
+            .requests
+            .iter()
+            .map(|r| server.session_shard(r.session).expect("session placed"))
+            .collect();
+        (sig, shards, server.counters())
+    };
+    let base = run(1);
+    assert!(
+        base.0.iter().any(|&(_, _, cached, _, _)| cached > 0),
+        "workload should produce cache hits"
+    );
+    for workers in [2usize, 4] {
+        assert_eq!(
+            run(workers),
+            base,
+            "workers={workers} changed context-aware open-loop placement"
+        );
+    }
+    assert_eq!(run(2), run(2), "re-run diverged");
 }
 
 #[test]
